@@ -1,0 +1,68 @@
+//! Fig 3C: ADC transfer characteristics as a function of the two tuning
+//! knobs — slope (number of IMC capacitors left connected during
+//! conversion) and offset (the 6-bit DAC pre-set code).
+//!
+//!     cargo run --release --example adc_characterization
+//!
+//! Prints the same families of curves the paper's Fig 3C shows from
+//! Cadence mixed-signal simulation: code-vs-V_in for a sweep of slopes
+//! at neutral offset, and for a sweep of offsets at fixed slope.
+
+use minimalist::config::CircuitConfig;
+use minimalist::energy::EnergyMeter;
+use minimalist::satsim::adc::{SarAdc, OFFSET_NEUTRAL};
+use minimalist::util::rng::Rng;
+
+fn main() {
+    let cfg = CircuitConfig::default();
+    let mut rng = Rng::new(0xADC);
+    let adc = SarAdc::new(&cfg, &mut rng);
+    let mut meter = EnergyMeter::new();
+
+    let sweep: Vec<f64> = (0..=40)
+        .map(|i| cfg.v_0 - 0.1 + 0.2 * i as f64 / 40.0)
+        .collect();
+
+    // ---- slope family (connected segments m ∈ {0, 4, 16, 64}) ---------
+    println!("# Fig 3C (left): slope control via C_IMC segments");
+    println!("# columns: V_in-V_0 [mV], then code for m = 0, 4, 16, 64");
+    let ms = [0usize, 4, 16, 64];
+    for &v in &sweep {
+        print!("{:8.1}", (v - cfg.v_0) * 1e3);
+        for &m in &ms {
+            let c_ext = m as f64 * cfg.c_unit + cfg.c_line;
+            let code = adc.convert(v, c_ext, OFFSET_NEUTRAL, &cfg, &mut rng, &mut meter);
+            print!(" {code:4}");
+        }
+        println!();
+    }
+    for &m in &ms {
+        let c_ext = m as f64 * cfg.c_unit + cfg.c_line;
+        println!(
+            "# m={m:2}: analytic slope {:7.1} codes/V, range {:.1} mV",
+            SarAdc::slope_codes_per_volt(c_ext, &cfg),
+            64.0 / SarAdc::slope_codes_per_volt(c_ext, &cfg) * 1e3
+        );
+    }
+
+    // ---- offset family (DAC pre-set ∈ {8, 20, 32, 44, 56}) ------------
+    println!("\n# Fig 3C (right): offset control via DAC pre-set");
+    println!("# columns: V_in-V_0 [mV], then code for off = 8, 20, 32, 44, 56");
+    let offs = [8u8, 20, 32, 44, 56];
+    let m_fixed = 16usize;
+    let c_ext = m_fixed as f64 * cfg.c_unit + cfg.c_line;
+    for &v in &sweep {
+        print!("{:8.1}", (v - cfg.v_0) * 1e3);
+        for &off in &offs {
+            let code = adc.convert(v, c_ext, off, &cfg, &mut rng, &mut meter);
+            print!(" {code:4}");
+        }
+        println!();
+    }
+    println!(
+        "\n# {} conversions, {} comparator strobes, {:.2} pJ total",
+        meter.adc_conversions,
+        meter.comparator_decisions,
+        meter.total_j() * 1e12
+    );
+}

@@ -1,0 +1,139 @@
+//! End-to-end driver (DESIGN.md §4, extension row): batched serving of
+//! sequential-digit classification through the full stack — request
+//! queue → dynamic batcher → backend (PJRT-compiled JAX model, golden
+//! rust model, or the switched-capacitor simulator) — reporting
+//! accuracy, latency percentiles and throughput.
+//!
+//!     cargo run --release --example smnist_serve -- \
+//!         [--backend pjrt|golden|satsim] [--requests 64] \
+//!         [--weights runs/hw_s0/weights.mtf] [--max-batch 8]
+//!
+//! The PJRT backend requires `make artifacts` (and its sequence length
+//! is fixed at compile time — 16×16 inputs by default).
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::{
+    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine,
+    PjrtBackend, Server,
+};
+use minimalist::dataset::glyphs;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::runtime::Runtime;
+use minimalist::util::cli::Args;
+use minimalist::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let backend_kind = args.get_or("backend", "golden").to_string();
+    let n_req = args.get_usize("requests", 64)?;
+    let img = args.get_usize("img-size", 16)?;
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 8)?,
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
+    };
+
+    let weights = match args.opt("weights") {
+        Some(p) => NetworkWeights::load(p)?,
+        None => ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf", "../runs/hw_s0/weights.mtf", "../runs/quant_s0/weights.mtf"]
+            .iter()
+            .find(|p| std::path::Path::new(p).exists())
+            .map(|p| NetworkWeights::load(p))
+            .transpose()?
+            .unwrap_or_else(|| {
+                eprintln!("note: no trained checkpoint; synthetic weights");
+                synthetic_network(&[1, 64, 64, 64, 64, 10], 7)
+            }),
+    };
+
+    println!(
+        "== smnist_serve: backend={backend_kind}, {n_req} requests, \
+         batch≤{}, wait≤{:?} ==",
+        policy.max_batch, policy.max_wait
+    );
+
+    let server = match backend_kind.as_str() {
+        "golden" => Server::spawn(
+            Box::new(GoldenBackend::new(GoldenNetwork::new(weights.clone()))),
+            policy,
+        ),
+        "satsim" => {
+            let engine = MixedSignalEngine::new(
+                weights.clone(),
+                CircuitConfig::default(),
+                CoreGeometry::default(),
+            )?;
+            Server::spawn_with(
+                move || Box::new(MixedSignalBackend::new(engine)) as _,
+                policy,
+            )
+        }
+        "pjrt" => {
+            let meta_text = std::fs::read_to_string("artifacts/meta.json")
+                .context("reading artifacts/meta.json — run `make artifacts`")?;
+            let meta = Json::parse(&meta_text)
+                .map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+            let t_len = meta.req_f64("t_len")? as usize;
+            let batch = meta.req_f64("batch")? as usize;
+            let dims: Vec<usize> = meta
+                .req("dims")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|d| d.as_f64().unwrap() as usize)
+                .collect();
+            if t_len != img * img {
+                bail!(
+                    "artifact sequence length {t_len} != requested {}; \
+                     re-run aot.py with --img-size {img}",
+                    img * img
+                );
+            }
+            let (d_in, n_classes) = (dims[0], *dims.last().unwrap());
+            Server::spawn_with(
+                move || {
+                    let rt = Runtime::cpu().expect("PJRT client");
+                    let exe = rt
+                        .load_hlo_text("artifacts/sequence.hlo.txt")
+                        .expect("loading sequence artifact");
+                    Box::new(PjrtBackend::new(exe, t_len, batch, d_in, n_classes)) as _
+                },
+                policy,
+            )
+        }
+        other => bail!("unknown backend '{other}' (golden|satsim|pjrt)"),
+    };
+
+    // reference labels for accuracy: the golden model is ground truth
+    // for serving consistency; the dataset label measures task accuracy.
+    let samples = glyphs::make_split(n_req, img, args.get_u64("seed", 1)?);
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.label, client.submit(i as u64, s.pixels.clone())))
+        .collect();
+    let mut correct = 0usize;
+    for (label, rx) in rxs {
+        let resp = rx.recv()?;
+        correct += (resp.label == label) as usize;
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+
+    println!("latency  : {}", metrics.summary());
+    println!(
+        "wall     : {:?} for {n_req} sequences of T={} → {:.1} seq/s",
+        wall,
+        img * img,
+        n_req as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "accuracy : {correct}/{n_req} = {:.3}",
+        correct as f64 / n_req as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Fig 4: compare the activations (z, h̃, h) of a unit between the
+//! software model and the mixed-signal simulation, set up with
+//! equivalent weights and biases — on a trained network when available.
+//!
+//!     cargo run --release --example trace_compare -- \
+//!         [--weights runs/hw_s0/weights.mtf] [--unit 7] [--layer 1]
+//!
+//! Prints three aligned trace tables (software | ideal circuit | noisy
+//! circuit) plus summary deviation statistics.
+
+use anyhow::Result;
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::dataset::glyphs;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let layer = args.get_usize("layer", 1)?;
+    let unit = args.get_usize("unit", 7)?;
+    let nw = match args.opt("weights") {
+        Some(p) => NetworkWeights::load(p)?,
+        None => {
+            for c in ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf", "../runs/hw_s0/weights.mtf", "../runs/quant_s0/weights.mtf"] {
+                if std::path::Path::new(c).exists() {
+                    eprintln!("using trained checkpoint {c}");
+                    return run(NetworkWeights::load(c)?, layer, unit);
+                }
+            }
+            eprintln!("no checkpoint found; using a synthetic network");
+            synthetic_network(&[1, 64, 64, 64, 64, 10], 42)
+        }
+    };
+    run(nw, layer, unit)
+}
+
+fn run(nw: NetworkWeights, layer: usize, unit: usize) -> Result<()> {
+    let sample = &glyphs::make_split(1, 16, 11)[0];
+    let seq = &sample.pixels;
+    let t_show = 48usize.min(seq.len());
+
+    // software model traces
+    let mut golden = GoldenNetwork::new(nw.clone());
+    golden.reset();
+    let mut g_z = Vec::new();
+    let mut g_h = Vec::new();
+    let mut g_ht = Vec::new();
+    for &x in seq.iter().take(t_show) {
+        let mut tr = Vec::new();
+        golden.step(&[x], Some(&mut tr));
+        g_z.push(tr[layer].z[unit]);
+        g_h.push(tr[layer].h[unit]);
+        g_ht.push(tr[layer].htilde[unit]);
+    }
+
+    // circuit traces (ideal + default non-idealities)
+    let trace_engine = |cfg: CircuitConfig| -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut e =
+            MixedSignalEngine::new(nw.clone(), cfg, CoreGeometry::default())?;
+        e.reset();
+        let (mut z, mut h, mut ht) = (Vec::new(), Vec::new(), Vec::new());
+        for (t, &x) in seq.iter().take(t_show).enumerate() {
+            let mut tr = Vec::new();
+            e.step(t as u32, &[x], Some(&mut tr));
+            z.push(tr[layer].z.last().unwrap()[unit]);
+            h.push(tr[layer].h.last().unwrap()[unit]);
+            ht.push(tr[layer].htilde.last().unwrap()[unit]);
+        }
+        Ok((z, h, ht))
+    };
+    let (iz, ih, iht) = trace_engine(CircuitConfig::ideal())?;
+    let (nz, nh, nht) = trace_engine(CircuitConfig::default())?;
+
+    println!("# Fig 4 traces — layer {layer}, unit {unit} (logical units)");
+    println!("#  t |   z sw  z ideal  z noisy |  h̃ sw  h̃ ideal  h̃ noisy |   h sw  h ideal  h noisy");
+    for t in 0..t_show {
+        println!(
+            "{t:4} | {:6.3} {:7.3} {:7.3} | {:6.3} {:7.3} {:7.3} | {:6.3} {:7.3} {:7.3}",
+            g_z[t], iz[t], nz[t], g_ht[t], iht[t], nht[t], g_h[t], ih[t], nh[t]
+        );
+    }
+
+    let rms = |a: &[f32], b: &[f32]| -> f32 {
+        (a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            / a.len() as f32)
+            .sqrt()
+    };
+    println!("\n# deviation vs software model (RMS over {t_show} steps):");
+    println!(
+        "#   ideal circuit: z {:.4}  h̃ {:.4}  h {:.4}",
+        rms(&g_z, &iz),
+        rms(&g_ht, &iht),
+        rms(&g_h, &ih)
+    );
+    println!(
+        "#   noisy circuit: z {:.4}  h̃ {:.4}  h {:.4}",
+        rms(&g_z, &nz),
+        rms(&g_ht, &nht),
+        rms(&g_h, &nh)
+    );
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT lowering: the JAX model (with its Pallas kernels inlined) → HLO
+text artifacts that the rust runtime loads through the PJRT C API.
+
+Python runs ONCE, at build time. The rust binary is self-contained
+afterwards: `artifacts/sequence.hlo.txt` (full-sequence classifier) and
+`artifacts/step.hlo.txt` (single-step streaming update) embed the trained
+weights as constants — one compiled executable per model variant, the
+standard AOT serving pattern.
+
+Interchange is HLO *text*, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes `artifacts/aot_smoke.mtf` with an example input and the
+jax-evaluated output so the rust side can verify numerics end-to-end
+(tests/aot_parity.rs), and `artifacts/meta.json` with the shapes.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--weights runs/hw_s0/weights.mtf]
+                          [--batch 8] [--img-size 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .export import load_mtf, save_mtf
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_params(weights_path: str | None, dims):
+    """Load a trained hw checkpoint, or fall back to a fresh init (smoke
+    builds; documented as synthetic in meta.json)."""
+    if weights_path and Path(weights_path).exists():
+        t = load_mtf(weights_path)
+        dims = tuple(int(d) for d in t["meta.dims"])
+        params = []
+        for l in range(len(dims) - 1):
+            params.append({
+                "wh": jnp.asarray(t[f"l{l}.wh"]),
+                "wz": jnp.asarray(t[f"l{l}.wz"]),
+                "bh": jnp.asarray(t[f"l{l}.bh"]),
+                "bz": jnp.asarray(t[f"l{l}.bz"]),
+                "log_alpha": jnp.log(jnp.asarray(t[f"l{l}.alpha"][0])),
+                "gamma": jnp.asarray(t[f"l{l}.gamma"][0]),
+            })
+        return params, dims, True
+    cfg = model_mod.ModelConfig(dims=dims, variant="hw")
+    return model_mod.init_params(cfg, seed=0), dims, False
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights", default="../runs/hw_s0/weights.mtf")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--img-size", type=int, default=16)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead of the "
+                         "Pallas kernels (debugging aid)")
+    args = ap.parse_args(argv)
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    t_len = args.img_size * args.img_size
+    batch = args.batch
+
+    params, dims, trained = load_params(args.weights, model_mod.DEFAULT_DIMS)
+    cfg = model_mod.ModelConfig(dims=dims, variant="hw")
+    use_pallas = not args.no_pallas
+
+    # ---- sequence classifier: [T, B, d_in] → (logits [B, n_out],) ------
+    def seq_fn(x_seq):
+        return (model_mod.forward_sequence(
+            cfg, params, x_seq, use_pallas=use_pallas),)
+
+    seq_spec = jax.ShapeDtypeStruct((t_len, batch, dims[0]), jnp.float32)
+    lowered_seq = jax.jit(seq_fn).lower(seq_spec)
+    (out / "sequence.hlo.txt").write_text(to_hlo_text(lowered_seq))
+    print(f"wrote sequence.hlo.txt  [T={t_len}, B={batch}] → [{batch}, {dims[-1]}]")
+
+    # ---- single step: (x_t [B, d_in], h_1..h_L) → (readout, h_1'..h_L') -
+    def step_fn(x_t, *h_all):
+        readout, new_h, y_last = model_mod.forward_step(
+            cfg, params, x_t, list(h_all), use_pallas=use_pallas)
+        return (readout, *new_h)
+
+    h_specs = [jax.ShapeDtypeStruct((batch, h), jnp.float32)
+               for h in dims[1:]]
+    x_spec = jax.ShapeDtypeStruct((batch, dims[0]), jnp.float32)
+    lowered_step = jax.jit(step_fn).lower(x_spec, *h_specs)
+    (out / "step.hlo.txt").write_text(to_hlo_text(lowered_step))
+    print(f"wrote step.hlo.txt      [B={batch}] × {len(h_specs)} states")
+
+    # ---- smoke vectors: example input + jax-evaluated output -----------
+    rng = np.random.default_rng(0)
+    x_ex = rng.random((t_len, batch, dims[0]), dtype=np.float32)
+    logits_ex = np.asarray(jax.jit(seq_fn)(jnp.asarray(x_ex))[0])
+    save_mtf(out / "aot_smoke.mtf", {
+        "x": x_ex.reshape(t_len, batch * dims[0]),
+        "logits": logits_ex,
+    })
+    print("wrote aot_smoke.mtf     (input + jax-evaluated logits)")
+
+    meta = {
+        "t_len": t_len, "batch": batch, "dims": list(dims),
+        "variant": cfg.variant, "trained_weights": trained,
+        "weights_path": args.weights if trained else None,
+        "pallas": use_pallas,
+    }
+    (out / "meta.json").write_text(json.dumps(meta, indent=1))
+    print(f"wrote meta.json         {meta}")
+
+
+if __name__ == "__main__":
+    main()

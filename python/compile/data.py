@@ -1,0 +1,178 @@
+"""synthMNIST — deterministic synthetic digit glyphs for sequential
+classification.
+
+The paper evaluates on sequential MNIST (28×28 images fed pixel-by-pixel,
+input dimension 1, T=784). This environment has no network access, so MNIST
+cannot be downloaded; per the substitution rule (DESIGN.md §2) we generate a
+synthetic equivalent that exercises the identical code path: 10-way
+classification of long 1-D pixel sequences.
+
+Digits 0-9 are rendered from stroke skeletons (line segments in the unit
+square) with a smooth distance-falloff brush, then perturbed per sample with
+a random affine jitter (rotation, scale, translation, shear), stroke
+thickness variation, and additive pixel noise. The generator is a pure
+function of (seed, index) so train/test splits are reproducible and the
+exported test set can be replayed bit-exactly on the rust side.
+
+Default resolution is 16×16 → T=256 (scaled down from the paper's 784 to
+fit CPU training in the session budget; DESIGN.md §2 documents this).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Stroke skeletons. Coordinates in [0,1]^2, y growing downwards.
+# Each digit: list of polylines; each polyline: list of (x, y) vertices.
+# ---------------------------------------------------------------------------
+
+DIGIT_STROKES: dict[int, list[list[tuple[float, float]]]] = {
+    0: [[(0.50, 0.08), (0.78, 0.25), (0.78, 0.75), (0.50, 0.92),
+         (0.22, 0.75), (0.22, 0.25), (0.50, 0.08)]],
+    1: [[(0.35, 0.25), (0.55, 0.08), (0.55, 0.92)],
+        [(0.30, 0.92), (0.75, 0.92)]],
+    2: [[(0.25, 0.25), (0.40, 0.10), (0.65, 0.10), (0.78, 0.28),
+         (0.70, 0.50), (0.25, 0.92), (0.78, 0.92)]],
+    3: [[(0.25, 0.15), (0.60, 0.10), (0.75, 0.27), (0.55, 0.47),
+         (0.75, 0.68), (0.60, 0.90), (0.25, 0.85)]],
+    4: [[(0.65, 0.92), (0.65, 0.08), (0.22, 0.62), (0.80, 0.62)]],
+    5: [[(0.75, 0.10), (0.30, 0.10), (0.28, 0.45), (0.60, 0.42),
+         (0.78, 0.62), (0.70, 0.88), (0.25, 0.90)]],
+    6: [[(0.70, 0.10), (0.35, 0.35), (0.25, 0.65), (0.40, 0.90),
+         (0.70, 0.85), (0.75, 0.60), (0.45, 0.52), (0.27, 0.62)]],
+    7: [[(0.22, 0.10), (0.78, 0.10), (0.45, 0.92)],
+        [(0.35, 0.52), (0.68, 0.52)]],
+    8: [[(0.50, 0.48), (0.70, 0.32), (0.62, 0.10), (0.38, 0.10),
+         (0.30, 0.32), (0.50, 0.48), (0.72, 0.68), (0.60, 0.92),
+         (0.40, 0.92), (0.28, 0.68), (0.50, 0.48)]],
+    9: [[(0.73, 0.38), (0.55, 0.48), (0.30, 0.40), (0.25, 0.15),
+         (0.55, 0.08), (0.73, 0.20), (0.73, 0.38), (0.65, 0.92)]],
+}
+
+
+def _segments(digit: int) -> np.ndarray:
+    """Polylines → array of segments [n, 4] = (x1, y1, x2, y2)."""
+    segs = []
+    for line in DIGIT_STROKES[digit]:
+        for (x1, y1), (x2, y2) in zip(line[:-1], line[1:]):
+            segs.append((x1, y1, x2, y2))
+    return np.asarray(segs, dtype=np.float32)
+
+
+_SEGMENT_CACHE = {d: _segments(d) for d in range(10)}
+
+
+def _render(segs: np.ndarray, size: int, thickness: float) -> np.ndarray:
+    """Distance-field rendering of segments with a smooth brush."""
+    # pixel-center grid in unit coords
+    coords = (np.arange(size, dtype=np.float32) + 0.5) / size
+    px, py = np.meshgrid(coords, coords)          # [size, size], y rows
+    p = np.stack([px, py], axis=-1)[:, :, None, :]  # [s, s, 1, 2]
+
+    a = segs[None, None, :, 0:2]                  # [1, 1, n, 2]
+    b = segs[None, None, :, 2:4]
+    ab = b - a
+    denom = np.maximum((ab * ab).sum(-1), 1e-12)
+    t = np.clip(((p - a) * ab).sum(-1) / denom, 0.0, 1.0)
+    proj = a + t[..., None] * ab
+    d = np.sqrt(((p - proj) ** 2).sum(-1))        # [s, s, n]
+    dmin = d.min(axis=-1)
+    # smooth brush: 1 inside thickness, soft decay outside
+    img = np.clip(1.5 - dmin / thickness, 0.0, 1.0)
+    return img.astype(np.float32)
+
+
+def _affine_jitter(segs: np.ndarray, rng: np.random.Generator,
+                   rot: float, scale_lo: float, scale_hi: float,
+                   shift: float, shear: float) -> np.ndarray:
+    """Random affine transform of segment endpoints about the glyph center."""
+    th = rng.uniform(-rot, rot)
+    sx = rng.uniform(scale_lo, scale_hi)
+    sy = rng.uniform(scale_lo, scale_hi)
+    sh = rng.uniform(-shear, shear)
+    tx = rng.uniform(-shift, shift)
+    ty = rng.uniform(-shift, shift)
+    c, s = np.cos(th), np.sin(th)
+    m = np.array([[c * sx, (-s + sh) * sy],
+                  [s * sx, c * sy]], dtype=np.float32)
+    pts = segs.reshape(-1, 2) - 0.5
+    pts = pts @ m.T + np.array([0.5 + tx, 0.5 + ty], dtype=np.float32)
+    return pts.reshape(-1, 4)
+
+
+def make_glyph(digit: int, *, size: int = 16, seed: int = 0,
+               index: int = 0, noise: float = 0.05) -> np.ndarray:
+    """Render one jittered digit glyph. Pure function of (digit, seed, index)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, digit, index]))
+    segs = _affine_jitter(_SEGMENT_CACHE[digit], rng,
+                          rot=0.25, scale_lo=0.82, scale_hi=1.12,
+                          shift=0.06, shear=0.15)
+    thickness = rng.uniform(0.045, 0.075)
+    img = _render(segs, size, thickness)
+    img = img + rng.normal(0.0, noise, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def make_split(n: int, *, size: int = 16, seed: int = 0,
+               noise: float = 0.05) -> tuple[np.ndarray, np.ndarray]:
+    """Generate n samples: images [n, size, size] f32, labels [n] i32.
+
+    Labels cycle through 0..9 then are shuffled deterministically, so every
+    split is class-balanced.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xD1617]))
+    labels = np.arange(n, dtype=np.int32) % 10
+    rng.shuffle(labels)
+    imgs = np.stack([
+        make_glyph(int(d), size=size, seed=seed, index=i, noise=noise)
+        for i, d in enumerate(labels)
+    ])
+    return imgs, labels
+
+
+def to_sequences(imgs: np.ndarray) -> np.ndarray:
+    """Images [n, s, s] → pixel sequences [n, T=s*s, 1] (row-major scan).
+
+    This is the 'sequential' encoding of the paper: one analog pixel value
+    per time step, input dimension 1.
+    """
+    n = imgs.shape[0]
+    return imgs.reshape(n, -1, 1).astype(np.float32)
+
+
+def dataset(n_train: int, n_test: int, *, size: int = 16, seed: int = 0):
+    """Full dataset as (x_train, y_train, x_test, y_test), sequence-encoded."""
+    xtr, ytr = make_split(n_train, size=size, seed=seed)
+    xte, yte = make_split(n_test, size=size, seed=seed + 1_000_003)
+    return to_sequences(xtr), ytr, to_sequences(xte), yte
+
+
+def main(argv=None) -> None:
+    """CLI: export the canonical test split as an MTF artifact for the
+    rust side (bit-exact parity evaluation; DESIGN.md §7)."""
+    import argparse
+
+    from .export import save_mtf
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--export", default="../artifacts/synthmnist_test.mtf")
+    ap.add_argument("--n", type=int, default=500)
+    ap.add_argument("--size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    imgs, labels = make_split(args.n, size=args.size,
+                              seed=args.seed + 1_000_003)
+    seqs = to_sequences(imgs)  # [n, T, 1]
+    save_mtf(args.export, {
+        "x": seqs[:, :, 0],    # [n, T]
+        "y": labels,
+    })
+    print(f"exported {args.n} test sequences (T={args.size ** 2}) "
+          f"to {args.export}")
+
+
+if __name__ == "__main__":
+    main()

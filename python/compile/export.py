@@ -1,0 +1,89 @@
+"""MTF — the minimalist tensor file container.
+
+A deliberately tiny binary format shared between the python build path and
+the rust runtime (`rust/src/io/tensorfile.rs`), because the offline crate
+set has no serde/npy. Little-endian throughout.
+
+Layout:
+    magic   4 bytes  b"MTF1"
+    count   u32      number of tensors
+    per tensor:
+        name_len u16, name bytes (utf-8)
+        dtype    u8   0=f32  1=i32  2=u8  3=i64  4=f64
+        ndim     u8
+        dims     u32 × ndim
+        data     raw little-endian values (C order)
+
+The rust side has both a reader and a writer; `python/tests/test_export.py`
+and `rust/tests/mtf_roundtrip.rs` check the round trip from each end.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"MTF1"
+
+_DTYPES: list[tuple[int, np.dtype]] = [
+    (0, np.dtype("<f4")),
+    (1, np.dtype("<i4")),
+    (2, np.dtype("u1")),
+    (3, np.dtype("<i8")),
+    (4, np.dtype("<f8")),
+]
+_CODE_FOR = {dt: code for code, dt in _DTYPES}
+_DTYPE_FOR = {code: dt for code, dt in _DTYPES}
+
+
+def save_mtf(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    """Write tensors to an MTF container (insertion order preserved)."""
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", len(tensors))
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        dt = arr.dtype.newbyteorder("<")
+        if dt not in _CODE_FOR:
+            # normalize common dtypes (f64 stays f64; bool → u8; int → i32)
+            if arr.dtype == np.bool_:
+                arr, dt = arr.astype(np.uint8), np.dtype("u1")
+            elif np.issubdtype(arr.dtype, np.integer):
+                arr, dt = arr.astype("<i4"), np.dtype("<i4")
+            elif np.issubdtype(arr.dtype, np.floating):
+                arr, dt = arr.astype("<f4"), np.dtype("<f4")
+            else:
+                raise TypeError(f"unsupported dtype {arr.dtype} for {name!r}")
+        nb = name.encode("utf-8")
+        out += struct.pack("<H", len(nb)) + nb
+        out += struct.pack("<BB", _CODE_FOR[dt], arr.ndim)
+        out += struct.pack(f"<{arr.ndim}I", *arr.shape)
+        out += arr.astype(dt, copy=False).tobytes(order="C")
+    Path(path).write_bytes(bytes(out))
+
+
+def load_mtf(path: str | Path) -> dict[str, np.ndarray]:
+    """Read an MTF container back into {name: ndarray}."""
+    buf = Path(path).read_bytes()
+    if buf[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {buf[:4]!r}")
+    (count,) = struct.unpack_from("<I", buf, 4)
+    off = 8
+    tensors: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        name = buf[off:off + nlen].decode("utf-8")
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", buf, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", buf, off)
+        off += 4 * ndim
+        dt = _DTYPE_FOR[code]
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(buf, dtype=dt, count=n, offset=off).reshape(dims)
+        off += n * dt.itemsize
+        tensors[name] = arr.copy()
+    return tensors

@@ -1,0 +1,77 @@
+"""Fused Pallas kernel: gate digitization + capacitor-swap state update +
+output comparator (paper §3.1.2–§3.1.4).
+
+One invocation fuses, per GRU unit:
+
+    z     = Q6( σ^z( alpha·imc_z + beta ) )     -- SAR ADC with slope/offset
+    h_new = z·imc_h + (1−z)·h_prev              -- capacitor-bank swap (Eq. 1)
+    y     = Θ( h_new − theta )                  -- clocked comparator (Eq. 4)
+
+Fusing matters on hardware and on TPU for the same reason: z is consumed
+immediately where it is produced. The physical core never moves z off-chip
+(the ADC output directly drives the swap switches S2^h); the kernel
+likewise keeps z in VMEM and avoids an HBM round-trip between the ADC and
+the state update. Everything here is elementwise → VPU work, so blocks are
+sized to the (8, 128) VPU lanes rather than the MXU tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_update_kernel(imc_z_ref, imc_h_ref, h_prev_ref, alpha_ref,
+                        beta_ref, theta_ref, z_ref, h_ref, y_ref):
+    alpha = alpha_ref[0]
+    u = alpha * imc_z_ref[...] + beta_ref[...]
+    # σ^z hard sigmoid (Eq. 5) + 6-bit quantization: the ADC transfer curve.
+    z = jnp.round(jnp.clip(u / 6.0 + 0.5, 0.0, 1.0) * 63.0) / 63.0
+    h_new = z * imc_h_ref[...] + (1.0 - z) * h_prev_ref[...]
+    z_ref[...] = z
+    h_ref[...] = h_new
+    y_ref[...] = (h_new > theta_ref[...]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h"))
+def gate_update(imc_z: jax.Array, imc_h: jax.Array, h_prev: jax.Array,
+                alpha: jax.Array, beta: jax.Array, theta: jax.Array, *,
+                block_b: int = 64, block_h: int = 128):
+    """Fused ADC + state update + comparator. All array args [B, H].
+
+    alpha is a scalar (per-layer ADC slope); beta/theta are [H]
+    (per-channel ADC offset / comparator reference).
+    Returns (z, h_new, y), each [B, H] f32.
+    """
+    b, h = imc_z.shape
+    bb, bh = min(block_b, b), min(block_h, h)
+    # zero-pad ragged tails (interpret-mode OOB blocks read as NaN)
+    bp = -b % bb
+    hp = -h % bh
+    if bp or hp:
+        pad2 = lambda a: jnp.pad(a, ((0, bp), (0, hp)))
+        imc_z, imc_h, h_prev = pad2(imc_z), pad2(imc_h), pad2(h_prev)
+        beta = jnp.pad(beta, (0, hp))
+        theta = jnp.pad(theta, (0, hp))
+    grid = (pl.cdiv(b + bp, bb), pl.cdiv(h + hp, bh))
+    alpha_arr = jnp.reshape(alpha.astype(jnp.float32), (1,))
+    bh_spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
+    vec_spec = pl.BlockSpec((bh,), lambda i, j: (j,))
+    out_sds = jax.ShapeDtypeStruct((b + bp, h + hp), jnp.float32)
+
+    z, h_new, y = pl.pallas_call(
+        _gate_update_kernel,
+        grid=grid,
+        in_specs=[
+            bh_spec, bh_spec, bh_spec,
+            pl.BlockSpec((1,), lambda i, j: (0,)),   # alpha (scalar)
+            vec_spec, vec_spec,                      # beta, theta
+        ],
+        out_specs=[bh_spec, bh_spec, bh_spec],
+        out_shape=[out_sds, out_sds, out_sds],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(imc_z, imc_h, h_prev, alpha_arr, beta, theta)
+    return z[:b, :h], h_new[:b, :h], y[:b, :h]

@@ -1,0 +1,92 @@
+"""Pallas kernel for the charge-sharing IMC projection (paper Eq. 6).
+
+The switched-capacitor array computes, per column j, the mean of the
+weight-rail voltages selected by the active rows:
+
+    imc_j = (1/N) · Σ_i x_i · q(w_ij)
+
+On TPU this is a matmul with a binary (or first-layer analog) LHS and a
+4-level RHS — MXU-friendly once the 2-bit codes are expanded to their
+effective values. The kernel tiles the (N × M) weight matrix into VMEM
+blocks and accumulates partial column sums over the row-block grid axis,
+mirroring the segmented column structure of the physical array (the same
+segmentation the ADC slope control exploits, Fig 3A).
+
+Hardware adaptation note (DESIGN.md §3): the row-driver gating (x_i
+selects rail V_w vs V_0) becomes a multiplicative mask on the LHS block;
+the "1/N" charge-share normalization is folded into the epilogue of the
+last row block rather than pre-scaling the weights, so the accumulator
+keeps full precision — the analog array enjoys the same property (charge
+accumulates exactly; division happens implicitly in the share).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _imc_kernel(x_ref, w_ref, o_ref, acc_ref, *, nsteps: int, n_total: int):
+    """One (B-block × M-block) tile; grid axis 2 walks row blocks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Row-driver gating × rail selection, accumulated in f32.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps - 1)
+    def _epilogue():
+        # Charge-share normalization: the column settles to the *mean*.
+        o_ref[...] = acc_ref[...] * (1.0 / n_total)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_m"))
+def imc_matmul(x: jax.Array, w_eff: jax.Array, *,
+               block_b: int = 64, block_n: int = 128,
+               block_m: int = 128) -> jax.Array:
+    """Charge-sharing IMC matmul: (x @ w_eff) / N via a Pallas kernel.
+
+    x:     [B, N] activations; w_eff: [N, M] effective weights.
+    Blocks are clamped to the actual dims (the paper's cores are 64×64;
+    a full 64×128 interleaved z/h̃ block fits VMEM comfortably).
+    """
+    b, n = x.shape
+    n2, m = w_eff.shape
+    assert n == n2, f"shape mismatch {x.shape} @ {w_eff.shape}"
+    bb = min(block_b, b)
+    bn = min(block_n, n)
+    bm = min(block_m, m)
+    # Pad every dim to a block multiple: interpret-mode Pallas fills
+    # out-of-bounds block regions with NaN, so ragged tails must be
+    # explicitly zero-padded (zeros are absorbed by the accumulation).
+    bp = -b % bb
+    np_ = -n % bn
+    mp = -m % bm
+    if bp or np_:
+        x = jnp.pad(x, ((0, bp), (0, np_)))
+    if np_ or mp:
+        w_eff = jnp.pad(w_eff, ((0, np_), (0, mp)))
+    grid = (pl.cdiv(b + bp, bb), pl.cdiv(m + mp, bm), pl.cdiv(n + np_, bn))
+
+    out = pl.pallas_call(
+        functools.partial(_imc_kernel, nsteps=grid[2], n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bm), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b + bp, m + mp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, bm), jnp.float32)],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, w_eff)
+    return out[:b, :m]

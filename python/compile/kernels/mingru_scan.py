@@ -1,0 +1,103 @@
+"""Fused full-sequence Pallas kernel for one MINIMALIST GRU layer.
+
+This is the inference hot-spot: given the layer input sequence it executes
+the whole T-step recurrence of one core in a single kernel invocation —
+IMC projections, ADC gate digitization, capacitor-swap state update and
+comparator output for every time step — so the hidden state h never
+leaves VMEM between steps. That is the software image of the paper's
+central claim: the state lives on the sampling capacitors and is never
+buffered or moved.
+
+Layout: the grid walks (batch blocks × hidden blocks); time is an inner
+fori_loop. The interleaved W^z/W^h matrix of the physical core (Fig 2A)
+maps to the two weight refs resident in VMEM for the whole sequence —
+for a 64×64 core at f32 that is 2·64·64·4 B = 32 KiB of weights plus
+states, far under the ~16 MiB VMEM budget (DESIGN.md §9).
+
+Note: columns are blocked, rows (the input dim N) are not — each hidden
+block needs the full input row, exactly like the physical column needs
+all N row drivers. N ≤ 64 per core makes this the natural tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mingru_scan_kernel(x_ref, wh_ref, wz_ref, alpha_ref, beta_ref,
+                        theta_ref, h0_ref, z_ref, h_ref, y_ref,
+                        *, t_len: int, n_total: int):
+    alpha = alpha_ref[0]
+    inv_n = 1.0 / n_total
+
+    def step(t, h_prev):
+        x_t = x_ref[t]                                     # [bb, N]
+        imc_h = jnp.dot(x_t, wh_ref[...],
+                        preferred_element_type=jnp.float32) * inv_n
+        imc_z = jnp.dot(x_t, wz_ref[...],
+                        preferred_element_type=jnp.float32) * inv_n
+        u = alpha * imc_z + beta_ref[...]
+        z = jnp.round(jnp.clip(u / 6.0 + 0.5, 0.0, 1.0) * 63.0) / 63.0
+        h_new = z * imc_h + (1.0 - z) * h_prev
+        z_ref[t] = z
+        h_ref[t] = h_new
+        y_ref[t] = (h_new > theta_ref[...]).astype(jnp.float32)
+        return h_new
+
+    jax.lax.fori_loop(0, t_len, step, h0_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h"))
+def mingru_layer_scan(x_seq: jax.Array, wh_eff: jax.Array,
+                      wz_eff: jax.Array, alpha: jax.Array,
+                      beta: jax.Array, theta: jax.Array, h0: jax.Array, *,
+                      block_b: int = 32, block_h: int = 128):
+    """Hardware-exact full-sequence layer forward.
+
+    x_seq:  [T, B, N] layer input (binary events; analog for layer 0).
+    wh_eff, wz_eff: [N, H] effective weights.
+    alpha: scalar; beta, theta: [H]; h0: [B, H].
+    Returns (z_seq, h_seq, y_seq), each [T, B, H] f32.
+    """
+    t_len, b, n = x_seq.shape
+    h = wh_eff.shape[1]
+    bb, bh = min(block_b, b), min(block_h, h)
+    # zero-pad ragged tails (interpret-mode OOB blocks read as NaN)
+    bp = -b % bb
+    hp = -h % bh
+    if bp:
+        x_seq = jnp.pad(x_seq, ((0, 0), (0, bp), (0, 0)))
+        h0 = jnp.pad(h0, ((0, bp), (0, 0)))
+    if hp:
+        wh_eff = jnp.pad(wh_eff, ((0, 0), (0, hp)))
+        wz_eff = jnp.pad(wz_eff, ((0, 0), (0, hp)))
+        beta = jnp.pad(beta, (0, hp))
+        theta = jnp.pad(theta, (0, hp))
+        h0 = jnp.pad(h0, ((0, 0), (0, hp)))
+    grid = (pl.cdiv(b + bp, bb), pl.cdiv(h + hp, bh))
+    alpha_arr = jnp.reshape(alpha.astype(jnp.float32), (1,))
+
+    seq_out = pl.BlockSpec((t_len, bb, bh), lambda i, j: (0, i, j))
+    out_sds = jax.ShapeDtypeStruct((t_len, b + bp, h + hp), jnp.float32)
+
+    z_seq, h_seq, y_seq = pl.pallas_call(
+        functools.partial(_mingru_scan_kernel, t_len=t_len, n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_len, bb, n), lambda i, j: (0, i, 0)),  # x_seq
+            pl.BlockSpec((n, bh), lambda i, j: (0, j)),            # wh
+            pl.BlockSpec((n, bh), lambda i, j: (0, j)),            # wz
+            pl.BlockSpec((1,), lambda i, j: (0,)),                 # alpha
+            pl.BlockSpec((bh,), lambda i, j: (j,)),                # beta
+            pl.BlockSpec((bh,), lambda i, j: (j,)),                # theta
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),           # h0
+        ],
+        out_specs=[seq_out, seq_out, seq_out],
+        out_shape=[out_sds, out_sds, out_sds],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x_seq, wh_eff, wz_eff, alpha_arr, beta, theta, h0)
+    return z_seq[:, :b, :h], h_seq[:, :b, :h], y_seq[:, :b, :h]

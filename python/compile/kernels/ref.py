@@ -1,0 +1,113 @@
+"""Pure-jnp reference oracles for the MINIMALIST kernels.
+
+These definitions are the *authoritative semantics* of the hardware
+computation (DESIGN.md §5). The Pallas kernels in this package, the JAX
+model, the rust golden model (`rust/src/nn/`) and the switched-capacitor
+simulator (`rust/src/satsim/`) are all tested against — or derived from —
+the functions in this file.
+
+Logical units: the IMC charge share (paper Eq. 6) produces the *mean* of
+the selected weight voltages. We work in "code units": an effective weight
+q(w) ∈ {-1.5, -0.5, +0.5, +1.5} (the four equidistant rails around V_0)
+and a column result imc = (1/N)·Σ_i x_i·q(w_ij) ∈ [-1.5, +1.5]. Hidden
+states are convex mixtures of candidate states and therefore stay inside
+the same range — exactly the property that lets the hardware keep them as
+analog voltages on the sampling capacitors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def imc_matmul_ref(x: jax.Array, w_eff: jax.Array) -> jax.Array:
+    """Charge-sharing IMC projection (Eq. 6): column means of gated rails.
+
+    x:     [B, N]  input activations (binary {0,1} for hidden layers; the
+                   first layer's analog pixel x ∈ [0,1] is realized by the
+                   row driver interpolating between V_0 and V_w).
+    w_eff: [N, M]  effective weights q(codes) ∈ {-1.5,-0.5,0.5,1.5} (times
+                   an optional shared scale folded in by the caller).
+    returns [B, M] = (x @ w_eff) / N
+    """
+    n = x.shape[-1]
+    return (x @ w_eff) / jnp.float32(n)
+
+
+def hard_sigmoid_ref(u: jax.Array) -> jax.Array:
+    """σ^z (Eq. 5)."""
+    return jnp.clip(u / 6.0 + 0.5, 0.0, 1.0)
+
+
+def z6_ref(z: jax.Array) -> jax.Array:
+    """6-bit gate quantization: codes 0..63, value code/63."""
+    return jnp.round(jnp.clip(z, 0.0, 1.0) * 63.0) / 63.0
+
+
+def gate_update_ref(imc_z: jax.Array, imc_h: jax.Array, h_prev: jax.Array,
+                    alpha: jax.Array, beta: jax.Array, theta: jax.Array):
+    """Fused gate digitization + state update + output comparator.
+
+    imc_z, imc_h: [B, H] raw IMC column means for the z and h̃ projections.
+    h_prev:       [B, H] previous hidden state.
+    alpha:        scalar — gate gain, realized by the ADC slope
+                  (C_ADC/C_IMC segmentation, Fig 3).
+    beta:         [H] — gate bias, realized by the ADC capacitive-DAC
+                  offset pre-charge (per ADC channel).
+    theta:        [H] — output threshold, realized by the comparator
+                  reference (paper §3.1.4: bias on h subsumed there).
+
+    Returns (z, h_new, y):
+      z     = Q6(σ^z(alpha·imc_z + beta))        -- 6-bit gate
+      h_new = z·imc_h + (1−z)·h_prev             -- Eq. 1 (capacitor swap)
+      y     = Θ(h_new − theta)                   -- Eq. 4 (binary output)
+    """
+    z = z6_ref(hard_sigmoid_ref(alpha * imc_z + beta))
+    h_new = z * imc_h + (1.0 - z) * h_prev
+    y = (h_new > theta).astype(h_new.dtype)
+    return z, h_new, y
+
+
+def mingru_layer_seq_ref(x_seq: jax.Array, wh_eff: jax.Array,
+                         wz_eff: jax.Array, alpha: jax.Array,
+                         beta: jax.Array, theta: jax.Array,
+                         h0: jax.Array):
+    """Full-sequence hardware-exact layer forward (sequential recurrence).
+
+    x_seq: [T, B, N] layer inputs; returns (z_seq, h_seq, y_seq) each
+    [T, B, H]. This is the loop the mixed-signal core executes one time
+    step at a time, and the oracle for kernels/mingru_scan.py.
+    """
+
+    def step(h_prev, x_t):
+        imc_h = imc_matmul_ref(x_t, wh_eff)
+        imc_z = imc_matmul_ref(x_t, wz_eff)
+        z, h_new, y = gate_update_ref(imc_z, imc_h, h_prev,
+                                      alpha, beta, theta)
+        return h_new, (z, h_new, y)
+
+    _, (z_seq, h_seq, y_seq) = jax.lax.scan(step, h0, x_seq)
+    return z_seq, h_seq, y_seq
+
+
+def mingru_scan_ref(z_seq: jax.Array, htilde_seq: jax.Array,
+                    h0: jax.Array) -> jax.Array:
+    """Parallel-scan evaluation of Eq. 1 given per-step z and h̃.
+
+    h_t = z_t·h̃_t + (1−z_t)·h_{t−1} is a first-order linear recurrence
+    h_t = a_t·h_{t−1} + b_t with a = 1−z, b = z·h̃ — associative, so it
+    admits the log-depth parallel scan that makes minGRU training fast
+    (the paper's training-efficiency premise).
+    z_seq, htilde_seq: [T, B, H]; h0: [B, H]. Returns h_seq [T, B, H].
+    """
+    a = 1.0 - z_seq
+    b = z_seq * htilde_seq
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=0)
+    return a_sc * h0[None] + b_sc

@@ -1,0 +1,387 @@
+"""The MINIMALIST network (Layer 2): stacked minGRU blocks with the
+paper's hardware constraints, in three variants matching Fig 5.
+
+Variants
+--------
+``fp32``  — the baseline: full-precision weights/biases, the original
+            minGRU activations (Feng et al. 2024): candidate activation
+            g(u) = u + 0.5 for u ≥ 0 else σ(u), sigmoid gate, analog
+            (identity) inter-layer activations. Paper: 98.1 % on sMNIST.
+``quant`` — 2-bit weights, 6-bit biases, *binary* output activations;
+            internal activations unchanged (sigmoid gate, g on h̃).
+            Paper: 97.7 %.
+``hw``    — fully hardware-compatible: additionally drops the candidate
+            activation (h̃ is the raw IMC mean), replaces the gate sigmoid
+            by the hard sigmoid (Eq. 5) quantized to 6 bits, and moves the
+            h-bias into the output comparator threshold (paper §3.1.4).
+            Paper: 96.9 %.
+
+All variants share the IMC *mean* convention (DESIGN.md §5): projections
+compute (1/N)·Σ — the charge-share semantics — with a trainable per-layer
+gate gain ``alpha`` (realized in hardware by the ADC slope) and per-unit
+gate offset ``beta`` (ADC DAC offset). The architecture is the paper's
+feed-forward stack (Fig 1), default dims 1-64-64-64-64-10; classification
+reads the analog hidden state of the final 10-unit layer at the last time
+step (digitized once by reusing the z-ADC; argmax is gain-invariant).
+
+Two execution paths:
+  * ``forward_train`` — parallel over time (associative scan), STE
+    quantizers, used by train.py.
+  * ``forward_step`` / ``forward_sequence`` — the hardware-exact
+    inference recurrence; with ``use_pallas=True`` the L1 kernels are
+    inlined so they lower into the AOT HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import ref as kref
+from .kernels.gate_update import gate_update as gate_update_pallas
+from .kernels.imc_matmul import imc_matmul as imc_matmul_pallas
+from .kernels.mingru_scan import mingru_layer_scan as mingru_scan_pallas
+
+# "qw" (2-bit weights only) and "qwb" (+6-bit biases) are the intermediate
+# stages of the paper's multi-stage QAT schedule (§4.1: "4 gradual phases
+# of quantization-aware training"); Fig 5 reports fp32 / quant / hw.
+VARIANTS = ("fp32", "qw", "qwb", "quant", "hw")
+FIG5_VARIANTS = ("fp32", "quant", "hw")
+
+# The classifier reads the mean of the readout layer's analog states over
+# the final READOUT_STEPS time steps (digitized by reusing the z-ADC, ten
+# channels × 8 conversions — negligible next to the T-step recurrence).
+# Averaging a short tail instead of the single final state stabilizes
+# training on long pixel sequences; argmax is invariant to the 1/K factor.
+READOUT_STEPS = 8
+DEFAULT_DIMS = (1, 64, 64, 64, 64, 10)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + variant description."""
+
+    dims: tuple[int, ...] = DEFAULT_DIMS
+    variant: str = "hw"
+
+    def __post_init__(self):
+        assert self.variant in VARIANTS, self.variant
+        assert len(self.dims) >= 2
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+    @property
+    def hidden_dims(self) -> tuple[int, ...]:
+        return self.dims[1:]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list[dict[str, Any]]:
+    """Per-layer parameter pytree.
+
+    wh, wz: [N, H] projection weights; bh, bz: [H] biases;
+    log_alpha: scalar log gate gain; gamma: scalar candidate gain
+    (fp32/quant only — the hw variant has no gain on the h̃ path because
+    the physical charge share provides none).
+    """
+    rng = np.random.default_rng(seed)
+    params = []
+    for n, h in zip(cfg.dims[:-1], cfg.dims[1:]):
+        params.append({
+            "wh": jnp.asarray(rng.normal(0.0, 1.0, (n, h)), jnp.float32),
+            "wz": jnp.asarray(rng.normal(0.0, 1.0, (n, h)), jnp.float32),
+            "bh": jnp.zeros((h,), jnp.float32),
+            # Slow-gate initialization: with z ≈ σ(0) = 0.5 the state h_T
+            # only integrates the last handful of steps (∏(1−z_s) decays
+            # like 2^{−k}); starting the gate bias low gives units an
+            # integration window comparable to the sequence length, the
+            # standard recipe for pixel-level sequence tasks. The hw
+            # variant must stay inside the hard sigmoid's live region
+            # (hardsig(−4) is *exactly* 0 — gates would never open and
+            # no events would ever be emitted).
+            "bz": jnp.full((h,), -2.5 if cfg.variant == "hw" else -4.0,
+                           jnp.float32),
+            # the IMC mean has std ≈ std(w)·sqrt(p/N) (p = input activity);
+            # alpha ~ sqrt(N) rescales the gate pre-activation to O(1).
+            "log_alpha": jnp.asarray(np.log(1.5 * np.sqrt(n)), jnp.float32),
+            "gamma": jnp.asarray(2.0 * np.sqrt(n), jnp.float32),
+        })
+    return params
+
+
+def g_candidate(u: jax.Array) -> jax.Array:
+    """Feng et al. (2024) continuous candidate activation g(·).
+
+    g(u) = u + 0.5 for u ≥ 0, σ(u) otherwise — continuous at 0 (both
+    branches give 0.5) and strictly positive, the form the minGRU paper
+    uses so the log-space parallel scan is well-defined.
+    """
+    return jnp.where(u >= 0.0, u + 0.5, jax.nn.sigmoid(u))
+
+
+# ---------------------------------------------------------------------------
+# Effective (fake-quantized) layer parameters per variant
+# ---------------------------------------------------------------------------
+
+
+def effective_layer(cfg: ModelConfig, p: dict[str, Any], *, ste: bool):
+    """Resolve a layer's raw parameters into the values the forward pass
+    uses, applying the variant's quantizers (STE versions during
+    training, pure versions for eval/export)."""
+    w2 = quant.w2_ste if ste else quant.w2_q
+    b6 = quant.b6_ste if ste else quant.b6_q
+    if cfg.variant == "fp32":
+        wh, wz = p["wh"], p["wz"]
+    else:
+        wh, wz = w2(p["wh"]), w2(p["wz"])
+    if cfg.variant in ("fp32", "qw"):
+        bh, bz = p["bh"], p["bz"]
+    else:
+        bh, bz = b6(p["bh"]), b6(p["bz"])
+    alpha = jnp.exp(p["log_alpha"])
+    return dict(wh=wh, wz=wz, bh=bh, bz=bz, alpha=alpha, gamma=p["gamma"])
+
+
+def adapt_params(params: list[dict[str, Any]], logit_scale: jax.Array,
+                 from_variant: str, to_variant: str):
+    """Re-parameterize a checkpoint when the QAT schedule advances.
+
+    All transitions are identity except entering ``hw``, which changes the
+    layer function in two ways that need compensation:
+
+    1. The candidate gain/activation disappears: earlier stages use
+       h̃ ≈ γ·imc + b_h + 0.5 (positive branch of g), hw uses h̃ = imc.
+       The state shrinks by γ, and the output threshold that keeps Θ(h)
+       fixed is θ = −(b_h + 0.5)/γ (b_h is reinterpreted as the comparator
+       threshold). The readout temperature grows by γ accordingly.
+
+    2. The gate sigmoid becomes the hard sigmoid (Eq. 5). A slow gate
+       (σ(b_z) ≈ 0.02 at b_z = −4) would land on hardsig's *dead zone*
+       (hardsig(−4) = 0 exactly) and freeze every state. We linearize
+       around the operating point: choose u' = a·(u − b_z) + u₀ with
+       u₀ = 6·σ(b_z) − 3 (value match: hardsig(u₀) = σ(b_z)) and
+       a = 6·σ'(b_z) (slope match), folding a into the shared ADC slope
+       alpha via its per-layer mean.
+    """
+    n_layers = len(params)
+    if to_variant == "quant" and from_variant == "qwb":
+        # Binarization shock control: in qwb the state is
+        # h ≈ mix(γ·imc) + (b_h + 0.5) with mix(γ·imc) roughly centered
+        # at zero, so a comparator threshold of 0.5 starts Θ(h − θ) near
+        # the 50 % firing point (θ = 0 would be constant-1: g ≥ 0). b_h
+        # is re-purposed as the trainable threshold from there. The
+        # readout layer is not binarized; its bias moves to the *digital*
+        # domain (added to the averaged readout states), which is exact.
+        new_params = []
+        for li, p in enumerate(params):
+            q = dict(p)
+            if li < n_layers - 1:
+                q["bh"] = jnp.full_like(p["bh"], 0.5)
+            new_params.append(q)
+        return new_params, logit_scale
+    if to_variant != "hw" or from_variant == "hw":
+        return params, logit_scale
+    new_params = []
+    for li, p in enumerate(params):
+        q = dict(p)
+        if li < n_layers - 1:
+            # quant: h ≈ γ·h_hw + 0.5 (asymptotically; the +0.5 of g's
+            # positive branch accumulates through the convex mixing), so
+            # the threshold that keeps Θ(h − b_h) fixed is (b_h − 0.5)/γ.
+            q["bh"] = (p["bh"] - 0.5) / p["gamma"]
+        else:
+            # readout: the digital bias tracks the shrink-by-γ with the
+            # opposite sign of the 0.5 (it is *added*, not a threshold):
+            # logits ∝ γ·h_hw + 0.5 + b_h.
+            q["bh"] = (p["bh"] + 0.5) / p["gamma"]
+        s = jax.nn.sigmoid(p["bz"])
+        q["bz"] = 6.0 * s - 3.0
+        a = jnp.mean(6.0 * s * (1.0 - s))
+        q["log_alpha"] = p["log_alpha"] + jnp.log(jnp.maximum(a, 1e-3))
+        new_params.append(q)
+    return new_params, logit_scale * params[-1]["gamma"]
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward (parallel scan over T)
+# ---------------------------------------------------------------------------
+
+
+def _layer_zh(cfg: ModelConfig, eff: dict[str, Any], x_seq: jax.Array):
+    """Per-step gate z and candidate h̃ for a whole sequence (parallel).
+
+    x_seq [T, B, N] → (z, htilde), each [T, B, H].
+    """
+    t, b, n = x_seq.shape
+    flat = x_seq.reshape(t * b, n)
+    imc_h = kref.imc_matmul_ref(flat, eff["wh"])
+    imc_z = kref.imc_matmul_ref(flat, eff["wz"])
+    h_dim = imc_h.shape[-1]
+    imc_h = imc_h.reshape(t, b, h_dim)
+    imc_z = imc_z.reshape(t, b, h_dim)
+
+    u_z = eff["alpha"] * imc_z + eff["bz"]
+    if cfg.variant == "hw":
+        z = quant.z6_ste(quant.hard_sigmoid_ste(u_z))
+        htilde = imc_h
+    elif cfg.variant == "quant":
+        # Binarized-output variant: the candidate bias moves to the output
+        # comparator threshold (as in hw). Feng's g(·) is strictly
+        # positive, so a zero-threshold Θ(h) would be constant 1 — the
+        # threshold *must* carry the bias for the binary events to be
+        # informative.
+        z = jax.nn.sigmoid(u_z)
+        htilde = g_candidate(eff["gamma"] * imc_h)
+    else:
+        z = jax.nn.sigmoid(u_z)
+        htilde = g_candidate(eff["gamma"] * imc_h + eff["bh"])
+    return z, htilde
+
+
+def _layer_train(cfg: ModelConfig, eff: dict[str, Any],
+                 x_seq: jax.Array) -> jax.Array:
+    """One hidden layer, parallel over time, returning the inter-layer
+    activation sequence [T, B, H]."""
+    z, htilde = _layer_zh(cfg, eff, x_seq)
+    h0 = jnp.zeros(htilde.shape[1:], jnp.float32)
+    h_seq = kref.mingru_scan_ref(z, htilde, h0)
+    if cfg.variant in ("fp32", "qw", "qwb"):
+        return h_seq                       # analog inter-layer activations
+    # quant & hw: binary events, comparator threshold carries b^h
+    return quant.heaviside_ste(h_seq - eff["bh"])
+
+
+def forward_train(cfg: ModelConfig, params: list[dict[str, Any]],
+                  x_seq: jax.Array, logit_scale: jax.Array) -> jax.Array:
+    """Training forward: x_seq [T, B, dims[0]] → logits [B, dims[-1]].
+
+    The final layer's *analog* state at t=T−1 provides the logits (the
+    binary output activation is not applied to the readout layer — the
+    hardware digitizes the final h via the z-ADC instead). ``logit_scale``
+    is a software-only temperature; argmax is invariant to it.
+    """
+    seq = x_seq
+    for li, p in enumerate(params):
+        eff = effective_layer(cfg, p, ste=True)
+        if li == cfg.n_layers - 1:
+            z, htilde = _layer_zh(cfg, eff, seq)
+            h0 = jnp.zeros(htilde.shape[1:], jnp.float32)
+            h_seq = kref.mingru_scan_ref(z, htilde, h0)
+            readout = h_seq[-READOUT_STEPS:].mean(axis=0)
+            if cfg.variant in ("quant", "hw"):
+                # candidate bias is not physically realizable on the h̃
+                # path; for the readout it is applied in the digital
+                # domain after ADC conversion (exact, and free).
+                readout = readout + eff["bh"]
+            return logit_scale * readout
+        seq = _layer_train(cfg, eff, seq)
+    raise AssertionError("unreachable")
+
+
+# ---------------------------------------------------------------------------
+# Inference-time forward (hardware-exact recurrence; AOT export path)
+# ---------------------------------------------------------------------------
+
+
+def _layer_consts(cfg: ModelConfig, eff: dict[str, Any], last: bool):
+    """Translate effective params into the (wh, wz, alpha, beta, theta)
+    tuple the fused hardware step consumes (DESIGN.md §5 codesign map):
+    beta = ADC offset (from b^z), theta = comparator reference (from
+    b^h; unused for the readout layer, which is digitized, not
+    thresholded)."""
+    if cfg.variant != "hw":
+        raise ValueError("hardware-exact inference requires variant='hw'")
+    theta = jnp.zeros_like(eff["bh"]) if last else eff["bh"]
+    return eff["wh"], eff["wz"], eff["alpha"], eff["bz"], theta
+
+
+def forward_step(cfg: ModelConfig, params: list[dict[str, Any]],
+                 x_t: jax.Array, h_all: list[jax.Array], *,
+                 use_pallas: bool = True):
+    """Single-time-step multi-layer update (the streaming request path).
+
+    x_t: [B, dims[0]]; h_all: list of [B, H_l] per layer.
+    Returns (readout [B, dims[-1]] analog states of the final layer,
+    new h_all list, y_last [B, dims[-1]] binary outputs of the final
+    layer — unused for classification but part of the event fabric).
+    """
+    eff_all = [effective_layer(cfg, p, ste=False) for p in params]
+    x = x_t
+    new_h = []
+    for li, eff in enumerate(eff_all):
+        last = li == cfg.n_layers - 1
+        wh, wz, alpha, beta, theta = _layer_consts(cfg, eff, last)
+        if use_pallas:
+            imc_h = imc_matmul_pallas(x, wh)
+            imc_z = imc_matmul_pallas(x, wz)
+            z, h_new, y = gate_update_pallas(
+                imc_z, imc_h, h_all[li], alpha, beta, theta)
+        else:
+            imc_h = kref.imc_matmul_ref(x, wh)
+            imc_z = kref.imc_matmul_ref(x, wz)
+            z, h_new, y = kref.gate_update_ref(
+                imc_z, imc_h, h_all[li], alpha, beta, theta)
+        new_h.append(h_new)
+        x = y
+    return new_h[-1], new_h, x
+
+
+def forward_sequence(cfg: ModelConfig, params: list[dict[str, Any]],
+                     x_seq: jax.Array, *, use_pallas: bool = True,
+                     collect_traces: bool = False):
+    """Hardware-exact full-sequence classification.
+
+    x_seq [T, B, dims[0]] → logits [B, dims[-1]] (= final analog h of the
+    readout layer). With collect_traces, also returns per-layer
+    (z_seq, h_seq, y_seq) — the Fig 4 observables.
+    """
+    eff_all = [effective_layer(cfg, p, ste=False) for p in params]
+    seq = x_seq
+    traces = []
+    logits = None
+    for li, eff in enumerate(eff_all):
+        last = li == cfg.n_layers - 1
+        wh, wz, alpha, beta, theta = _layer_consts(cfg, eff, last)
+        b = seq.shape[1]
+        h0 = jnp.zeros((b, wh.shape[1]), jnp.float32)
+        if use_pallas:
+            z_seq, h_seq, y_seq = mingru_scan_pallas(
+                seq, wh, wz, alpha, beta, theta, h0)
+        else:
+            z_seq, h_seq, y_seq = kref.mingru_layer_seq_ref(
+                seq, wh, wz, alpha, beta, theta, h0)
+        if collect_traces:
+            traces.append((z_seq, h_seq, y_seq))
+        if last:
+            # digital readout: average the final analog states and add
+            # the (digital) readout bias — matches forward_train's head.
+            logits = h_seq[-READOUT_STEPS:].mean(axis=0) + eff["bh"]
+        seq = y_seq
+    if collect_traces:
+        return logits, traces
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,182 @@
+"""Quantization primitives for the MINIMALIST hardware constraints.
+
+The paper (§2) quantizes weights to 2 b, biases to 6 b, and the gating
+variable z to 6 b; output activations are binarized with a Heaviside step.
+Internal GRU states remain analog (fp in software).
+
+All quantizers come in two flavours:
+  * ``*_q``   — the pure forward quantizer (used at export / eval time and
+                as the oracle for the hardware mapping),
+  * ``*_ste`` — the straight-through-estimator version used inside
+                quantization-aware training (identity gradient, clipped to
+                the representable range).
+
+Code conventions (shared with the rust side, see rust/src/quant/):
+  * 2 b weight codes w ∈ {0,1,2,3} map to effective values
+    ``(w - 1.5) * w_scale`` — two negative and two positive levels,
+    mirroring the four equidistant voltages V_00..V_11 around
+    V_0 = (V_00+V_11)/2 (paper §3.1.1). There is no exact zero weight.
+  * 6 b bias codes b ∈ {-32..31} map to ``b * b_scale`` (b_scale is a
+    per-layer power-of-two-free scalar chosen from the weight scale).
+  * 6 b gate codes z ∈ {0..63} map to ``z / 63`` so that the swap count of
+    the 64-capacitor bank (k = round(z*64/63) in hardware terms) covers the
+    full [0, 1] mixing range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Generic straight-through rounding
+# ---------------------------------------------------------------------------
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """Round-to-nearest with a straight-through (identity) gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def ste_clip(x: jax.Array, lo: float, hi: float) -> jax.Array:
+    """Clip with straight-through gradient inside *and* outside the range.
+
+    Using a hard clip in the backward pass kills gradients for saturated
+    weights early in QAT; the straight-through variant keeps them alive,
+    which is what lets the multi-stage schedule recover accuracy.
+    """
+    return x + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - x)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit weights
+# ---------------------------------------------------------------------------
+
+W2_LEVELS = jnp.array([-1.5, -0.5, 0.5, 1.5], dtype=jnp.float32)
+
+
+def weight_scale(w: jax.Array) -> jax.Array:
+    """Per-tensor scale for 2 b quantization.
+
+    Chosen so the ±1.5·scale outer levels cover ~2σ of the weight
+    distribution: scale = mean(|w|) / 0.75 (for a symmetric two-sided
+    4-level grid the mean absolute reconstruction level is scale·(0.5+1.5)/2
+    = scale so matching E|w| keeps the pre/post-quantization gain ≈ 1).
+    """
+    return jnp.maximum(jnp.mean(jnp.abs(w)), 1e-8)
+
+
+def w2_codes(w: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize fp weights to integer codes {0,1,2,3}."""
+    # level index for value v: round(v/scale + 1.5) clipped to [0, 3]
+    idx = jnp.round(w / scale + 1.5)
+    return jnp.clip(idx, 0, 3).astype(jnp.int32)
+
+
+def w2_dequant(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Codes {0..3} → effective fp weights (w-1.5)·scale."""
+    return (codes.astype(jnp.float32) - 1.5) * scale
+
+
+def w2_q(w: jax.Array) -> jax.Array:
+    """Pure-forward 2 b fake-quantization (per-tensor scale)."""
+    s = weight_scale(w)
+    return w2_dequant(w2_codes(w, s), s)
+
+
+def w2_ste(w: jax.Array) -> jax.Array:
+    """2 b fake-quant with straight-through gradients (QAT)."""
+    s = jax.lax.stop_gradient(weight_scale(w))
+    idx = ste_clip(ste_round(w / s + 1.5), 0.0, 3.0)
+    return (idx - 1.5) * s
+
+
+# ---------------------------------------------------------------------------
+# 6-bit biases (signed, codes -32..31)
+# ---------------------------------------------------------------------------
+
+
+def bias_scale(b: jax.Array) -> jax.Array:
+    """Per-tensor 6 b bias scale: the code range covers max|b|.
+
+    Max-based (not σ-based): bias vectors are often near-constant (e.g.
+    the slow-gate initialization b_z ≈ −4), where a σ-based scale would
+    collapse to ~0 and quantize every bias to zero.
+    """
+    return jnp.maximum(jnp.max(jnp.abs(b)) / 31.0, 1e-8)
+
+
+def b6_codes(b: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(b / scale), -32, 31).astype(jnp.int32)
+
+
+def b6_dequant(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def b6_q(b: jax.Array) -> jax.Array:
+    s = bias_scale(b)
+    return b6_dequant(b6_codes(b, s), s)
+
+
+def b6_ste(b: jax.Array) -> jax.Array:
+    s = jax.lax.stop_gradient(bias_scale(b))
+    idx = ste_clip(ste_round(b / s), -32.0, 31.0)
+    return idx * s
+
+
+# ---------------------------------------------------------------------------
+# Gate nonlinearities
+# ---------------------------------------------------------------------------
+
+
+def hard_sigmoid(u: jax.Array) -> jax.Array:
+    """Piece-wise linear σ^z (paper Eq. 5): clip(u/6 + 1/2, 0, 1)."""
+    return jnp.clip(u / 6.0 + 0.5, 0.0, 1.0)
+
+
+def hard_sigmoid_ste(u: jax.Array) -> jax.Array:
+    """σ^z with a straight-through clip: identical forward, but the
+    gradient survives saturation. Without this, gates that start in the
+    dead zones (u ≤ −3 after the slow-gate initialization) would never
+    receive a learning signal in the hw phase."""
+    return ste_clip(u / 6.0 + 0.5, 0.0, 1.0)
+
+
+def z6_q(z: jax.Array) -> jax.Array:
+    """Quantize a gate value z ∈ [0,1] to 6 b codes / 63 (pure forward)."""
+    return jnp.round(jnp.clip(z, 0.0, 1.0) * 63.0) / 63.0
+
+
+def z6_ste(z: jax.Array) -> jax.Array:
+    """6 b gate quantization with straight-through gradient."""
+    zc = ste_clip(z, 0.0, 1.0)
+    return ste_round(zc * 63.0) / 63.0
+
+
+@jax.custom_vjp
+def heaviside_ste(h: jax.Array) -> jax.Array:
+    """Binary output activation Θ(h) with a surrogate gradient.
+
+    Forward: exact Heaviside (0/1). Backward: triangular surrogate
+    max(0, 1-|h|) — the standard choice for binary-activation QAT; keeps
+    the event-coded inter-layer communication trainable.
+    """
+    return (h > 0.0).astype(h.dtype)
+
+
+def _heaviside_fwd(h):
+    return heaviside_ste(h), h
+
+
+def _heaviside_bwd(h, g):
+    surrogate = jnp.clip(1.0 - jnp.abs(h), 0.0, 1.0)
+    return (g * surrogate,)
+
+
+heaviside_ste.defvjp(_heaviside_fwd, _heaviside_bwd)
+
+
+def heaviside(h: jax.Array) -> jax.Array:
+    """Pure-forward Heaviside Θ(h) (Eq. 4), no gradient definition."""
+    return (h > 0.0).astype(h.dtype)

@@ -1,0 +1,458 @@
+"""Multi-stage quantization-aware training of the MINIMALIST variants.
+
+Reproduces the Fig 5 experiment: three models sharing the architecture
+1-64-64-64-64-10 and the same trainable-parameter count, trained on
+sequential digit data, evaluated as test accuracy across seeds.
+
+The paper (§4.1) extends training to "a multistage process of 4 gradual
+phases of quantization-aware training". The schedule here:
+
+    fp32 target :  fp32
+    quant target:  fp32 → qw (2-bit W) → qwb (+6-bit b) → quant (+Θ out)
+    hw target   :  fp32 → qw → qwb → quant → hw (hard-σ, 6-bit z,
+                   candidate activation removed, bias → comparator)
+
+Each phase warm-starts from the previous phase's parameters (with the
+re-parameterizations of model.adapt_params at the quant and hw hand-overs).
+
+For the Fig 5 experiment the three targets share the initial fp32 trunk
+(single-core CPU budget; DESIGN.md §2 documents the scale-down): the fp32
+row continues training the baseline for the same *total* epoch count as
+the hw path, so no row gets an epoch advantage.
+
+optax is not available in this offline image, so the Adam optimizer is
+implemented here directly (standard bias-corrected Adam, Kingma & Ba).
+
+Usage (also driven by `make fig5`):
+    python -m compile.train --variant hw --seed 0 --preset fast
+    python -m compile.train --experiment fig5 --preset fast --seeds 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .export import save_mtf
+
+# ---------------------------------------------------------------------------
+# Presets (scaled-down workloads; see DESIGN.md §2 for the substitution)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPreset:
+    name: str
+    img_size: int          # T = img_size²
+    n_train: int
+    n_test: int
+    batch: int
+    epochs_per_phase: int
+    lr: float
+    dims: tuple[int, ...] = model_mod.DEFAULT_DIMS
+
+
+PRESETS = {
+    # smoke: seconds; plumbing-test only (far too little data to learn)
+    "smoke": TrainPreset("smoke", img_size=8, n_train=240, n_test=120,
+                         batch=40, epochs_per_phase=1, lr=1e-2),
+    # fast: the default for EXPERIMENTS.md on this single-core testbed
+    "fast": TrainPreset("fast", img_size=16, n_train=3000, n_test=1000,
+                        batch=60, epochs_per_phase=4, lr=1e-2),
+    # full: closer to the paper's budget (hours; use when time allows)
+    "full": TrainPreset("full", img_size=16, n_train=6000, n_test=1500,
+                        batch=60, epochs_per_phase=10, lr=1e-2),
+}
+
+# The synthetic generator provides unlimited i.i.d. samples, so each epoch
+# draws a *fresh* training split (epoch index folded into the seed) — the
+# data-efficiency equivalent of MNIST's 60 k images without the storage.
+FRESH_DATA_PER_EPOCH = True
+
+# Per-phase epoch multiplier: the fp32 trunk does the representation
+# learning; the binarization (quant) and hardware (hw) phases need room to
+# recover from their distribution shifts.
+PHASE_EPOCH_WEIGHT = {"fp32": 4, "qw": 1, "qwb": 1, "quant": 2, "hw": 2}
+
+PHASES_FOR_TARGET = {
+    "fp32": ("fp32",),
+    "quant": ("fp32", "qw", "qwb", "quant"),
+    "hw": ("fp32", "qw", "qwb", "quant", "hw"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; optax unavailable offline)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(opt, grads, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               opt["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr = jnp.sqrt(1.0 - b2 ** tf) / (1.0 - b1 ** tf)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * corr * m_ / (jnp.sqrt(v_) + eps),
+        params, m, v)
+    return {"m": m, "v": v, "t": t}, params
+
+
+# ---------------------------------------------------------------------------
+# Phase machinery
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def make_step_fn(cfg: model_mod.ModelConfig):
+    """Jitted (trainable, opt, x, y, lr) → (trainable, opt, loss)."""
+
+    def loss_fn(trainable, x_seq, labels):
+        params, logit_scale = trainable
+        logits = model_mod.forward_train(cfg, params, x_seq, logit_scale)
+        return model_mod.cross_entropy(logits, labels)
+
+    @jax.jit
+    def step(trainable, opt, x_seq, labels, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(trainable, x_seq, labels)
+        opt, trainable = adam_update(opt, grads, trainable, lr)
+        return trainable, opt, loss
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def make_eval_fn(cfg: model_mod.ModelConfig):
+    @jax.jit
+    def eval_logits(params, logit_scale, x_seq):
+        return model_mod.forward_train(cfg, params, x_seq, logit_scale)
+
+    return eval_logits
+
+
+def cosine_lr(base: float, step: int, total: int, floor_frac: float = 0.1):
+    """Cosine decay from base to base·floor_frac over `total` steps."""
+    frac = min(step / max(total, 1), 1.0)
+    return base * (floor_frac + (1 - floor_frac)
+                   * 0.5 * (1 + np.cos(np.pi * frac)))
+
+
+def evaluate(cfg, params, logit_scale, x, y, batch: int) -> float:
+    """Test accuracy; x is [n, T, 1] (numpy), evaluated in batches."""
+    eval_fn = make_eval_fn(cfg)
+    correct = 0
+    n = x.shape[0]
+    for i in range(0, n, batch):
+        xb = jnp.asarray(np.transpose(x[i:i + batch], (1, 0, 2)))
+        logits = eval_fn(params, logit_scale, xb)
+        correct += int((np.argmax(np.array(logits), -1)
+                        == y[i:i + batch]).sum())
+    return correct / n
+
+
+def run_phase(phase: str, params, logit_scale, *, seed: int,
+              preset: TrainPreset, dims, x_test, y_test, history: list,
+              n_epochs: int, tag: str, verbose: bool = True):
+    """Train one phase for n_epochs, mutating nothing; returns new state."""
+    cfg = model_mod.ModelConfig(dims=dims, variant=phase)
+    step_fn = make_step_fn(cfg)
+    opt = adam_init((params, logit_scale))
+    rng = np.random.default_rng(seed * 7919 + len(history) + 13)
+    n_batches = preset.n_train // preset.batch
+    total_steps = n_epochs * n_batches
+    phase_tag = model_mod.VARIANTS.index(phase)
+    gstep = 0
+    acc = float("nan")
+    for epoch in range(n_epochs):
+        if FRESH_DATA_PER_EPOCH:
+            xs, ys = data_mod.make_split(
+                preset.n_train, size=preset.img_size,
+                seed=seed * 131 + 1000 * phase_tag + epoch)
+            x_train = data_mod.to_sequences(xs)
+            y_train = ys
+        order = rng.permutation(preset.n_train)
+        losses = []
+        for bi in range(n_batches):
+            idx = order[bi * preset.batch:(bi + 1) * preset.batch]
+            xb = jnp.asarray(np.transpose(x_train[idx], (1, 0, 2)))
+            yb = jnp.asarray(y_train[idx])
+            lr = jnp.float32(cosine_lr(preset.lr, gstep, total_steps))
+            (params, logit_scale), opt, loss = step_fn(
+                (params, logit_scale), opt, xb, yb, lr)
+            losses.append(float(loss))
+            gstep += 1
+        acc = evaluate(cfg, params, logit_scale, x_test, y_test, preset.batch)
+        history.append({"tag": tag, "phase": phase, "epoch": epoch,
+                        "loss": float(np.mean(losses)), "test_acc": acc})
+        if verbose:
+            print(f"[{tag}] {phase} ep{epoch}: "
+                  f"loss={np.mean(losses):.4f} acc={acc:.4f}", flush=True)
+    return params, logit_scale, acc
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def train_variant(target: str, seed: int, preset: TrainPreset,
+                  out_dir: Path, *, verbose: bool = True) -> dict:
+    """Run the full multi-stage schedule for one (variant, seed)."""
+    t_start = time.time()
+    _, _, x_test, y_test = data_mod.dataset(
+        1, preset.n_test, size=preset.img_size, seed=seed)
+    dims = preset.dims
+
+    params = model_mod.init_params(
+        model_mod.ModelConfig(dims=dims, variant="fp32"), seed=seed)
+    logit_scale = jnp.asarray(10.0, jnp.float32)
+
+    history: list = []
+    prev = None
+    acc = float("nan")
+    for phase in PHASES_FOR_TARGET[target]:
+        if prev is not None:
+            params, logit_scale = model_mod.adapt_params(
+                params, logit_scale, prev, phase)
+        n_epochs = preset.epochs_per_phase * PHASE_EPOCH_WEIGHT[phase]
+        params, logit_scale, acc = run_phase(
+            phase, params, logit_scale, seed=seed, preset=preset, dims=dims,
+            x_test=x_test, y_test=y_test, history=history,
+            n_epochs=n_epochs, tag=f"{target} s{seed}", verbose=verbose)
+        prev = phase
+
+    run = finish_run(target, seed, preset, out_dir, dims, params,
+                     logit_scale, acc, history, t_start, verbose)
+    return run
+
+
+def finish_run(target, seed, preset, out_dir, dims, params, logit_scale,
+               acc, history, t_start, verbose) -> dict:
+    final_cfg = model_mod.ModelConfig(dims=dims, variant=target)
+    run = {
+        "variant": target, "seed": seed, "preset": preset.name,
+        "dims": list(dims), "final_test_acc": acc,
+        "wall_seconds": time.time() - t_start, "history": history,
+    }
+    run_dir = out_dir / f"{target}_s{seed}"
+    run_dir.mkdir(parents=True, exist_ok=True)
+    export_checkpoint(final_cfg, params, logit_scale, run_dir / "weights.mtf")
+    (run_dir / "metrics.json").write_text(json.dumps(run, indent=1))
+    if verbose:
+        print(f"[{target} s{seed}] final acc={acc:.4f} "
+              f"({run['wall_seconds']:.0f}s) → {run_dir}", flush=True)
+    return run
+
+
+def train_fig5_seed(seed: int, preset: TrainPreset, out_dir: Path,
+                    *, verbose: bool = True) -> dict[str, float]:
+    """One seed of the Fig 5 experiment with a shared fp32 trunk.
+
+    Returns {variant: final_test_acc}. The fp32 row trains for the same
+    total number of epochs as the hw path so the comparison is fair.
+    """
+    t0 = time.time()
+    _, _, x_test, y_test = data_mod.dataset(
+        1, preset.n_test, size=preset.img_size, seed=seed)
+    dims = preset.dims
+    E = preset.epochs_per_phase
+    common = dict(seed=seed, preset=preset, dims=dims,
+                  x_test=x_test, y_test=y_test, verbose=verbose)
+
+    params = model_mod.init_params(
+        model_mod.ModelConfig(dims=dims, variant="fp32"), seed=seed)
+    ls = jnp.asarray(10.0, jnp.float32)
+
+    accs: dict[str, float] = {}
+    hist_trunk: list = []
+    # shared trunk
+    params, ls, _ = run_phase("fp32", params, ls, history=hist_trunk,
+                              n_epochs=E * PHASE_EPOCH_WEIGHT["fp32"],
+                              tag=f"fig5 s{seed} trunk", **common)
+
+    # branch A: fp32 keeps training for parity with the hw path's total
+    extra = E * (PHASE_EPOCH_WEIGHT["qw"] + PHASE_EPOCH_WEIGHT["qwb"]
+                 + PHASE_EPOCH_WEIGHT["quant"] + PHASE_EPOCH_WEIGHT["hw"])
+    hist_a = list(hist_trunk)
+    pa, la, acc = run_phase("fp32", params, ls, history=hist_a,
+                            n_epochs=extra, tag=f"fig5 s{seed} fp32", **common)
+    accs["fp32"] = acc
+    finish_run("fp32", seed, preset, out_dir, dims, pa, la, acc,
+               hist_a, t0, verbose)
+
+    # branch B: QAT chain
+    hist_b = list(hist_trunk)
+    pb, lb = params, ls
+    prev = "fp32"
+    for phase in ("qw", "qwb", "quant", "hw"):
+        pb, lb = model_mod.adapt_params(pb, lb, prev, phase)
+        pb, lb, acc = run_phase(phase, pb, lb, history=hist_b,
+                                n_epochs=E * PHASE_EPOCH_WEIGHT[phase],
+                                tag=f"fig5 s{seed} {phase}", **common)
+        if phase in ("quant", "hw"):
+            accs[phase] = acc
+            finish_run(phase, seed, preset, out_dir, dims, pb, lb, acc,
+                       hist_b, t0, verbose)
+        prev = phase
+    return accs
+
+
+def load_checkpoint(path: Path):
+    """Rebuild the raw parameter pytree from an exported checkpoint."""
+    from .export import load_mtf
+
+    t = load_mtf(path)
+    dims = tuple(int(d) for d in t["meta.dims"])
+    variant = bytes(t["meta.variant"]).rstrip(b"\0").decode()
+    params = []
+    for l in range(len(dims) - 1):
+        params.append({
+            "wh": jnp.asarray(t[f"l{l}.wh"]),
+            "wz": jnp.asarray(t[f"l{l}.wz"]),
+            "bh": jnp.asarray(t[f"l{l}.bh"]),
+            "bz": jnp.asarray(t[f"l{l}.bz"]),
+            "log_alpha": jnp.log(jnp.asarray(t[f"l{l}.alpha"][0])),
+            "gamma": jnp.asarray(t[f"l{l}.gamma"][0]),
+        })
+    ls = jnp.asarray(t["meta.logit_scale"][0])
+    return dims, variant, params, ls
+
+
+def extend_run(resume_from: Path, target: str, seed: int, epochs: int,
+               preset: TrainPreset, out_dir: Path, *, lr_scale: float = 0.5,
+               verbose: bool = True) -> dict:
+    """Continue training from a checkpoint, adapting variants if needed.
+
+    Used to give the hw phase the longer recovery budget the sigmoid →
+    hard-sigmoid hand-over needs without re-running the full schedule.
+    """
+    t0 = time.time()
+    dims, from_variant, params, ls = load_checkpoint(resume_from)
+    if from_variant != target:
+        params, ls = model_mod.adapt_params(params, ls, from_variant, target)
+    _, _, x_test, y_test = data_mod.dataset(
+        1, preset.n_test, size=preset.img_size, seed=seed)
+    scaled = dataclasses.replace(preset, lr=preset.lr * lr_scale)
+    history: list = []
+    params, ls, acc = run_phase(
+        target, params, ls, seed=seed + 500, preset=scaled, dims=dims,
+        x_test=x_test, y_test=y_test, history=history, n_epochs=epochs,
+        tag=f"extend {target} s{seed}", verbose=verbose)
+    return finish_run(target, seed, preset, out_dir, dims, params, ls,
+                      acc, history, t0, verbose)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint export (MTF; consumed by rust/src/nn/weights.rs)
+# ---------------------------------------------------------------------------
+
+
+def export_checkpoint(cfg: model_mod.ModelConfig, params, logit_scale,
+                      path: Path) -> None:
+    """Serialize the trained network: raw fp params, and for quantized
+    variants also the integer code planes + scales (what the SRAM images
+    and the codesign spec consume on the rust side)."""
+    tensors: dict[str, np.ndarray] = {
+        "meta.dims": np.asarray(cfg.dims, np.int32),
+        "meta.variant": np.frombuffer(
+            cfg.variant.encode().ljust(8, b"\0"), np.uint8).copy(),
+        "meta.logit_scale": np.asarray([float(logit_scale)], np.float32),
+    }
+    for li, p in enumerate(params):
+        pre = f"l{li}."
+        for k in ("wh", "wz", "bh", "bz"):
+            tensors[pre + k] = np.asarray(p[k], np.float32)
+        tensors[pre + "alpha"] = np.asarray(
+            [float(jnp.exp(p["log_alpha"]))], np.float32)
+        tensors[pre + "gamma"] = np.asarray([float(p["gamma"])], np.float32)
+        if cfg.variant != "fp32":
+            for k in ("wh", "wz"):
+                w = np.asarray(p[k], np.float32)
+                s = float(np.maximum(np.mean(np.abs(w)), 1e-8))
+                codes = np.clip(np.round(w / s + 1.5), 0, 3).astype(np.int32)
+                tensors[pre + k + "_codes"] = codes
+                tensors[pre + k + "_scale"] = np.asarray([s], np.float32)
+            for k in ("bh", "bz"):
+                b = np.asarray(p[k], np.float32)
+                s = float(np.maximum(np.abs(b).max() / 31.0, 1e-8))
+                codes = np.clip(np.round(b / s), -32, 31).astype(np.int32)
+                tensors[pre + k + "_codes"] = codes
+                tensors[pre + k + "_scale"] = np.asarray([s], np.float32)
+    save_mtf(path, tensors)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--variant", choices=model_mod.FIG5_VARIANTS)
+    ap.add_argument("--experiment", choices=["fig5"],
+                    help="run all Fig 5 variants × seeds (shared trunk)")
+    ap.add_argument("--preset", default="fast", choices=sorted(PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="number of seeds for --experiment fig5")
+    ap.add_argument("--out", default="../runs")
+    ap.add_argument("--resume-from", help="checkpoint to extend")
+    ap.add_argument("--epochs", type=int, default=16,
+                    help="epochs for --resume-from extension")
+    ap.add_argument("--lr-scale", type=float, default=0.5)
+    args = ap.parse_args(argv)
+
+    preset = PRESETS[args.preset]
+    out_dir = Path(args.out)
+    if args.resume_from:
+        if args.variant is None:
+            ap.error("--resume-from requires --variant")
+        extend_run(Path(args.resume_from), args.variant, args.seed,
+                   args.epochs, preset, out_dir, lr_scale=args.lr_scale)
+        return
+    if args.experiment == "fig5":
+        per_variant: dict[str, list[float]] = {
+            v: [] for v in model_mod.FIG5_VARIANTS}
+        for s in range(args.seeds):
+            accs = train_fig5_seed(s, preset, out_dir)
+            for v, a in accs.items():
+                per_variant[v].append(a)
+        results = {
+            v: {"mean": float(np.mean(a)), "std": float(np.std(a)),
+                "accs": a}
+            for v, a in per_variant.items()
+        }
+        for v, r in results.items():
+            print(f"== {v}: {r['mean']:.4f} ± {r['std']:.4f}")
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / "fig5_summary.json").write_text(
+            json.dumps({"preset": preset.name, "seeds": args.seeds,
+                        "results": results}, indent=1))
+    else:
+        if args.variant is None:
+            ap.error("need --variant or --experiment")
+        train_variant(args.variant, args.seed, preset, out_dir)
+
+
+if __name__ == "__main__":
+    main()

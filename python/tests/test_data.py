@@ -1,0 +1,58 @@
+"""synthMNIST generator tests: determinism, balance, encoding."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+def test_deterministic_given_seed():
+    a, la = data.make_split(40, size=8, seed=3)
+    b, lb = data.make_split(40, size=8, seed=3)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_different_seeds_differ():
+    a, _ = data.make_split(10, size=8, seed=1)
+    b, _ = data.make_split(10, size=8, seed=2)
+    assert not np.array_equal(a, b)
+
+
+def test_class_balance():
+    _, labels = data.make_split(100, size=8, seed=0)
+    counts = np.bincount(labels, minlength=10)
+    assert np.all(counts == 10)
+
+
+def test_pixel_range_and_ink():
+    imgs, _ = data.make_split(20, size=16, seed=5)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    # every digit leaves a visible trace
+    assert np.all(imgs.reshape(20, -1).sum(axis=1) > 5.0)
+
+
+def test_sequence_encoding_is_row_major_scan():
+    imgs, _ = data.make_split(3, size=8, seed=7)
+    seqs = data.to_sequences(imgs)
+    assert seqs.shape == (3, 64, 1)
+    np.testing.assert_array_equal(seqs[1, :, 0], imgs[1].reshape(-1))
+
+
+@given(n=st.integers(1, 30), size=st.sampled_from([8, 12, 16]))
+@settings(max_examples=10, deadline=None)
+def test_shapes_for_any_split(n, size):
+    imgs, labels = data.make_split(n, size=size, seed=1)
+    assert imgs.shape == (n, size, size)
+    assert labels.shape == (n,)
+    assert labels.min() >= 0 and labels.max() <= 9
+
+
+def test_glyphs_distinct_across_classes():
+    # clean templates of different digits must differ substantially
+    rng_img = {d: data.make_glyph(d, size=16, seed=0, index=0, noise=0.0)
+               for d in range(10)}
+    for d1 in range(10):
+        for d2 in range(d1 + 1, 10):
+            diff = np.abs(rng_img[d1] - rng_img[d2]).mean()
+            assert diff > 0.01, f"digits {d1} and {d2} identical"

@@ -1,0 +1,74 @@
+"""MTF container round-trip tests (python side of the cross-language
+contract; the rust side lives in rust/tests/mtf_roundtrip.rs)."""
+
+import numpy as np
+import pytest
+
+from compile.export import load_mtf, save_mtf
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    tensors = {
+        "f32": np.linspace(-1, 1, 12, dtype=np.float32).reshape(3, 4),
+        "i32": np.arange(-5, 5, dtype=np.int32),
+        "u8": np.frombuffer(b"hello", dtype=np.uint8).copy(),
+        "i64": np.asarray([2**40, -(2**40)], np.int64),
+        "f64": np.asarray([[0.25]], np.float64),
+    }
+    p = tmp_path / "t.mtf"
+    save_mtf(p, tensors)
+    back = load_mtf(p)
+    assert list(back) == list(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_dtype_normalization(tmp_path):
+    p = tmp_path / "n.mtf"
+    save_mtf(p, {
+        "bool": np.asarray([True, False]),
+        "i16": np.asarray([1, 2], np.int16),
+        "f16": np.asarray([0.5], np.float16),
+    })
+    back = load_mtf(p)
+    assert back["bool"].dtype == np.uint8
+    assert back["i16"].dtype == np.int32
+    assert back["f16"].dtype == np.float32
+
+
+def test_scalar_and_empty(tmp_path):
+    p = tmp_path / "s.mtf"
+    save_mtf(p, {"s": np.asarray([3.5], np.float32),
+                 "e": np.zeros((0,), np.float32)})
+    back = load_mtf(p)
+    assert back["s"][0] == np.float32(3.5)
+    assert back["e"].size == 0
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.mtf"
+    p.write_bytes(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        load_mtf(p)
+
+
+def test_checkpoint_schema(tmp_path):
+    """export_checkpoint writes everything the rust loader requires."""
+    import jax.numpy as jnp
+
+    from compile import model as M
+    from compile.train import export_checkpoint
+
+    cfg = M.ModelConfig(dims=(1, 6, 10), variant="hw")
+    params = M.init_params(cfg, seed=0)
+    path = tmp_path / "w.mtf"
+    export_checkpoint(cfg, params, jnp.float32(2.0), path)
+    t = load_mtf(path)
+    assert list(t["meta.dims"]) == [1, 6, 10]
+    for li in range(2):
+        for k in ("wh_codes", "wz_codes", "bh_codes", "bz_codes",
+                  "wh_scale", "wz_scale", "bh_scale", "bz_scale", "alpha"):
+            assert f"l{li}.{k}" in t, f"missing l{li}.{k}"
+        codes = t[f"l{li}.wh_codes"]
+        assert codes.min() >= 0 and codes.max() <= 3

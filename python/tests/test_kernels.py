@@ -1,0 +1,128 @@
+"""Pallas kernels vs the pure-jnp oracle (the core L1 correctness
+signal), including hypothesis sweeps over shapes and value regimes."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gate_update import gate_update
+from compile.kernels.imc_matmul import imc_matmul
+from compile.kernels.mingru_scan import mingru_layer_scan
+
+
+def rand_w_eff(rng, n, m):
+    """Effective 2-bit weights: (code−1.5)·scale."""
+    return ((rng.integers(0, 4, (n, m)) - 1.5) * 0.8).astype(np.float32)
+
+
+class TestImcMatmul:
+    @given(
+        b=st.integers(1, 17),
+        n=st.integers(1, 130),
+        m=st.integers(1, 140),
+        binary=st.booleans(),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref_over_shapes(self, b, n, m, binary):
+        rng = np.random.default_rng(b * 1000 + n * 10 + m)
+        x = (rng.random((b, n)) < 0.4 if binary else rng.random((b, n))).astype(np.float32)
+        w = rand_w_eff(rng, n, m)
+        out = imc_matmul(jnp.asarray(x), jnp.asarray(w))
+        want = ref.imc_matmul_ref(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_allclose(np.array(out), np.array(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_mean_semantics(self):
+        # column of all +1.5·s rails with half the rows on → 0.75·s
+        x = jnp.asarray([[1.0, 0.0, 1.0, 0.0]], jnp.float32)
+        w = jnp.full((4, 1), 1.2, jnp.float32)  # 1.5 · 0.8
+        out = imc_matmul(x, w)
+        np.testing.assert_allclose(np.array(out), [[0.6]], rtol=1e-6)
+
+    def test_block_boundaries(self):
+        # shapes straddling the default 128-block boundaries
+        rng = np.random.default_rng(0)
+        for n, m in [(127, 129), (128, 128), (129, 127), (256, 3)]:
+            x = rng.random((3, n)).astype(np.float32)
+            w = rand_w_eff(rng, n, m)
+            out = imc_matmul(jnp.asarray(x), jnp.asarray(w))
+            want = ref.imc_matmul_ref(jnp.asarray(x), jnp.asarray(w))
+            np.testing.assert_allclose(np.array(out), np.array(want),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestGateUpdate:
+    @given(b=st.integers(1, 9), h=st.integers(1, 200))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, b, h):
+        rng = np.random.default_rng(b * 211 + h)
+        mk = lambda: jnp.asarray(rng.normal(0, 0.5, (b, h)), jnp.float32)
+        imc_z, imc_h, h_prev = mk(), mk(), mk()
+        alpha = jnp.float32(rng.uniform(0.5, 20.0))
+        beta = jnp.asarray(rng.normal(0, 1, (h,)), jnp.float32)
+        theta = jnp.asarray(rng.normal(0, 0.2, (h,)), jnp.float32)
+        out = gate_update(imc_z, imc_h, h_prev, alpha, beta, theta)
+        want = ref.gate_update_ref(imc_z, imc_h, h_prev, alpha, beta, theta)
+        for a, b_ in zip(out, want):
+            np.testing.assert_allclose(np.array(a), np.array(b_),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_z_is_on_6bit_grid(self):
+        rng = np.random.default_rng(1)
+        imc = jnp.asarray(rng.normal(0, 1, (4, 33)), jnp.float32)
+        z, _, _ = gate_update(imc, imc, imc, jnp.float32(5.0),
+                              jnp.zeros((33,)), jnp.zeros((33,)))
+        codes = np.array(z) * 63.0
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+    def test_state_is_convex_mixture(self):
+        rng = np.random.default_rng(2)
+        imc_h = jnp.asarray(rng.uniform(-1, 1, (2, 16)), jnp.float32)
+        h_prev = jnp.asarray(rng.uniform(-1, 1, (2, 16)), jnp.float32)
+        imc_z = jnp.asarray(rng.normal(0, 2, (2, 16)), jnp.float32)
+        _, h_new, _ = gate_update(imc_z, imc_h, h_prev, jnp.float32(3.0),
+                                  jnp.zeros((16,)), jnp.zeros((16,)))
+        lo = np.minimum(np.array(imc_h), np.array(h_prev)) - 1e-6
+        hi = np.maximum(np.array(imc_h), np.array(h_prev)) + 1e-6
+        assert np.all(np.array(h_new) >= lo) and np.all(np.array(h_new) <= hi)
+
+
+class TestMingruScan:
+    @given(t=st.integers(1, 24), b=st.integers(1, 5), n=st.integers(1, 40),
+           h=st.integers(1, 72))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_sequential_ref(self, t, b, n, h):
+        rng = np.random.default_rng(t * 7 + b * 3 + n + h)
+        x = (rng.random((t, b, n)) < 0.35).astype(np.float32)
+        wh = jnp.asarray(rand_w_eff(rng, n, h))
+        wz = jnp.asarray(rand_w_eff(rng, n, h))
+        alpha = jnp.float32(rng.uniform(1.0, 15.0))
+        beta = jnp.asarray(rng.normal(-1, 1, (h,)), jnp.float32)
+        theta = jnp.asarray(rng.normal(0, 0.1, (h,)), jnp.float32)
+        h0 = jnp.zeros((b, h), jnp.float32)
+        out = mingru_layer_scan(jnp.asarray(x), wh, wz, alpha, beta, theta, h0)
+        want = ref.mingru_layer_seq_ref(jnp.asarray(x), wh, wz, alpha, beta,
+                                        theta, h0)
+        for a, b_ in zip(out, want):
+            np.testing.assert_allclose(np.array(a), np.array(b_),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestParallelScan:
+    @given(t=st.integers(1, 50), b=st.integers(1, 4), h=st.integers(1, 32))
+    @settings(max_examples=20, deadline=None)
+    def test_associative_scan_equals_loop(self, t, b, h):
+        rng = np.random.default_rng(t + b + h)
+        z = jnp.asarray(rng.uniform(0, 1, (t, b, h)), jnp.float32)
+        ht = jnp.asarray(rng.normal(0, 1, (t, b, h)), jnp.float32)
+        h0 = jnp.asarray(rng.normal(0, 1, (b, h)), jnp.float32)
+        fast = ref.mingru_scan_ref(z, ht, h0)
+        # sequential loop
+        slow = []
+        hc = np.array(h0)
+        for k in range(t):
+            hc = np.array(z[k]) * np.array(ht[k]) + (1 - np.array(z[k])) * hc
+            slow.append(hc.copy())
+        np.testing.assert_allclose(np.array(fast), np.stack(slow),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,148 @@
+"""Model-level tests: variant semantics, train/inference-path agreement,
+QAT hand-over re-parameterizations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+DIMS = (1, 12, 10)
+
+
+def make(variant, seed=0):
+    cfg = M.ModelConfig(dims=DIMS, variant=variant)
+    return cfg, M.init_params(cfg, seed=seed)
+
+
+def rand_seq(t=20, b=3, d=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((t, b, d)), jnp.float32)
+
+
+class TestVariants:
+    @pytest.mark.parametrize("variant", M.VARIANTS)
+    def test_forward_shapes(self, variant):
+        cfg, params = make(variant)
+        x = rand_seq()
+        logits = M.forward_train(cfg, params, x, jnp.float32(1.0))
+        assert logits.shape == (3, 10)
+        assert np.all(np.isfinite(np.array(logits)))
+
+    @pytest.mark.parametrize("variant", M.VARIANTS)
+    def test_gradients_flow_to_all_params(self, variant):
+        cfg, params = make(variant)
+        x = rand_seq(t=8)
+        labels = jnp.asarray([0, 1, 2])
+
+        def loss(params):
+            return M.cross_entropy(
+                M.forward_train(cfg, params, x, jnp.float32(1.0)), labels)
+
+        grads = jax.grad(loss)(params)
+        for li, g in enumerate(grads):
+            for k in ("wh", "wz", "bz"):
+                norm = float(jnp.abs(g[k]).sum())
+                assert norm > 0.0, f"no gradient for layer {li} {k} ({variant})"
+
+    def test_hw_z_is_quantized(self):
+        cfg, params = make("hw")
+        eff = M.effective_layer(cfg, params[0], ste=False)
+        x = rand_seq(t=5)
+        z, _ = M._layer_zh(cfg, eff, x)
+        codes = np.array(z) * 63.0
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+    def test_binary_variants_emit_binary_events(self):
+        for variant in ("quant", "hw"):
+            cfg, params = make(variant)
+            eff = M.effective_layer(cfg, params[0], ste=False)
+            out = M._layer_train(cfg, eff, rand_seq(t=6))
+            vals = np.unique(np.array(out))
+            assert set(vals.tolist()) <= {0.0, 1.0}, variant
+
+    def test_fp32_passes_analog(self):
+        cfg, params = make("fp32")
+        eff = M.effective_layer(cfg, params[0], ste=False)
+        out = np.array(M._layer_train(cfg, eff, rand_seq(t=6)))
+        assert len(np.unique(out)) > 2
+
+
+class TestInferencePath:
+    def test_sequence_matches_train_forward_hw(self):
+        """forward_train (parallel scan) and forward_sequence (hardware
+        recurrence, pallas) must produce identical logits for hw."""
+        cfg, params = make("hw")
+        x = rand_seq(t=16, b=2)
+        lt = M.forward_train(cfg, params, x, jnp.float32(1.0))
+        ls = M.forward_sequence(cfg, params, x, use_pallas=True)
+        np.testing.assert_allclose(np.array(lt), np.array(ls),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_step_equals_sequence(self):
+        cfg, params = make("hw")
+        x = rand_seq(t=10, b=2)
+        _, traces = M.forward_sequence(cfg, params, x, use_pallas=False,
+                                       collect_traces=True)
+        h_all = [jnp.zeros((2, h), jnp.float32) for h in cfg.hidden_dims]
+        for t in range(10):
+            _, h_all, _ = M.forward_step(cfg, params, x[t], h_all,
+                                         use_pallas=False)
+        # final hidden state of every layer must match the sequence run
+        for li in range(cfg.n_layers):
+            np.testing.assert_allclose(
+                np.array(h_all[li]),
+                np.array(traces[li][1][-1]),
+                rtol=1e-5, atol=1e-6)
+
+    def test_non_hw_variant_rejected(self):
+        cfg, params = make("quant")
+        with pytest.raises(ValueError):
+            M.forward_sequence(cfg, params, rand_seq(t=4))
+
+
+class TestAdaptParams:
+    def test_identity_transitions(self):
+        _, params = make("fp32")
+        ls = jnp.float32(2.0)
+        p2, ls2 = M.adapt_params(params, ls, "fp32", "qw")
+        assert float(ls2) == 2.0
+        np.testing.assert_array_equal(np.array(p2[0]["bh"]),
+                                      np.array(params[0]["bh"]))
+
+    def test_quant_transition_centers_thresholds(self):
+        _, params = make("qwb")
+        p2, _ = M.adapt_params(params, jnp.float32(1.0), "qwb", "quant")
+        for p in p2[:-1]:
+            np.testing.assert_allclose(np.array(p["bh"]), 0.5)
+        # readout layer keeps its bias
+        np.testing.assert_array_equal(np.array(p2[-1]["bh"]),
+                                      np.array(params[-1]["bh"]))
+
+    def test_hw_transition_escapes_dead_zone(self):
+        """σ(b_z)→hardsig remap must keep gates alive: with the slow-gate
+        init b_z=−4, a naive carry-over lands on hardsig's hard zero."""
+        _, params = make("quant")
+        p2, _ = M.adapt_params(params, jnp.float32(1.0), "quant", "hw")
+        for p in p2:
+            bz = np.array(p["bz"])
+            assert np.all(bz > -3.0), "gate stuck in hardsig dead zone"
+            # operating point preserved: hardsig(bz') ≈ σ(bz)
+            want = 1 / (1 + np.exp(4.0))
+            got = np.clip(bz / 6.0 + 0.5, 0, 1)
+            np.testing.assert_allclose(got, want, atol=1e-3)
+
+    def test_hw_transition_rescales_logit_scale(self):
+        _, params = make("quant")
+        gamma = float(params[-1]["gamma"])
+        _, ls2 = M.adapt_params(params, jnp.float32(3.0), "quant", "hw")
+        assert abs(float(ls2) - 3.0 * gamma) < 1e-4
+
+
+def test_g_candidate_is_continuous_and_positive():
+    u = jnp.asarray(np.linspace(-5, 5, 201), jnp.float32)
+    g = np.array(M.g_candidate(u))
+    assert np.all(g > 0)
+    assert np.all(np.abs(np.diff(g)) < 0.06)  # no jumps
+    assert abs(float(M.g_candidate(jnp.float32(0.0))) - 0.5) < 1e-6

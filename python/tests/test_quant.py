@@ -1,0 +1,104 @@
+"""Quantizer unit + property tests (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+F32 = st.floats(-10.0, 10.0, allow_nan=False, width=32)
+
+
+class TestW2:
+    def test_levels_are_the_four_rails(self):
+        w = jnp.asarray([-5.0, -0.6, 0.1, 5.0], jnp.float32)
+        s = quant.weight_scale(w)
+        codes = quant.w2_codes(w, s)
+        assert codes.tolist() == [0, 1, 2, 3]
+        deq = quant.w2_dequant(codes, s)
+        np.testing.assert_allclose(
+            np.array(deq) / float(s), [-1.5, -0.5, 0.5, 1.5])
+
+    def test_no_zero_level(self):
+        # the paper's rails are symmetric around V_0 with no exact zero
+        w = jnp.zeros((8,), jnp.float32) + 1e-9
+        q = quant.w2_q(w)
+        assert np.all(np.array(q) != 0.0)
+
+    @given(st.lists(F32, min_size=2, max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_idempotent_at_fixed_scale(self, values):
+        # Idempotence holds per scale (the data-derived scale itself
+        # shifts after quantization, which is fine — codes are stable).
+        w = jnp.asarray(values, jnp.float32)
+        s = quant.weight_scale(w)
+        q1 = quant.w2_dequant(quant.w2_codes(w, s), s)
+        q2 = quant.w2_dequant(quant.w2_codes(q1, s), s)
+        np.testing.assert_allclose(np.array(q1), np.array(q2), atol=1e-6)
+
+    def test_ste_gradient_is_straight_through(self):
+        g = jax.grad(lambda w: jnp.sum(quant.w2_ste(w)))(
+            jnp.asarray([0.3, -0.2, 2.0], jnp.float32))
+        np.testing.assert_allclose(np.array(g), 1.0, atol=1e-6)
+
+
+class TestB6:
+    @given(st.lists(F32, min_size=1, max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_codes_in_range(self, values):
+        b = jnp.asarray(values, jnp.float32)
+        s = quant.bias_scale(b)
+        codes = np.array(quant.b6_codes(b, s))
+        assert codes.min() >= -32 and codes.max() <= 31
+
+    def test_constant_vector_survives(self):
+        # regression: a σ-based scale collapsed constant biases to zero
+        b = jnp.full((16,), -4.0, jnp.float32)
+        q = quant.b6_q(b)
+        np.testing.assert_allclose(np.array(q), -4.0, rtol=0.05)
+
+
+class TestGate:
+    def test_hard_sigmoid_matches_eq5(self):
+        u = jnp.asarray([-10.0, -3.0, 0.0, 1.5, 3.0, 10.0], jnp.float32)
+        z = quant.hard_sigmoid(u)
+        np.testing.assert_allclose(
+            np.array(z), [0.0, 0.0, 0.5, 0.75, 1.0, 1.0], atol=1e-6)
+
+    @given(st.floats(0.0, 1.0, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_z6_grid(self, z):
+        q = float(quant.z6_q(jnp.float32(z)))
+        code = round(q * 63.0)
+        assert abs(q - code / 63.0) < 1e-6
+        assert abs(q - z) <= 0.5 / 63.0 + 1e-6
+
+    @given(st.floats(-2.0, 2.0, allow_nan=False), st.floats(-2.0, 2.0, allow_nan=False))
+    @settings(max_examples=100, deadline=None)
+    def test_z6_monotone(self, a, b):
+        lo, hi = min(a, b), max(a, b)
+        assert float(quant.z6_q(jnp.float32(lo))) <= float(
+            quant.z6_q(jnp.float32(hi)))
+
+
+class TestHeaviside:
+    def test_forward_is_binary(self):
+        h = jnp.asarray([-1.0, -1e-9, 0.0, 1e-9, 2.0], jnp.float32)
+        y = quant.heaviside_ste(h)
+        assert np.array(y).tolist() == [0.0, 0.0, 0.0, 1.0, 1.0]
+        assert np.array_equal(np.array(quant.heaviside(h)), np.array(y))
+
+    def test_surrogate_gradient_is_triangular(self):
+        g = jax.grad(lambda h: jnp.sum(quant.heaviside_ste(h)))(
+            jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0], jnp.float32))
+        np.testing.assert_allclose(
+            np.array(g), [0.0, 0.5, 1.0, 0.5, 0.0], atol=1e-6)
+
+
+@pytest.mark.parametrize("fn", [quant.ste_round, lambda x: quant.ste_clip(x, -1, 1)])
+def test_ste_helpers_have_identity_gradient(fn):
+    g = jax.grad(lambda x: jnp.sum(fn(x)))(
+        jnp.asarray([-3.0, 0.2, 3.0], jnp.float32))
+    np.testing.assert_allclose(np.array(g), 1.0, atol=1e-6)

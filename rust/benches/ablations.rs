@@ -1,0 +1,126 @@
+//! Ablation benches for the design choices DESIGN.md §4 calls out:
+//! non-ideality sensitivity (mismatch, noise, injection), ADC resolution
+//! (via slope granularity), and swap granularity (cap bank size).
+//!
+//!     cargo bench --bench ablations
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::dataset::glyphs;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::util::bench::Table;
+
+fn network() -> NetworkWeights {
+    // Prefer the *quant* checkpoint: it is the best-trained quantized
+    // network, so its logits are differentiated enough that agreement
+    // numbers mean something (a near-chance checkpoint flips argmax on
+    // any epsilon). Deployment snapping (α to the ADC slope grid, β into
+    // the ±3 DAC range) keeps golden and circuit on the same parameters.
+    let raw = (|| {
+        for c in ["runs/quant_s0/weights.mtf", "runs/hw_s0/weights.mtf",
+                  "../runs/quant_s0/weights.mtf", "../runs/hw_s0/weights.mtf"] {
+            if std::path::Path::new(c).exists() {
+                if let Ok(nw) = NetworkWeights::load(c) {
+                    eprintln!("# using checkpoint {c}");
+                    return nw;
+                }
+            }
+        }
+        synthetic_network(&[1, 64, 64, 64, 64, 10], 42)
+    })();
+    minimalist::quant::codesign::snap_network(
+        &raw,
+        &CircuitConfig::ideal(),
+        64,
+    )
+    .unwrap()
+}
+
+fn agreement(nw: &NetworkWeights, cfg: CircuitConfig, n: usize) -> (f64, f64) {
+    let samples = glyphs::make_split(n, 16, 77);
+    let mut golden = GoldenNetwork::new(nw.clone());
+    let mut engine = MixedSignalEngine::new(
+        nw.clone(),
+        cfg,
+        CoreGeometry::default(),
+    )
+    .unwrap();
+    let mut agree = 0usize;
+    let mut task = 0usize;
+    for s in &samples {
+        let g = golden.classify(&s.pixels);
+        let m = engine.classify(&s.pixels);
+        agree += (g == m) as usize;
+        task += (m == s.label) as usize;
+    }
+    (agree as f64 / n as f64, task as f64 / n as f64)
+}
+
+fn main() {
+    let nw = network();
+    let n = 16; // sequences per cell (satsim is the budget)
+
+    println!("== ablation: non-ideality sensitivity ==");
+    println!("# class agreement = mixed-signal vs golden on the same input\n");
+    let mut t = Table::new(&["configuration", "agree w/ golden", "task acc"]);
+    let base = CircuitConfig::default();
+    let cases: Vec<(&str, CircuitConfig)> = vec![
+        ("ideal", CircuitConfig::ideal()),
+        ("default", base.clone()),
+        ("mismatch ×4", { let mut c = base.clone(); c.sigma_c *= 4.0; c }),
+        ("comparator noise ×8", {
+            let mut c = base.clone();
+            c.sigma_comp_noise *= 8.0;
+            c.sigma_comp_offset *= 8.0;
+            c
+        }),
+        ("charge injection ×10", { let mut c = base.clone(); c.c_inj *= 10.0; c }),
+        ("hot (400 K)", { let mut c = base.clone(); c.temp_k = 400.0; c }),
+        ("small caps (C/4)", {
+            let mut c = base.clone();
+            c.c_unit /= 4.0;
+            c.c_adc_unit /= 4.0;
+            c
+        }),
+    ];
+    for (name, cfg) in cases {
+        let (agree, task) = agreement(&nw, cfg, n);
+        t.row(&[name.to_string(), format!("{agree:.2}"), format!("{task:.2}")]);
+    }
+    t.print();
+
+    println!("\n== ablation: swap granularity (state-bank size) ==");
+    println!("# fewer caps per bank → coarser z mixing (6-bit z needs ≥64).");
+    println!("# small synthetic net (1-16-10) so core rows can shrink;");
+    println!("# worst per-unit |Δh| vs golden over a random sequence.\n");
+    let small = synthetic_network(&[1, 16, 10], 7);
+    let mut t2 = Table::new(&["core rows", "layer-0 bank caps", "worst |Δh|"]);
+    for rows in [16usize, 32, 64] {
+        let mut engine = MixedSignalEngine::new(
+            small.clone(),
+            CircuitConfig::ideal(),
+            CoreGeometry { rows, cols: 16 },
+        )
+        .unwrap();
+        let mut golden = GoldenNetwork::new(small.clone());
+        engine.reset();
+        golden.reset();
+        let mut worst = 0.0f32;
+        for t in 0..64u32 {
+            let x = ((t * 37) % 11) as f32 / 10.0;
+            let mut et = Vec::new();
+            let mut gt = Vec::new();
+            engine.step(t, &[x], Some(&mut et));
+            golden.step(&[x], Some(&mut gt));
+            for (a, b) in et[0].h.last().unwrap().iter().zip(&gt[0].h) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        t2.row(&[
+            format!("{rows}"),
+            format!("{}", rows), // layer 0 replicates 1 input to all rows
+            format!("{worst:.4}"),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,80 @@
+//! §4.2 regeneration: the energy table — analytic worst-case bound vs
+//! simulated activity-dependent energy, swept over core counts and
+//! activity levels.
+//!
+//!     cargo bench --bench energy_table
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::energy::{paper_network_bound, worst_case_step_bound};
+use minimalist::nn::synthetic_network;
+use minimalist::util::bench::Table;
+use minimalist::util::rng::Rng;
+
+fn main() {
+    let cfg = CircuitConfig::default();
+
+    println!("== §4.2 regeneration: energy per time step ==\n");
+    println!(
+        "paper bound: 169 pJ/step for 4×(64×64) cores, z ≡ 1, all \
+         switches toggling"
+    );
+    println!(
+        "this model : {:.1} pJ/step (C_unit {:.1} fF, V_DD {} V)\n",
+        paper_network_bound(&cfg) * 1e12,
+        cfg.c_unit * 1e15,
+        cfg.v_dd
+    );
+
+    let mut t = Table::new(&[
+        "cores", "geometry", "bound [pJ/step]", "simulated [pJ/step]",
+        "utilization",
+    ]);
+
+    let mut rng = Rng::new(33);
+    for (dims, geo) in [
+        (vec![1usize, 64, 10], CoreGeometry { rows: 64, cols: 64 }),
+        (vec![1, 64, 64, 10], CoreGeometry { rows: 64, cols: 64 }),
+        (vec![1, 64, 64, 64, 64, 10], CoreGeometry { rows: 64, cols: 64 }),
+        (vec![1, 32, 32, 10], CoreGeometry { rows: 32, cols: 32 }),
+    ] {
+        let nw = synthetic_network(&dims, 5);
+        let mut engine =
+            MixedSignalEngine::new(nw, cfg.clone(), geo).unwrap();
+        let seq: Vec<f32> = (0..128).map(|_| rng.uniform() as f32).collect();
+        engine.classify(&seq);
+        let m = engine.energy();
+        let bound =
+            engine.n_cores() as f64 * worst_case_step_bound(&cfg, geo.rows, geo.cols);
+        t.row(&[
+            format!("{}", engine.n_cores()),
+            format!("{}×{}", geo.rows, geo.cols),
+            format!("{:.1}", bound * 1e12),
+            format!("{:.1}", m.per_step_j() * 1e12),
+            format!("{:.0} %", 100.0 * m.per_step_j() / bound),
+        ]);
+    }
+    t.print();
+
+    // activity sweep: the worst case is approached as inputs saturate
+    println!("\nactivity sweep (paper network, input duty cycle):");
+    let mut t2 = Table::new(&["input activity", "simulated [pJ/step]", "z̄ effect"]);
+    for duty in [0.0f32, 0.25, 0.5, 0.75, 1.0] {
+        let nw = synthetic_network(&[1, 64, 64, 64, 64, 10], 5);
+        let mut engine = MixedSignalEngine::new(
+            nw,
+            cfg.clone(),
+            CoreGeometry::default(),
+        )
+        .unwrap();
+        let seq: Vec<f32> = (0..96).map(|_| duty).collect();
+        engine.classify(&seq);
+        let m = engine.energy();
+        t2.row(&[
+            format!("{duty:.2}"),
+            format!("{:.1}", m.per_step_j() * 1e12),
+            format!("{} swaps", m.switch_toggles / m.steps.max(1)),
+        ]);
+    }
+    t2.print();
+}

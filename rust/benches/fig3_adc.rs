@@ -1,0 +1,71 @@
+//! Bench + regeneration target for Fig 3C: ADC transfer characteristics
+//! under slope/offset control, plus conversion timing.
+//!
+//!     cargo bench --bench fig3_adc
+
+use std::time::Duration;
+
+use minimalist::config::CircuitConfig;
+use minimalist::energy::EnergyMeter;
+use minimalist::satsim::adc::{SarAdc, OFFSET_NEUTRAL};
+use minimalist::util::bench::{bench, black_box, fmt_ns, Table};
+use minimalist::util::rng::Rng;
+
+fn main() {
+    let cfg = CircuitConfig::default();
+    let mut rng = Rng::new(0x316);
+    let adc = SarAdc::new(&cfg, &mut rng);
+
+    println!("== Fig 3C regeneration: transfer characteristics ==\n");
+
+    // slope family: measured slope + range per segment setting
+    let mut t = Table::new(&[
+        "segments m", "C_IMC [fF]", "slope [codes/V]", "range [mV]",
+        "code(V0-20mV)", "code(V0)", "code(V0+20mV)",
+    ]);
+    for &m in &[0usize, 2, 4, 8, 16, 32, 64] {
+        let c_ext = m as f64 * cfg.c_unit + cfg.c_line;
+        let slope = SarAdc::slope_codes_per_volt(c_ext, &cfg);
+        let at = |dv: f64| adc.ideal_code(cfg.v_0 + dv, c_ext, OFFSET_NEUTRAL, &cfg);
+        t.row(&[
+            format!("{m}"),
+            format!("{:.1}", c_ext * 1e15),
+            format!("{slope:.0}"),
+            format!("{:.1}", 64.0 / slope * 1e3),
+            format!("{}", at(-0.02)),
+            format!("{}", at(0.0)),
+            format!("{}", at(0.02)),
+        ]);
+    }
+    t.print();
+
+    // offset family
+    println!();
+    let mut t2 = Table::new(&["offset code", "code(V0)", "code shift vs neutral"]);
+    let c_ext = 16.0 * cfg.c_unit + cfg.c_line;
+    let neutral = adc.ideal_code(cfg.v_0, c_ext, OFFSET_NEUTRAL, &cfg) as i32;
+    for &off in &[0u8, 8, 16, 32, 48, 56, 63] {
+        let c = adc.ideal_code(cfg.v_0, c_ext, off, &cfg) as i32;
+        t2.row(&[
+            format!("{off}"),
+            format!("{c}"),
+            format!("{:+}", c - neutral),
+        ]);
+    }
+    t2.print();
+
+    // timing: one noisy SAR conversion (6 strobes + DAC settling)
+    println!("\n== conversion timing ==");
+    let mut meter = EnergyMeter::new();
+    let mut v = cfg.v_0 - 0.05;
+    let r = bench("sar_convert (6-bit, noisy)", Duration::from_secs(2), || {
+        v = if v > cfg.v_0 + 0.05 { cfg.v_0 - 0.05 } else { v + 1e-4 };
+        black_box(adc.convert(v, c_ext, OFFSET_NEUTRAL, &cfg, &mut rng, &mut meter));
+    });
+    println!(
+        "  {}: median {} (→ {:.1} Mconv/s on this host)",
+        r.name,
+        fmt_ns(r.median_ns),
+        1e3 / r.median_ns
+    );
+}

@@ -1,0 +1,136 @@
+//! Bench + regeneration target for Fig 4: software vs mixed-signal trace
+//! agreement on a trained network, with the step timing of both paths.
+//!
+//!     cargo bench --bench fig4_trace
+
+use std::time::Duration;
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::dataset::glyphs;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::util::bench::{bench, black_box, fmt_ns, Table};
+
+fn network() -> NetworkWeights {
+    let raw = (|| {
+        for c in ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf", "../runs/hw_s0/weights.mtf", "../runs/quant_s0/weights.mtf"] {
+            if std::path::Path::new(c).exists() {
+                if let Ok(nw) = NetworkWeights::load(c) {
+                    eprintln!("# using trained checkpoint {c}");
+                    return nw;
+                }
+            }
+        }
+        eprintln!("# no checkpoint; synthetic paper-size network");
+        synthetic_network(&[1, 64, 64, 64, 64, 10], 42)
+    })();
+    // compare on the deployed (circuit-realizable) parameters
+    minimalist::quant::codesign::snap_network(
+        &raw,
+        &minimalist::config::CircuitConfig::ideal(),
+        64,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let nw = network();
+    let sample = &glyphs::make_split(1, 16, 11)[0];
+    let seq = &sample.pixels;
+
+    println!("== Fig 4 regeneration: trace agreement ==\n");
+    let mut table = Table::new(&[
+        "configuration", "RMS Δz", "RMS Δh̃", "RMS Δh", "class agree",
+    ]);
+
+    let mut golden = GoldenNetwork::new(nw.clone());
+    let gold_class = golden.classify(seq);
+
+    for (name, cfg) in [
+        ("ideal circuit", CircuitConfig::ideal()),
+        ("default non-idealities", CircuitConfig::default()),
+        ("3× mismatch & noise", {
+            let mut c = CircuitConfig::default();
+            c.sigma_c *= 3.0;
+            c.sigma_comp_noise *= 3.0;
+            c.sigma_comp_offset *= 3.0;
+            c
+        }),
+    ] {
+        let mut engine = MixedSignalEngine::new(
+            nw.clone(),
+            cfg,
+            CoreGeometry::default(),
+        )
+        .unwrap();
+        engine.reset();
+        golden.reset();
+        let (mut sz, mut sht, mut sh, mut n) = (0.0f64, 0.0f64, 0.0f64, 0u64);
+        for (t, &x) in seq.iter().enumerate() {
+            let mut et = Vec::new();
+            let mut gt = Vec::new();
+            engine.step(t as u32, &[x], Some(&mut et));
+            golden.step(&[x], Some(&mut gt));
+            for l in 0..gt.len() {
+                for (a, b) in et[l].z.last().unwrap().iter().zip(&gt[l].z) {
+                    sz += ((a - b) as f64).powi(2);
+                }
+                for (a, b) in
+                    et[l].htilde.last().unwrap().iter().zip(&gt[l].htilde)
+                {
+                    sht += ((a - b) as f64).powi(2);
+                }
+                for (a, b) in et[l].h.last().unwrap().iter().zip(&gt[l].h) {
+                    sh += ((a - b) as f64).powi(2);
+                }
+                n += gt[l].z.len() as u64;
+            }
+        }
+        let rms = |s: f64| (s / n as f64).sqrt();
+        let sim_class = {
+            let mut e2 = MixedSignalEngine::new(
+                nw.clone(),
+                engine.circuit.clone(),
+                CoreGeometry::default(),
+            )
+            .unwrap();
+            e2.classify(seq)
+        };
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", rms(sz)),
+            format!("{:.4}", rms(sht)),
+            format!("{:.4}", rms(sh)),
+            format!("{}", sim_class == gold_class),
+        ]);
+    }
+    table.print();
+
+    println!("\n== step timing (full 1-64-64-64-64-10 network) ==");
+    let mut engine = MixedSignalEngine::new(
+        nw.clone(),
+        CircuitConfig::default(),
+        CoreGeometry::default(),
+    )
+    .unwrap();
+    let mut t = 0u32;
+    let r = bench("satsim network step", Duration::from_secs(3), || {
+        let x = seq[(t as usize) % seq.len()];
+        engine.step(t, &[x], None);
+        t = t.wrapping_add(1);
+    });
+    println!("  mixed-signal: {} per network step", fmt_ns(r.median_ns));
+    let mut g = GoldenNetwork::new(nw);
+    let mut i = 0usize;
+    let rg = bench("golden network step", Duration::from_secs(2), || {
+        let x = seq[i % seq.len()];
+        g.step(&[x], None);
+        black_box(&g);
+        i += 1;
+    });
+    println!("  golden      : {} per network step", fmt_ns(rg.median_ns));
+    println!(
+        "  physics overhead: {:.1}×",
+        r.median_ns / rg.median_ns
+    );
+}

@@ -1,0 +1,81 @@
+//! Fig 5 regeneration harness (rust side): replay the trained variants'
+//! checkpoints on the exported test split and print the accuracy table.
+//! The training itself runs in python (`make fig5`); this bench verifies
+//! the *deployment* accuracy — golden model and mixed-signal engine —
+//! matches the python-side evaluation, closing the codesign loop.
+//!
+//!     cargo bench --bench fig5_accuracy
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::dataset::load_test_split;
+use minimalist::nn::{GoldenNetwork, NetworkWeights};
+use minimalist::util::bench::Table;
+
+fn main() {
+    let split_path = ["artifacts/synthmnist_test.mtf", "../artifacts/synthmnist_test.mtf"]
+        .iter()
+        .find(|p| std::path::Path::new(p).exists())
+        .copied();
+    let Some(split_path) = split_path else {
+        println!("no test split found — run `make artifacts` (data export) first");
+        return;
+    };
+    let split = load_test_split(split_path).expect("loading test split");
+    let n_eval = split.x.len().min(200); // satsim budget on one CPU core
+
+    println!("== Fig 5 regeneration: deployment accuracy ==");
+    println!("# paper (sMNIST, 10 seeds): fp32 98.1 %, quant 97.7 %, hw 96.9 %");
+    println!("# this testbed: synthMNIST T={}, scaled training (see EXPERIMENTS.md)\n", split.seq_len);
+
+    let mut table = Table::new(&[
+        "checkpoint", "golden acc", "satsim acc (ideal)", "satsim acc (noisy)", "n",
+    ]);
+    for variant in ["quant", "hw"] {
+        for seed in 0..4 {
+            let path = format!("runs/{variant}_s{seed}/weights.mtf");
+            if !std::path::Path::new(&path).exists() {
+                continue;
+            }
+            let nw = NetworkWeights::load(&path).expect("checkpoint");
+            let mut golden = GoldenNetwork::new(nw.clone());
+            let mut correct_g = 0usize;
+            for (x, &y) in split.x.iter().zip(&split.y).take(n_eval) {
+                correct_g += (golden.classify(x) == y) as usize;
+            }
+            // mixed-signal on a subset (physics is ~10× slower)
+            let n_ms = n_eval.min(60);
+            let mut acc_ms = [0.0f64; 2];
+            for (k, cfg) in [CircuitConfig::ideal(), CircuitConfig::default()]
+                .into_iter()
+                .enumerate()
+            {
+                let mut engine = MixedSignalEngine::new(
+                    nw.clone(),
+                    cfg,
+                    CoreGeometry::default(),
+                )
+                .expect("engine");
+                let mut c = 0usize;
+                for (x, &y) in split.x.iter().zip(&split.y).take(n_ms) {
+                    c += (engine.classify(x) == y) as usize;
+                }
+                acc_ms[k] = c as f64 / n_ms as f64;
+            }
+            table.row(&[
+                format!("{variant}_s{seed}"),
+                format!("{:.3}", correct_g as f64 / n_eval as f64),
+                format!("{:.3}", acc_ms[0]),
+                format!("{:.3}", acc_ms[1]),
+                format!("{n_eval}/{}", n_ms),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n# fp32 rows have no circuit mapping (no code planes) — their");
+    println!("# accuracy lives in runs/fig5_summary.json from python training.");
+    println!("# NB all rows are evaluated under *hardware semantics* (hard-σ,");
+    println!("# 6-bit z, comparator bias): hw rows match their python eval;");
+    println!("# quant rows show the deployment drop of a non-hw-trained");
+    println!("# checkpoint (gate β outside the ADC range — see EXPERIMENTS.md).");
+}

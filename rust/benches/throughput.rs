@@ -1,0 +1,93 @@
+//! End-to-end serving throughput/latency across backends and batching
+//! policies — the headline-systems bench of the serving extension
+//! (DESIGN.md §4, last row).
+//!
+//!     cargo bench --bench throughput
+
+use std::time::{Duration, Instant};
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::{
+    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+};
+use minimalist::dataset::glyphs;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::util::bench::Table;
+
+fn network() -> NetworkWeights {
+    for c in ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf", "../runs/hw_s0/weights.mtf", "../runs/quant_s0/weights.mtf"] {
+        if std::path::Path::new(c).exists() {
+            if let Ok(nw) = NetworkWeights::load(c) {
+                return nw;
+            }
+        }
+    }
+    synthetic_network(&[1, 64, 64, 64, 64, 10], 42)
+}
+
+fn main() {
+    let nw = network();
+    let img = 16usize;
+    println!("== serving throughput (T={} pixel sequences) ==\n", img * img);
+
+    let mut table = Table::new(&[
+        "backend", "batch", "n", "p50", "p99", "seq/s",
+    ]);
+
+    for (name, max_batch, n_req) in [
+        ("golden", 1usize, 64usize),
+        ("golden", 8, 64),
+        ("golden", 32, 64),
+        ("satsim", 4, 12),
+    ] {
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+        };
+        let server = match name {
+            "golden" => Server::spawn(
+                Box::new(GoldenBackend::new(GoldenNetwork::new(nw.clone()))),
+                policy,
+            ),
+            _ => {
+                let engine = MixedSignalEngine::new(
+                    nw.clone(),
+                    CircuitConfig::default(),
+                    CoreGeometry::default(),
+                )
+                .unwrap();
+                Server::spawn_with(
+                    move || Box::new(MixedSignalBackend::new(engine)) as _,
+                    policy,
+                )
+            }
+        };
+        let client = server.client();
+        let samples = glyphs::make_split(n_req, img, 3);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed();
+        let m = server.shutdown();
+        table.row(&[
+            name.to_string(),
+            format!("{max_batch}"),
+            format!("{n_req}"),
+            format!("{:?}", m.percentile(50.0)),
+            format!("{:?}", m.percentile(99.0)),
+            format!("{:.1}", n_req as f64 / wall.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n# satsim rows simulate full circuit physics per step — their \
+         throughput is the simulator's, not the chip's. The chip-level \
+         estimate lives in the energy model (fJ/step → ns-scale steps)."
+    );
+}

@@ -1,0 +1,228 @@
+//! Configuration for the MINIMALIST system: circuit parameters
+//! (the 22 nm FD-SOI-flavored electrical quantities the behavioral
+//! simulator resolves), network architecture, and run/serving settings.
+//!
+//! Configs round-trip through the in-repo JSON module so experiments are
+//! fully described by a single file (`--config path.json` on the CLI).
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Boltzmann constant (J/K) — for kT/C sampling noise.
+pub const K_BOLTZMANN: f64 = 1.380_649e-23;
+
+/// Electrical + non-ideality parameters of the mixed-signal cores.
+///
+/// Defaults describe a plausible 22 nm FD-SOI operating point (paper §3.2):
+/// 0.8 V core supply, MOM sampling capacitors of a few fF, ~1 % capacitor
+/// mismatch, mV-scale comparator offset. The energy model is calibrated so
+/// that the worst-case bound for 4 cores of 64×64 lands at the paper's
+/// 169 pJ/step scale (§4.2; see `energy/`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CircuitConfig {
+    /// Core supply voltage (V).
+    pub v_dd: f64,
+    /// Mid-rail reference V_0 = (V_00+V_11)/2 — the "zero" potential.
+    pub v_0: f64,
+    /// Weight-rail spacing (V): rail_w = V_0 + (w−1.5)·delta_w.
+    pub delta_w: f64,
+    /// Unit sampling capacitor (F). Each synapse has three of these.
+    pub c_unit: f64,
+    /// Relative capacitor mismatch σ (MOM caps match to ~1 %).
+    pub sigma_c: f64,
+    /// Temperature (K) for kT/C noise.
+    pub temp_k: f64,
+    /// Switch charge-injection capacitance (F): ΔQ = ±½·c_inj·V_dd on
+    /// turn-off, sign from the deterministic clock feedthrough direction.
+    pub c_inj: f64,
+    /// Comparator input-referred offset σ (V), drawn once per instance.
+    pub sigma_comp_offset: f64,
+    /// Comparator input-referred noise σ (V), drawn per decision.
+    pub sigma_comp_noise: f64,
+    /// Transmission-gate gate capacitance (F) — energy accounting.
+    pub c_gate: f64,
+    /// SAR ADC: unit DAC capacitor (F); the 6-bit array totals 64 units.
+    pub c_adc_unit: f64,
+    /// Parasitic column-line capacitance (F), participates in shares.
+    pub c_line: f64,
+    /// Master seed for all stochastic effects.
+    pub seed: u64,
+    /// Disable every non-ideality (mismatch, noise, injection, parasitics)
+    /// — the configuration parity tests run against the golden model.
+    pub ideal: bool,
+}
+
+impl Default for CircuitConfig {
+    fn default() -> Self {
+        CircuitConfig {
+            v_dd: 0.8,
+            v_0: 0.4,
+            delta_w: 0.1,
+            // 9.7 fF MOM sampling cap: sized for ~1 % matching and
+            // calibrated so the worst-case bound of 4×(64×64) cores lands
+            // at the paper's 169 pJ/step (§4.2; see energy/).
+            c_unit: 9.7e-15,
+            sigma_c: 0.01,
+            temp_k: 300.0,
+            c_inj: 2e-17,
+            sigma_comp_offset: 1.5e-3,
+            sigma_comp_noise: 0.4e-3,
+            c_gate: 2e-16,
+            c_adc_unit: 2.5e-16,
+            c_line: 2e-15,
+            seed: 0xC0FFEE,
+            ideal: false,
+        }
+    }
+}
+
+impl CircuitConfig {
+    /// An idealized configuration: exact charge sharing, no noise — the
+    /// simulator then reproduces the golden model bit-for-bit (up to f64
+    /// rounding), which is how the satsim arithmetic is unit-tested.
+    pub fn ideal() -> CircuitConfig {
+        CircuitConfig { ideal: true, sigma_c: 0.0, c_inj: 0.0,
+                        sigma_comp_offset: 0.0, sigma_comp_noise: 0.0,
+                        c_line: 0.0, ..Default::default() }
+    }
+
+    /// Weight rail voltage for a 2-bit code (DESIGN.md §5).
+    pub fn rail_voltage(&self, code: u8) -> f64 {
+        debug_assert!(code < 4);
+        self.v_0 + (code as f64 - 1.5) * self.delta_w
+    }
+
+    /// kT/C noise σ (V) for a capacitance `c` (0 when ideal).
+    pub fn ktc_sigma(&self, c: f64) -> f64 {
+        if self.ideal {
+            0.0
+        } else {
+            (K_BOLTZMANN * self.temp_k / c).sqrt()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v_dd", self.v_dd.into()),
+            ("v_0", self.v_0.into()),
+            ("delta_w", self.delta_w.into()),
+            ("c_unit", self.c_unit.into()),
+            ("sigma_c", self.sigma_c.into()),
+            ("temp_k", self.temp_k.into()),
+            ("c_inj", self.c_inj.into()),
+            ("sigma_comp_offset", self.sigma_comp_offset.into()),
+            ("sigma_comp_noise", self.sigma_comp_noise.into()),
+            ("c_gate", self.c_gate.into()),
+            ("c_adc_unit", self.c_adc_unit.into()),
+            ("c_line", self.c_line.into()),
+            ("seed", (self.seed as f64).into()),
+            ("ideal", self.ideal.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CircuitConfig> {
+        let d = CircuitConfig::default();
+        let f = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        Ok(CircuitConfig {
+            v_dd: f("v_dd", d.v_dd),
+            v_0: f("v_0", d.v_0),
+            delta_w: f("delta_w", d.delta_w),
+            c_unit: f("c_unit", d.c_unit),
+            sigma_c: f("sigma_c", d.sigma_c),
+            temp_k: f("temp_k", d.temp_k),
+            c_inj: f("c_inj", d.c_inj),
+            sigma_comp_offset: f("sigma_comp_offset", d.sigma_comp_offset),
+            sigma_comp_noise: f("sigma_comp_noise", d.sigma_comp_noise),
+            c_gate: f("c_gate", d.c_gate),
+            c_adc_unit: f("c_adc_unit", d.c_adc_unit),
+            c_line: f("c_line", d.c_line),
+            seed: f("seed", d.seed as f64) as u64,
+            ideal: j.get("ideal").and_then(Json::as_bool).unwrap_or(d.ideal),
+        })
+    }
+}
+
+/// Network architecture (mirror of the python ModelConfig).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkConfig {
+    /// Layer dims including input and readout, e.g. [1,64,64,64,64,10].
+    pub dims: Vec<usize>,
+}
+
+impl NetworkConfig {
+    pub fn paper() -> NetworkConfig {
+        NetworkConfig { dims: vec![1, 64, 64, 64, 64, 10] }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn layer_shape(&self, l: usize) -> (usize, usize) {
+        (self.dims[l], self.dims[l + 1])
+    }
+}
+
+/// Core geometry: the physical array size a layer is mapped onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoreGeometry {
+    /// Rows (input channels) per core.
+    pub rows: usize,
+    /// GRU columns per core (each column = one h/z synapse pair stack).
+    pub cols: usize,
+}
+
+impl Default for CoreGeometry {
+    fn default() -> Self {
+        // The paper's energy estimate assumes 64×64 cores (§4.2).
+        CoreGeometry { rows: 64, cols: 64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rails_are_equidistant_and_centered() {
+        let c = CircuitConfig::default();
+        let v: Vec<f64> = (0..4).map(|w| c.rail_voltage(w)).collect();
+        let d01 = v[1] - v[0];
+        let d12 = v[2] - v[1];
+        let d23 = v[3] - v[2];
+        assert!((d01 - d12).abs() < 1e-12 && (d12 - d23).abs() < 1e-12);
+        assert!(((v[0] + v[3]) / 2.0 - c.v_0).abs() < 1e-12);
+        // all rails within the supply
+        for x in v {
+            assert!(x > 0.0 && x < c.v_dd);
+        }
+    }
+
+    #[test]
+    fn ktc_magnitude_sane() {
+        let c = CircuitConfig::default();
+        // kT/C for 4 fF at 300 K ≈ 1 mV — the well-known figure.
+        let s = c.ktc_sigma(4e-15);
+        assert!(s > 0.5e-3 && s < 2e-3, "kT/C sigma = {s}");
+        assert_eq!(CircuitConfig::ideal().ktc_sigma(4e-15), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = CircuitConfig::default();
+        c.sigma_c = 0.025;
+        c.seed = 42;
+        let j = c.to_json();
+        let back = CircuitConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn network_shapes() {
+        let n = NetworkConfig::paper();
+        assert_eq!(n.n_layers(), 5);
+        assert_eq!(n.layer_shape(0), (1, 64));
+        assert_eq!(n.layer_shape(4), (64, 10));
+    }
+}

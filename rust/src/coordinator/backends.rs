@@ -1,0 +1,152 @@
+//! Classification backends for the serving loop.
+//!
+//! Three interchangeable implementations of [`super::server::Backend`]:
+//! * [`GoldenBackend`] — the rust software model (logical units, exact)
+//! * [`MixedSignalBackend`] — the switched-capacitor engine (physics)
+//! * [`PjrtBackend`] — the AOT-compiled JAX model through the XLA CPU
+//!   client (the paper's "software model", executed hermetically)
+
+use crate::coordinator::engine::MixedSignalEngine;
+use crate::coordinator::server::Backend;
+use crate::nn::mingru::{argmax, GoldenNetwork, READOUT_STEPS};
+use crate::runtime::Executable;
+
+pub struct GoldenBackend {
+    net: GoldenNetwork,
+}
+
+impl GoldenBackend {
+    pub fn new(net: GoldenNetwork) -> GoldenBackend {
+        GoldenBackend { net }
+    }
+}
+
+impl Backend for GoldenBackend {
+    fn name(&self) -> &str {
+        "golden"
+    }
+
+    fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+        seqs.iter().map(|s| self.net.classify(s)).collect()
+    }
+}
+
+pub struct MixedSignalBackend {
+    engine: MixedSignalEngine,
+}
+
+impl MixedSignalBackend {
+    pub fn new(engine: MixedSignalEngine) -> MixedSignalBackend {
+        MixedSignalBackend { engine }
+    }
+
+    pub fn engine(&self) -> &MixedSignalEngine {
+        &self.engine
+    }
+}
+
+impl Backend for MixedSignalBackend {
+    fn name(&self) -> &str {
+        "mixed-signal"
+    }
+
+    fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+        // A physical core bank holds one sequence's state: drain the
+        // batch sequentially through the array.
+        seqs.iter().map(|s| self.engine.classify(s)).collect()
+    }
+}
+
+/// PJRT backend: runs the AOT `sequence.hlo.txt` artifact, which maps
+/// [T, B, 1] input sequences to [B, 10] logits. The artifact is compiled
+/// for a fixed batch B; smaller batches are padded.
+pub struct PjrtBackend {
+    exe: Executable,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub d_in: usize,
+    pub n_classes: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(
+        exe: Executable,
+        seq_len: usize,
+        batch: usize,
+        d_in: usize,
+        n_classes: usize,
+    ) -> PjrtBackend {
+        PjrtBackend { exe, seq_len, batch, d_in, n_classes }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+        let mut labels = Vec::with_capacity(seqs.len());
+        for chunk in seqs.chunks(self.batch) {
+            // pack [T, B, d_in] with zero padding for short batches
+            let mut buf = vec![0.0f32; self.seq_len * self.batch * self.d_in];
+            for (b, seq) in chunk.iter().enumerate() {
+                assert_eq!(seq.len(), self.seq_len * self.d_in,
+                           "sequence length mismatch for AOT artifact");
+                for t in 0..self.seq_len {
+                    for d in 0..self.d_in {
+                        buf[(t * self.batch + b) * self.d_in + d] =
+                            seq[t * self.d_in + d];
+                    }
+                }
+            }
+            let out = self
+                .exe
+                .run_f32(&[(
+                    &buf,
+                    &[self.seq_len, self.batch, self.d_in],
+                )])
+                .expect("PJRT execution failed");
+            let logits = &out[0]; // [B, n_classes]
+            for b in 0..chunk.len() {
+                labels.push(argmax(
+                    &logits[b * self.n_classes..(b + 1) * self.n_classes],
+                ));
+            }
+        }
+        labels
+    }
+}
+
+// READOUT_STEPS re-exported for binaries that document the readout head.
+pub const _READOUT: usize = READOUT_STEPS;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CircuitConfig, CoreGeometry};
+    use crate::nn::weights::synthetic_network;
+
+    #[test]
+    fn golden_backend_serves() {
+        let net = GoldenNetwork::new(synthetic_network(&[1, 8, 10], 3));
+        let mut b = GoldenBackend::new(net);
+        let seqs = vec![vec![0.5f32; 16], vec![0.9f32; 16]];
+        let labels = b.classify_batch(&seqs);
+        assert_eq!(labels.len(), 2);
+        assert!(labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn mixed_signal_backend_serves() {
+        let engine = MixedSignalEngine::new(
+            synthetic_network(&[1, 8, 10], 3),
+            CircuitConfig::ideal(),
+            CoreGeometry { rows: 8, cols: 16 },
+        )
+        .unwrap();
+        let mut b = MixedSignalBackend::new(engine);
+        let labels = b.classify_batch(&[vec![0.5f32; 16]]);
+        assert_eq!(labels.len(), 1);
+    }
+}

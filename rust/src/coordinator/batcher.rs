@@ -1,0 +1,135 @@
+//! Dynamic request batching.
+//!
+//! The PJRT backend amortizes XLA dispatch over batched sequences (the
+//! AOT artifact is compiled for a fixed batch dimension), so the
+//! coordinator collects requests until the batch fills or a deadline
+//! expires — the standard serving trade-off between utilization and
+//! tail latency. The mixed-signal backend processes per-sequence (a
+//! physical core bank holds one sequence's state), so it drains batches
+//! of size 1..n through the core array sequentially.
+
+use std::time::{Duration, Instant};
+
+/// One queued classification request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub sequence: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Accumulates requests and decides when a batch is ready.
+#[derive(Debug)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queue: Vec<Request>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queue: Vec::new(), oldest: None }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        if self.queue.is_empty() {
+            self.oldest = Some(req.enqueued);
+        }
+        self.queue.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// A batch is ready when full, or when the oldest request has waited
+    /// past the deadline (and the queue is non-empty).
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.oldest {
+            Some(t0) if !self.queue.is_empty() => {
+                now.duration_since(t0) >= self.policy.max_wait
+            }
+            _ => false,
+        }
+    }
+
+    /// Remove and return up to max_batch requests (FIFO).
+    pub fn drain(&mut self) -> Vec<Request> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<Request> = self.queue.drain(..n).collect();
+        self.oldest = self.queue.first().map(|r| r.enqueued);
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: Instant) -> Request {
+        Request { id, sequence: vec![0.0; 4], enqueued: t }
+    }
+
+    #[test]
+    fn fills_then_fires() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        b.push(req(1, t));
+        b.push(req(2, t));
+        assert!(!b.ready(t));
+        b.push(req(3, t));
+        assert!(b.ready(t));
+        let batch = b.drain();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_fires_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        assert!(!b.ready(t0));
+        let later = t0 + Duration::from_millis(2);
+        assert!(b.ready(later));
+        assert_eq!(b.drain().len(), 1);
+    }
+
+    #[test]
+    fn fifo_overflow_keeps_remainder() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t));
+        }
+        assert_eq!(b.drain().iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert!(b.ready(t)); // still ≥ max_batch queued
+    }
+
+    #[test]
+    fn empty_queue_never_ready() {
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(!b.ready(Instant::now() + Duration::from_secs(60)));
+    }
+}

@@ -1,0 +1,93 @@
+//! Serving metrics: latency distribution and throughput accounting for
+//! the request loop (the headline numbers of the end-to-end driver).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<u64>,
+    started: Instant,
+    pub items: u64,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder { samples_us: Vec::new(), started: Instant::now(), items: 0 }
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.samples_us.push(latency.as_micros() as u64);
+        self.items += 1;
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        Duration::from_micros(s[idx.min(s.len() - 1)])
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.samples_us.iter().sum::<u64>() / self.samples_us.len() as u64,
+        )
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            0.0
+        } else {
+            self.items as f64 / dt
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?} thpt={:.1}/s",
+            self.items,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100u64 {
+            r.record(Duration::from_micros(i * 10));
+        }
+        assert!(r.percentile(50.0) <= r.percentile(95.0));
+        assert!(r.percentile(95.0) <= r.percentile(99.0));
+        assert_eq!(r.items, 100);
+        assert!(r.mean() > Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_recorder_is_safe() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.percentile(99.0), Duration::ZERO);
+        assert_eq!(r.mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,22 @@
+//! The L3 coordinator: serving infrastructure around the mixed-signal
+//! cores and the PJRT reference model.
+//!
+//! * [`engine`] — network-on-cores: the trained model mapped onto
+//!   switched-capacitor cores with the event fabric in between
+//! * [`backends`] — pluggable classification backends (golden /
+//!   mixed-signal / PJRT)
+//! * [`batcher`] — dynamic batching policy
+//! * [`server`] — thread-based request loop + response routing
+//! * [`metrics`] — latency/throughput accounting
+
+pub mod backends;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use backends::{GoldenBackend, MixedSignalBackend, PjrtBackend};
+pub use batcher::{BatchPolicy, Batcher, Request};
+pub use engine::MixedSignalEngine;
+pub use metrics::LatencyRecorder;
+pub use server::{Backend, Client, Response, Server};

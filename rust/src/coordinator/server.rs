@@ -1,0 +1,219 @@
+//! Thread-based serving loop (tokio is not in the offline crate set; the
+//! workload — long sequences through a single-core simulator — is CPU-
+//! bound, so an async reactor would buy nothing here anyway).
+//!
+//! Architecture: clients submit requests over an mpsc channel; the
+//! leader thread runs the batcher; worker backends classify and push
+//! results back through per-request response channels. Backends are
+//! pluggable ([`Backend`]): golden model, mixed-signal engine, or the
+//! PJRT executable.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
+use crate::coordinator::metrics::LatencyRecorder;
+
+/// A sequence classifier backend. Not required to be `Send`: the PJRT
+/// executable wraps non-Send XLA handles, so backends are *constructed on
+/// the server thread* via the factory passed to [`Server::spawn_with`].
+pub trait Backend {
+    fn name(&self) -> &str;
+    /// Classify a batch of sequences (all the same length).
+    fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize>;
+}
+
+/// Response to one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub label: usize,
+    pub latency: Duration,
+}
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Client {
+    /// Blocking classify: submit and wait.
+    pub fn classify(&self, id: u64, sequence: Vec<f32>) -> Response {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(
+                Request { id, sequence, enqueued: Instant::now() },
+                rtx,
+            ))
+            .expect("server gone");
+        rrx.recv().expect("server dropped response")
+    }
+
+    /// Fire-and-forget submit returning the response receiver.
+    pub fn submit(&self, id: u64, sequence: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(
+                Request { id, sequence, enqueued: Instant::now() },
+                rtx,
+            ))
+            .expect("server gone");
+        rrx
+    }
+}
+
+/// A running server; join() returns the final metrics.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: thread::JoinHandle<LatencyRecorder>,
+}
+
+impl Server {
+    /// Spawn the leader loop with a `Send` backend.
+    pub fn spawn(backend: Box<dyn Backend + Send>, policy: BatchPolicy) -> Server {
+        Server::spawn_with(move || backend as Box<dyn Backend>, policy)
+    }
+
+    /// Spawn the leader loop, constructing the backend *on* the server
+    /// thread (required for PJRT, whose handles are not `Send`).
+    pub fn spawn_with<F>(factory: F, policy: BatchPolicy) -> Server
+    where
+        F: FnOnce() -> Box<dyn Backend> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = thread::spawn(move || {
+            let mut backend = factory();
+            let mut batcher = Batcher::new(policy);
+            let mut waiters: Vec<(u64, mpsc::Sender<Response>, Instant)> =
+                Vec::new();
+            let mut metrics = LatencyRecorder::new();
+            let mut open = true;
+            while open || !batcher.is_empty() {
+                // Pull at least one message (with a deadline so partial
+                // batches still fire), then drain whatever else arrived.
+                let timeout = policy.max_wait.max(Duration::from_micros(100));
+                match rx.recv_timeout(timeout) {
+                    Ok(Msg::Submit(req, rtx)) => {
+                        waiters.push((req.id, rtx, req.enqueued));
+                        batcher.push(req);
+                        while let Ok(m) = rx.try_recv() {
+                            match m {
+                                Msg::Submit(req, rtx) => {
+                                    waiters.push((req.id, rtx, req.enqueued));
+                                    batcher.push(req);
+                                }
+                                Msg::Shutdown => open = false,
+                            }
+                        }
+                    }
+                    Ok(Msg::Shutdown) => open = false,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+                let now = Instant::now();
+                if batcher.ready(now) || (!open && !batcher.is_empty()) {
+                    let batch = batcher.drain();
+                    let seqs: Vec<Vec<f32>> =
+                        batch.iter().map(|r| r.sequence.clone()).collect();
+                    let labels = backend.classify_batch(&seqs);
+                    for (req, label) in batch.iter().zip(labels) {
+                        let pos = waiters
+                            .iter()
+                            .position(|(id, _, _)| *id == req.id)
+                            .expect("response channel lost");
+                        let (_, rtx, enq) = waiters.swap_remove(pos);
+                        let latency = enq.elapsed();
+                        metrics.record(latency);
+                        let _ = rtx.send(Response { id: req.id, label, latency });
+                    }
+                }
+            }
+            metrics
+        });
+        Server { tx, handle }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    /// Stop accepting requests, drain the queue, return metrics.
+    pub fn shutdown(self) -> LatencyRecorder {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle.join().expect("server thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test backend: label = round(sum of the sequence) mod 10.
+    struct SumBackend;
+
+    impl Backend for SumBackend {
+        fn name(&self) -> &str {
+            "sum"
+        }
+
+        fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+            seqs.iter()
+                .map(|s| (s.iter().sum::<f32>().round() as usize) % 10)
+                .collect()
+        }
+    }
+
+    #[test]
+    fn serves_blocking_requests() {
+        let server = Server::spawn(
+            Box::new(SumBackend),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let client = server.client();
+        let r = client.classify(1, vec![1.0, 2.0]);
+        assert_eq!(r.label, 3);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = Server::spawn(
+            Box::new(SumBackend),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        );
+        let client = server.client();
+        let receivers: Vec<_> = (0..20)
+            .map(|i| client.submit(i, vec![i as f32]))
+            .collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.label, i % 10);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, 20);
+        assert!(metrics.throughput() > 0.0);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let server = Server::spawn(
+            Box::new(SumBackend),
+            BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
+        );
+        let client = server.client();
+        let rxs: Vec<_> = (0..5).map(|i| client.submit(i, vec![i as f32])).collect();
+        let metrics = server.shutdown(); // must flush despite huge deadline
+        assert_eq!(metrics.items, 5);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+}

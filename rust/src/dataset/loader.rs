@@ -1,0 +1,54 @@
+//! Loader for the MTF test split exported by the python generator
+//! (`python -m compile.data --export`), used wherever bit-exact parity
+//! with the python-side evaluation matters (Fig 4 traces, Fig 5 replay).
+
+use anyhow::{bail, Result};
+
+use crate::io::tensorfile::TensorFile;
+
+/// Sequence-encoded test split: x is [n, T] (input dim 1), y is [n].
+#[derive(Debug, Clone)]
+pub struct TestSplit {
+    pub seq_len: usize,
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<usize>,
+}
+
+pub fn load_test_split(path: &str) -> Result<TestSplit> {
+    let tf = TensorFile::load(path)?;
+    let xt = tf.req("x")?;
+    let yt = tf.req("y")?;
+    if xt.shape.len() != 2 {
+        bail!("expected x of shape [n, T], got {:?}", xt.shape);
+    }
+    let (n, t) = (xt.shape[0], xt.shape[1]);
+    let flat = xt.as_f32();
+    let x: Vec<Vec<f32>> = (0..n)
+        .map(|i| flat[i * t..(i + 1) * t].to_vec())
+        .collect();
+    let y: Vec<usize> = yt.as_i32()?.iter().map(|&v| v as usize).collect();
+    if y.len() != n {
+        bail!("label count {} != sample count {}", y.len(), n);
+    }
+    Ok(TestSplit { seq_len: t, x, y })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::tensorfile::{Tensor, TensorFile};
+
+    #[test]
+    fn roundtrip_via_bytes() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", Tensor::f32(vec![2, 4], vec![0.0, 0.5, 1.0, 0.25,
+                                                    1.0, 0.0, 0.0, 0.75]));
+        tf.insert("y", Tensor::i32(vec![2], vec![3, 7]));
+        let dir = std::env::temp_dir().join("mtf_loader_test.mtf");
+        tf.save(&dir).unwrap();
+        let split = load_test_split(dir.to_str().unwrap()).unwrap();
+        assert_eq!(split.seq_len, 4);
+        assert_eq!(split.y, vec![3, 7]);
+        assert_eq!(split.x[1][3], 0.75);
+    }
+}

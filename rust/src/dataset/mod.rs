@@ -1,0 +1,17 @@
+//! synthMNIST in rust: the synthetic sequential-digit workload
+//! (algorithmic mirror of `python/compile/data.py`).
+//!
+//! Two sources of data on the rust side:
+//! * [`glyphs`] — the native generator (used by the serving driver and
+//!   benches for unlimited load without touching python); statistically
+//!   identical to the python generator but *not* bit-identical (different
+//!   RNG), so…
+//! * [`loader`] — …parity tests and the Fig 4/Fig 5 replays read the MTF
+//!   test split exported by `python -m compile.data --export`, which is
+//!   bit-exact.
+
+pub mod glyphs;
+pub mod loader;
+
+pub use glyphs::{make_glyph, make_split, Sample};
+pub use loader::load_test_split;

@@ -1,0 +1,5 @@
+//! Binary interchange with the python build path.
+
+pub mod tensorfile;
+
+pub use tensorfile::{Tensor, TensorData, TensorFile};

@@ -1,0 +1,309 @@
+//! MTF — the minimalist tensor file container (reader + writer).
+//!
+//! Byte-level mirror of `python/compile/export.py` (see that docstring for
+//! the layout). Little-endian throughout; dtype codes:
+//! 0=f32, 1=i32, 2=u8, 3=i64, 4=f64.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"MTF1";
+
+/// One tensor: shape + flat data in one of the supported dtypes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::f32(vec![1], vec![x])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat f32 view (converting from any numeric dtype).
+    pub fn as_f32(&self) -> Vec<f32> {
+        match &self.data {
+            TensorData::F32(v) => v.clone(),
+            TensorData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::U8(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        Ok(match &self.data {
+            TensorData::I32(v) => v.clone(),
+            TensorData::U8(v) => v.iter().map(|&x| x as i32).collect(),
+            TensorData::I64(v) => v.iter().map(|&x| x as i32).collect(),
+            _ => bail!("tensor is not integer-typed"),
+        })
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32();
+        if v.len() != 1 {
+            bail!("expected scalar tensor, got shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    fn dtype_code(&self) -> u8 {
+        match self.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+            TensorData::U8(_) => 2,
+            TensorData::I64(_) => 3,
+            TensorData::F64(_) => 4,
+        }
+    }
+}
+
+/// An ordered named-tensor container.
+#[derive(Debug, Default, Clone)]
+pub struct TensorFile {
+    /// Ordered (name, tensor) pairs; `index` maps name → position.
+    pub items: Vec<(String, Tensor)>,
+    index: BTreeMap<String, usize>,
+}
+
+impl TensorFile {
+    pub fn new() -> TensorFile {
+        TensorFile::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if let Some(&i) = self.index.get(name) {
+            self.items[i].1 = t;
+        } else {
+            self.index.insert(name.to_string(), self.items.len());
+            self.items.push((name.to_string(), t));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.items[i].1)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .with_context(|| format!("tensor '{name}' missing from MTF file"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.items.iter().map(|(n, _)| n.as_str())
+    }
+
+    // -- serialization -----------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.items.len() as u32).to_le_bytes());
+        for (name, t) in &self.items {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(t.dtype_code());
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::U8(v) => out.extend_from_slice(v),
+                TensorData::I64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::F64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<TensorFile> {
+        if buf.len() < 8 || &buf[..4] != MAGIC {
+            bail!("not an MTF file (bad magic)");
+        }
+        let count = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
+        let mut off = 8usize;
+        let mut tf = TensorFile::new();
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > buf.len() {
+                bail!("truncated MTF file at byte {}", *off);
+            }
+            let s = &buf[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        for _ in 0..count {
+            let nlen =
+                u16::from_le_bytes(take(&mut off, 2)?.try_into()?) as usize;
+            let name = std::str::from_utf8(take(&mut off, nlen)?)?.to_string();
+            let dtype = take(&mut off, 1)?[0];
+            let ndim = take(&mut off, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(
+                    u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize,
+                );
+            }
+            let n: usize = shape.iter().product();
+            let data = match dtype {
+                0 => TensorData::F32(
+                    take(&mut off, n * 4)?
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                1 => TensorData::I32(
+                    take(&mut off, n * 4)?
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                2 => TensorData::U8(take(&mut off, n)?.to_vec()),
+                3 => TensorData::I64(
+                    take(&mut off, n * 8)?
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                4 => TensorData::F64(
+                    take(&mut off, n * 8)?
+                        .chunks_exact(8)
+                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                d => bail!("unknown MTF dtype code {d}"),
+            };
+            tf.insert(&name, Tensor { shape, data });
+        }
+        Ok(tf)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref()).with_context(|| {
+            format!("creating {}", path.as_ref().display())
+        })?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorFile> {
+        let buf = std::fs::read(path.as_ref()).with_context(|| {
+            format!("reading {}", path.as_ref().display())
+        })?;
+        Self::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut tf = TensorFile::new();
+        tf.insert("a", Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]));
+        tf.insert("b", Tensor::i32(vec![4], vec![-1, 0, 1, 2]));
+        tf.insert(
+            "c",
+            Tensor { shape: vec![3], data: TensorData::U8(vec![7, 8, 9]) },
+        );
+        tf.insert(
+            "d",
+            Tensor { shape: vec![2], data: TensorData::I64(vec![-5, 5]) },
+        );
+        tf.insert(
+            "e",
+            Tensor { shape: vec![1], data: TensorData::F64(vec![0.25]) },
+        );
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        for (name, t) in &tf.items {
+            assert_eq!(back.get(name).unwrap(), t, "{name}");
+        }
+        assert_eq!(back.items.len(), 5);
+    }
+
+    #[test]
+    fn insertion_order_preserved() {
+        let mut tf = TensorFile::new();
+        tf.insert("z", Tensor::scalar_f32(1.0));
+        tf.insert("a", Tensor::scalar_f32(2.0));
+        let names: Vec<_> = tf.names().collect();
+        assert_eq!(names, vec!["z", "a"]);
+    }
+
+    #[test]
+    fn insert_overwrites() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", Tensor::scalar_f32(1.0));
+        tf.insert("x", Tensor::scalar_f32(9.0));
+        assert_eq!(tf.get("x").unwrap().scalar().unwrap(), 9.0);
+        assert_eq!(tf.items.len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(TensorFile::from_bytes(b"NOPE0000").is_err());
+        let mut tf = TensorFile::new();
+        tf.insert("a", Tensor::f32(vec![8], vec![0.0; 8]));
+        let bytes = tf.to_bytes();
+        assert!(TensorFile::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.scalar().unwrap(), 3.5);
+        let t2 = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        assert!(t2.scalar().is_err());
+    }
+}

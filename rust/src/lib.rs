@@ -1,0 +1,28 @@
+//! # MINIMALIST — switched-capacitor in-memory computation of gated
+//! recurrent units
+//!
+//! Full-system reproduction of Billaudelle, Kriener, et al. (2025):
+//! a hardware-amenable minGRU architecture (2-bit weights, 6-bit biases,
+//! binary activations, hard-sigmoid 6-bit gates) together with a
+//! behavioral switched-capacitor implementation — charge-sharing IMC,
+//! SAR-ADC gate digitization with tunable slope/offset, and the
+//! capacitor-swap state update — plus the serving infrastructure around
+//! it (event router, multi-core coordinator, PJRT runtime for the
+//! AOT-compiled JAX reference model).
+//!
+//! Layer map (see DESIGN.md):
+//! * Layer 1/2 (python, build-time only): Pallas kernels + JAX model,
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! * Layer 3 (this crate): everything on the request path.
+
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod energy;
+pub mod io;
+pub mod nn;
+pub mod quant;
+pub mod router;
+pub mod runtime;
+pub mod satsim;
+pub mod util;

@@ -1,0 +1,174 @@
+//! `minimalist` CLI — leader entrypoint for the MINIMALIST system.
+//!
+//! Subcommands:
+//!   info                      system + config summary
+//!   serve                     batched serving loop over synthMNIST load
+//!   adc                       ADC transfer characterization (Fig 3C)
+//!   trace                     software vs mixed-signal traces (Fig 4)
+//!   energy                    energy report (§4.2)
+//!   eval                      accuracy of a checkpoint on the test split
+//!
+//! Run `minimalist <cmd> --help-args` for per-command options.
+
+use anyhow::Result;
+
+use minimalist::config::{CircuitConfig, CoreGeometry, NetworkConfig};
+use minimalist::coordinator::{
+    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+};
+use minimalist::dataset::glyphs;
+use minimalist::energy;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("energy") => cmd_energy(&args),
+        Some("eval") => cmd_eval(&args),
+        _ => {
+            eprintln!(
+                "usage: minimalist <info|serve|energy|eval> [--options]\n\
+                 (Fig 3C / Fig 4 generators live in examples/: \
+                 adc_characterization, trace_compare)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_or_synthetic(args: &Args) -> Result<NetworkWeights> {
+    match args.opt("weights") {
+        Some(path) => NetworkWeights::load(path),
+        None => {
+            eprintln!("note: no --weights given, using a synthetic network");
+            Ok(synthetic_network(
+                &NetworkConfig::paper().dims,
+                args.get_u64("seed", 7)?,
+            ))
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let circuit = CircuitConfig::default();
+    println!("MINIMALIST — switched-capacitor minGRU system");
+    println!("  circuit: {circuit:#?}");
+    let bound = energy::paper_network_bound(&circuit);
+    println!(
+        "  worst-case energy bound, 4×(64×64) cores: {:.1} pJ/step \
+         (paper §4.2: 169 pJ)",
+        bound * 1e12
+    );
+    if let Some(w) = args.opt("weights") {
+        let nw = NetworkWeights::load(w)?;
+        println!(
+            "  checkpoint: dims {:?}, variant {}, {} layers",
+            nw.dims,
+            nw.variant,
+            nw.n_layers()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let weights = load_or_synthetic(args)?;
+    let n_req = args.get_usize("requests", 64)?;
+    let img = args.get_usize("img-size", 16)?;
+    let backend = args.get_or("backend", "golden").to_string();
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 16)?,
+        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
+    };
+    let server = match backend.as_str() {
+        "golden" => Server::spawn(
+            Box::new(GoldenBackend::new(GoldenNetwork::new(weights))),
+            policy,
+        ),
+        "satsim" => {
+            let engine = MixedSignalEngine::new(
+                weights,
+                CircuitConfig::default(),
+                CoreGeometry::default(),
+            )?;
+            Server::spawn(Box::new(MixedSignalBackend::new(engine)), policy)
+        }
+        other => anyhow::bail!("unknown backend '{other}' (golden|satsim)"),
+    };
+    let client = server.client();
+    let samples = glyphs::make_split(n_req, img, args.get_u64("seed", 1)?);
+    let mut correct = 0usize;
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.label, client.submit(i as u64, s.pixels.clone())))
+        .collect();
+    for (label, rx) in rxs {
+        let resp = rx.recv()?;
+        correct += (resp.label == label) as usize;
+    }
+    let metrics = server.shutdown();
+    println!("backend={backend} {}", metrics.summary());
+    println!(
+        "accuracy {}/{} = {:.3}",
+        correct,
+        n_req,
+        correct as f64 / n_req as f64
+    );
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let circuit = CircuitConfig::default();
+    let bound = energy::worst_case_step_bound(&circuit, 64, 64);
+    println!(
+        "worst-case bound per 64×64 core: {:.2} pJ/step; 4 cores: {:.1} pJ \
+         (paper: 169 pJ)",
+        bound * 1e12,
+        4.0 * bound * 1e12
+    );
+    // simulated, activity-dependent energy
+    let weights = load_or_synthetic(args)?;
+    let mut engine = MixedSignalEngine::new(
+        weights,
+        circuit,
+        CoreGeometry::default(),
+    )?;
+    let t = args.get_usize("steps", 64)?;
+    let seq: Vec<f32> = (0..t).map(|i| ((i * 7) % 11) as f32 / 10.0).collect();
+    engine.classify(&seq);
+    let m = engine.energy();
+    println!(
+        "simulated over {} steps, {} cores: {:.2} pJ/step \
+         ({} cap events, {} switch toggles, {} conversions)",
+        m.steps,
+        engine.n_cores(),
+        m.per_step_j() * 1e12,
+        m.cap_events,
+        m.switch_toggles,
+        m.adc_conversions
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let weights = load_or_synthetic(args)?;
+    let split = minimalist::dataset::load_test_split(
+        args.get_or("data", "artifacts/synthmnist_test.mtf"),
+    )?;
+    let mut net = GoldenNetwork::new(weights);
+    let mut correct = 0;
+    for (x, &y) in split.x.iter().zip(split.y.iter()) {
+        correct += (net.classify(x) == y) as usize;
+    }
+    println!(
+        "golden accuracy: {}/{} = {:.4}",
+        correct,
+        split.y.len(),
+        correct as f64 / split.y.len() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,267 @@
+//! Golden software model of the `hw`-variant MINIMALIST network in
+//! logical units — the rust mirror of `python/compile/kernels/ref.py`.
+//!
+//! This is the arithmetic oracle the mixed-signal simulator is compared
+//! against (Fig 4), and the fast reference path the coordinator can serve
+//! from when no PJRT artifact is loaded.
+
+use crate::nn::weights::{LayerWeights, NetworkWeights};
+use crate::quant::{hard_sigmoid, Z6};
+
+/// Number of final time steps averaged by the classifier head (mirror of
+/// python `model.READOUT_STEPS`).
+pub const READOUT_STEPS: usize = 8;
+
+/// Per-layer recurrent state.
+#[derive(Debug, Clone)]
+pub struct LayerState {
+    pub h: Vec<f32>,
+}
+
+impl LayerState {
+    pub fn zeros(n: usize) -> LayerState {
+        LayerState { h: vec![0.0; n] }
+    }
+}
+
+/// Observables of one layer step (the Fig 4 trace quantities, logical).
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub z: Vec<f32>,
+    pub htilde: Vec<f32>,
+    pub h: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// IMC projection (Eq. 6): out_j = (1/N)·Σ_i x_i·w_eff[i,j].
+/// `w_eff` is row-major [n_in, n_out].
+pub fn imc_matmul(x: &[f32], w_eff: &[f32], n_out: usize, out: &mut [f32]) {
+    let n_in = x.len();
+    debug_assert_eq!(w_eff.len(), n_in * n_out);
+    debug_assert_eq!(out.len(), n_out);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue; // event-coded input: skip silent rows
+        }
+        let row = &w_eff[i * n_out..(i + 1) * n_out];
+        for (o, &w) in out.iter_mut().zip(row.iter()) {
+            *o += xi * w;
+        }
+    }
+    let inv_n = 1.0 / n_in as f32;
+    for o in out.iter_mut() {
+        *o *= inv_n;
+    }
+}
+
+/// One hardware-exact layer step: IMC projections, 6-bit hard-sigmoid
+/// gate, convex state update, comparator output. Mirrors
+/// `ref.gate_update_ref` (the swap-granularity refinement of the satsim
+/// is intentionally *not* modeled here — this is the software model the
+/// paper's Fig 4 compares the circuit against).
+pub fn layer_step(
+    lw: &LayerWeights,
+    wh_eff: &[f32],
+    wz_eff: &[f32],
+    x: &[f32],
+    state: &mut LayerState,
+    imc_h: &mut [f32],
+    imc_z: &mut [f32],
+) -> LayerTrace {
+    let n_out = lw.n_out;
+    imc_matmul(x, wh_eff, n_out, imc_h);
+    imc_matmul(x, wz_eff, n_out, imc_z);
+    let mut z = vec![0.0f32; n_out];
+    let mut y = vec![0.0f32; n_out];
+    for j in 0..n_out {
+        let u = lw.alpha * imc_z[j] + lw.bz[j];
+        let zq = Z6::from_unit(hard_sigmoid(u)).value();
+        let h_new = zq * imc_h[j] + (1.0 - zq) * state.h[j];
+        state.h[j] = h_new;
+        z[j] = zq;
+        y[j] = (h_new > lw.bh[j]) as u8 as f32;
+    }
+    LayerTrace { z, htilde: imc_h.to_vec(), h: state.h.clone(), y }
+}
+
+/// Full-network streaming evaluator (hardware-exact, logical units).
+pub struct GoldenNetwork {
+    pub weights: NetworkWeights,
+    wh_eff: Vec<Vec<f32>>,
+    wz_eff: Vec<Vec<f32>>,
+    pub states: Vec<LayerState>,
+    /// readout accumulator: last READOUT_STEPS analog states of the head
+    readout_ring: Vec<Vec<f32>>,
+    ring_pos: usize,
+    scratch_h: Vec<f32>,
+    scratch_z: Vec<f32>,
+    scratch_x: Vec<f32>,
+}
+
+impl GoldenNetwork {
+    pub fn new(weights: NetworkWeights) -> GoldenNetwork {
+        let wh_eff: Vec<Vec<f32>> =
+            weights.layers.iter().map(|l| l.wh_eff()).collect();
+        let wz_eff: Vec<Vec<f32>> =
+            weights.layers.iter().map(|l| l.wz_eff()).collect();
+        let states = weights
+            .layers
+            .iter()
+            .map(|l| LayerState::zeros(l.n_out))
+            .collect();
+        let max_h = weights.dims.iter().copied().max().unwrap_or(1);
+        let head = *weights.dims.last().unwrap();
+        GoldenNetwork {
+            wh_eff,
+            wz_eff,
+            states,
+            readout_ring: vec![vec![0.0; head]; READOUT_STEPS],
+            ring_pos: 0,
+            scratch_h: vec![0.0; max_h],
+            scratch_z: vec![0.0; max_h],
+            scratch_x: vec![0.0; max_h],
+            weights,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for s in self.states.iter_mut() {
+            s.h.fill(0.0);
+        }
+        for r in self.readout_ring.iter_mut() {
+            r.fill(0.0);
+        }
+        self.ring_pos = 0;
+    }
+
+    /// One time step; `x` is the network input (dims[0] values).
+    /// Returns the binary events of the last layer (rarely needed) via
+    /// the trace of each layer if `traces` is Some.
+    pub fn step(&mut self, x: &[f32], mut traces: Option<&mut Vec<LayerTrace>>) {
+        debug_assert_eq!(x.len(), self.weights.dims[0]);
+        let n_layers = self.weights.n_layers();
+        self.scratch_x[..x.len()].copy_from_slice(x);
+        let mut x_len = x.len();
+        for l in 0..n_layers {
+            let lw = &self.weights.layers[l];
+            let trace = layer_step(
+                lw,
+                &self.wh_eff[l],
+                &self.wz_eff[l],
+                &self.scratch_x[..x_len],
+                &mut self.states[l],
+                &mut self.scratch_h[..lw.n_out],
+                &mut self.scratch_z[..lw.n_out],
+            );
+            self.scratch_x[..lw.n_out].copy_from_slice(&trace.y);
+            x_len = lw.n_out;
+            if let Some(ts) = traces.as_deref_mut() {
+                ts.push(trace);
+            }
+        }
+        // head readout ring: analog states of the last layer
+        let head = &self.states[n_layers - 1].h;
+        self.readout_ring[self.ring_pos].copy_from_slice(head);
+        self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
+    }
+
+    /// Classifier logits after a sequence: mean of the last
+    /// READOUT_STEPS head states plus the digital readout bias.
+    pub fn logits(&self) -> Vec<f32> {
+        let head_lw = self.weights.layers.last().unwrap();
+        let n = head_lw.n_out;
+        let mut out = vec![0.0f32; n];
+        for r in &self.readout_ring {
+            for j in 0..n {
+                out[j] += r[j];
+            }
+        }
+        for j in 0..n {
+            out[j] = out[j] / READOUT_STEPS as f32 + head_lw.bh[j];
+        }
+        out
+    }
+
+    /// Run a full sequence (T × dims[0], row-major) and classify.
+    pub fn classify(&mut self, x_seq: &[f32]) -> usize {
+        let d_in = self.weights.dims[0];
+        assert_eq!(x_seq.len() % d_in, 0);
+        self.reset();
+        for t in 0..x_seq.len() / d_in {
+            self.step(&x_seq[t * d_in..(t + 1) * d_in], None);
+        }
+        argmax(&self.logits())
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::weights::synthetic_network;
+
+    #[test]
+    fn imc_mean_semantics() {
+        // x = [1, 0, 1], w column of ones → (1+0+1)/3
+        let x = [1.0, 0.0, 1.0];
+        let w = [1.0, 1.0, 1.0]; // [3,1]
+        let mut out = [0.0f32];
+        imc_matmul(&x, &w, 1, &mut out);
+        assert!((out[0] - 2.0 / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn state_is_convex_mixture_and_bounded() {
+        let nw = synthetic_network(&[4, 8], 1);
+        let mut net = GoldenNetwork::new(nw);
+        for step in 0..100 {
+            let x: Vec<f32> = (0..4).map(|i| ((step + i) % 2) as f32).collect();
+            net.step(&x, None);
+            for &h in &net.states[0].h {
+                assert!(
+                    h.abs() <= 1.5 * 0.8 + 1e-5,
+                    "state escaped rail range: {h}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn z6_quantization_visible_in_traces() {
+        let nw = synthetic_network(&[4, 8], 2);
+        let mut net = GoldenNetwork::new(nw);
+        let mut traces = Vec::new();
+        net.step(&[1.0, 0.0, 1.0, 1.0], Some(&mut traces));
+        for &z in &traces[0].z {
+            let code = (z * 63.0).round();
+            assert!((z - code / 63.0).abs() < 1e-6, "z not on the 6-bit grid");
+        }
+    }
+
+    #[test]
+    fn classify_is_deterministic() {
+        let nw = synthetic_network(&[1, 16, 10], 7);
+        let mut net = GoldenNetwork::new(nw);
+        let seq: Vec<f32> = (0..64).map(|t| (t % 5) as f32 / 4.0).collect();
+        let a = net.classify(&seq);
+        let b = net.classify(&seq);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let nw = synthetic_network(&[2, 8], 3);
+        let mut net = GoldenNetwork::new(nw);
+        net.step(&[1.0, 1.0], None);
+        net.reset();
+        assert!(net.states[0].h.iter().all(|&h| h == 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Software reference model + checkpoint handling.
+//!
+//! * [`weights`] — MTF checkpoint loading (code planes, scales, biases)
+//! * [`mingru`] — the golden hardware-exact network in logical units
+
+pub mod mingru;
+pub mod weights;
+
+pub use mingru::{argmax, GoldenNetwork, LayerTrace, READOUT_STEPS};
+pub use weights::{synthetic_network, LayerWeights, NetworkWeights};

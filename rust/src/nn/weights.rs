@@ -1,0 +1,238 @@
+//! Trained-network checkpoint loading (the MTF files written by
+//! `python/compile/train.py::export_checkpoint`).
+//!
+//! A checkpoint carries, per layer, the raw fp parameters *and* — for
+//! quantized variants — the integer code planes + per-tensor scales that
+//! become the SRAM images and the codesign inputs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::tensorfile::TensorFile;
+
+/// One layer of a trained `hw`-variant network, in the form the golden
+/// model and the codesign mapping consume.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// 2-bit code planes, row-major [n_in, n_out], values 0..3.
+    pub wh_codes: Vec<i32>,
+    pub wz_codes: Vec<i32>,
+    /// Per-tensor weight scales (effective weight = (code−1.5)·scale).
+    pub wh_scale: f32,
+    pub wz_scale: f32,
+    /// 6-bit-quantized biases in logical units (code·scale), length n_out.
+    /// bh = comparator threshold θ (hidden layers) / digital readout bias.
+    pub bh: Vec<f32>,
+    /// bz = gate offset β (the ADC DAC offset).
+    pub bz: Vec<f32>,
+    /// Gate gain α (the ADC slope), shared per layer.
+    pub alpha: f32,
+    /// Unquantized fp biases (diagnostics / re-export).
+    pub bh_raw: Vec<f32>,
+    pub bz_raw: Vec<f32>,
+}
+
+impl LayerWeights {
+    /// Effective fp weight matrices (row-major [n_in, n_out]).
+    pub fn wh_eff(&self) -> Vec<f32> {
+        self.wh_codes
+            .iter()
+            .map(|&c| (c as f32 - 1.5) * self.wh_scale)
+            .collect()
+    }
+
+    pub fn wz_eff(&self) -> Vec<f32> {
+        self.wz_codes
+            .iter()
+            .map(|&c| (c as f32 - 1.5) * self.wz_scale)
+            .collect()
+    }
+}
+
+/// A full trained network.
+#[derive(Debug, Clone)]
+pub struct NetworkWeights {
+    pub dims: Vec<usize>,
+    pub variant: String,
+    pub logit_scale: f32,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl NetworkWeights {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn load(path: &str) -> Result<NetworkWeights> {
+        let tf = TensorFile::load(path)?;
+        Self::from_tensorfile(&tf)
+    }
+
+    pub fn from_tensorfile(tf: &TensorFile) -> Result<NetworkWeights> {
+        let dims: Vec<usize> = tf
+            .req("meta.dims")?
+            .as_i32()?
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let variant_bytes = tf.req("meta.variant")?.as_i32()?;
+        let variant: String = variant_bytes
+            .iter()
+            .take_while(|&&b| b != 0)
+            .map(|&b| b as u8 as char)
+            .collect();
+        let logit_scale = tf.req("meta.logit_scale")?.scalar()?;
+        if variant == "fp32" {
+            bail!("fp32 checkpoints carry no code planes; the mixed-signal \
+                   path requires a quantized variant (got '{variant}')");
+        }
+        let n_layers = dims.len() - 1;
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let pre = format!("l{l}.");
+            let (n_in, n_out) = (dims[l], dims[l + 1]);
+            let grab_codes = |k: &str| -> Result<Vec<i32>> {
+                tf.req(&format!("{pre}{k}"))?
+                    .as_i32()
+                    .with_context(|| format!("layer {l} tensor {k}"))
+            };
+            let grab_scalar = |k: &str| -> Result<f32> {
+                tf.req(&format!("{pre}{k}"))?.scalar()
+            };
+            let bh_codes = grab_codes("bh_codes")?;
+            let bz_codes = grab_codes("bz_codes")?;
+            let bh_scale = grab_scalar("bh_scale")?;
+            let bz_scale = grab_scalar("bz_scale")?;
+            let lw = LayerWeights {
+                n_in,
+                n_out,
+                wh_codes: grab_codes("wh_codes")?,
+                wz_codes: grab_codes("wz_codes")?,
+                wh_scale: grab_scalar("wh_scale")?,
+                wz_scale: grab_scalar("wz_scale")?,
+                bh: bh_codes.iter().map(|&c| c as f32 * bh_scale).collect(),
+                bz: bz_codes.iter().map(|&c| c as f32 * bz_scale).collect(),
+                alpha: grab_scalar("alpha")?,
+                bh_raw: tf.req(&format!("{pre}bh"))?.as_f32(),
+                bz_raw: tf.req(&format!("{pre}bz"))?.as_f32(),
+            };
+            if lw.wh_codes.len() != n_in * n_out {
+                bail!("layer {l}: wh_codes length {} != {}x{}",
+                      lw.wh_codes.len(), n_in, n_out);
+            }
+            if lw.bh.len() != n_out || lw.bz.len() != n_out {
+                bail!("layer {l}: bias length mismatch");
+            }
+            for &c in &lw.wh_codes {
+                if !(0..4).contains(&c) {
+                    bail!("layer {l}: invalid 2-bit code {c}");
+                }
+            }
+            layers.push(lw);
+        }
+        Ok(NetworkWeights { dims, variant, logit_scale, layers })
+    }
+}
+
+/// Build a deterministic synthetic network (for tests/benches that must
+/// not depend on a training run having happened).
+pub fn synthetic_network(dims: &[usize], seed: u64) -> NetworkWeights {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for l in 0..dims.len() - 1 {
+        let (n_in, n_out) = (dims[l], dims[l + 1]);
+        let codes = |rng: &mut Rng| -> Vec<i32> {
+            (0..n_in * n_out).map(|_| rng.below(4) as i32).collect()
+        };
+        let biases = |rng: &mut Rng, lo: f64, hi: f64| -> Vec<f32> {
+            (0..n_out).map(|_| rng.uniform_in(lo, hi) as f32).collect()
+        };
+        layers.push(LayerWeights {
+            n_in,
+            n_out,
+            wh_codes: codes(&mut rng),
+            wz_codes: codes(&mut rng),
+            wh_scale: 0.8,
+            wz_scale: 0.8,
+            bh: biases(&mut rng, -0.05, 0.05),
+            bz: biases(&mut rng, -1.5, 0.5),
+            alpha: 6.0 * (n_in as f32).sqrt().max(1.0) / 4.0,
+            bh_raw: vec![0.0; n_out],
+            bz_raw: vec![0.0; n_out],
+        });
+    }
+    NetworkWeights {
+        dims: dims.to_vec(),
+        variant: "hw".to_string(),
+        logit_scale: 10.0,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::tensorfile::{Tensor, TensorFile};
+
+    fn toy_tf() -> TensorFile {
+        let mut tf = TensorFile::new();
+        let dims = vec![2usize, 3];
+        tf.insert("meta.dims", Tensor::i32(vec![2], vec![2, 3]));
+        tf.insert(
+            "meta.variant",
+            Tensor {
+                shape: vec![8],
+                data: crate::io::tensorfile::TensorData::U8(
+                    b"hw\0\0\0\0\0\0".to_vec(),
+                ),
+            },
+        );
+        tf.insert("meta.logit_scale", Tensor::scalar_f32(10.0));
+        let (n, h) = (dims[0], dims[1]);
+        tf.insert("l0.wh", Tensor::f32(vec![n, h], vec![0.0; n * h]));
+        tf.insert("l0.wz", Tensor::f32(vec![n, h], vec![0.0; n * h]));
+        tf.insert("l0.bh", Tensor::f32(vec![h], vec![0.0; h]));
+        tf.insert("l0.bz", Tensor::f32(vec![h], vec![0.0; h]));
+        tf.insert("l0.alpha", Tensor::scalar_f32(5.0));
+        tf.insert("l0.gamma", Tensor::scalar_f32(1.0));
+        tf.insert("l0.wh_codes", Tensor::i32(vec![n, h], vec![0, 1, 2, 3, 1, 2]));
+        tf.insert("l0.wh_scale", Tensor::scalar_f32(0.5));
+        tf.insert("l0.wz_codes", Tensor::i32(vec![n, h], vec![3, 2, 1, 0, 2, 1]));
+        tf.insert("l0.wz_scale", Tensor::scalar_f32(0.25));
+        tf.insert("l0.bh_codes", Tensor::i32(vec![h], vec![-1, 0, 1]));
+        tf.insert("l0.bh_scale", Tensor::scalar_f32(0.1));
+        tf.insert("l0.bz_codes", Tensor::i32(vec![h], vec![-31, 0, 31]));
+        tf.insert("l0.bz_scale", Tensor::scalar_f32(0.05));
+        tf
+    }
+
+    #[test]
+    fn loads_and_dequantizes() {
+        let nw = NetworkWeights::from_tensorfile(&toy_tf()).unwrap();
+        assert_eq!(nw.dims, vec![2, 3]);
+        assert_eq!(nw.variant, "hw");
+        let l = &nw.layers[0];
+        assert_eq!(l.wh_eff()[0], -0.75); // (0−1.5)·0.5
+        assert_eq!(l.wh_eff()[3], 0.75); // (3−1.5)·0.5
+        assert!((l.bh[0] + 0.1).abs() < 1e-6);
+        assert!((l.bz[2] - 31.0 * 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_codes() {
+        let mut tf = toy_tf();
+        tf.insert("l0.wh_codes", Tensor::i32(vec![2, 3], vec![0, 1, 2, 3, 1, 7]));
+        assert!(NetworkWeights::from_tensorfile(&tf).is_err());
+    }
+
+    #[test]
+    fn synthetic_network_valid() {
+        let nw = synthetic_network(&[1, 16, 10], 3);
+        assert_eq!(nw.layers.len(), 2);
+        for l in &nw.layers {
+            assert!(l.wh_codes.iter().all(|&c| (0..4).contains(&c)));
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Codesign mapping: trained `hw`-variant parameters → per-layer circuit
+//! configuration (DESIGN.md §5).
+//!
+//! The software model works in *logical* units: effective weights
+//! `codes·scale`, IMC means, a gate pre-activation `u = α·imc + β` pushed
+//! through the hard sigmoid, and a comparator threshold θ. The hardware
+//! works in *volts*: rails at V_0 + (w−1.5)·Δw, an ADC whose slope and
+//! offset realize α and β, a comparator reference realizing θ.
+//!
+//! Conversions (layer with weight scales s_h, s_z):
+//!   V_col − V_0 = Δw·imc/s          (charge share of the rails)
+//!   codes/volt  = (63/6)·α·s_z/Δw   (so that code = 63·hardsig(u))
+//!   offset code = round(31.5 + 10.5·β)
+//!   V_θ         = V_0 + θ·Δw/s_h
+//!
+//! The ADC slope is realized by choosing how many IMC caps stay connected
+//! during conversion (`slope_m`); the achievable slopes are quantized by
+//! the segment granularity, so the fitter reports the relative error —
+//! an honest knob-vs-wish gap the mixed-signal trace test (Fig 4)
+//! absorbs.
+
+use anyhow::{bail, Result};
+
+use crate::config::CircuitConfig;
+use crate::nn::weights::LayerWeights;
+use crate::quant::W2;
+use crate::satsim::adc::SarAdc;
+use crate::satsim::column::ColumnConfig;
+
+/// Circuit realization of one trained layer.
+#[derive(Debug, Clone)]
+pub struct LayerCircuit {
+    pub columns: Vec<ColumnConfig>,
+    /// Row replication factor: a layer with n_in ≪ core rows is mapped
+    /// with each logical input repeated r times across physical rows.
+    /// The charge-share mean is invariant (identical rails replicated),
+    /// but the state bank grows to r·n_in capacitors — restoring the
+    /// fine swap granularity a 64-row column provides. This is how the
+    /// 1-wide input layer of the paper's 1-64-… network occupies a full
+    /// core column.
+    pub replication: usize,
+    /// Diagnostics: desired vs realized ADC slope (codes/V).
+    pub slope_desired: f64,
+    pub slope_realized: f64,
+}
+
+impl LayerCircuit {
+    pub fn slope_rel_error(&self) -> f64 {
+        (self.slope_realized - self.slope_desired).abs() / self.slope_desired
+    }
+}
+
+/// Snap a trained network to the circuit-realizable parameter grid:
+/// the gate gain α is quantized by the ADC slope segments (one IMC cap
+/// of C_unit per step), and the gate offset β by the ±3 range of the
+/// 6-bit DAC pre-set. The returned network is what the hardware actually
+/// computes — the software model of Fig 4 is evaluated on *these*
+/// deployed parameters ("equivalent weights and biases").
+pub fn snap_network(
+    nw: &crate::nn::weights::NetworkWeights,
+    cfg: &CircuitConfig,
+    max_rows: usize,
+) -> Result<crate::nn::weights::NetworkWeights> {
+    let mut out = nw.clone();
+    for lw in out.layers.iter_mut() {
+        let lc = map_layer(lw, cfg, max_rows)?;
+        // realized slope → realized α (inverse of the slope equation)
+        lw.alpha =
+            (lc.slope_realized * cfg.delta_w / (10.5 * lw.wz_scale as f64)) as f32;
+        for b in lw.bz.iter_mut() {
+            // offset code grid: round(31.5 + 10.5·β) → β = (code−31.5)/10.5
+            let code = (31.5 + 10.5 * *b as f64).round().clamp(0.0, 63.0);
+            *b = ((code - 31.5) / 10.5) as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Map one layer's trained weights to column configurations.
+/// `max_rows` is the physical row count of the target cores; narrow
+/// layers are row-replicated up to it.
+pub fn map_layer(lw: &LayerWeights, cfg: &CircuitConfig,
+                 max_rows: usize) -> Result<LayerCircuit> {
+    let (n, h) = (lw.n_in, lw.n_out);
+    if lw.wh_codes.len() != n * h || lw.wz_codes.len() != n * h {
+        bail!("weight plane shape mismatch");
+    }
+    if n > max_rows {
+        bail!("layer input dim {n} exceeds core rows {max_rows}");
+    }
+    let r = (max_rows / n).max(1);
+    let rows_phys = r * n;
+
+    // -- ADC slope: codes/volt = 10.5·α·s_z/Δw --------------------------
+    // (independent of the replication factor: the replicated mean equals
+    // the logical mean)
+    let slope_desired = 10.5 * lw.alpha as f64 * lw.wz_scale as f64 / cfg.delta_w;
+    let c_ext_desired = SarAdc::c_ext_for_slope(slope_desired, cfg);
+    // segment granularity: connected caps come in units of c_unit
+    let m = ((c_ext_desired - cfg.c_line) / cfg.c_unit).round().max(0.0) as usize;
+    let slope_m = m.min(rows_phys);
+    let slope_realized = SarAdc::slope_codes_per_volt(
+        slope_m as f64 * cfg.c_unit + cfg.c_line,
+        cfg,
+    );
+
+    let mut columns = Vec::with_capacity(h);
+    for j in 0..h {
+        // column-major gather of the code planes (row-major [n, h]),
+        // tiled r times across the physical rows
+        let gather = |codes: &[i32]| -> Vec<W2> {
+            let mut out = Vec::with_capacity(rows_phys);
+            for _ in 0..r {
+                for i in 0..n {
+                    out.push(W2::new(codes[i * h + j] as u8));
+                }
+            }
+            out
+        };
+        let w_h = gather(&lw.wh_codes);
+        let w_z = gather(&lw.wz_codes);
+
+        // -- ADC offset code: round(31.5 + 10.5·β) -----------------------
+        let beta = lw.bz[j] as f64; // already 6-bit quantized in training
+        let offset_code = (31.5 + 10.5 * beta).round().clamp(0.0, 63.0) as u8;
+
+        // -- comparator reference: V_0 + θ·Δw/s_h ------------------------
+        let theta = lw.bh[j] as f64;
+        let v_theta = cfg.v_0 + theta * cfg.delta_w / lw.wh_scale as f64;
+
+        columns.push(ColumnConfig { w_h, w_z, slope_m, offset_code, v_theta });
+    }
+    Ok(LayerCircuit { columns, replication: r, slope_desired, slope_realized })
+}
+
+/// Convert a simulated state voltage back to logical units (Fig 4 traces
+/// compare in logical units).
+pub fn volts_to_logical(v: f64, wh_scale: f32, cfg: &CircuitConfig) -> f64 {
+    (v - cfg.v_0) * wh_scale as f64 / cfg.delta_w
+}
+
+/// Logical candidate/hidden value → the voltage the core would hold.
+pub fn logical_to_volts(x: f64, wh_scale: f32, cfg: &CircuitConfig) -> f64 {
+    cfg.v_0 + x * cfg.delta_w / wh_scale as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::weights::LayerWeights;
+
+    fn toy_layer(n: usize, h: usize, alpha: f32) -> LayerWeights {
+        LayerWeights {
+            n_in: n,
+            n_out: h,
+            wh_codes: (0..n * h).map(|i| (i % 4) as i32).collect(),
+            wz_codes: (0..n * h).map(|i| ((i + 1) % 4) as i32).collect(),
+            wh_scale: 0.8,
+            wz_scale: 0.9,
+            bh: vec![0.1; h],
+            bz: vec![-0.5; h],
+            alpha,
+            bh_raw: vec![0.1; h],
+            bz_raw: vec![-0.5; h],
+        }
+    }
+
+    #[test]
+    fn map_produces_column_per_unit() {
+        let cfg = CircuitConfig::default();
+        let lc = map_layer(&toy_layer(16, 8, 10.0), &cfg, 16).unwrap();
+        assert_eq!(lc.columns.len(), 8);
+        assert_eq!(lc.columns[0].w_h.len(), 16);
+    }
+
+    #[test]
+    fn slope_fit_reasonable() {
+        let cfg = CircuitConfig::default();
+        let lc = map_layer(&toy_layer(64, 8, 12.0), &cfg, 64).unwrap();
+        assert!(
+            lc.slope_rel_error() < 0.05,
+            "slope err {} (desired {}, got {})",
+            lc.slope_rel_error(),
+            lc.slope_desired,
+            lc.slope_realized
+        );
+    }
+
+    #[test]
+    fn offset_code_encodes_beta() {
+        let cfg = CircuitConfig::default();
+        let mut lw = toy_layer(8, 2, 5.0);
+        lw.bz = vec![0.0, 3.0];
+        let lc = map_layer(&lw, &cfg, 8).unwrap();
+        assert_eq!(lc.columns[0].offset_code, 32); // β=0 → neutral
+        assert_eq!(lc.columns[1].offset_code, 63); // β=+3 → full shift
+    }
+
+    #[test]
+    fn volts_logical_roundtrip() {
+        let cfg = CircuitConfig::default();
+        for x in [-1.2, -0.3, 0.0, 0.7, 1.4] {
+            let v = logical_to_volts(x, 0.8, &cfg);
+            let back = volts_to_logical(v, 0.8, &cfg);
+            assert!((back - x).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Quantized code types shared across the stack (mirror of
+//! `python/compile/quant.py`) and the codesign mapping from trained
+//! parameters to circuit configuration.
+//!
+//! Conventions (DESIGN.md §5):
+//! * 2-bit weight codes `w ∈ {0,1,2,3}` → effective value `(w−1.5)·scale`
+//!   — the four equidistant rails `V_00..V_11` around `V_0`.
+//! * 6-bit bias codes `b ∈ {−32..31}` → `b·scale`.
+//! * 6-bit gate codes `z ∈ {0..63}` → `z/63`; the capacitor-swap count of
+//!   a 64-cap bank is `k = round(z·64/63) ∈ {0..64}`.
+
+pub mod codesign;
+
+/// A 2-bit weight code (one SRAM cell of a synapse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct W2(pub u8);
+
+impl W2 {
+    pub fn new(code: u8) -> W2 {
+        assert!(code < 4, "W2 code out of range: {code}");
+        W2(code)
+    }
+
+    /// Quantize an fp weight (already divided by the per-tensor scale).
+    pub fn from_scaled(w_over_scale: f32) -> W2 {
+        let idx = (w_over_scale + 1.5).round().clamp(0.0, 3.0);
+        W2(idx as u8)
+    }
+
+    /// Effective value in units of the per-tensor scale.
+    pub fn value(self) -> f32 {
+        self.0 as f32 - 1.5
+    }
+}
+
+/// Per-tensor 2-bit quantization scale: mean(|w|) (python `weight_scale`).
+pub fn weight_scale(w: &[f32]) -> f32 {
+    let mean_abs = w.iter().map(|x| x.abs()).sum::<f32>() / w.len().max(1) as f32;
+    mean_abs.max(1e-8)
+}
+
+/// A signed 6-bit bias code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct B6(pub i8);
+
+impl B6 {
+    pub fn new(code: i32) -> B6 {
+        assert!((-32..=31).contains(&code), "B6 code out of range: {code}");
+        B6(code as i8)
+    }
+
+    pub fn from_scaled(b_over_scale: f32) -> B6 {
+        B6(b_over_scale.round().clamp(-32.0, 31.0) as i8)
+    }
+
+    pub fn value(self) -> f32 {
+        self.0 as f32
+    }
+}
+
+/// Per-tensor 6-bit bias scale: code range covers max|b| (python
+/// `bias_scale`; max-based so near-constant bias vectors survive).
+pub fn bias_scale(b: &[f32]) -> f32 {
+    let max_abs = b.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    (max_abs / 31.0).max(1e-8)
+}
+
+/// An unsigned 6-bit gate code (the SAR ADC output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Z6(pub u8);
+
+impl Z6 {
+    pub fn new(code: u8) -> Z6 {
+        assert!(code < 64, "Z6 code out of range: {code}");
+        Z6(code)
+    }
+
+    /// Quantize a gate value z ∈ [0, 1].
+    pub fn from_unit(z: f32) -> Z6 {
+        Z6((z.clamp(0.0, 1.0) * 63.0).round() as u8)
+    }
+
+    /// Gate value in [0, 1].
+    pub fn value(self) -> f32 {
+        self.0 as f32 / 63.0
+    }
+
+    /// Number of capacitors to swap in a bank of `n_caps` (DESIGN.md §5).
+    pub fn swap_count(self, n_caps: usize) -> usize {
+        ((self.0 as f32 / 63.0) * n_caps as f32).round() as usize
+    }
+}
+
+/// The hard sigmoid σ^z (paper Eq. 5).
+pub fn hard_sigmoid(u: f32) -> f32 {
+    (u / 6.0 + 0.5).clamp(0.0, 1.0)
+}
+
+/// Hard sigmoid followed by 6-bit quantization — the logical transfer
+/// function the SAR ADC implements (Fig 3).
+pub fn gate_transfer(u: f32) -> Z6 {
+    Z6::from_unit(hard_sigmoid(u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn w2_codes_cover_levels() {
+        assert_eq!(W2::from_scaled(-2.0).value(), -1.5);
+        assert_eq!(W2::from_scaled(-0.6).value(), -0.5);
+        assert_eq!(W2::from_scaled(0.4).value(), 0.5);
+        assert_eq!(W2::from_scaled(9.0).value(), 1.5);
+    }
+
+    #[test]
+    fn b6_clamps() {
+        assert_eq!(B6::from_scaled(-100.0).0, -32);
+        assert_eq!(B6::from_scaled(100.0).0, 31);
+        assert_eq!(B6::from_scaled(2.4).0, 2);
+    }
+
+    #[test]
+    fn z6_roundtrip_and_swap() {
+        assert_eq!(Z6::from_unit(0.0).0, 0);
+        assert_eq!(Z6::from_unit(1.0).0, 63);
+        assert_eq!(Z6::from_unit(1.0).swap_count(64), 64);
+        assert_eq!(Z6::from_unit(0.0).swap_count(64), 0);
+        // z = 32/63 ≈ 0.508 → swap 33 of 64
+        assert_eq!(Z6(32).swap_count(64), 33);
+    }
+
+    #[test]
+    fn hard_sigmoid_matches_eq5() {
+        assert_eq!(hard_sigmoid(-3.0), 0.0);
+        assert_eq!(hard_sigmoid(3.0), 1.0);
+        assert_eq!(hard_sigmoid(0.0), 0.5);
+        assert!((hard_sigmoid(1.5) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantizer_idempotent_property() {
+        check::property("w2 idempotent", 200, |rng| {
+            let x = rng.uniform_in(-4.0, 4.0) as f32;
+            let q1 = W2::from_scaled(x).value();
+            let q2 = W2::from_scaled(q1).value();
+            crate::prop_close!(q1 as f64, q2 as f64, 1e-9);
+            Ok(())
+        });
+        check::property("z6 idempotent + monotone", 200, |rng| {
+            let a = rng.uniform() as f32;
+            let b = rng.uniform() as f32;
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            crate::prop_assert!(Z6::from_unit(lo) <= Z6::from_unit(hi));
+            let q = Z6::from_unit(a).value();
+            crate::prop_close!(
+                Z6::from_unit(q).value() as f64,
+                q as f64,
+                1e-9
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scales_match_python_conventions() {
+        let w = [0.5f32, -1.0, 1.5, -2.0];
+        assert!((weight_scale(&w) - 1.25).abs() < 1e-6);
+        let b = [1.0f32, -4.0, 2.0, -1.0];
+        // max|b| = 4, scale = 4/31; a constant vector must not collapse
+        assert!((bias_scale(&b) - 4.0 / 31.0).abs() < 1e-6);
+        let bc = [-4.0f32; 8];
+        assert!((bias_scale(&bc) - 4.0 / 31.0).abs() < 1e-6);
+    }
+}

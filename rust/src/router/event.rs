@@ -1,0 +1,68 @@
+//! The routing fabric's wire format.
+//!
+//! Binary output activations are communicated as *transition* events
+//! ("on" and "off", paper §2): a unit whose output did not change emits
+//! nothing. With the trained networks' sparse, slowly-varying activity
+//! this is what makes the fabric cheap — the router benches report the
+//! measured transition rate.
+
+/// One routed event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Time step the transition belongs to.
+    pub t: u32,
+    /// Source layer id (network-level; mapping resolves cores).
+    pub layer: u16,
+    /// Source unit (column) within the layer.
+    pub unit: u16,
+    /// true = "on" transition (0→1), false = "off" (1→0).
+    pub on: bool,
+}
+
+/// Encode the transitions between two binary frames as events.
+pub fn delta_encode(
+    t: u32,
+    layer: u16,
+    prev: &[bool],
+    curr: &[bool],
+    out: &mut Vec<Event>,
+) {
+    debug_assert_eq!(prev.len(), curr.len());
+    for (unit, (&p, &c)) in prev.iter().zip(curr.iter()).enumerate() {
+        if p != c {
+            out.push(Event { t, layer, unit: unit as u16, on: c });
+        }
+    }
+}
+
+/// Apply events onto a frame (the receiving core's row-driver state).
+pub fn delta_apply(events: &[Event], frame: &mut [bool]) {
+    for e in events {
+        frame[e.unit as usize] = e.on;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_transitions() {
+        let prev = vec![false, true, false, true];
+        let curr = vec![true, true, false, false];
+        let mut evs = Vec::new();
+        delta_encode(3, 1, &prev, &curr, &mut evs);
+        assert_eq!(evs.len(), 2);
+        let mut frame = prev.clone();
+        delta_apply(&evs, &mut frame);
+        assert_eq!(frame, curr);
+    }
+
+    #[test]
+    fn no_change_no_events() {
+        let f = vec![true, false, true];
+        let mut evs = Vec::new();
+        delta_encode(0, 0, &f, &f, &mut evs);
+        assert!(evs.is_empty());
+    }
+}

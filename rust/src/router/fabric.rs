@@ -1,0 +1,120 @@
+//! Event delivery between layers: per-port frame reconstruction from
+//! transition events, with traffic statistics (the router's cost model —
+//! the paper's efficiency argument leans on the sparsity of 1-bit
+//! activations, so the fabric measures it).
+
+use crate::router::event::{delta_apply, delta_encode, Event};
+
+/// The reconstructed binary input frame a destination layer sees.
+#[derive(Debug, Clone)]
+pub struct PortState {
+    pub frame: Vec<bool>,
+}
+
+impl PortState {
+    pub fn new(width: usize) -> PortState {
+        PortState { frame: vec![false; width] }
+    }
+
+    pub fn as_f64(&self, out: &mut [f64]) {
+        for (o, &b) in out.iter_mut().zip(self.frame.iter()) {
+            *o = b as u8 as f64;
+        }
+    }
+
+    pub fn as_f32(&self, out: &mut [f32]) {
+        for (o, &b) in out.iter_mut().zip(self.frame.iter()) {
+            *o = b as u8 as f32;
+        }
+    }
+}
+
+/// Inter-layer fabric for one pipeline: layer l's outputs feed layer l+1.
+#[derive(Debug)]
+pub struct Fabric {
+    /// Destination port per hidden connection (layer l → l+1 has
+    /// ports[l] of width dims[l+1]).
+    pub ports: Vec<PortState>,
+    /// Previous output frame per source layer (for transition coding).
+    prev: Vec<Vec<bool>>,
+    /// Scratch event buffer.
+    events: Vec<Event>,
+    /// Statistics.
+    pub events_routed: u64,
+    pub frames_routed: u64,
+}
+
+impl Fabric {
+    /// `widths[l]` = output width of layer l (events from the readout
+    /// layer are not routed — its analog states go to the classifier).
+    pub fn new(widths: &[usize]) -> Fabric {
+        Fabric {
+            ports: widths.iter().map(|&w| PortState::new(w)).collect(),
+            prev: widths.iter().map(|&w| vec![false; w]).collect(),
+            events: Vec::new(),
+            events_routed: 0,
+            frames_routed: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for p in self.ports.iter_mut() {
+            p.frame.fill(false);
+        }
+        for f in self.prev.iter_mut() {
+            f.fill(false);
+        }
+    }
+
+    /// Route layer `l`'s binary outputs at step `t` to its consumer.
+    /// Returns the number of transition events emitted.
+    pub fn route(&mut self, l: usize, t: u32, outputs: &[bool]) -> usize {
+        self.events.clear();
+        delta_encode(t, l as u16, &self.prev[l], outputs, &mut self.events);
+        self.prev[l].copy_from_slice(outputs);
+        delta_apply(&self.events, &mut self.ports[l].frame);
+        self.events_routed += self.events.len() as u64;
+        self.frames_routed += 1;
+        self.events.len()
+    }
+
+    /// Mean transition events per routed frame (sparsity metric).
+    pub fn mean_events_per_frame(&self) -> f64 {
+        if self.frames_routed == 0 {
+            0.0
+        } else {
+            self.events_routed as f64 / self.frames_routed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_and_reconstructs() {
+        let mut f = Fabric::new(&[4]);
+        let n1 = f.route(0, 0, &[true, false, true, false]);
+        assert_eq!(n1, 2);
+        assert_eq!(f.ports[0].frame, vec![true, false, true, false]);
+        // unchanged frame → zero events
+        let n2 = f.route(0, 1, &[true, false, true, false]);
+        assert_eq!(n2, 0);
+        let n3 = f.route(0, 2, &[false, false, true, true]);
+        assert_eq!(n3, 2);
+        assert_eq!(f.ports[0].frame, vec![false, false, true, true]);
+        assert!((f.mean_events_per_frame() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut f = Fabric::new(&[3]);
+        f.route(0, 0, &[true, true, true]);
+        f.reset();
+        assert_eq!(f.ports[0].frame, vec![false; 3]);
+        // after reset, the same frame re-emits all transitions
+        let n = f.route(0, 1, &[true, true, true]);
+        assert_eq!(n, 3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Event-based routing fabric (paper §3: cores "are connected through an
+//! event-based routing fabric"; binary activations travel as sparse
+//! on/off *transition* events between cores).
+//!
+//! * [`event`] — the wire format: (source core, column, polarity, t)
+//! * [`fabric`] — delivery: per-destination event queues, row-state
+//!   reconstruction, transition coding/decoding
+//! * [`mapping`] — placing network layers onto physical cores, splitting
+//!   layers wider than a core and fanning events out to all consumers
+
+pub mod event;
+pub mod fabric;
+pub mod mapping;
+
+pub use event::Event;
+pub use fabric::{Fabric, PortState};
+pub use mapping::{LayerPlacement, Mapping};

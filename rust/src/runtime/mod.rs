@@ -1,0 +1,112 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! once by `python/compile/aot.py`) and execute them from the request
+//! path. Python is never involved at runtime — the HLO text is parsed,
+//! compiled and run by the XLA CPU client through the `xla` crate.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that the image's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A compiled XLA executable plus its I/O description.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT client and the loaded model executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 buffers. Each input is (data, shape); the result
+    /// is the flattened f32 tuple elements (aot.py lowers with
+    /// return_tuple=True).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(
+                t.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        match rt.load_hlo_text("/nonexistent/model.hlo.txt") {
+            Ok(_) => panic!("expected an error for a missing artifact"),
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+        }
+    }
+}

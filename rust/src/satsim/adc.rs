@@ -1,0 +1,271 @@
+//! Clocked comparator and 6-bit charge-redistribution SAR ADC with the
+//! paper's two tuning knobs (Fig 3):
+//!
+//! * **slope** — the IMC sampling capacitors *stay connected* to the
+//!   comparator input during successive approximation, attenuating every
+//!   DAC step by C_DAC/(C_DAC + C_IMC^conn). Disconnecting binary-scaled
+//!   segments of the array after the charge share tunes this ratio and
+//!   with it the ADC's dynamic range — i.e. the gain of the realized
+//!   hard-sigmoid.
+//! * **offset** — during sampling the DAC bottom plates are pre-set to a
+//!   6-bit offset code; conversion then starts from 0b100000, shifting
+//!   the transfer characteristic by up to ± half the range.
+//!
+//! The conversion is simulated decision-by-decision (six comparator
+//! strobes with per-instance offset and per-decision noise, DAC cap
+//! mismatch included), not as a closed-form quantizer — Fig 3C's
+//! characteristics emerge from the physics.
+
+use crate::config::CircuitConfig;
+use crate::energy::EnergyMeter;
+use crate::util::rng::Rng;
+
+/// Clocked comparator with input-referred offset (static, mismatch) and
+/// noise (per decision).
+#[derive(Debug, Clone)]
+pub struct Comparator {
+    pub offset_v: f64,
+}
+
+impl Comparator {
+    pub fn new(cfg: &CircuitConfig, rng: &mut Rng) -> Comparator {
+        let offset_v = if cfg.ideal {
+            0.0
+        } else {
+            rng.normal_scaled(0.0, cfg.sigma_comp_offset)
+        };
+        Comparator { offset_v }
+    }
+
+    /// Strobe: returns v_pos > v_neg (with offset + noise).
+    #[inline]
+    pub fn decide(
+        &self,
+        v_pos: f64,
+        v_neg: f64,
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> bool {
+        meter.comparator();
+        let noise = if cfg.ideal {
+            0.0
+        } else {
+            rng.normal_scaled(0.0, cfg.sigma_comp_noise)
+        };
+        v_pos - v_neg + self.offset_v + noise > 0.0
+    }
+}
+
+/// 6-bit SAR ADC channel. One per GRU column (z path); its comparator is
+/// re-used for the binary output activation (paper §3.1.4).
+#[derive(Debug, Clone)]
+pub struct SarAdc {
+    /// Binary-weighted DAC caps for bits 0..5 (c_adc_unit·2^bit, with
+    /// mismatch) plus one terminating unit cap → total ≈ 64 units.
+    dac_c: [f64; 6],
+    c_term: f64,
+    pub comparator: Comparator,
+}
+
+pub const ADC_BITS: u32 = 6;
+pub const ADC_CODES: u32 = 64;
+/// Neutral offset code: input = V_0 maps to mid-scale (hardsig(0)=0.5).
+pub const OFFSET_NEUTRAL: u8 = 32;
+
+impl SarAdc {
+    pub fn new(cfg: &CircuitConfig, rng: &mut Rng) -> SarAdc {
+        let sigma = if cfg.ideal { 0.0 } else { cfg.sigma_c };
+        let mut dac_c = [0.0; 6];
+        for (bit, c) in dac_c.iter_mut().enumerate() {
+            let nominal = cfg.c_adc_unit * (1 << bit) as f64;
+            // mismatch σ scales with 1/sqrt(area) ⇒ relative σ / sqrt(2^bit)
+            let rel = sigma / ((1u64 << bit) as f64).sqrt();
+            *c = nominal * (1.0 + rel * rng.normal()).max(0.1);
+        }
+        let c_term = cfg.c_adc_unit * (1.0 + sigma * rng.normal()).max(0.1);
+        SarAdc { dac_c, c_term, comparator: Comparator::new(cfg, rng) }
+    }
+
+    /// Total DAC capacitance (loads the shared node during conversion).
+    pub fn c_dac(&self) -> f64 {
+        self.dac_c.iter().sum::<f64>() + self.c_term
+    }
+
+    /// Weighted capacitance of the bits set in `code`.
+    fn w(&self, code: u8) -> f64 {
+        let mut acc = 0.0;
+        for bit in 0..6 {
+            if code & (1 << bit) != 0 {
+                acc += self.dac_c[bit];
+            }
+        }
+        acc
+    }
+
+    /// Convert the voltage `v_col` sitting on an external capacitance
+    /// `c_ext` (the still-connected IMC segment + line parasitics).
+    ///
+    /// `offset_code` is the 6-bit DAC pre-set (OFFSET_NEUTRAL = no shift).
+    /// Returns the 6-bit output code.
+    ///
+    /// Node equation: switching the DAC bottom plates from the offset
+    /// pattern `o` to the trial pattern `t` moves the input node by
+    /// ΔV = −V_ref·(W(t) − W(o))/C_tot, so larger input voltages sustain
+    /// larger trial codes — code grows with (v_col − V_0) at a slope of
+    /// C_tot/(c_adc_unit·V_ref) codes per volt.
+    pub fn convert(
+        &self,
+        v_col: f64,
+        c_ext: f64,
+        offset_code: u8,
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> u8 {
+        debug_assert!(offset_code < 64);
+        let c_tot = self.c_dac() + c_ext;
+        let v_ref = cfg.v_dd;
+        let w_off = self.w(offset_code);
+        let mut code: u8 = 0;
+        for bit in (0..6).rev() {
+            let trial = code | (1 << bit);
+            let v_node = v_col - v_ref * (self.w(trial) - w_off) / c_tot;
+            // keep the bit while the node stays above the common mode
+            if self.comparator.decide(v_node, cfg.v_0, cfg, rng, meter) {
+                code = trial;
+            }
+            // bottom-plate switching energy for this trial
+            meter.cap_charge(self.dac_c[bit], 0.0, v_ref);
+            meter.toggles(cfg, 1);
+        }
+        meter.adc_conversion();
+        code
+    }
+
+    /// Ideal (noise-free) transfer for analysis: the code the SAR would
+    /// produce with a perfect comparator. Used by the codesign fitter.
+    pub fn ideal_code(&self, v_col: f64, c_ext: f64, offset_code: u8,
+                      cfg: &CircuitConfig) -> u8 {
+        let c_tot = self.c_dac() + c_ext;
+        let v_ref = cfg.v_dd;
+        let w_off = self.w(offset_code);
+        let mut code: u8 = 0;
+        for bit in (0..6).rev() {
+            let trial = code | (1 << bit);
+            let v_node = v_col - v_ref * (self.w(trial) - w_off) / c_tot;
+            if v_node > cfg.v_0 {
+                code = trial;
+            }
+        }
+        code
+    }
+
+    /// Analytic slope in codes/volt (nominal, ignoring mismatch).
+    pub fn slope_codes_per_volt(c_ext: f64, cfg: &CircuitConfig) -> f64 {
+        let c_dac = 64.0 * cfg.c_adc_unit;
+        (c_dac + c_ext) / (cfg.c_adc_unit * cfg.v_dd)
+    }
+
+    /// Invert `slope_codes_per_volt`: the external capacitance needed for
+    /// a desired slope (may be negative → slope unreachable, clamp to 0).
+    pub fn c_ext_for_slope(slope: f64, cfg: &CircuitConfig) -> f64 {
+        (slope * cfg.c_adc_unit * cfg.v_dd - 64.0 * cfg.c_adc_unit).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(ideal: bool) -> (SarAdc, CircuitConfig, Rng, EnergyMeter) {
+        let cfg = if ideal { CircuitConfig::ideal() } else { CircuitConfig::default() };
+        let mut rng = Rng::new(21);
+        let adc = SarAdc::new(&cfg, &mut rng);
+        (adc, cfg, rng, EnergyMeter::new())
+    }
+
+    #[test]
+    fn neutral_offset_maps_v0_to_midscale() {
+        let (adc, cfg, mut rng, mut m) = setup(true);
+        let code = adc.convert(cfg.v_0, 0.0, OFFSET_NEUTRAL, &cfg, &mut rng, &mut m);
+        assert!((31..=32).contains(&code), "code = {code}");
+    }
+
+    #[test]
+    fn transfer_is_monotone_in_input() {
+        let (adc, cfg, mut rng, mut m) = setup(true);
+        let c_ext = 20.0 * cfg.c_unit;
+        let mut last = 0u8;
+        for i in 0..200 {
+            let v = cfg.v_0 - 0.05 + 0.1 * (i as f64) / 200.0;
+            let code = adc.convert(v, c_ext, OFFSET_NEUTRAL, &cfg, &mut rng, &mut m);
+            assert!(code >= last, "non-monotone at step {i}");
+            last = code;
+        }
+        assert_eq!(last, 63, "range should saturate");
+    }
+
+    #[test]
+    fn slope_grows_with_connected_caps() {
+        let (adc, cfg, mut rng, mut m) = setup(true);
+        let slope = |c_ext: f64, rng: &mut Rng, m: &mut EnergyMeter| {
+            let dv = 0.01;
+            let lo = adc.convert(cfg.v_0 - dv, c_ext, OFFSET_NEUTRAL, &cfg, rng, m) as f64;
+            let hi = adc.convert(cfg.v_0 + dv, c_ext, OFFSET_NEUTRAL, &cfg, rng, m) as f64;
+            (hi - lo) / (2.0 * dv)
+        };
+        let s_small = slope(4.0 * cfg.c_unit, &mut rng, &mut m);
+        let s_large = slope(40.0 * cfg.c_unit, &mut rng, &mut m);
+        assert!(
+            s_large > 2.0 * s_small,
+            "slopes: {s_small} vs {s_large} codes/V"
+        );
+        // and they should match the analytic expression within quantization
+        let s_pred = SarAdc::slope_codes_per_volt(40.0 * cfg.c_unit, &cfg);
+        assert!(
+            (s_large / s_pred - 1.0).abs() < 0.2,
+            "measured {s_large}, predicted {s_pred}"
+        );
+    }
+
+    #[test]
+    fn offset_code_shifts_transfer() {
+        let (adc, cfg, mut rng, mut m) = setup(true);
+        let c_ext = 10.0 * cfg.c_unit;
+        let at_v0 = |off: u8, rng: &mut Rng, m: &mut EnergyMeter| {
+            adc.convert(cfg.v_0, c_ext, off, &cfg, rng, m)
+        };
+        let lo = at_v0(8, &mut rng, &mut m);
+        let mid = at_v0(OFFSET_NEUTRAL, &mut rng, &mut m);
+        let hi = at_v0(56, &mut rng, &mut m);
+        assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+        // the pre-set code itself is the code at V_0 (paper Fig 3C)
+        assert!((lo as i32 - 8).abs() <= 1);
+        assert!((hi as i32 - 56).abs() <= 1);
+    }
+
+    #[test]
+    fn noisy_conversion_is_close_to_ideal() {
+        let (adc, cfg, mut rng, mut m) = setup(false);
+        let c_ext = 20.0 * cfg.c_unit;
+        let mut worst = 0i32;
+        for i in 0..50 {
+            let v = cfg.v_0 - 0.02 + 0.04 * (i as f64) / 50.0;
+            let noisy =
+                adc.convert(v, c_ext, OFFSET_NEUTRAL, &cfg, &mut rng, &mut m) as i32;
+            let ideal = adc.ideal_code(v, c_ext, OFFSET_NEUTRAL, &cfg) as i32;
+            worst = worst.max((noisy - ideal).abs());
+        }
+        assert!(worst <= 3, "worst |Δcode| = {worst}");
+    }
+
+    #[test]
+    fn energy_and_counters_logged() {
+        let (adc, cfg, mut rng, mut m) = setup(true);
+        adc.convert(cfg.v_0, 0.0, OFFSET_NEUTRAL, &cfg, &mut rng, &mut m);
+        assert_eq!(m.adc_conversions, 1);
+        assert_eq!(m.comparator_decisions, 6);
+        assert!(m.cap_energy_j > 0.0);
+    }
+}

@@ -1,0 +1,287 @@
+//! Capacitor banks and charge-sharing arithmetic — the primitive every
+//! MINIMALIST operation reduces to.
+//!
+//! Physics (DESIGN.md §6): shorting a set of capacitors {C_i, V_i}
+//! settles, by charge conservation, at V = Σ C_i·V_i / Σ C_i. Mismatch
+//! makes C_i = C_unit·(1+ε_i); sampling adds kT/C noise; turning a
+//! transmission gate off injects a deterministic channel-charge kick.
+
+use crate::config::CircuitConfig;
+use crate::energy::EnergyMeter;
+use crate::util::rng::Rng;
+
+/// A bank of capacitors with individual (mismatched) capacitances and
+/// per-capacitor top-plate voltages.
+#[derive(Debug, Clone)]
+pub struct CapBank {
+    pub c: Vec<f64>,
+    pub v: Vec<f64>,
+    /// Cached per-cap kT/C sampling noise σ (capacitances are fixed at
+    /// construction, so the sqrt is hoisted out of the hot loop).
+    ktc: Vec<f64>,
+    /// Cached per-cap charge-injection kick −½·C_inj·V_DD/C.
+    inj: Vec<f64>,
+    /// Cached switch-gate energy per toggle (C_gate·V_DD²).
+    gate_e: f64,
+}
+
+impl CapBank {
+    /// Build a bank of `n` caps of nominal value `c_nom`, drawing the
+    /// mismatch from `rng` (σ relative = cfg.sigma_c unless ideal).
+    pub fn new(n: usize, c_nom: f64, cfg: &CircuitConfig, rng: &mut Rng) -> CapBank {
+        let sigma = if cfg.ideal { 0.0 } else { cfg.sigma_c };
+        let c: Vec<f64> = (0..n)
+            .map(|_| c_nom * (1.0 + sigma * rng.normal()).max(0.5))
+            .collect();
+        let ktc = c.iter().map(|&ci| cfg.ktc_sigma(ci)).collect();
+        let inj = c
+            .iter()
+            .map(|&ci| {
+                if cfg.ideal { 0.0 } else { -0.5 * cfg.c_inj * cfg.v_dd / ci }
+            })
+            .collect();
+        CapBank {
+            c,
+            v: vec![cfg.v_0; n],
+            ktc,
+            inj,
+            gate_e: cfg.c_gate * cfg.v_dd * cfg.v_dd,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.c.is_empty()
+    }
+
+    /// Sample capacitor `i` onto the rail voltage `v_rail`: charge through
+    /// the selected transmission gate, accumulate the dissipated energy,
+    /// then add kT/C noise and the turn-off charge injection.
+    pub fn sample(
+        &mut self,
+        i: usize,
+        v_rail: f64,
+        _cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) {
+        let c = self.c[i];
+        meter.cap_charge(c, self.v[i], v_rail);
+        // select switch on + off (gate energy pre-multiplied)
+        meter.toggles_cached(2, self.gate_e);
+        let s = self.ktc[i];
+        let noise = if s > 0.0 { s * rng.normal_fast() } else { 0.0 };
+        // NMOS-dominated turn-off: half the channel charge kicks the
+        // sampled node downward (deterministic sign) — cached per cap.
+        self.v[i] = v_rail + noise + self.inj[i];
+    }
+
+    /// Noise-deferred sampling for caps that are *immediately shorted*
+    /// afterwards (the P1→P2 pattern of every column phase): the
+    /// per-cap kT/C draws and injection kicks are exactly equivalent —
+    /// the share node only ever sees their capacitance-weighted mean —
+    /// to one aggregated draw applied at the share
+    /// (`aggregate_sample_sigma` / `aggregate_injection_shift`).
+    /// Removes tens of thousands of Gaussian draws per core step.
+    #[inline]
+    pub fn sample_deferred(&mut self, i: usize, v_rail: f64,
+                           meter: &mut EnergyMeter) {
+        meter.cap_charge(self.c[i], self.v[i], v_rail);
+        meter.toggles_cached(2, self.gate_e);
+        self.v[i] = v_rail;
+    }
+
+    /// σ of the capacitance-weighted mean of fresh per-cap sampling
+    /// noise over `idx`: sqrt(Σ C_i²σ_i²)/Σ C_i.
+    pub fn aggregate_sample_sigma(&self, idx: &[usize]) -> f64 {
+        let num: f64 = idx
+            .iter()
+            .map(|&i| (self.c[i] * self.ktc[i]).powi(2))
+            .sum();
+        let den: f64 = idx.iter().map(|&i| self.c[i]).sum();
+        num.sqrt() / den
+    }
+
+    /// Deterministic injection shift of the shared node:
+    /// Σ C_i·inj_i / Σ C_i.
+    pub fn aggregate_injection_shift(&self, idx: &[usize]) -> f64 {
+        let num: f64 = idx.iter().map(|&i| self.c[i] * self.inj[i]).sum();
+        let den: f64 = idx.iter().map(|&i| self.c[i]).sum();
+        num / den
+    }
+
+    /// Total charge of the caps selected by `idx` (Q = Σ C·V).
+    pub fn charge(&self, idx: &[usize]) -> f64 {
+        idx.iter().map(|&i| self.c[i] * self.v[i]).sum()
+    }
+
+    /// Short the selected caps together (plus an optional extra fixed
+    /// capacitance at voltage v_extra, e.g. the column line parasitic).
+    /// Returns the settled voltage. Charge-conserving by construction.
+    pub fn share(
+        &mut self,
+        idx: &[usize],
+        extra: Option<(f64, f64)>,
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> f64 {
+        self.share_with(idx, extra, 0.0, 0.0, cfg, rng, meter)
+    }
+
+    /// `share` plus an extra Gaussian term (deferred sampling noise) and
+    /// a deterministic shift (deferred injection) applied to the settled
+    /// node — see `sample_deferred`.
+    pub fn share_with(
+        &mut self,
+        idx: &[usize],
+        extra: Option<(f64, f64)>,
+        add_sigma: f64,
+        add_shift: f64,
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> f64 {
+        let mut q: f64 = self.charge(idx);
+        let mut ctot: f64 = idx.iter().map(|&i| self.c[i]).sum();
+        if let Some((ce, ve)) = extra {
+            q += ce * ve;
+            ctot += ce;
+        }
+        let v_settled = q / ctot;
+        // Dissipation in the share switches: ΔE = ½·Σ C_i (V_i − V̄)²
+        // (energy difference before/after at equal charge).
+        for &i in idx {
+            let dv = self.v[i] - v_settled;
+            meter.cap_energy_j += 0.5 * self.c[i] * dv * dv;
+            meter.cap_events += 1;
+        }
+        meter.toggles_cached(idx.len() as u64, self.gate_e);
+        // Thermal noise of the share (kT/C_total) combined with any
+        // deferred sampling noise — independent Gaussians, one draw.
+        let share_sigma = cfg.ktc_sigma(ctot);
+        let sigma = (share_sigma * share_sigma + add_sigma * add_sigma).sqrt();
+        let noise = if sigma > 0.0 { sigma * rng.normal_fast() } else { 0.0 };
+        let v_final = v_settled + noise + add_shift;
+        for &i in idx {
+            self.v[i] = v_final;
+        }
+        v_final
+    }
+
+    /// Mean voltage over `idx` weighted by capacitance (diagnostic).
+    pub fn weighted_mean(&self, idx: &[usize]) -> f64 {
+        let q: f64 = self.charge(idx);
+        let c: f64 = idx.iter().map(|&i| self.c[i]).sum();
+        q / c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn ideal_bank(n: usize) -> (CapBank, CircuitConfig, Rng, EnergyMeter) {
+        let cfg = CircuitConfig::ideal();
+        let mut rng = Rng::new(1);
+        let bank = CapBank::new(n, cfg.c_unit, &cfg, &mut rng);
+        (bank, cfg, rng, EnergyMeter::new())
+    }
+
+    #[test]
+    fn ideal_share_is_arithmetic_mean() {
+        let (mut bank, cfg, mut rng, mut m) = ideal_bank(4);
+        for (i, v) in [0.1, 0.2, 0.3, 0.8].iter().enumerate() {
+            bank.v[i] = *v;
+        }
+        let v = bank.share(&[0, 1, 2, 3], None, &cfg, &mut rng, &mut m);
+        assert!((v - 0.35).abs() < 1e-12);
+        for i in 0..4 {
+            assert_eq!(bank.v[i], v);
+        }
+    }
+
+    #[test]
+    fn share_conserves_charge_under_mismatch() {
+        check::property("charge conservation", 300, |rng| {
+            let mut cfg = CircuitConfig::default();
+            cfg.sigma_c = 0.05;
+            let n = 2 + rng.below(30) as usize;
+            let mut bank = CapBank::new(n, cfg.c_unit, &mut cfg.clone(), rng);
+            for i in 0..n {
+                bank.v[i] = rng.uniform_in(0.0, 0.8);
+            }
+            let idx: Vec<usize> = (0..n).collect();
+            let q_before = bank.charge(&idx);
+            // noiseless share: use ideal-noise cfg but keep mismatch caps
+            let mut cfg2 = cfg.clone();
+            cfg2.ideal = true;
+            let mut m = EnergyMeter::new();
+            bank.share(&idx, None, &cfg2, rng, &mut m);
+            let q_after = bank.charge(&idx);
+            crate::prop_close!(q_before, q_after, 1e-25);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn share_with_line_parasitic_pulls_toward_line() {
+        let (mut bank, cfg, mut rng, mut m) = ideal_bank(2);
+        bank.v[0] = 0.6;
+        bank.v[1] = 0.6;
+        let c_line = bank.c[0]; // as big as one cap
+        let v = bank.share(&[0, 1], Some((c_line, 0.0)), &cfg, &mut rng, &mut m);
+        assert!((v - 0.4).abs() < 1e-12); // (0.6·2C + 0·C)/3C
+    }
+
+    #[test]
+    fn sampling_tracks_rail_and_costs_energy() {
+        let (mut bank, cfg, mut rng, mut m) = ideal_bank(1);
+        bank.sample(0, 0.55, &cfg, &mut rng, &mut m);
+        assert_eq!(bank.v[0], 0.55);
+        assert!(m.cap_energy_j > 0.0);
+        assert_eq!(m.switch_toggles, 2);
+    }
+
+    #[test]
+    fn ktc_noise_statistics() {
+        let mut cfg = CircuitConfig::default();
+        cfg.sigma_c = 0.0;
+        cfg.c_inj = 0.0;
+        let mut rng = Rng::new(3);
+        let mut bank = CapBank::new(1, cfg.c_unit, &cfg, &mut rng);
+        let mut m = EnergyMeter::new();
+        let n = 4000;
+        let mut sum = 0.0;
+        let mut sum2 = 0.0;
+        for _ in 0..n {
+            bank.sample(0, 0.5, &cfg, &mut rng, &mut m);
+            let e = bank.v[0] - 0.5;
+            sum += e;
+            sum2 += e * e;
+        }
+        let sigma_meas = (sum2 / n as f64 - (sum / n as f64).powi(2)).sqrt();
+        let sigma_exp = cfg.ktc_sigma(cfg.c_unit);
+        assert!(
+            (sigma_meas / sigma_exp - 1.0).abs() < 0.1,
+            "measured {sigma_meas}, expected {sigma_exp}"
+        );
+    }
+
+    #[test]
+    fn mismatch_distribution() {
+        let cfg = CircuitConfig::default();
+        let mut rng = Rng::new(9);
+        let bank = CapBank::new(4096, cfg.c_unit, &cfg, &mut rng);
+        let mean: f64 = bank.c.iter().sum::<f64>() / 4096.0;
+        let rel_std = (bank.c.iter().map(|c| (c - mean).powi(2)).sum::<f64>()
+            / 4096.0)
+            .sqrt()
+            / mean;
+        assert!((rel_std / cfg.sigma_c - 1.0).abs() < 0.15, "rel σ {rel_std}");
+    }
+}

@@ -1,0 +1,394 @@
+//! One GRU column of a MINIMALIST core (paper Fig 2): N synapses, each
+//! with three capacitors — a swappable h/h̃ pair and a z sampling cap —
+//! plus the column's SAR ADC channel and output comparator.
+//!
+//! The four clock phases of one time step (DESIGN.md §6):
+//!   P1  sample: the *free* cap of every pair and the z cap charge to the
+//!       weight rail selected by the local 2-bit SRAM code (row driver
+//!       clamps to V_0 when x_i = 0; the first layer's analog pixel
+//!       interpolates the rail, acting as the input DAC).
+//!   P2  share: z caps short together (→ V^z, Eq. 6); free caps short
+//!       together (→ V^h̃).
+//!   P3  digitize: SAR conversion of V^z with the layer's slope segment
+//!       and the channel's offset code → 6-bit z.
+//!   P4  update: k = swap_count(z) cap pairs exchange roles; the h bank
+//!       shorts → h_t = z·h̃ + (1−z)·h_{t−1} by pure charge redistribution
+//!       (Eq. 1, no buffers). The ADC's comparator then strobes
+//!       h_t vs the reference V_θ → binary output event (Eq. 4).
+
+use crate::config::CircuitConfig;
+use crate::energy::EnergyMeter;
+use crate::quant::{Z6, W2};
+use crate::satsim::adc::SarAdc;
+use crate::satsim::caps::CapBank;
+use crate::util::rng::Rng;
+
+/// Static per-column configuration produced by the codesign mapping.
+#[derive(Debug, Clone)]
+pub struct ColumnConfig {
+    /// 2-bit weight codes for the h̃ projection (one per row).
+    pub w_h: Vec<W2>,
+    /// 2-bit weight codes for the z projection (one per row).
+    pub w_z: Vec<W2>,
+    /// Number of z caps left connected during SAR conversion (slope).
+    pub slope_m: usize,
+    /// 6-bit ADC offset pre-set code (gate bias β).
+    pub offset_code: u8,
+    /// Output comparator reference (V): V_0 + θ·Δw/scale_wh.
+    pub v_theta: f64,
+}
+
+/// Observables of one column step — the Fig 4 trace quantities.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColumnStep {
+    pub z: Z6,
+    pub v_htilde: f64,
+    pub v_h: f64,
+    pub y: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub cfg_col: ColumnConfig,
+    /// 2N caps: pair i = indices (2i, 2i+1).
+    pair_bank: CapBank,
+    /// Which cap of pair i currently *holds the state h* (false = 2i,
+    /// true = 2i+1). The other one is free for the next h̃ sampling.
+    h_sel: Vec<bool>,
+    /// N z sampling caps.
+    z_bank: CapBank,
+    pub adc: SarAdc,
+    /// Column line parasitics (track their held voltage between steps).
+    v_line_htilde: f64,
+    v_line_z: f64,
+    v_line_h: f64,
+    /// Scratch index buffers (allocation-free hot path).
+    idx_free: Vec<usize>,
+    idx_h: Vec<usize>,
+    idx_z: Vec<usize>,
+    /// Precomputed deferred-noise aggregates (see caps::sample_deferred):
+    /// per-cap sampling noise and injection of a freshly sampled bank,
+    /// collapsed into one share-time draw. Nominal values — the ±σ_C
+    /// mismatch of which exact caps form the h̃ set changes these by
+    /// O(σ_C/√N) ≈ 0.1 %, far below the noise itself.
+    agg_sigma_pair: f64,
+    agg_shift_pair: f64,
+    agg_sigma_z: f64,
+    agg_shift_z: f64,
+}
+
+impl Column {
+    pub fn new(cfg_col: ColumnConfig, cfg: &CircuitConfig, rng: &mut Rng) -> Column {
+        let n = cfg_col.w_h.len();
+        assert_eq!(n, cfg_col.w_z.len());
+        assert!(cfg_col.slope_m <= n);
+        let pair_bank = CapBank::new(2 * n, cfg.c_unit, cfg, rng);
+        let z_bank = CapBank::new(n, cfg.c_unit, cfg, rng);
+        let adc = SarAdc::new(cfg, rng);
+        let idx_z: Vec<usize> = (0..n).collect();
+        // nominal "one cap per pair" set for the aggregates
+        let half: Vec<usize> = (0..n).map(|i| 2 * i).collect();
+        let agg_sigma_pair = pair_bank.aggregate_sample_sigma(&half);
+        let agg_shift_pair = pair_bank.aggregate_injection_shift(&half);
+        let agg_sigma_z = z_bank.aggregate_sample_sigma(&idx_z);
+        let agg_shift_z = z_bank.aggregate_injection_shift(&idx_z);
+        Column {
+            cfg_col,
+            pair_bank,
+            h_sel: vec![false; n],
+            z_bank,
+            adc,
+            v_line_htilde: cfg.v_0,
+            v_line_z: cfg.v_0,
+            v_line_h: cfg.v_0,
+            idx_free: Vec::with_capacity(n),
+            idx_h: Vec::with_capacity(n),
+            idx_z,
+            agg_sigma_pair,
+            agg_shift_pair,
+            agg_sigma_z,
+            agg_shift_z,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.h_sel.len()
+    }
+
+    /// Current hidden-state voltage (capacitance-weighted over the h bank).
+    pub fn v_h(&self) -> f64 {
+        let idx: Vec<usize> = (0..self.rows())
+            .map(|i| 2 * i + self.h_sel[i] as usize)
+            .collect();
+        self.pair_bank.weighted_mean(&idx)
+    }
+
+    /// Reset the state caps (and lines) to V_0.
+    pub fn reset(&mut self, cfg: &CircuitConfig) {
+        for v in self.pair_bank.v.iter_mut() {
+            *v = cfg.v_0;
+        }
+        for v in self.z_bank.v.iter_mut() {
+            *v = cfg.v_0;
+        }
+        self.v_line_htilde = cfg.v_0;
+        self.v_line_z = cfg.v_0;
+        self.v_line_h = cfg.v_0;
+        for s in self.h_sel.iter_mut() {
+            *s = false;
+        }
+    }
+
+    /// Row-driver voltage: x = 0 clamps to V_0, x = 1 selects the rail;
+    /// fractional x (first layer) interpolates — the input DAC.
+    #[inline]
+    fn drive(cfg: &CircuitConfig, x: f64, w: W2) -> f64 {
+        cfg.v_0 + x * (cfg.rail_voltage(w.0) - cfg.v_0)
+    }
+
+    /// Execute one time step (phases P1–P4) for input activations `x`
+    /// (length N; binary {0,1} or analog [0,1] for the first layer).
+    pub fn step(
+        &mut self,
+        x: &[f64],
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> ColumnStep {
+        let n = self.rows();
+        debug_assert_eq!(x.len(), n);
+
+        // ---- P1: sample (noise deferred to the share; exact — see
+        // caps::sample_deferred) -------------------------------------------
+        self.idx_free.clear();
+        self.idx_h.clear();
+        for i in 0..n {
+            let free = 2 * i + (!self.h_sel[i]) as usize;
+            let hold = 2 * i + (self.h_sel[i]) as usize;
+            self.pair_bank.sample_deferred(
+                free,
+                Self::drive(cfg, x[i], self.cfg_col.w_h[i]),
+                meter,
+            );
+            self.z_bank.sample_deferred(
+                i,
+                Self::drive(cfg, x[i], self.cfg_col.w_z[i]),
+                meter,
+            );
+            self.idx_free.push(free);
+            self.idx_h.push(hold);
+        }
+
+        // ---- P2: charge share (Eq. 6) ------------------------------------
+        let v_htilde = self.pair_bank.share_with(
+            &self.idx_free,
+            Some((cfg.c_line, self.v_line_htilde)),
+            self.agg_sigma_pair,
+            self.agg_shift_pair,
+            cfg,
+            rng,
+            meter,
+        );
+        self.v_line_htilde = v_htilde;
+        let v_z = self.z_bank.share_with(
+            &self.idx_z,
+            Some((cfg.c_line, self.v_line_z)),
+            self.agg_sigma_z,
+            self.agg_shift_z,
+            cfg,
+            rng,
+            meter,
+        );
+        self.v_line_z = v_z;
+
+        // ---- P3: SAR digitization of z (Fig 3) ---------------------------
+        // The first `slope_m` z caps stay connected; the rest disconnect
+        // (binary-scaled segment switches), tuning C_ADC/C_IMC.
+        let c_ext: f64 = self.z_bank.c[..self.cfg_col.slope_m]
+            .iter()
+            .sum::<f64>()
+            + cfg.c_line;
+        let z_code = self.adc.convert(
+            v_z,
+            c_ext,
+            self.cfg_col.offset_code,
+            cfg,
+            rng,
+            meter,
+        );
+        let z = Z6::new(z_code);
+
+        // ---- P4: capacitor-swap state update (Eq. 1) ---------------------
+        let k = z.swap_count(n);
+        for i in 0..k {
+            self.h_sel[i] = !self.h_sel[i];
+            meter.toggles(cfg, 2); // the pair's two bank-select switches
+        }
+        // rebuild the h index list after the swap
+        self.idx_h.clear();
+        for i in 0..n {
+            self.idx_h.push(2 * i + self.h_sel[i] as usize);
+        }
+        let v_h = self.pair_bank.share(
+            &self.idx_h,
+            Some((cfg.c_line, self.v_line_h)),
+            cfg,
+            rng,
+            meter,
+        );
+        self.v_line_h = v_h;
+
+        // ---- output comparator (Eq. 4), re-using the ADC's comparator ----
+        let y = self
+            .adc
+            .comparator
+            .decide(v_h, self.cfg_col.v_theta, cfg, rng, meter);
+
+        ColumnStep { z, v_htilde, v_h, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::satsim::adc::OFFSET_NEUTRAL;
+
+    fn mk_col(n: usize, wh: u8, wz: u8, ideal: bool) -> (Column, CircuitConfig, Rng) {
+        let cfg = if ideal { CircuitConfig::ideal() } else { CircuitConfig::default() };
+        let mut rng = Rng::new(5);
+        let col_cfg = ColumnConfig {
+            w_h: vec![W2::new(wh); n],
+            w_z: vec![W2::new(wz); n],
+            slope_m: n / 2,
+            offset_code: OFFSET_NEUTRAL,
+            v_theta: cfg.v_0,
+        };
+        let col = Column::new(col_cfg, &cfg, &mut rng);
+        (col, cfg, rng)
+    }
+
+    #[test]
+    fn share_computes_imc_mean() {
+        // all weights = code 3 (+1.5Δw), half the inputs active →
+        // V_htilde = V_0 + 1.5Δw·(k/n)
+        let n = 16;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        let mut meter = EnergyMeter::new();
+        let mut x = vec![0.0; n];
+        for xi in x.iter_mut().take(8) {
+            *xi = 1.0;
+        }
+        let out = col.step(&x, &cfg, &mut rng, &mut meter);
+        let expect = cfg.v_0 + 1.5 * cfg.delta_w * 8.0 / 16.0;
+        assert!(
+            (out.v_htilde - expect).abs() < 1e-9,
+            "v_htilde {} vs {}",
+            out.v_htilde,
+            expect
+        );
+    }
+
+    #[test]
+    fn state_update_is_convex_mixture() {
+        // z saturates high (wz = code 3, all x active, gentle slope) →
+        // state moves fully to h̃; z = 0 keeps the state.
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        let mut meter = EnergyMeter::new();
+        let x = vec![1.0; n];
+        let before = col.v_h();
+        let out = col.step(&x, &cfg, &mut rng, &mut meter);
+        let z = out.z.value() as f64;
+        let expect = z * out.v_htilde + (1.0 - z) * before;
+        assert!(
+            (out.v_h - expect).abs() < 1e-9,
+            "v_h {} expect {} (z={})",
+            out.v_h,
+            expect,
+            z
+        );
+    }
+
+    #[test]
+    fn z_zero_freezes_state() {
+        // wz = code 0 (−1.5Δw) with all inputs on and a steep slope drives
+        // the ADC to 0 → swap count 0 → h unchanged.
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 0, true);
+        col.cfg_col.slope_m = n; // steep
+        let mut meter = EnergyMeter::new();
+        // preload state away from V_0 to see it held
+        let x = vec![1.0; n];
+        let s1 = col.step(&x, &cfg, &mut rng, &mut meter);
+        assert_eq!(s1.z.0, 0, "gate should be fully closed");
+        let before = col.v_h();
+        let s2 = col.step(&x, &cfg, &mut rng, &mut meter);
+        assert_eq!(s2.v_h, before, "state must be untouched at z=0");
+    }
+
+    #[test]
+    fn output_comparator_thresholds() {
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        let mut meter = EnergyMeter::new();
+        let x = vec![1.0; n];
+        let out = col.step(&x, &cfg, &mut rng, &mut meter);
+        // v_h rose above V_0 (positive weights), θ = V_0 → fires
+        assert!(out.v_h > cfg.v_0);
+        assert!(out.y);
+        // raise the threshold above reach → silent
+        col.cfg_col.v_theta = cfg.v_0 + 10.0;
+        let out2 = col.step(&x, &cfg, &mut rng, &mut meter);
+        assert!(!out2.y);
+    }
+
+    #[test]
+    fn inactive_rows_clamp_to_v0() {
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        let mut meter = EnergyMeter::new();
+        let out = col.step(&vec![0.0; n], &cfg, &mut rng, &mut meter);
+        assert!((out.v_htilde - cfg.v_0).abs() < 1e-9);
+        assert!((out.z.value() - 0.5).abs() < 0.02); // hardsig(0) = ½
+    }
+
+    #[test]
+    fn analog_input_interpolates() {
+        let n = 1;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 1, true);
+        let mut meter = EnergyMeter::new();
+        let out = col.step(&[0.5], &cfg, &mut rng, &mut meter);
+        let expect = cfg.v_0 + 0.5 * 1.5 * cfg.delta_w;
+        assert!((out.v_htilde - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_matches_golden_recurrence_ideal() {
+        // Multi-step ideal simulation must track the logical recurrence
+        // h_t = z·h̃ + (1−z)·h exactly (f64 rounding apart).
+        let n = 12;
+        let (mut col, cfg, mut rng) = mk_col(n, 0, 0, true);
+        // mixed weights
+        for i in 0..n {
+            col.cfg_col.w_h[i] = W2::new((i % 4) as u8);
+            col.cfg_col.w_z[i] = W2::new(((i + 2) % 4) as u8);
+        }
+        let mut meter = EnergyMeter::new();
+        let mut h_log = 0.0f64; // logical h in volts-above-V_0
+        let mut step_rng = Rng::new(99);
+        for _ in 0..50 {
+            let x: Vec<f64> = (0..n).map(|_| (step_rng.coin(0.4)) as u8 as f64).collect();
+            let out = col.step(&x, &cfg, &mut rng, &mut meter);
+            let z = out.z.value();
+            // NB swap granularity: k/n vs z (6-bit value) differ by ≤ 1/(2n);
+            let k = out.z.swap_count(n) as f64 / n as f64;
+            h_log = k * (out.v_htilde - cfg.v_0) + (1.0 - k) * h_log;
+            assert!(
+                ((out.v_h - cfg.v_0) - h_log).abs() < 1e-9,
+                "diverged: sim {} vs log {} (z={z})",
+                out.v_h - cfg.v_0,
+                h_log
+            );
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! A MINIMALIST mixed-signal computing core: an R×C array of synapse
+//! columns sharing row drivers, executing one GRU block (or a slice of
+//! one — the router splits wider layers across cores).
+//!
+//! The core is the unit of physical mapping (paper §3: "Depending on
+//! their dimensionality, these GRU blocks can be mapped to one or
+//! multiple cores, which are connected through an event-based routing
+//! fabric").
+
+use crate::config::{CircuitConfig, CoreGeometry};
+use crate::energy::EnergyMeter;
+use crate::satsim::column::{Column, ColumnConfig, ColumnStep};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Core {
+    pub geometry: CoreGeometry,
+    /// Rows actually connected (≤ geometry.rows). Unused rows' caps are
+    /// disconnected via their segment switches — the same mechanism the
+    /// ADC slope control uses — so they do not load the charge share.
+    pub active_rows: usize,
+    pub columns: Vec<Column>,
+    pub meter: EnergyMeter,
+    rng: Rng,
+    /// RNG state at construction: `reset()` restores it so that a given
+    /// seed reproduces a trial exactly (deterministic simulation; fresh
+    /// noise across trials is obtained by changing the config seed).
+    rng0: Rng,
+    /// Scratch output buffer (events), reused across steps.
+    out_events: Vec<bool>,
+}
+
+/// Per-step observables for every column (Fig 4 traces; readout states).
+#[derive(Debug, Clone, Default)]
+pub struct CoreStep {
+    pub steps: Vec<ColumnStep>,
+}
+
+impl CoreStep {
+    pub fn events(&self) -> impl Iterator<Item = bool> + '_ {
+        self.steps.iter().map(|s| s.y)
+    }
+}
+
+impl Core {
+    /// Build a core from per-column configs. `rows` is fixed by the
+    /// geometry; configs must match it.
+    pub fn new(
+        geometry: CoreGeometry,
+        col_cfgs: Vec<ColumnConfig>,
+        cfg: &CircuitConfig,
+        seed_tag: u64,
+    ) -> Core {
+        assert!(col_cfgs.len() <= geometry.cols,
+                "core supports {} columns, got {}", geometry.cols, col_cfgs.len());
+        let active_rows = col_cfgs.first().map(|c| c.w_h.len()).unwrap_or(0);
+        assert!(active_rows <= geometry.rows,
+                "core supports {} rows, got {}", geometry.rows, active_rows);
+        let mut rng = Rng::new(cfg.seed ^ seed_tag.wrapping_mul(0x9E37));
+        let columns = col_cfgs
+            .into_iter()
+            .map(|cc| {
+                assert_eq!(cc.w_h.len(), active_rows,
+                           "all columns must use the same active row count");
+                let mut col_rng = rng.fork(0xC01);
+                Column::new(cc, cfg, &mut col_rng)
+            })
+            .collect::<Vec<_>>();
+        let n_cols = columns.len();
+        Core {
+            geometry,
+            active_rows,
+            columns,
+            meter: EnergyMeter::new(),
+            rng0: rng.clone(),
+            rng,
+            out_events: vec![false; n_cols],
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Reset all column states to V_0 (sequence boundary) and restore the
+    /// noise stream, making per-sequence simulation deterministic.
+    pub fn reset(&mut self, cfg: &CircuitConfig) {
+        for c in self.columns.iter_mut() {
+            c.reset(cfg);
+        }
+        self.rng = self.rng0.clone();
+    }
+
+    /// One time step over the full array. `x` has `active_rows` entries.
+    /// Returns per-column observables; binary events are also kept in an
+    /// internal buffer accessible via `last_events`.
+    pub fn step(&mut self, x: &[f64], cfg: &CircuitConfig) -> CoreStep {
+        assert_eq!(x.len(), self.active_rows);
+        let mut steps = Vec::with_capacity(self.columns.len());
+        for (j, col) in self.columns.iter_mut().enumerate() {
+            let mut col_rng = self.rng.fork(j as u64);
+            let s = col.step(x, cfg, &mut col_rng, &mut self.meter);
+            self.out_events[j] = s.y;
+            steps.push(s);
+        }
+        self.meter.step_done();
+        CoreStep { steps }
+    }
+
+    pub fn last_events(&self) -> &[bool] {
+        &self.out_events
+    }
+
+    /// Analog hidden-state voltages of all columns (readout path).
+    pub fn state_voltages(&self) -> Vec<f64> {
+        self.columns.iter().map(|c| c.v_h()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::W2;
+    use crate::satsim::adc::OFFSET_NEUTRAL;
+
+    fn mk_core(rows: usize, cols: usize) -> (Core, CircuitConfig) {
+        let cfg = CircuitConfig::ideal();
+        let col_cfgs: Vec<ColumnConfig> = (0..cols)
+            .map(|j| ColumnConfig {
+                w_h: (0..rows).map(|i| W2::new(((i + j) % 4) as u8)).collect(),
+                w_z: (0..rows).map(|i| W2::new(((i + 2 * j) % 4) as u8)).collect(),
+                slope_m: rows / 2,
+                offset_code: OFFSET_NEUTRAL,
+                v_theta: cfg.v_0,
+            })
+            .collect();
+        let core = Core::new(
+            CoreGeometry { rows, cols },
+            col_cfgs,
+            &cfg,
+            7,
+        );
+        (core, cfg)
+    }
+
+    #[test]
+    fn step_produces_all_columns() {
+        let (mut core, cfg) = mk_core(16, 8);
+        let x = vec![1.0; 16];
+        let out = core.step(&x, &cfg);
+        assert_eq!(out.steps.len(), 8);
+        assert_eq!(core.last_events().len(), 8);
+        assert_eq!(core.meter.steps, 1);
+        assert!(core.meter.total_j() > 0.0);
+    }
+
+    #[test]
+    fn reset_restores_v0() {
+        let (mut core, cfg) = mk_core(8, 4);
+        core.step(&vec![1.0; 8], &cfg);
+        core.reset(&cfg);
+        for v in core.state_voltages() {
+            assert!((v - cfg.v_0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut a, cfg) = mk_core(8, 4);
+        let (mut b, _) = mk_core(8, 4);
+        let x = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let sa = a.step(&x, &cfg);
+        let sb = b.step(&x, &cfg);
+        for (p, q) in sa.steps.iter().zip(sb.steps.iter()) {
+            assert_eq!(p, q);
+        }
+    }
+
+    #[test]
+    fn energy_scales_with_array_size() {
+        let (mut small, cfg) = mk_core(8, 4);
+        let (mut big, _) = mk_core(32, 16);
+        small.step(&vec![1.0; 8], &cfg);
+        big.step(&vec![1.0; 32], &cfg);
+        // 16× the synapses → energy should be roughly an order more
+        assert!(big.meter.total_j() > 5.0 * small.meter.total_j());
+    }
+}

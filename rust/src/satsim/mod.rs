@@ -1,0 +1,26 @@
+//! Behavioral switched-capacitor simulator — the substitution for the
+//! paper's Cadence Spectre AMS mixed-signal verification (DESIGN.md §2).
+//!
+//! Everything the MINIMALIST cores do is charge-domain arithmetic:
+//! pre-charge capacitors to rail voltages, short groups of capacitors,
+//! strobe a comparator. This module resolves exactly that, with the
+//! physically relevant non-idealities: capacitor mismatch, kT/C sampling
+//! noise, switch charge injection, line parasitics, comparator offset and
+//! noise, DAC mismatch in the SAR ADC.
+//!
+//! Module map:
+//! * [`caps`] — capacitor banks + charge-conserving share (the primitive)
+//! * [`adc`] — clocked comparator and the 6-bit SAR ADC with the paper's
+//!   slope/offset tuning (Fig 3)
+//! * [`column`] — one GRU unit: synapse caps, swap-update, output event
+//! * [`core`] — the R×C array (one GRU block or a slice of one)
+
+pub mod adc;
+pub mod caps;
+pub mod column;
+pub mod core;
+
+pub use self::core::{Core, CoreStep};
+pub use adc::{Comparator, SarAdc, ADC_BITS, ADC_CODES, OFFSET_NEUTRAL};
+pub use caps::CapBank;
+pub use column::{Column, ColumnConfig, ColumnStep};

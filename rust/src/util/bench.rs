@@ -1,0 +1,179 @@
+//! In-repo micro-benchmark harness (criterion is not in the offline
+//! vendored crate set). Provides warmup, adaptive iteration counts,
+//! robust statistics (median / MAD), and the table printer the
+//! `rust/benches/*` targets use to regenerate the paper's tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+/// Human-readable time with sensible units.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warm up for ~10% of the budget, then sample until
+/// the time budget is used. Each *sample* measures a batch of iterations
+/// sized so one batch is ≥ ~1 ms (amortizes timer overhead).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + batch size calibration
+    let warmup_end = Instant::now() + budget.mul_f64(0.1).max(Duration::from_millis(10));
+    let mut one = Duration::ZERO;
+    let mut count = 0u64;
+    while Instant::now() < warmup_end || count == 0 {
+        let t = Instant::now();
+        f();
+        one += t.elapsed();
+        count += 1;
+    }
+    let per_call = (one.as_nanos() as f64 / count as f64).max(1.0);
+    let batch = ((1e6 / per_call).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let mut iters = 0u64;
+    let end = Instant::now() + budget.mul_f64(0.9);
+    while Instant::now() < end || samples.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(dt);
+        iters += batch;
+        if samples.len() >= 2000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        mad_ns: mad,
+        min_ns: samples[0],
+        mean_ns: mean,
+    }
+}
+
+/// Convenience: run with the default 2 s budget and print one line.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_secs(2), f);
+    println!(
+        "  {:<44} {:>12} ± {:<10} (n={})",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.mad_ns),
+        r.iters
+    );
+    r
+}
+
+/// Simple fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("  | {} |", cols.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("  |-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters > 100);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // just exercise the path
+    }
+}

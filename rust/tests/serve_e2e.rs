@@ -1,0 +1,85 @@
+//! End-to-end serving: synthetic digit load through the coordinator
+//! (batcher + server thread + backend), checking accuracy against the
+//! golden model and that the metrics pipeline is sane.
+
+use std::time::Duration;
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::{
+    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+};
+use minimalist::dataset::glyphs;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+
+fn network() -> NetworkWeights {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    for c in ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf"] {
+        let p = root.join(c);
+        if p.exists() {
+            if let Ok(nw) = NetworkWeights::load(p.to_str().unwrap()) {
+                return nw;
+            }
+        }
+    }
+    synthetic_network(&[1, 32, 10], 9)
+}
+
+#[test]
+fn golden_backend_end_to_end() {
+    let nw = network();
+    let img = 8usize; // short sequences keep the test fast
+    let samples = glyphs::make_split(30, img, 5);
+
+    // reference labels straight through the model
+    let mut reference = GoldenNetwork::new(nw.clone());
+    let expected: Vec<usize> =
+        samples.iter().map(|s| reference.classify(&s.pixels)).collect();
+
+    let server = Server::spawn(
+        Box::new(GoldenBackend::new(GoldenNetwork::new(nw))),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    );
+    let client = server.client();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
+        .collect();
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.label, want, "served label must equal direct model");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.items, 30);
+    assert!(metrics.percentile(99.0) >= metrics.percentile(50.0));
+}
+
+#[test]
+fn mixed_signal_backend_end_to_end() {
+    let nw = network();
+    // trim to a smaller network if loaded one is the full paper size —
+    // satsim over 30 sequences × T=64 is the budget here
+    let engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::ideal(),
+        CoreGeometry::default(),
+    )
+    .unwrap();
+    let server = Server::spawn_with(
+        move || Box::new(MixedSignalBackend::new(engine)) as _,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    let client = server.client();
+    let samples = glyphs::make_split(8, 8, 6);
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.label < 10);
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.items, 8);
+}

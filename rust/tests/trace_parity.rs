@@ -1,0 +1,107 @@
+//! Fig 4 as a test: the switched-capacitor simulation must reproduce the
+//! software model's activations (z, h̃, h) on a trained network —
+//! exactly in the ideal configuration (up to the documented swap
+//! granularity), and within noise bounds in the default configuration.
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::quant::codesign::snap_network;
+
+fn load_network() -> NetworkWeights {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let raw = (|| {
+        for c in ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf"] {
+            let p = root.join(c);
+            if p.exists() {
+                if let Ok(nw) = NetworkWeights::load(p.to_str().unwrap()) {
+                    return nw;
+                }
+            }
+        }
+        synthetic_network(&[1, 64, 64, 64, 64, 10], 42)
+    })();
+    // Fig 4 compares software and circuit on the *deployed* parameters:
+    // snap α to the ADC slope grid and β to the DAC offset range.
+    snap_network(&raw, &CircuitConfig::ideal(), 64).unwrap()
+}
+
+fn test_sequence(t_len: usize) -> Vec<f32> {
+    // a deterministic pseudo-digit: smooth bumps over the scan
+    (0..t_len)
+        .map(|t| {
+            let x = t as f32 / t_len as f32;
+            (0.6 * (x * 13.0).sin().powi(2) + 0.4 * (x * 5.0).cos().powi(2))
+                .clamp(0.0, 1.0)
+        })
+        .collect()
+}
+
+#[test]
+fn ideal_circuit_tracks_golden_model() {
+    let nw = load_network();
+    let mut engine = MixedSignalEngine::new(
+        nw.clone(),
+        CircuitConfig::ideal(),
+        CoreGeometry::default(),
+    )
+    .unwrap();
+    let mut golden = GoldenNetwork::new(nw);
+    let seq = test_sequence(64);
+
+    engine.reset();
+    golden.reset();
+    let mut worst_h = 0.0f32;
+    let mut worst_z = 0.0f32;
+    for (t, &x) in seq.iter().enumerate() {
+        let mut traces = Vec::new();
+        engine.step(t as u32, &[x], Some(&mut traces));
+        let mut gtraces = Vec::new();
+        golden.step(&[x], Some(&mut gtraces));
+        for l in 0..gtraces.len() {
+            for (a, b) in traces[l].h.last().unwrap().iter().zip(&gtraces[l].h) {
+                worst_h = worst_h.max((a - b).abs());
+            }
+            for (a, b) in traces[l].z.last().unwrap().iter().zip(&gtraces[l].z) {
+                worst_z = worst_z.max((a - b).abs());
+            }
+        }
+    }
+    // Deviations decompose as: SAR bisection acts as floor() while the
+    // golden quantizer rounds (≤ 1.5 codes), the DAC offset pre-set
+    // rounds β to its code grid (≤ 1 code), and boundary decisions at
+    // exact half-LSB inputs add ≤ 1 — worst |Δz| ≤ 3.5 codes. h adds the
+    // 1/64 swap granularity per step on top.
+    assert!(worst_z <= 3.5 / 63.0 + 1e-6, "worst |Δz| = {worst_z}");
+    // h drift: a Δz of k codes shifts one convex update by
+    // (k/63)·|h̃−h_prev| and partially accumulates along the recurrence;
+    // with |h̃−h| = O(1) (logical units) and Δz ≤ 3.5 codes the observed
+    // worst drift stays ≈ 0.12–0.13 on trained checkpoints.
+    assert!(worst_h < 0.15, "worst |Δh| = {worst_h}");
+}
+
+#[test]
+fn noisy_circuit_stays_close_and_classification_mostly_agrees() {
+    let nw = load_network();
+    let mut engine = MixedSignalEngine::new(
+        nw.clone(),
+        CircuitConfig::default(),
+        CoreGeometry::default(),
+    )
+    .unwrap();
+    let mut golden = GoldenNetwork::new(nw);
+    let seq = test_sequence(64);
+    let sim = engine.classify(&seq);
+    let gold = golden.classify(&seq);
+    // One sequence: noise may flip a borderline class, but the analog
+    // readout values must stay close.
+    let lg = golden.logits();
+    let ls = engine.logits();
+    let mut worst = 0.0f32;
+    for (a, b) in ls.iter().zip(lg.iter()) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 0.25, "readout drifted: worst |Δlogit| = {worst}");
+    // classification agreement is expected (not guaranteed); record it
+    eprintln!("class sim={sim} gold={gold} (worst Δlogit {worst:.4})");
+}
