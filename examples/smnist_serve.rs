@@ -6,21 +6,24 @@
 //!
 //!     cargo run --release --example smnist_serve -- \
 //!         [--backend pjrt|golden|satsim] [--requests 64] \
-//!         [--weights runs/hw_s0/weights.mtf] [--max-batch 8]
+//!         [--weights runs/hw_s0/weights.mtf] [--max-batch 8] \
+//!         [--workers N]
 //!
-//! The PJRT backend requires `make artifacts` (and its sequence length
-//! is fixed at compile time — 16×16 inputs by default).
+//! golden/satsim shard across `--workers` backend instances (default:
+//! one per CPU). The PJRT backend requires `make artifacts` (and its
+//! sequence length is fixed at compile time — 16×16 inputs by default);
+//! it runs single-worker, constructed on its serving thread because the
+//! XLA handles are not `Send`.
 
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use minimalist::config::{CircuitConfig, CoreGeometry};
 use minimalist::coordinator::{
-    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine,
-    PjrtBackend, Server,
+    BatchPolicy, GoldenBackend, MixedSignalBackend, PjrtBackend, Server,
 };
 use minimalist::dataset::glyphs;
-use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::nn::{synthetic_network, NetworkWeights};
 use minimalist::runtime::Runtime;
 use minimalist::util::cli::Args;
 use minimalist::util::json::Json;
@@ -30,6 +33,9 @@ fn main() -> Result<()> {
     let backend_kind = args.get_or("backend", "golden").to_string();
     let n_req = args.get_usize("requests", 64)?;
     let img = args.get_usize("img-size", 16)?;
+    let workers = args
+        .get_usize("workers", minimalist::config::default_workers())?
+        .max(1);
     let policy = BatchPolicy {
         max_batch: args.get_usize("max-batch", 8)?,
         max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
@@ -50,26 +56,25 @@ fn main() -> Result<()> {
 
     println!(
         "== smnist_serve: backend={backend_kind}, {n_req} requests, \
-         batch≤{}, wait≤{:?} ==",
+         {workers} worker(s), batch≤{}, wait≤{:?} ==",
         policy.max_batch, policy.max_wait
     );
 
     let server = match backend_kind.as_str() {
-        "golden" => Server::spawn(
-            Box::new(GoldenBackend::new(GoldenNetwork::new(weights.clone()))),
+        "golden" => Server::spawn_sharded(
+            GoldenBackend::factory(weights.clone()),
             policy,
+            workers,
         ),
-        "satsim" => {
-            let engine = MixedSignalEngine::new(
+        "satsim" => Server::spawn_sharded(
+            MixedSignalBackend::factory(
                 weights.clone(),
                 CircuitConfig::default(),
                 CoreGeometry::default(),
-            )?;
-            Server::spawn_with(
-                move || Box::new(MixedSignalBackend::new(engine)) as _,
-                policy,
-            )
-        }
+            )?,
+            policy,
+            workers,
+        ),
         "pjrt" => {
             let meta_text = std::fs::read_to_string("artifacts/meta.json")
                 .context("reading artifacts/meta.json — run `make artifacts`")?;

@@ -1,21 +1,31 @@
-//! End-to-end serving throughput/latency across backends and batching
-//! policies — the headline-systems bench of the serving extension
-//! (DESIGN.md §4, last row).
+//! End-to-end serving throughput/latency across worker counts, backends
+//! and batching policies — the headline-systems bench of the serving
+//! extension (DESIGN.md §4, last row).
 //!
 //!     cargo bench --bench throughput
+//!
+//! The first table sweeps the coordinator's worker count on a fixed
+//! synthetic workload: the speedup column is the direct measurement of
+//! the sharded engine (workers = 1 reproduces the old single-leader
+//! configuration).
 
 use std::time::{Duration, Instant};
 
 use minimalist::config::{CircuitConfig, CoreGeometry};
 use minimalist::coordinator::{
-    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+    BatchPolicy, GoldenBackend, MixedSignalBackend, Server,
 };
 use minimalist::dataset::glyphs;
-use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::nn::{synthetic_network, NetworkWeights};
 use minimalist::util::bench::Table;
 
 fn network() -> NetworkWeights {
-    for c in ["runs/hw_s0/weights.mtf", "runs/quant_s0/weights.mtf", "../runs/hw_s0/weights.mtf", "../runs/quant_s0/weights.mtf"] {
+    for c in [
+        "runs/hw_s0/weights.mtf",
+        "runs/quant_s0/weights.mtf",
+        "../runs/hw_s0/weights.mtf",
+        "../runs/quant_s0/weights.mtf",
+    ] {
         if std::path::Path::new(c).exists() {
             if let Ok(nw) = NetworkWeights::load(c) {
                 return nw;
@@ -25,62 +35,119 @@ fn network() -> NetworkWeights {
     synthetic_network(&[1, 64, 64, 64, 64, 10], 42)
 }
 
+/// Serve `n_req` sequences through an already-spawned server; returns
+/// (wall time, p50, p99).
+fn drive(
+    server: Server,
+    samples: &[glyphs::Sample],
+) -> (Duration, Duration, Duration) {
+    let client = server.client();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    (wall, m.percentile(50.0), m.percentile(99.0))
+}
+
 fn main() {
     let nw = network();
     let img = 16usize;
     println!("== serving throughput (T={} pixel sequences) ==\n", img * img);
 
-    let mut table = Table::new(&[
-        "backend", "batch", "n", "p50", "p99", "seq/s",
+    // ---- worker sweep: the sharded-coordinator measurement ------------
+    let n_req = 128usize;
+    let samples = glyphs::make_split(n_req, img, 3);
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    };
+    let max_workers = minimalist::config::default_workers();
+    println!(
+        "worker sweep: golden backend, {n_req} requests, batch≤{}, host \
+         parallelism {max_workers}",
+        policy.max_batch
+    );
+    let mut sweep = Table::new(&[
+        "workers", "wall", "seq/s", "p50", "p99", "speedup vs 1",
     ]);
+    let mut base_rate = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        if workers > max_workers.max(2) {
+            println!("# skipping workers={workers} (> host parallelism)");
+            continue;
+        }
+        let server = Server::spawn_sharded(
+            GoldenBackend::factory(nw.clone()),
+            policy,
+            workers,
+        );
+        let (wall, p50, p99) = drive(server, &samples);
+        let rate = n_req as f64 / wall.as_secs_f64();
+        if workers == 1 {
+            base_rate = rate;
+        }
+        sweep.row(&[
+            format!("{workers}"),
+            format!("{wall:.2?}"),
+            format!("{rate:.1}"),
+            format!("{p50:.2?}"),
+            format!("{p99:.2?}"),
+            if base_rate > 0.0 {
+                format!("{:.2}×", rate / base_rate)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    sweep.print();
 
-    for (name, max_batch, n_req) in [
-        ("golden", 1usize, 64usize),
-        ("golden", 8, 64),
-        ("golden", 32, 64),
-        ("satsim", 4, 12),
+    // ---- backend × batch comparison -----------------------------------
+    println!("\nbackend × batching policy:");
+    let mut table = Table::new(&["backend", "workers", "batch", "n", "p50", "p99", "seq/s"]);
+    for (name, workers, max_batch, n_req) in [
+        ("golden", 1usize, 1usize, 64usize),
+        ("golden", 1, 8, 64),
+        ("golden", 4, 8, 64),
+        ("satsim", 1, 4, 12),
+        ("satsim", 2, 4, 12),
     ] {
         let policy = BatchPolicy {
             max_batch,
             max_wait: Duration::from_millis(2),
         };
         let server = match name {
-            "golden" => Server::spawn(
-                Box::new(GoldenBackend::new(GoldenNetwork::new(nw.clone()))),
+            "golden" => Server::spawn_sharded(
+                GoldenBackend::factory(nw.clone()),
                 policy,
+                workers,
             ),
-            _ => {
-                let engine = MixedSignalEngine::new(
+            _ => Server::spawn_sharded(
+                MixedSignalBackend::factory(
                     nw.clone(),
                     CircuitConfig::default(),
                     CoreGeometry::default(),
                 )
-                .unwrap();
-                Server::spawn_with(
-                    move || Box::new(MixedSignalBackend::new(engine)) as _,
-                    policy,
-                )
-            }
+                .unwrap(),
+                policy,
+                workers,
+            ),
         };
-        let client = server.client();
         let samples = glyphs::make_split(n_req, img, 3);
-        let t0 = Instant::now();
-        let rxs: Vec<_> = samples
-            .iter()
-            .enumerate()
-            .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
-            .collect();
-        for rx in rxs {
-            rx.recv().unwrap();
-        }
-        let wall = t0.elapsed();
-        let m = server.shutdown();
+        let (wall, p50, p99) = drive(server, &samples);
         table.row(&[
             name.to_string(),
+            format!("{workers}"),
             format!("{max_batch}"),
             format!("{n_req}"),
-            format!("{:?}", m.percentile(50.0)),
-            format!("{:?}", m.percentile(99.0)),
+            format!("{p50:.2?}"),
+            format!("{p99:.2?}"),
             format!("{:.1}", n_req as f64 / wall.as_secs_f64()),
         ]);
     }

@@ -180,6 +180,65 @@ impl Default for CoreGeometry {
     }
 }
 
+/// Default worker-thread count for the serving coordinator: one per
+/// available CPU, with a floor of 1 when the parallelism is unknown.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Serving/coordination settings: how many backend workers the
+/// coordinator shards requests across, and the dynamic-batching policy
+/// they are fed with. Mirrors the `serve` CLI flags and round-trips
+/// through JSON like the other configs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Worker threads; each owns one backend instance constructed on
+    /// that thread (PJRT handles are not `Send`).
+    pub workers: usize,
+    /// Flush a batch at this many queued requests…
+    pub max_batch: usize,
+    /// …or once the oldest queued request has waited this long (ms).
+    pub max_wait_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: default_workers(), max_batch: 16, max_wait_ms: 5 }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", self.workers.into()),
+            ("max_batch", self.max_batch.into()),
+            ("max_wait_ms", (self.max_wait_ms as f64).into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let u = |k: &str, dv: usize| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .map(|x| x as usize)
+                .unwrap_or(dv)
+        };
+        let workers = u("workers", d.workers).max(1);
+        Ok(ServeConfig {
+            workers,
+            max_batch: u("max_batch", d.max_batch).max(1),
+            max_wait_ms: j
+                .get("max_wait_ms")
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .unwrap_or(d.max_wait_ms),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,5 +283,27 @@ mod tests {
         assert_eq!(n.n_layers(), 5);
         assert_eq!(n.layer_shape(0), (1, 64));
         assert_eq!(n.layer_shape(4), (64, 10));
+    }
+
+    #[test]
+    fn serve_defaults_sane() {
+        let s = ServeConfig::default();
+        assert!(s.workers >= 1);
+        assert!(s.max_batch >= 1);
+    }
+
+    #[test]
+    fn serve_json_roundtrip_and_clamping() {
+        let s = ServeConfig { workers: 6, max_batch: 32, max_wait_ms: 9 };
+        let back = ServeConfig::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        // workers/max_batch are clamped to ≥ 1 on load
+        let j = Json::obj(vec![
+            ("workers", 0usize.into()),
+            ("max_batch", 0usize.into()),
+        ]);
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.max_batch, 1);
     }
 }

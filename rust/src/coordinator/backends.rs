@@ -6,9 +6,13 @@
 //! * [`PjrtBackend`] — the AOT-compiled JAX model through the XLA CPU
 //!   client (the paper's "software model", executed hermetically)
 
+use anyhow::Result;
+
+use crate::config::{CircuitConfig, CoreGeometry};
 use crate::coordinator::engine::MixedSignalEngine;
 use crate::coordinator::server::Backend;
 use crate::nn::mingru::{argmax, GoldenNetwork, READOUT_STEPS};
+use crate::nn::weights::NetworkWeights;
 use crate::runtime::Executable;
 
 pub struct GoldenBackend {
@@ -18,6 +22,18 @@ pub struct GoldenBackend {
 impl GoldenBackend {
     pub fn new(net: GoldenNetwork) -> GoldenBackend {
         GoldenBackend { net }
+    }
+
+    /// Worker factory for [`crate::coordinator::Server::spawn_sharded`]:
+    /// every call builds an independent golden backend from the shared
+    /// checkpoint, on whichever thread invokes it.
+    pub fn factory(
+        weights: NetworkWeights,
+    ) -> impl Fn() -> Box<dyn Backend> + Send + Sync + 'static {
+        move || {
+            Box::new(GoldenBackend::new(GoldenNetwork::new(weights.clone())))
+                as Box<dyn Backend>
+        }
     }
 }
 
@@ -42,6 +58,25 @@ impl MixedSignalBackend {
 
     pub fn engine(&self) -> &MixedSignalEngine {
         &self.engine
+    }
+
+    /// Worker factory for [`crate::coordinator::Server::spawn_sharded`]:
+    /// each worker maps the network onto its own bank of simulated
+    /// cores. The layer→core mapping is validated once, up front — the
+    /// probe engine becomes the template the workers replicate — so a
+    /// bad geometry fails here instead of panicking inside a worker.
+    pub fn factory(
+        weights: NetworkWeights,
+        circuit: CircuitConfig,
+        geometry: CoreGeometry,
+    ) -> Result<impl Fn() -> Box<dyn Backend> + Send + Sync + 'static> {
+        let template = MixedSignalEngine::new(weights, circuit, geometry)?;
+        Ok(move || {
+            let engine = template
+                .replicate()
+                .expect("mapping validated at factory construction");
+            Box::new(MixedSignalBackend::new(engine)) as Box<dyn Backend>
+        })
     }
 }
 
@@ -148,5 +183,36 @@ mod tests {
         let mut b = MixedSignalBackend::new(engine);
         let labels = b.classify_batch(&[vec![0.5f32; 16]]);
         assert_eq!(labels.len(), 1);
+    }
+
+    #[test]
+    fn factories_build_independent_consistent_backends() {
+        let nw = synthetic_network(&[1, 8, 10], 3);
+        let gf = GoldenBackend::factory(nw.clone());
+        let seqs = vec![vec![0.5f32; 16]];
+        let (mut a, mut b) = (gf(), gf());
+        assert_eq!(a.classify_batch(&seqs), b.classify_batch(&seqs));
+
+        let mf = MixedSignalBackend::factory(
+            nw.clone(),
+            CircuitConfig::ideal(),
+            CoreGeometry { rows: 8, cols: 16 },
+        )
+        .unwrap();
+        let (mut c, mut d) = (mf(), mf());
+        assert_eq!(c.classify_batch(&seqs), d.classify_batch(&seqs));
+    }
+
+    #[test]
+    fn mixed_signal_factory_rejects_bad_geometry_up_front() {
+        // 100 inputs cannot map onto 64 rows — the factory must fail at
+        // construction, not panic later inside a worker thread
+        let nw = synthetic_network(&[100, 8], 1);
+        assert!(MixedSignalBackend::factory(
+            nw,
+            CircuitConfig::ideal(),
+            CoreGeometry { rows: 64, cols: 64 },
+        )
+        .is_err());
     }
 }

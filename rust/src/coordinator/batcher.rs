@@ -31,6 +31,17 @@ impl Default for BatchPolicy {
     }
 }
 
+impl From<&crate::config::ServeConfig> for BatchPolicy {
+    fn from(c: &crate::config::ServeConfig) -> BatchPolicy {
+        // no clamping here: Batcher::new is the single authority for
+        // rejecting a zero max_batch
+        BatchPolicy {
+            max_batch: c.max_batch,
+            max_wait: Duration::from_millis(c.max_wait_ms),
+        }
+    }
+}
+
 /// Accumulates requests and decides when a batch is ready.
 #[derive(Debug)]
 pub struct Batcher {
@@ -41,6 +52,10 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
+        // max_batch = 0 would make ready() true and drain() empty forever
+        // — a busy-loop for any dispatch loop driving this. Clamp here so
+        // every entry point (CLI flags, configs, tests) is covered.
+        let policy = BatchPolicy { max_batch: policy.max_batch.max(1), ..policy };
         Batcher { policy, queue: Vec::new(), oldest: None }
     }
 
@@ -70,6 +85,16 @@ impl Batcher {
                 now.duration_since(t0) >= self.policy.max_wait
             }
             _ => false,
+        }
+    }
+
+    /// Instant at which the oldest queued request times out, if any —
+    /// what the leader thread sleeps toward between submissions.
+    pub fn deadline(&self) -> Option<Instant> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            self.oldest.map(|t0| t0 + self.policy.max_wait)
         }
     }
 
@@ -131,5 +156,108 @@ mod tests {
     fn empty_queue_never_ready() {
         let b = Batcher::new(BatchPolicy::default());
         assert!(!b.ready(Instant::now() + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn empty_flush_is_a_noop() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.drain().is_empty());
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        assert!(b.deadline().is_none());
+        // draining an empty queue must not fabricate a deadline either
+        assert!(!b.ready(Instant::now() + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_and_clears_on_drain() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        b.push(req(2, t0 + Duration::from_millis(5)));
+        // the deadline belongs to the *oldest* request
+        assert_eq!(b.deadline(), Some(t0 + Duration::from_millis(10)));
+        b.drain();
+        assert!(b.deadline().is_none());
+    }
+
+    #[test]
+    fn timeout_fires_partial_batch_then_deadline_advances() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0 + Duration::from_millis(i)));
+        }
+        // overflow drain takes the first two; the remainder's deadline
+        // is re-anchored on the now-oldest request
+        assert_eq!(b.drain().len(), 2);
+        assert_eq!(b.deadline(), Some(t0 + Duration::from_millis(2 + 1)));
+        // the leftover fires alone once its own deadline passes
+        assert!(!b.ready(t0 + Duration::from_millis(2)));
+        assert!(b.ready(t0 + Duration::from_millis(4)));
+        assert_eq!(b.drain().len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn mixed_sequence_lengths_pass_through_untouched() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(1),
+        });
+        let t = Instant::now();
+        let lens = [1usize, 256, 0, 64, 7];
+        for (i, &n) in lens.iter().enumerate() {
+            b.push(Request {
+                id: i as u64,
+                sequence: vec![0.5; n],
+                enqueued: t,
+            });
+        }
+        let batch = b.drain();
+        assert_eq!(batch.len(), lens.len());
+        // FIFO order and per-request payloads survive batching — the
+        // batcher groups by arrival, not by shape; shape handling is the
+        // backend's contract
+        for (r, &n) in batch.iter().zip(lens.iter()) {
+            assert_eq!(r.sequence.len(), n);
+        }
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_not_livelocked() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 0,
+            max_wait: Duration::from_millis(1),
+        });
+        assert_eq!(b.policy.max_batch, 1);
+        // an empty queue must never report ready (len 0 >= 0 trap)
+        assert!(!b.ready(Instant::now() + Duration::from_secs(1)));
+        let t = Instant::now();
+        b.push(req(1, t));
+        assert!(b.ready(t));
+        assert_eq!(b.drain().len(), 1);
+    }
+
+    #[test]
+    fn policy_from_serve_config() {
+        let sc = crate::config::ServeConfig {
+            workers: 4,
+            max_batch: 32,
+            max_wait_ms: 7,
+        };
+        let p = BatchPolicy::from(&sc);
+        assert_eq!(p.max_batch, 32);
+        assert_eq!(p.max_wait, Duration::from_millis(7));
     }
 }

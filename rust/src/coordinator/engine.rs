@@ -28,6 +28,7 @@ pub struct LayerTraceSeq {
 pub struct MixedSignalEngine {
     pub weights: NetworkWeights,
     pub circuit: CircuitConfig,
+    pub geometry: CoreGeometry,
     pub cores: Vec<Core>,
     /// Codesign diagnostics per layer.
     pub layer_circuits: Vec<LayerCircuit>,
@@ -83,9 +84,21 @@ impl MixedSignalEngine {
             x_buf: vec![0.0; max_dim],
             weights,
             circuit,
+            geometry,
             cores,
             layer_circuits,
         })
+    }
+
+    /// Build an independent engine with the same network, circuit and
+    /// geometry — each serving worker owns one (a physical core bank
+    /// holds one sequence's state, so engines are never shared).
+    pub fn replicate(&self) -> Result<MixedSignalEngine> {
+        MixedSignalEngine::new(
+            self.weights.clone(),
+            self.circuit.clone(),
+            self.geometry,
+        )
     }
 
     pub fn n_cores(&self) -> usize {
@@ -295,6 +308,16 @@ mod tests {
             CoreGeometry { rows: 64, cols: 64 },
         );
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn replicate_builds_an_equivalent_engine() {
+        let mut a = toy_engine(false);
+        let mut b = a.replicate().unwrap();
+        assert_eq!(a.n_cores(), b.n_cores());
+        let seq: Vec<f32> = (0..24).map(|t| (t % 3) as f32 / 2.0).collect();
+        // same seed/config → replicas classify identically
+        assert_eq!(a.classify(&seq), b.classify(&seq));
     }
 
     #[test]

@@ -55,6 +55,16 @@ impl LatencyRecorder {
         }
     }
 
+    /// Fold another recorder into this one (per-worker recorders are
+    /// merged into the aggregate at shutdown). Latency samples are
+    /// concatenated; `started` becomes the earliest of the two so the
+    /// aggregate throughput covers the whole serving window.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.items += other.items;
+        self.started = self.started.min(other.started);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:?} p50={:?} p95={:?} p99={:?} thpt={:.1}/s",
@@ -89,5 +99,24 @@ mod tests {
         let r = LatencyRecorder::new();
         assert_eq!(r.percentile(99.0), Duration::ZERO);
         assert_eq!(r.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_concatenates_samples_and_counts() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        for i in 1..=10u64 {
+            a.record(Duration::from_micros(i * 100));
+            b.record(Duration::from_micros(i * 200));
+        }
+        let started_a = a.started;
+        a.merge(&b);
+        assert_eq!(a.items, 20);
+        assert!(a.percentile(100.0) >= Duration::from_micros(2000));
+        assert!(a.started <= started_a);
+        // merging an empty recorder is a no-op on the samples
+        let items = a.items;
+        a.merge(&LatencyRecorder::new());
+        assert_eq!(a.items, items);
     }
 }

@@ -4,10 +4,14 @@
 //! * [`engine`] — network-on-cores: the trained model mapped onto
 //!   switched-capacitor cores with the event fabric in between
 //! * [`backends`] — pluggable classification backends (golden /
-//!   mixed-signal / PJRT)
+//!   mixed-signal / PJRT) plus per-worker factories for sharding
 //! * [`batcher`] — dynamic batching policy
-//! * [`server`] — thread-based request loop + response routing
-//! * [`metrics`] — latency/throughput accounting
+//! * [`server`] — sharded serving engine: a leader thread batches
+//!   requests and feeds a work queue consumed by N worker threads, each
+//!   owning one backend instance (constructed on-thread; PJRT handles
+//!   are not `Send`)
+//! * [`metrics`] — latency/throughput accounting (per-worker recorders,
+//!   merged into the aggregate at shutdown)
 
 pub mod backends;
 pub mod batcher;

@@ -1,14 +1,21 @@
 //! Thread-based serving loop (tokio is not in the offline crate set; the
-//! workload — long sequences through a single-core simulator — is CPU-
-//! bound, so an async reactor would buy nothing here anyway).
+//! workload — long sequences through the simulators — is CPU-bound, so
+//! an async reactor would buy nothing here anyway).
 //!
-//! Architecture: clients submit requests over an mpsc channel; the
-//! leader thread runs the batcher; worker backends classify and push
-//! results back through per-request response channels. Backends are
-//! pluggable ([`Backend`]): golden model, mixed-signal engine, or the
-//! PJRT executable.
+//! Architecture: clients submit requests over an mpsc channel to a
+//! *leader* thread that runs the dynamic batcher. Ready batches are
+//! pushed onto a shared work queue feeding N *worker* threads, each of
+//! which owns one backend instance — constructed *on* the worker thread
+//! via the factory it was spawned with, because the PJRT backend wraps
+//! non-`Send` XLA handles. Every worker records latencies into its own
+//! [`LatencyRecorder`]; [`Server::shutdown`] joins all threads and
+//! merges the per-worker recorders into the aggregate it returns.
+//!
+//! Backends are pluggable ([`Backend`]): golden model, mixed-signal
+//! engine, or the PJRT executable.
 
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -16,8 +23,9 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
 use crate::coordinator::metrics::LatencyRecorder;
 
 /// A sequence classifier backend. Not required to be `Send`: the PJRT
-/// executable wraps non-Send XLA handles, so backends are *constructed on
-/// the server thread* via the factory passed to [`Server::spawn_with`].
+/// executable wraps non-Send XLA handles, so backends are *constructed
+/// on their worker thread* via the factory passed to
+/// [`Server::spawn_with`] / [`Server::spawn_sharded`].
 pub trait Backend {
     fn name(&self) -> &str;
     /// Classify a batch of sequences (all the same length).
@@ -36,6 +44,12 @@ enum Msg {
     Submit(Request, mpsc::Sender<Response>),
     Shutdown,
 }
+
+/// One unit of worker work: a drained batch with its response channels.
+type Job = Vec<(Request, mpsc::Sender<Response>)>;
+
+/// A per-worker backend constructor, invoked on the worker's own thread.
+type BoxedFactory = Box<dyn FnOnce() -> Box<dyn Backend> + Send>;
 
 /// Handle for submitting requests to a running server.
 #[derive(Clone)]
@@ -69,86 +83,190 @@ impl Client {
     }
 }
 
-/// A running server; join() returns the final metrics.
+/// A running server; `shutdown()` drains the queue and returns the
+/// merged metrics of all workers.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
-    handle: thread::JoinHandle<LatencyRecorder>,
+    leader: thread::JoinHandle<()>,
+    workers: Vec<thread::JoinHandle<LatencyRecorder>>,
 }
 
 impl Server {
-    /// Spawn the leader loop with a `Send` backend.
+    /// Spawn a single-worker server with a `Send` backend.
     pub fn spawn(backend: Box<dyn Backend + Send>, policy: BatchPolicy) -> Server {
         Server::spawn_with(move || backend as Box<dyn Backend>, policy)
     }
 
-    /// Spawn the leader loop, constructing the backend *on* the server
-    /// thread (required for PJRT, whose handles are not `Send`).
+    /// Spawn a single-worker server, constructing the backend *on* the
+    /// worker thread (required for PJRT, whose handles are not `Send`).
     pub fn spawn_with<F>(factory: F, policy: BatchPolicy) -> Server
     where
         F: FnOnce() -> Box<dyn Backend> + Send + 'static,
     {
+        Server::spawn_parts(vec![Box::new(factory)], policy)
+    }
+
+    /// Spawn a sharded server: `workers` threads (clamped to ≥ 1), each
+    /// constructing its own backend instance by calling `factory` on its
+    /// own thread, all fed from one work-distribution queue. The backend
+    /// instances themselves never cross threads, preserving the
+    /// non-`Send` PJRT constraint; only the factory must be `Send + Sync`.
+    pub fn spawn_sharded<F>(factory: F, policy: BatchPolicy, workers: usize) -> Server
+    where
+        F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
+        let factories: Vec<BoxedFactory> = (0..workers.max(1))
+            .map(|_| {
+                let f = Arc::clone(&factory);
+                Box::new(move || (*f)()) as BoxedFactory
+            })
+            .collect();
+        Server::spawn_parts(factories, policy)
+    }
+
+    fn spawn_parts(factories: Vec<BoxedFactory>, policy: BatchPolicy) -> Server {
+        assert!(!factories.is_empty(), "server needs at least one worker");
         let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = thread::spawn(move || {
-            let mut backend = factory();
-            let mut batcher = Batcher::new(policy);
-            let mut waiters: Vec<(u64, mpsc::Sender<Response>, Instant)> =
-                Vec::new();
-            let mut metrics = LatencyRecorder::new();
-            let mut open = true;
-            while open || !batcher.is_empty() {
-                // Pull at least one message (with a deadline so partial
-                // batches still fire), then drain whatever else arrived.
-                let timeout = policy.max_wait.max(Duration::from_micros(100));
-                match rx.recv_timeout(timeout) {
-                    Ok(Msg::Submit(req, rtx)) => {
-                        waiters.push((req.id, rtx, req.enqueued));
-                        batcher.push(req);
-                        while let Ok(m) = rx.try_recv() {
-                            match m {
-                                Msg::Submit(req, rtx) => {
-                                    waiters.push((req.id, rtx, req.enqueued));
-                                    batcher.push(req);
-                                }
-                                Msg::Shutdown => open = false,
-                            }
-                        }
-                    }
-                    Ok(Msg::Shutdown) => open = false,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
-                }
-                let now = Instant::now();
-                if batcher.ready(now) || (!open && !batcher.is_empty()) {
-                    let batch = batcher.drain();
-                    let seqs: Vec<Vec<f32>> =
-                        batch.iter().map(|r| r.sequence.clone()).collect();
-                    let labels = backend.classify_batch(&seqs);
-                    for (req, label) in batch.iter().zip(labels) {
-                        let pos = waiters
-                            .iter()
-                            .position(|(id, _, _)| *id == req.id)
-                            .expect("response channel lost");
-                        let (_, rtx, enq) = waiters.swap_remove(pos);
-                        let latency = enq.elapsed();
-                        metrics.record(latency);
-                        let _ = rtx.send(Response { id: req.id, label, latency });
-                    }
-                }
-            }
-            metrics
-        });
-        Server { tx, handle }
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let workers: Vec<thread::JoinHandle<LatencyRecorder>> = factories
+            .into_iter()
+            .enumerate()
+            .map(|(w, factory)| {
+                let job_rx = Arc::clone(&job_rx);
+                thread::Builder::new()
+                    .name(format!("minimalist-worker-{w}"))
+                    .spawn(move || worker_loop(factory, job_rx))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        let leader = thread::Builder::new()
+            .name("minimalist-leader".to_string())
+            .spawn(move || leader_loop(rx, job_tx, policy))
+            .expect("spawning leader thread");
+        Server { tx, leader, workers }
     }
 
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone() }
     }
 
-    /// Stop accepting requests, drain the queue, return metrics.
+    /// Number of worker threads serving this instance.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stop accepting requests, drain the queue, return merged metrics.
     pub fn shutdown(self) -> LatencyRecorder {
         let _ = self.tx.send(Msg::Shutdown);
-        self.handle.join().expect("server thread panicked")
+        self.leader.join().expect("leader thread panicked");
+        let mut merged: Option<LatencyRecorder> = None;
+        for w in self.workers {
+            let m = w.join().expect("worker thread panicked");
+            match merged.as_mut() {
+                Some(acc) => acc.merge(&m),
+                None => merged = Some(m),
+            }
+        }
+        merged.expect("server had no workers")
     }
+}
+
+/// The leader: accepts submissions, runs the batching policy, pairs
+/// each drained request with its response channel, and pushes the batch
+/// onto the work queue. Exits (dropping the queue sender, which stops
+/// the workers) once shut down and fully drained.
+fn leader_loop(rx: mpsc::Receiver<Msg>, job_tx: mpsc::Sender<Job>, policy: BatchPolicy) {
+    let mut batcher = Batcher::new(policy);
+    let mut waiters: Vec<(u64, mpsc::Sender<Response>)> = Vec::new();
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        // Block until the next message or the oldest request's deadline
+        // (so partial batches still fire), then drain whatever else
+        // already arrived.
+        let timeout = batcher
+            .deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(policy.max_wait)
+            .max(Duration::from_micros(100));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Submit(req, rtx)) => {
+                waiters.push((req.id, rtx));
+                batcher.push(req);
+                while let Ok(m) = rx.try_recv() {
+                    match m {
+                        Msg::Submit(req, rtx) => {
+                            waiters.push((req.id, rtx));
+                            batcher.push(req);
+                        }
+                        Msg::Shutdown => open = false,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) => open = false,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+        // Dispatch every ready batch — with several queued batches this
+        // is what spreads work across the idle workers.
+        loop {
+            let now = Instant::now();
+            if !(batcher.ready(now) || (!open && !batcher.is_empty())) {
+                break;
+            }
+            let batch = batcher.drain();
+            if batch.is_empty() {
+                break; // defensive: never dispatch (or spin on) empty jobs
+            }
+            let job: Job = batch
+                .into_iter()
+                .map(|req| {
+                    let pos = waiters
+                        .iter()
+                        .position(|(id, _)| *id == req.id)
+                        .expect("response channel lost");
+                    let (_, rtx) = waiters.swap_remove(pos);
+                    (req, rtx)
+                })
+                .collect();
+            if job_tx.send(job).is_err() {
+                return; // every worker died; nothing left to serve
+            }
+        }
+    }
+}
+
+/// One worker: construct the backend on this thread, then pull batches
+/// off the shared queue until the leader hangs up.
+fn worker_loop(
+    factory: BoxedFactory,
+    job_rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+) -> LatencyRecorder {
+    let mut backend = factory();
+    let mut metrics = LatencyRecorder::new();
+    loop {
+        // Hold the lock only while receiving — classification runs
+        // unlocked so the other workers can keep pulling jobs.
+        let job = {
+            let rx = job_rx.lock().expect("job queue poisoned");
+            rx.recv()
+        };
+        let Ok(mut job) = job else { break };
+        // take, don't clone: the job is owned and the payloads are not
+        // needed again after classification
+        let seqs: Vec<Vec<f32>> = job
+            .iter_mut()
+            .map(|(r, _)| std::mem::take(&mut r.sequence))
+            .collect();
+        let labels = backend.classify_batch(&seqs);
+        for ((req, rtx), label) in job.into_iter().zip(labels) {
+            let latency = req.enqueued.elapsed();
+            metrics.record(latency);
+            let _ = rtx.send(Response { id: req.id, label, latency });
+        }
+    }
+    metrics
 }
 
 #[cfg(test)]
@@ -215,5 +333,93 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().is_ok());
         }
+    }
+
+    #[test]
+    fn sharded_serves_all_and_merges_metrics() {
+        let server = Server::spawn_sharded(
+            || Box::new(SumBackend) as Box<dyn Backend>,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            4,
+        );
+        assert_eq!(server.n_workers(), 4);
+        let client = server.client();
+        let rxs: Vec<_> = (0..40)
+            .map(|i| client.submit(i, vec![i as f32]))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().label, i % 10);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, 40);
+    }
+
+    #[test]
+    fn sharded_shutdown_drains_pending() {
+        let server = Server::spawn_sharded(
+            || Box::new(SumBackend) as Box<dyn Backend>,
+            BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
+            3,
+        );
+        let client = server.client();
+        let rxs: Vec<_> = (0..7).map(|i| client.submit(i, vec![i as f32])).collect();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, 7);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let server = Server::spawn_sharded(
+            || Box::new(SumBackend) as Box<dyn Backend>,
+            BatchPolicy::default(),
+            0,
+        );
+        assert_eq!(server.n_workers(), 1);
+        let r = server.client().classify(9, vec![4.0]);
+        assert_eq!(r.label, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn work_spreads_across_worker_threads() {
+        use std::collections::HashSet;
+
+        /// Slow backend that records which thread served each batch.
+        struct MarkingBackend(Arc<Mutex<HashSet<thread::ThreadId>>>);
+
+        impl Backend for MarkingBackend {
+            fn name(&self) -> &str {
+                "marking"
+            }
+
+            fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+                self.0.lock().unwrap().insert(thread::current().id());
+                thread::sleep(Duration::from_millis(10));
+                vec![0; seqs.len()]
+            }
+        }
+
+        let seen: Arc<Mutex<HashSet<thread::ThreadId>>> =
+            Arc::new(Mutex::new(HashSet::new()));
+        let seen2 = Arc::clone(&seen);
+        let server = Server::spawn_sharded(
+            move || Box::new(MarkingBackend(Arc::clone(&seen2))) as Box<dyn Backend>,
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            4,
+        );
+        let client = server.client();
+        let rxs: Vec<_> = (0..12).map(|i| client.submit(i, vec![0.0])).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        server.shutdown();
+        let n_threads = seen.lock().unwrap().len();
+        assert!(
+            n_threads >= 2,
+            "12 slow batches over 4 workers used only {n_threads} thread(s)"
+        );
     }
 }

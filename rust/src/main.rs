@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use minimalist::config::{CircuitConfig, CoreGeometry, NetworkConfig};
+use minimalist::config::{CircuitConfig, CoreGeometry, NetworkConfig, ServeConfig};
 use minimalist::coordinator::{
     BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
 };
@@ -79,25 +79,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_req = args.get_usize("requests", 64)?;
     let img = args.get_usize("img-size", 16)?;
     let backend = args.get_or("backend", "golden").to_string();
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 16)?,
-        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
+    let defaults = ServeConfig::default();
+    let serve = ServeConfig {
+        workers: args.get_usize("workers", defaults.workers)?.max(1),
+        max_batch: args.get_usize("max-batch", defaults.max_batch)?,
+        max_wait_ms: args.get_u64("max-wait-ms", defaults.max_wait_ms)?,
     };
+    let policy = BatchPolicy::from(&serve);
     let server = match backend.as_str() {
-        "golden" => Server::spawn(
-            Box::new(GoldenBackend::new(GoldenNetwork::new(weights))),
+        "golden" => Server::spawn_sharded(
+            GoldenBackend::factory(weights),
             policy,
+            serve.workers,
         ),
-        "satsim" => {
-            let engine = MixedSignalEngine::new(
+        "satsim" => Server::spawn_sharded(
+            MixedSignalBackend::factory(
                 weights,
                 CircuitConfig::default(),
                 CoreGeometry::default(),
-            )?;
-            Server::spawn(Box::new(MixedSignalBackend::new(engine)), policy)
-        }
+            )?,
+            policy,
+            serve.workers,
+        ),
         other => anyhow::bail!("unknown backend '{other}' (golden|satsim)"),
     };
+    println!(
+        "serving with {} worker(s), batch≤{}, wait≤{} ms",
+        server.n_workers(),
+        serve.max_batch,
+        serve.max_wait_ms
+    );
     let client = server.client();
     let samples = glyphs::make_split(n_req, img, args.get_u64("seed", 1)?);
     let mut correct = 0usize;

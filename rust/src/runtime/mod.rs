@@ -6,92 +6,150 @@
 //! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids that the image's xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Availability: the `xla` bindings only exist in environments that
+//! vendor them, so the real implementation is gated behind the `pjrt`
+//! cargo feature. Without it this module compiles to a stub with the
+//! same API — including [`Executable`] staying `!Send`, so code written
+//! against the stub keeps the thread-affinity discipline the real PJRT
+//! handles demand — whose constructors return a descriptive error.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+    use anyhow::{bail, Context, Result};
 
-/// A compiled XLA executable plus its I/O description.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-/// The PJRT client and the loaded model executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client })
+    /// A compiled XLA executable plus its I/O description.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The PJRT client and the loaded model executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Load + compile an HLO text artifact.
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let path = path.as_ref();
-        if !path.exists() {
-            bail!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            );
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Runtime { client })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(Executable {
-            exe,
-            name: path.file_name().unwrap().to_string_lossy().into_owned(),
-        })
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact.
+        pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            let path = path.as_ref();
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+            Ok(Executable {
+                exe,
+                name: path.file_name().unwrap().to_string_lossy().into_owned(),
+            })
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 buffers. Each input is (data, shape); the result
+        /// is the flattened f32 tuple elements (aot.py lowers with
+        /// return_tuple=True).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+            let tuple = result
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            let mut out = Vec::with_capacity(tuple.len());
+            for t in tuple {
+                out.push(
+                    t.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+                );
+            }
+            Ok(out)
+        }
     }
 }
 
-impl Executable {
-    /// Execute with f32 buffers. Each input is (data, shape); the result
-    /// is the flattened f32 tuple elements (aot.py lowers with
-    /// return_tuple=True).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))?;
-            literals.push(lit);
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::marker::PhantomData;
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+         (the xla bindings must be vendored; see rust/Cargo.toml)";
+
+    /// Stub for the compiled XLA executable. Deliberately `!Send` (via
+    /// the raw-pointer marker) to mirror the real PJRT handles, which
+    /// are bound to the thread that created them — backends must be
+    /// constructed on their worker thread either way.
+    pub struct Executable {
+        pub name: String,
+        _not_send: PhantomData<*const ()>,
+    }
+
+    /// Stub for the PJRT client.
+    pub struct Runtime {
+        _not_send: PhantomData<*const ()>,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            bail!(UNAVAILABLE)
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
-        let tuple = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            out.push(
-                t.to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
-            );
+
+        pub fn platform(&self) -> String {
+            "stub (no pjrt feature)".to_string()
         }
-        Ok(out)
+
+        pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            bail!(UNAVAILABLE)
+        }
     }
 }
 
-#[cfg(test)]
+pub use imp::{Executable, Runtime};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -108,5 +166,16 @@ mod tests {
             Ok(_) => panic!("expected an error for a missing artifact"),
             Err(e) => assert!(e.to_string().contains("make artifacts")),
         }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

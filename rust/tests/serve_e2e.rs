@@ -55,6 +55,36 @@ fn golden_backend_end_to_end() {
 }
 
 #[test]
+fn sharded_golden_backend_matches_direct_model() {
+    // The tentpole property of the multi-worker engine: sharding the
+    // coordinator across N backend replicas must not change a single
+    // served label relative to the direct (unsharded) model.
+    let nw = network();
+    let samples = glyphs::make_split(24, 8, 11);
+    let mut reference = GoldenNetwork::new(nw.clone());
+    let expected: Vec<usize> =
+        samples.iter().map(|s| reference.classify(&s.pixels)).collect();
+
+    let server = Server::spawn_sharded(
+        GoldenBackend::factory(nw),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        4,
+    );
+    assert_eq!(server.n_workers(), 4);
+    let client = server.client();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
+        .collect();
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        assert_eq!(rx.recv().unwrap().label, want);
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.items, 24);
+}
+
+#[test]
 fn mixed_signal_backend_end_to_end() {
     let nw = network();
     // trim to a smaller network if loaded one is the full paper size —
