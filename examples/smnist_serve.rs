@@ -66,15 +66,18 @@ fn main() -> Result<()> {
             policy,
             workers,
         ),
-        "satsim" => Server::spawn_sharded(
-            MixedSignalBackend::factory(
+        "satsim" => {
+            let (plan, factory) = MixedSignalBackend::factory(
                 weights.clone(),
                 CircuitConfig::default(),
                 CoreGeometry::default(),
-            )?,
-            policy,
-            workers,
-        ),
+            )?;
+            println!(
+                "mapping: {} core(s) of {}x{}",
+                plan.n_cores, plan.geometry.rows, plan.geometry.cols
+            );
+            Server::spawn_sharded(factory, policy, workers)
+        }
         "pjrt" => {
             let meta_text = std::fs::read_to_string("artifacts/meta.json")
                 .context("reading artifacts/meta.json — run `make artifacts`")?;

@@ -128,16 +128,15 @@ fn main() {
                 policy,
                 workers,
             ),
-            _ => Server::spawn_sharded(
-                MixedSignalBackend::factory(
+            _ => {
+                let (_plan, factory) = MixedSignalBackend::factory(
                     nw.clone(),
                     CircuitConfig::default(),
                     CoreGeometry::default(),
                 )
-                .unwrap(),
-                policy,
-                workers,
-            ),
+                .unwrap();
+                Server::spawn_sharded(factory, policy, workers)
+            }
         };
         let samples = glyphs::make_split(n_req, img, 3);
         let (wall, p50, p99) = drive(server, &samples);
@@ -156,5 +155,45 @@ fn main() {
         "\n# satsim rows simulate full circuit physics per step — their \
          throughput is the simulator's, not the chip's. The chip-level \
          estimate lives in the energy model (fJ/step → ns-scale steps)."
+    );
+
+    // ---- geometry sweep: the tiled mapping planner on the physics
+    // backend — smaller cores force column and then row splits of the
+    // same network; the cost of the extra tiles (and of the partial-sum
+    // combination of row-split layers) shows up directly -------------
+    println!("\ngeometry sweep: satsim backend, 1-48-10 network, 8 requests:");
+    let sweep_nw = synthetic_network(&[1, 48, 10], 7);
+    let n_req = 8usize;
+    let samples = glyphs::make_split(n_req, 8, 3);
+    let mut geo = Table::new(&[
+        "geometry", "cores", "row-split layers", "wall", "seq/s",
+    ]);
+    for (rows, cols) in [(64usize, 64usize), (32, 32), (16, 16)] {
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        };
+        let (plan, factory) = MixedSignalBackend::factory(
+            sweep_nw.clone(),
+            CircuitConfig::default(),
+            CoreGeometry { rows, cols },
+        )
+        .unwrap();
+        let n_split = plan.layers.iter().filter(|l| l.is_row_split()).count();
+        let server = Server::spawn_sharded(factory, policy, 1);
+        let (wall, _p50, _p99) = drive(server, &samples);
+        geo.row(&[
+            format!("{rows}x{cols}"),
+            format!("{}", plan.n_cores),
+            format!("{n_split}"),
+            format!("{wall:.2?}"),
+            format!("{:.1}", n_req as f64 / wall.as_secs_f64()),
+        ]);
+    }
+    geo.print();
+    println!(
+        "# 48 hidden units: 32x32 and 16x16 cores split the 48-input \
+         hidden->readout layer across row tiles (weighted partial-sum \
+         combination on the owner tile)."
     );
 }

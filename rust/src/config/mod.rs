@@ -12,6 +12,13 @@ use crate::util::json::Json;
 /// Boltzmann constant (J/K) — for kT/C sampling noise.
 pub const K_BOLTZMANN: f64 = 1.380_649e-23;
 
+/// Read an integer field from a JSON config object, falling back to
+/// `dv` when absent (shared by every `from_json` in this module so the
+/// parsing policy cannot diverge between configs).
+fn json_usize(j: &Json, k: &str, dv: usize) -> usize {
+    j.get(k).and_then(Json::as_f64).map(|x| x as usize).unwrap_or(dv)
+}
+
 /// Electrical + non-ideality parameters of the mixed-signal cores.
 ///
 /// Defaults describe a plausible 22 nm FD-SOI operating point (paper §3.2):
@@ -180,6 +187,73 @@ impl Default for CoreGeometry {
     }
 }
 
+impl CoreGeometry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("rows", self.rows.into()), ("cols", self.cols.into())])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CoreGeometry> {
+        let d = CoreGeometry::default();
+        Ok(CoreGeometry {
+            rows: json_usize(j, "rows", d.rows),
+            cols: json_usize(j, "cols", d.cols),
+        })
+    }
+}
+
+/// Planner knobs for the layer→core mapping (see [`crate::mapping`]):
+/// the target core geometry plus limits the planner must respect.
+/// Round-trips through JSON like the other configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappingConfig {
+    /// Physical array size of every core.
+    pub geometry: CoreGeometry,
+    /// Cap on the row replication of narrow layers (0 = replicate until
+    /// the core rows are full, the default behavior).
+    pub max_replication: usize,
+    /// Hard budget on physical cores (0 = unlimited).
+    pub max_cores: usize,
+}
+
+impl Default for MappingConfig {
+    fn default() -> Self {
+        MappingConfig {
+            geometry: CoreGeometry::default(),
+            max_replication: 0,
+            max_cores: 0,
+        }
+    }
+}
+
+impl MappingConfig {
+    /// Default planner knobs for a given geometry — the configuration
+    /// the engine and the codesign slope fitter agree on implicitly.
+    pub fn with_geometry(geometry: CoreGeometry) -> MappingConfig {
+        MappingConfig { geometry, ..Default::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("geometry", self.geometry.to_json()),
+            ("max_replication", self.max_replication.into()),
+            ("max_cores", self.max_cores.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MappingConfig> {
+        let d = MappingConfig::default();
+        Ok(MappingConfig {
+            geometry: j
+                .get("geometry")
+                .map(CoreGeometry::from_json)
+                .transpose()?
+                .unwrap_or(d.geometry),
+            max_replication: json_usize(j, "max_replication", d.max_replication),
+            max_cores: json_usize(j, "max_cores", d.max_cores),
+        })
+    }
+}
+
 /// Default worker-thread count for the serving coordinator: one per
 /// available CPU, with a floor of 1 when the parallelism is unknown.
 pub fn default_workers() -> usize {
@@ -220,16 +294,10 @@ impl ServeConfig {
 
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
         let d = ServeConfig::default();
-        let u = |k: &str, dv: usize| {
-            j.get(k)
-                .and_then(Json::as_f64)
-                .map(|x| x as usize)
-                .unwrap_or(dv)
-        };
-        let workers = u("workers", d.workers).max(1);
+        let workers = json_usize(j, "workers", d.workers).max(1);
         Ok(ServeConfig {
             workers,
-            max_batch: u("max_batch", d.max_batch).max(1),
+            max_batch: json_usize(j, "max_batch", d.max_batch).max(1),
             max_wait_ms: j
                 .get("max_wait_ms")
                 .and_then(Json::as_f64)
@@ -283,6 +351,21 @@ mod tests {
         assert_eq!(n.n_layers(), 5);
         assert_eq!(n.layer_shape(0), (1, 64));
         assert_eq!(n.layer_shape(4), (64, 10));
+    }
+
+    #[test]
+    fn mapping_json_roundtrip_and_defaults() {
+        let m = MappingConfig {
+            geometry: CoreGeometry { rows: 32, cols: 48 },
+            max_replication: 8,
+            max_cores: 12,
+        };
+        let back = MappingConfig::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+        // missing keys fall back to defaults
+        let empty = MappingConfig::from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(empty, MappingConfig::default());
+        assert_eq!(empty.geometry, CoreGeometry::default());
     }
 
     #[test]

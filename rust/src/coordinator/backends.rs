@@ -8,10 +8,11 @@
 
 use anyhow::Result;
 
-use crate::config::{CircuitConfig, CoreGeometry};
+use crate::config::{CircuitConfig, CoreGeometry, MappingConfig};
 use crate::coordinator::engine::MixedSignalEngine;
 use crate::coordinator::server::Backend;
-use crate::nn::mingru::{argmax, GoldenNetwork, READOUT_STEPS};
+use crate::mapping::Plan;
+use crate::nn::mingru::{argmax, GoldenNetwork};
 use crate::nn::weights::NetworkWeights;
 use crate::runtime::Executable;
 
@@ -62,21 +63,36 @@ impl MixedSignalBackend {
 
     /// Worker factory for [`crate::coordinator::Server::spawn_sharded`]:
     /// each worker maps the network onto its own bank of simulated
-    /// cores. The layer→core mapping is validated once, up front — the
-    /// probe engine becomes the template the workers replicate — so a
-    /// bad geometry fails here instead of panicking inside a worker.
+    /// cores. The layer→core mapping is planned and validated once, up
+    /// front — the probe engine becomes the template the workers
+    /// replicate — so a bad geometry fails here instead of panicking
+    /// inside a worker, and the returned [`Plan`] lets callers inspect
+    /// or print the placement the workers will execute.
     pub fn factory(
         weights: NetworkWeights,
         circuit: CircuitConfig,
         geometry: CoreGeometry,
-    ) -> Result<impl Fn() -> Box<dyn Backend> + Send + Sync + 'static> {
-        let template = MixedSignalEngine::new(weights, circuit, geometry)?;
-        Ok(move || {
+    ) -> Result<(Plan, impl Fn() -> Box<dyn Backend> + Send + Sync + 'static)> {
+        let plan = Plan::build(&weights.dims, &MappingConfig::with_geometry(geometry))?;
+        Self::factory_from_plan(weights, circuit, plan)
+    }
+
+    /// Like [`MixedSignalBackend::factory`], but for an explicit plan —
+    /// callers with non-default planner knobs (core budgets, replication
+    /// caps) serve exactly the placement they planned.
+    pub fn factory_from_plan(
+        weights: NetworkWeights,
+        circuit: CircuitConfig,
+        plan: Plan,
+    ) -> Result<(Plan, impl Fn() -> Box<dyn Backend> + Send + Sync + 'static)> {
+        let template = MixedSignalEngine::from_plan(weights, circuit, plan)?;
+        let plan = template.plan.clone();
+        Ok((plan, move || {
             let engine = template
                 .replicate()
                 .expect("mapping validated at factory construction");
             Box::new(MixedSignalBackend::new(engine)) as Box<dyn Backend>
-        })
+        }))
     }
 }
 
@@ -153,9 +169,6 @@ impl Backend for PjrtBackend {
     }
 }
 
-// READOUT_STEPS re-exported for binaries that document the readout head.
-pub const _READOUT: usize = READOUT_STEPS;
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,25 +206,49 @@ mod tests {
         let (mut a, mut b) = (gf(), gf());
         assert_eq!(a.classify_batch(&seqs), b.classify_batch(&seqs));
 
-        let mf = MixedSignalBackend::factory(
+        let (plan, mf) = MixedSignalBackend::factory(
             nw.clone(),
             CircuitConfig::ideal(),
             CoreGeometry { rows: 8, cols: 16 },
         )
         .unwrap();
+        assert_eq!(plan.n_cores, 2);
         let (mut c, mut d) = (mf(), mf());
         assert_eq!(c.classify_batch(&seqs), d.classify_batch(&seqs));
     }
 
     #[test]
-    fn mixed_signal_factory_rejects_bad_geometry_up_front() {
-        // 100 inputs cannot map onto 64 rows — the factory must fail at
-        // construction, not panic later inside a worker thread
+    fn mixed_signal_factory_plans_row_split_geometries() {
+        // 100 inputs on 64-row cores: the factory returns a plan with
+        // two row tiles and workers that serve it on the physics path
+        // (the former rejects-bad-geometry case, inverted).
         let nw = synthetic_network(&[100, 8], 1);
-        assert!(MixedSignalBackend::factory(
+        let (plan, mf) = MixedSignalBackend::factory(
             nw,
             CircuitConfig::ideal(),
             CoreGeometry { rows: 64, cols: 64 },
+        )
+        .unwrap();
+        assert_eq!(plan.layers[0].row_tiles, 2);
+        assert_eq!(plan.n_cores, 2);
+        // two independently replicated workers must serve identical
+        // labels for the row-split placement
+        let (mut a, mut b) = (mf(), mf());
+        let seqs = vec![vec![0.4f32; 100 * 4], vec![0.9f32; 100 * 4]];
+        let la = a.classify_batch(&seqs);
+        assert_eq!(la.len(), 2);
+        assert_eq!(la, b.classify_batch(&seqs));
+    }
+
+    #[test]
+    fn mixed_signal_factory_rejects_degenerate_geometry_up_front() {
+        // a zero-row geometry cannot hold anything — the factory must
+        // fail at construction, not panic later inside a worker thread
+        let nw = synthetic_network(&[4, 8], 1);
+        assert!(MixedSignalBackend::factory(
+            nw,
+            CircuitConfig::ideal(),
+            CoreGeometry { rows: 0, cols: 64 },
         )
         .is_err());
     }

@@ -3,16 +3,27 @@
 //! event fabric in between — the rust equivalent of the paper's
 //! "mixed-signal simulation set up with equivalent weights and biases"
 //! (Fig 4), and the physical backend of the serving coordinator.
+//!
+//! The engine *executes* a [`Plan`] (see [`crate::mapping`]): layers
+//! wider than a core are column-split across tiles, layers with more
+//! inputs than core rows are row-split — each row tile computes a
+//! partial IMC charge share over its row slice, the partials are
+//! combined as the row-count-weighted average
+//! `(n₁·v₁ + n₂·v₂)/(n₁+n₂)` (the shorted-column-line semantics of
+//! `imc_matmul`'s 1/N normalization), and the gate digitization plus
+//! capacitor-swap state update run on the owner tile. Arbitrary network
+//! shapes are therefore servable on the physics path.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::config::{CircuitConfig, CoreGeometry};
+use crate::config::{CircuitConfig, CoreGeometry, MappingConfig};
 use crate::energy::EnergyMeter;
+use crate::mapping::Plan;
 use crate::nn::mingru::{argmax, READOUT_STEPS};
 use crate::nn::weights::NetworkWeights;
-use crate::quant::codesign::{map_layer, volts_to_logical, LayerCircuit};
+use crate::quant::codesign::{map_layer_with, volts_to_logical, LayerCircuit};
 use crate::router::fabric::Fabric;
-use crate::satsim::Core;
+use crate::satsim::{ColumnConfig, Core, CoreStep};
 
 /// Per-sequence observables of one layer (logical units — directly
 /// comparable to the golden model and to the python traces).
@@ -28,7 +39,9 @@ pub struct LayerTraceSeq {
 pub struct MixedSignalEngine {
     pub weights: NetworkWeights,
     pub circuit: CircuitConfig,
-    pub geometry: CoreGeometry,
+    /// The layer→core placement this engine executes (also the source
+    /// of truth for the core geometry).
+    pub plan: Plan,
     pub cores: Vec<Core>,
     /// Codesign diagnostics per layer.
     pub layer_circuits: Vec<LayerCircuit>,
@@ -36,68 +49,102 @@ pub struct MixedSignalEngine {
     /// readout ring (analog head states, logical units)
     ring: Vec<Vec<f32>>,
     ring_pos: usize,
+    /// time steps since the last reset (readout normalization)
+    steps_seen: usize,
     /// scratch input buffer
     x_buf: Vec<f64>,
 }
 
 impl MixedSignalEngine {
-    /// Map the network onto cores. Requires every layer's input dim to
-    /// fit the core rows (the paper network does; row-split layers are
-    /// served by the golden/PJRT paths — DESIGN.md §4 notes the scope).
+    /// Plan the network onto cores of `geometry` with the default
+    /// planner knobs and instantiate it. Any layer shape maps: narrow
+    /// layers row-replicate, wide layers column-split, tall layers
+    /// row-split with weighted partial-sum combination.
     pub fn new(
         weights: NetworkWeights,
         circuit: CircuitConfig,
         geometry: CoreGeometry,
     ) -> Result<MixedSignalEngine> {
-        let mut cores = Vec::new();
-        let mut layer_circuits = Vec::new();
+        let plan = Plan::build(&weights.dims, &MappingConfig::with_geometry(geometry))?;
+        MixedSignalEngine::from_plan(weights, circuit, plan)
+    }
+
+    /// Instantiate cores for an explicit (already built) placement plan.
+    pub fn from_plan(
+        weights: NetworkWeights,
+        circuit: CircuitConfig,
+        plan: Plan,
+    ) -> Result<MixedSignalEngine> {
+        plan.validate()?;
+        plan.check_network(&weights)?;
+        let geometry = plan.geometry;
+        let mut cores = Vec::with_capacity(plan.n_cores);
+        let mut layer_circuits = Vec::with_capacity(weights.n_layers());
         for (l, lw) in weights.layers.iter().enumerate() {
-            if lw.n_in > geometry.rows {
-                bail!(
-                    "layer {l}: input dim {} exceeds core rows {} — \
-                     row-split layers are not supported by the \
-                     mixed-signal engine",
-                    lw.n_in,
-                    geometry.rows
-                );
-            }
-            let lc = map_layer(lw, &circuit, geometry.rows)?;
-            // column-split across as many cores as needed
-            for (tile, chunk) in lc.columns.chunks(geometry.cols).enumerate() {
+            let lp = &plan.layers[l];
+            let lc = map_layer_with(lw, &circuit, lp.replication, lp.owner_rows_phys())?;
+            for (ti, tile) in lp.tiles.iter().enumerate() {
+                let col_cfgs: Vec<ColumnConfig> = (tile.cols.0..tile.cols.1)
+                    .map(|j| {
+                        let full = &lc.columns[j];
+                        if lp.row_tiles == 1 {
+                            // the whole (possibly replicated) column
+                            full.clone()
+                        } else {
+                            // this tile's row slice; slope_m only
+                            // matters on the owner tile, clamp it to
+                            // the slice so every tile constructs
+                            let (r0, r1) = tile.rows;
+                            ColumnConfig {
+                                w_h: full.w_h[r0..r1].to_vec(),
+                                w_z: full.w_z[r0..r1].to_vec(),
+                                slope_m: full.slope_m.min(r1 - r0),
+                                offset_code: full.offset_code,
+                                v_theta: full.v_theta,
+                            }
+                        }
+                    })
+                    .collect();
                 cores.push(Core::new(
                     geometry,
-                    chunk.to_vec(),
+                    col_cfgs,
                     &circuit,
-                    (l as u64) << 16 | tile as u64,
+                    (l as u64) << 16 | ti as u64,
                 ));
             }
             layer_circuits.push(lc);
         }
-        let widths: Vec<usize> =
-            weights.layers.iter().map(|l| l.n_out).collect();
+        debug_assert_eq!(cores.len(), plan.n_cores);
+        let widths: Vec<usize> = weights.layers.iter().map(|l| l.n_out).collect();
         let head = *weights.dims.last().unwrap();
         let max_dim = *weights.dims.iter().max().unwrap();
         Ok(MixedSignalEngine {
             fabric: Fabric::new(&widths),
             ring: vec![vec![0.0; head]; READOUT_STEPS],
             ring_pos: 0,
+            steps_seen: 0,
             x_buf: vec![0.0; max_dim],
             weights,
             circuit,
-            geometry,
+            plan,
             cores,
             layer_circuits,
         })
     }
 
+    /// The physical core geometry every tile of the plan uses.
+    pub fn geometry(&self) -> CoreGeometry {
+        self.plan.geometry
+    }
+
     /// Build an independent engine with the same network, circuit and
-    /// geometry — each serving worker owns one (a physical core bank
-    /// holds one sequence's state, so engines are never shared).
+    /// plan — each serving worker owns one (a physical core bank holds
+    /// one sequence's state, so engines are never shared).
     pub fn replicate(&self) -> Result<MixedSignalEngine> {
-        MixedSignalEngine::new(
+        MixedSignalEngine::from_plan(
             self.weights.clone(),
             self.circuit.clone(),
-            self.geometry,
+            self.plan.clone(),
         )
     }
 
@@ -115,17 +162,7 @@ impl MixedSignalEngine {
             r.fill(0.0);
         }
         self.ring_pos = 0;
-    }
-
-    /// Cores belonging to layer `l` (column-split tiles in order).
-    fn layer_core_range(&self, l: usize) -> (usize, usize) {
-        let geometry_cols = self.cores[0].geometry.cols;
-        let mut start = 0;
-        for lw in self.weights.layers.iter().take(l) {
-            start += lw.n_out.div_ceil(geometry_cols);
-        }
-        let count = self.weights.layers[l].n_out.div_ceil(geometry_cols);
-        (start, start + count)
+        self.steps_seen = 0;
     }
 
     /// One network time step. `x` = dims[0] input values (analog pixel
@@ -141,31 +178,76 @@ impl MixedSignalEngine {
         let mut x_len = x.len();
         for l in 0..n_layers {
             let lw = &self.weights.layers[l];
-            let (c0, c1) = self.layer_core_range(l);
             let cfg = self.circuit.clone();
             let mut events: Vec<bool> = Vec::with_capacity(lw.n_out);
             let mut h_states: Vec<f32> = Vec::with_capacity(lw.n_out);
             let mut z_vals: Vec<f32> = Vec::new();
             let mut ht_vals: Vec<f32> = Vec::new();
-            // physical input: the logical frame tiled `replication` times
-            // (row replication of narrow layers; DESIGN.md §5)
-            let r = self.layer_circuits[l].replication;
-            let mut x_slice: Vec<f64> = Vec::with_capacity(r * x_len);
-            for _ in 0..r {
-                x_slice.extend_from_slice(&self.x_buf[..x_len]);
-            }
-            for core in self.cores[c0..c1].iter_mut() {
-                let out = core.step(&x_slice, &cfg);
+            let push_outputs = |out: &CoreStep,
+                                    z_vals: &mut Vec<f32>,
+                                    ht_vals: &mut Vec<f32>,
+                                    events: &mut Vec<bool>,
+                                    h_states: &mut Vec<f32>,
+                                    want_traces: bool| {
                 for s in &out.steps {
                     events.push(s.y);
-                    h_states.push(
-                        volts_to_logical(s.v_h, lw.wh_scale, &cfg) as f32
-                    );
-                    if traces.is_some() {
+                    h_states.push(volts_to_logical(s.v_h, lw.wh_scale, &cfg) as f32);
+                    if want_traces {
                         z_vals.push(s.z.value());
-                        ht_vals.push(volts_to_logical(
-                            s.v_htilde, lw.wh_scale, &cfg) as f32);
+                        ht_vals.push(
+                            volts_to_logical(s.v_htilde, lw.wh_scale, &cfg) as f32
+                        );
                     }
+                }
+            };
+            let want_traces = traces.is_some();
+            let lp = &self.plan.layers[l];
+            if lp.row_tiles == 1 {
+                // physical input: the logical frame tiled `replication`
+                // times (row replication of narrow layers)
+                let r = lp.replication;
+                let mut x_slice: Vec<f64> = Vec::with_capacity(r * x_len);
+                for _ in 0..r {
+                    x_slice.extend_from_slice(&self.x_buf[..x_len]);
+                }
+                let (c0, c1) = self.plan.core_range(l);
+                for core in self.cores[c0..c1].iter_mut() {
+                    let out = core.step(&x_slice, &cfg);
+                    push_outputs(&out, &mut z_vals, &mut ht_vals,
+                                 &mut events, &mut h_states, want_traces);
+                }
+            } else {
+                // row-split layer: every row tile contributes a partial
+                // charge share over its input slice; the partials are
+                // combined as the row-count-weighted mean and the gate
+                // update runs on the owner tile (row tile 0)
+                let n_in_total = lp.n_in as f64;
+                for ct in 0..lp.col_tiles {
+                    let owner = lp.owner_tile(ct).core;
+                    let width = lp.owner_tile(ct).n_cols();
+                    let mut acc = vec![(0.0f64, 0.0f64); width];
+                    for rt in 0..lp.row_tiles {
+                        let tile = lp.tile(rt, ct);
+                        let (r0, r1) = tile.rows;
+                        let weight = (r1 - r0) as f64;
+                        let partials = self.cores[tile.core]
+                            .step_partial(&self.x_buf[r0..r1], &cfg);
+                        debug_assert_eq!(partials.len(), width);
+                        for (a, p) in acc.iter_mut().zip(partials.iter()) {
+                            a.0 += weight * p.0;
+                            a.1 += weight * p.1;
+                        }
+                        if rt != 0 {
+                            self.cores[tile.core].finish_partial_only();
+                        }
+                    }
+                    let combined: Vec<(f64, f64)> = acc
+                        .iter()
+                        .map(|&(vh, vz)| (vh / n_in_total, vz / n_in_total))
+                        .collect();
+                    let out = self.cores[owner].step_finish(&combined, &cfg);
+                    push_outputs(&out, &mut z_vals, &mut ht_vals,
+                                 &mut events, &mut h_states, want_traces);
                 }
             }
             if let Some(ts) = traces.as_deref_mut() {
@@ -191,9 +273,12 @@ impl MixedSignalEngine {
                 x_len = lw.n_out;
             }
         }
+        self.steps_seen += 1;
     }
 
-    /// Classifier logits (mean of the readout ring + digital bias).
+    /// Classifier logits: mean of the *populated* readout ring entries
+    /// plus the digital bias — sequences shorter than `READOUT_STEPS`
+    /// average only the steps actually seen (no zero-padding bias).
     pub fn logits(&self) -> Vec<f32> {
         let head_lw = self.weights.layers.last().unwrap();
         let n = head_lw.n_out;
@@ -203,8 +288,9 @@ impl MixedSignalEngine {
                 out[j] += r[j];
             }
         }
+        let denom = self.steps_seen.clamp(1, READOUT_STEPS) as f32;
         for j in 0..n {
-            out[j] = out[j] / READOUT_STEPS as f32 + head_lw.bh[j];
+            out[j] = out[j] / denom + head_lw.bh[j];
         }
         out
     }
@@ -238,6 +324,7 @@ mod tests {
     use super::*;
     use crate::nn::mingru::GoldenNetwork;
     use crate::nn::weights::synthetic_network;
+    use crate::quant::codesign::snap_network;
 
     fn toy_engine(ideal: bool) -> MixedSignalEngine {
         let weights = synthetic_network(&[1, 12, 10], 11);
@@ -258,6 +345,7 @@ mod tests {
     fn builds_one_core_per_layer() {
         let e = toy_engine(true);
         assert_eq!(e.n_cores(), 2);
+        assert_eq!(e.plan.n_cores, 2);
     }
 
     #[test]
@@ -300,14 +388,67 @@ mod tests {
     }
 
     #[test]
-    fn rejects_row_split_layers() {
+    fn row_split_network_constructs_and_classifies() {
+        // The former `rejects_row_split_layers` case, inverted: 100
+        // inputs on 64-row cores now plan as 2 row tiles and serve on
+        // the physics path.
         let weights = synthetic_network(&[100, 8], 1);
-        let res = MixedSignalEngine::new(
+        let mut e = MixedSignalEngine::new(
             weights,
             CircuitConfig::ideal(),
             CoreGeometry { rows: 64, cols: 64 },
+        )
+        .unwrap();
+        assert_eq!(e.plan.layers[0].row_tiles, 2);
+        assert_eq!(e.n_cores(), 2);
+        let seq: Vec<f32> =
+            (0..100 * 12).map(|t| ((t * 7) % 13) as f32 / 12.0).collect();
+        let a = e.classify(&seq);
+        assert_eq!(a, e.classify(&seq), "row-split classify must be deterministic");
+        // the combined path produced real (finite, moving) head states
+        let logits = e.logits();
+        assert!(logits.iter().all(|l| l.is_finite()));
+        let bh = &e.weights.layers.last().unwrap().bh;
+        assert!(
+            logits.iter().zip(bh.iter()).any(|(l, b)| (l - b).abs() > 1e-4),
+            "head states never moved off the bias"
         );
-        assert!(res.is_err());
+        assert!(e.energy().total_j() > 0.0);
+    }
+
+    #[test]
+    fn row_split_ideal_engine_tracks_golden() {
+        // Engine-vs-golden parity on a forced row split (n_in > rows):
+        // snap the network so both sides use the deployed (realizable)
+        // gate slope, then compare h traces within swap granularity.
+        let raw = synthetic_network(&[100, 8], 3);
+        let nw = snap_network(&raw, &CircuitConfig::ideal(), 64).unwrap();
+        let mut e = MixedSignalEngine::new(
+            nw.clone(),
+            CircuitConfig::ideal(),
+            CoreGeometry { rows: 64, cols: 64 },
+        )
+        .unwrap();
+        assert!(e.plan.layers[0].is_row_split());
+        let mut g = GoldenNetwork::new(nw);
+        e.reset();
+        g.reset();
+        let mut worst: f32 = 0.0;
+        for t in 0..30 {
+            let x: Vec<f32> =
+                (0..100).map(|i| ((t * 31 + i * 7) % 11) as f32 / 10.0).collect();
+            let mut traces = Vec::new();
+            e.step(t as u32, &x, Some(&mut traces));
+            g.step(&x, None);
+            for (hs, hg) in traces[0].h.last().unwrap().iter()
+                .zip(g.states[0].h.iter())
+            {
+                worst = worst.max((hs - hg).abs());
+            }
+        }
+        // owner bank has 64 pairs → fine swap granularity; the bound
+        // matches the unsplit toy parity test above
+        assert!(worst < 0.25, "row-split worst |Δh| = {worst}");
     }
 
     #[test]

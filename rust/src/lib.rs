@@ -20,6 +20,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod energy;
 pub mod io;
+pub mod mapping;
 pub mod nn;
 pub mod quant;
 pub mod router;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   info                      system + config summary
 //!   serve                     batched serving loop over synthMNIST load
+//!   plan                      print the layer→core mapping plan
 //!   adc                       ADC transfer characterization (Fig 3C)
 //!   trace                     software vs mixed-signal traces (Fig 4)
 //!   energy                    energy report (§4.2)
@@ -12,12 +13,15 @@
 
 use anyhow::Result;
 
-use minimalist::config::{CircuitConfig, CoreGeometry, NetworkConfig, ServeConfig};
+use minimalist::config::{
+    CircuitConfig, CoreGeometry, MappingConfig, NetworkConfig, ServeConfig,
+};
 use minimalist::coordinator::{
     BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
 };
 use minimalist::dataset::glyphs;
 use minimalist::energy;
+use minimalist::mapping::Plan;
 use minimalist::nn::{synthetic_network, GoldenNetwork, NetworkWeights};
 use minimalist::util::cli::Args;
 
@@ -26,17 +30,33 @@ fn main() -> Result<()> {
     match args.subcommand() {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
+        Some("plan") => cmd_plan(&args),
         Some("energy") => cmd_energy(&args),
         Some("eval") => cmd_eval(&args),
         _ => {
             eprintln!(
-                "usage: minimalist <info|serve|energy|eval> [--options]\n\
+                "usage: minimalist <info|serve|plan|energy|eval> [--options]\n\
                  (Fig 3C / Fig 4 generators live in examples/: \
                  adc_characterization, trace_compare)"
             );
             Ok(())
         }
     }
+}
+
+/// Planner knobs from `--rows`/`--cols` (default: the paper's 64×64)
+/// plus `--max-replication`/`--max-cores` — shared by `plan` and
+/// `serve` so the printed plan is exactly the one served.
+fn mapping_from_args(args: &Args) -> Result<MappingConfig> {
+    let g = CoreGeometry::default();
+    Ok(MappingConfig {
+        geometry: CoreGeometry {
+            rows: args.get_usize("rows", g.rows)?,
+            cols: args.get_usize("cols", g.cols)?,
+        },
+        max_replication: args.get_usize("max-replication", 0)?,
+        max_cores: args.get_usize("max-cores", 0)?,
+    })
 }
 
 fn load_or_synthetic(args: &Args) -> Result<NetworkWeights> {
@@ -92,15 +112,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             policy,
             serve.workers,
         ),
-        "satsim" => Server::spawn_sharded(
-            MixedSignalBackend::factory(
+        "satsim" => {
+            let mapping = mapping_from_args(args)?;
+            let planned = Plan::build(&weights.dims, &mapping)?;
+            let (plan, factory) = MixedSignalBackend::factory_from_plan(
                 weights,
                 CircuitConfig::default(),
-                CoreGeometry::default(),
-            )?,
-            policy,
-            serve.workers,
-        ),
+                planned,
+            )?;
+            let (used, total) = plan.occupancy();
+            println!(
+                "mapping: {} core(s) of {}x{}, occupancy {:.1}% \
+                 (`minimalist plan` prints the full placement)",
+                plan.n_cores,
+                plan.geometry.rows,
+                plan.geometry.cols,
+                100.0 * used as f64 / total.max(1) as f64
+            );
+            Server::spawn_sharded(factory, policy, serve.workers)
+        }
         other => anyhow::bail!("unknown backend '{other}' (golden|satsim)"),
     };
     println!(
@@ -129,6 +159,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_req,
         correct as f64 / n_req as f64
     );
+    Ok(())
+}
+
+/// Print the layer→core placement for a network and geometry:
+///   minimalist plan [--dims 100,32,10] [--rows 64] [--cols 64]
+///                   [--max-replication N] [--max-cores N] [--weights p]
+/// Without --dims, the checkpoint's (or the paper network's) dims plan.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let dims: Vec<usize> = match args.opt("dims") {
+        Some(s) => s
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--dims expects integers, got '{d}'"))
+            })
+            .collect::<Result<_>>()?,
+        None => match args.opt("weights") {
+            Some(p) => NetworkWeights::load(p)?.dims,
+            None => NetworkConfig::paper().dims,
+        },
+    };
+    let plan = Plan::build(&dims, &mapping_from_args(args)?)?;
+    print!("{}", plan.describe());
     Ok(())
 }
 

@@ -1,0 +1,33 @@
+//! The mapping planner: placing network layers onto a grid of
+//! fixed-geometry switched-capacitor cores (paper §3: "depending on
+//! their dimensionality, these GRU blocks can be mapped to one or
+//! multiple cores, which are connected through an event-based routing
+//! fabric").
+//!
+//! A [`Plan`] is a validated, inspectable placement of every layer onto
+//! row-tiles × column-tiles of a [`crate::config::CoreGeometry`]:
+//!
+//! * **column split** — a layer with more units than core columns
+//!   occupies several tiles side by side; each tile owns its units
+//!   end to end (gate, state, comparator).
+//! * **row split** — a layer with more inputs than core rows is split
+//!   vertically. Each row tile computes a *partial* IMC charge share
+//!   over its slice of the input; the partial means are combined as the
+//!   row-count-weighted average `(n₁·v₁ + n₂·v₂)/(n₁+n₂)` — in hardware
+//!   the column lines of vertically stacked tiles short together, which
+//!   is exactly this capacitance-weighted mean. The gate digitization
+//!   and the capacitor-swap state update live in the designated *owner*
+//!   tile (row tile 0).
+//! * **row replication** — the opposite special case: a layer with
+//!   n_in ≪ rows is mapped with every logical input repeated `r` times
+//!   across the physical rows, restoring the fine swap granularity a
+//!   full column provides (this is how the 1-wide input layer of the
+//!   paper's 1-64-… network occupies a full core column).
+//!
+//! The planner is pure bookkeeping — [`crate::quant::codesign`] turns
+//! the plan into per-column circuit configurations, and
+//! [`crate::coordinator::engine::MixedSignalEngine`] executes it.
+
+pub mod plan;
+
+pub use plan::{LayerPlan, Plan, TilePlan};

@@ -1,0 +1,436 @@
+//! Layer → core placement plans (see the module docs of [`crate::mapping`]).
+
+use anyhow::{bail, Result};
+
+use crate::config::{CoreGeometry, MappingConfig};
+use crate::nn::weights::NetworkWeights;
+
+/// One physical core's slice of a layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Global core index (position in the engine's core array).
+    pub core: usize,
+    /// Logical row range [r0, r1) of the layer's input dim on this core.
+    pub rows: (usize, usize),
+    /// Column range [c0, c1) of the layer's units on this core.
+    pub cols: (usize, usize),
+    /// The owner tile (row tile 0) holds the gate digitization, the
+    /// capacitor-swap state bank, and the output comparator for its
+    /// columns; non-owner row tiles only contribute partial charge
+    /// shares.
+    pub owner: bool,
+}
+
+impl TilePlan {
+    pub fn n_rows(&self) -> usize {
+        self.rows.1 - self.rows.0
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.cols.1 - self.cols.0
+    }
+}
+
+/// Placement of one layer onto row_tiles × col_tiles cores.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub layer: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row replication factor of a narrow layer (1 for row-split layers;
+    /// replication and row splitting are mutually exclusive).
+    pub replication: usize,
+    pub row_tiles: usize,
+    pub col_tiles: usize,
+    /// Column-tile major, row tile inner: `tiles[ct * row_tiles + rt]`.
+    /// For `row_tiles == 1` this is the plain left-to-right column
+    /// chunking of the layer.
+    pub tiles: Vec<TilePlan>,
+}
+
+impl LayerPlan {
+    pub fn is_row_split(&self) -> bool {
+        self.row_tiles > 1
+    }
+
+    /// Tile at (row tile `rt`, column tile `ct`).
+    pub fn tile(&self, rt: usize, ct: usize) -> &TilePlan {
+        &self.tiles[ct * self.row_tiles + rt]
+    }
+
+    /// The owner tile of column group `ct` (row tile 0).
+    pub fn owner_tile(&self, ct: usize) -> &TilePlan {
+        self.tile(0, ct)
+    }
+
+    /// Physical rows occupied on the owner tile (replication included) —
+    /// the segment budget available to realize the ADC slope.
+    pub fn owner_rows_phys(&self) -> usize {
+        self.replication * self.owner_tile(0).n_rows()
+    }
+}
+
+/// Full-network placement: every layer on its own core grid (no core
+/// sharing between layers — matches the paper's one-block-per-core
+/// sketch and keeps the clock phases of different layers independent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    pub geometry: CoreGeometry,
+    pub layers: Vec<LayerPlan>,
+    pub n_cores: usize,
+}
+
+impl Plan {
+    /// Plan the placement of `dims` (layer widths including input and
+    /// readout, e.g. `[1, 64, 64, 64, 64, 10]`) onto cores of
+    /// `cfg.geometry`, honoring the planner knobs. Fails on degenerate
+    /// geometries, degenerate dims, or a blown core budget — the
+    /// returned plan is valid by construction (checked in debug builds
+    /// by [`Plan::validate`]).
+    pub fn build(dims: &[usize], cfg: &MappingConfig) -> Result<Plan> {
+        let g = cfg.geometry;
+        if g.rows == 0 || g.cols == 0 {
+            bail!("degenerate core geometry {}x{}", g.rows, g.cols);
+        }
+        if dims.len() < 2 {
+            bail!("a network needs at least input and output dims, got {dims:?}");
+        }
+        if let Some(l) = dims.iter().position(|&d| d == 0) {
+            bail!("dims[{l}] is zero");
+        }
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        let mut next_core = 0usize;
+        for l in 0..dims.len() - 1 {
+            let (n_in, n_out) = (dims[l], dims[l + 1]);
+            let row_tiles = n_in.div_ceil(g.rows);
+            let col_tiles = n_out.div_ceil(g.cols);
+            let replication = if row_tiles == 1 {
+                let fill = (g.rows / n_in).max(1);
+                if cfg.max_replication > 0 {
+                    fill.min(cfg.max_replication)
+                } else {
+                    fill
+                }
+            } else {
+                1
+            };
+            let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
+            for ct in 0..col_tiles {
+                for rt in 0..row_tiles {
+                    let r0 = rt * g.rows;
+                    let c0 = ct * g.cols;
+                    tiles.push(TilePlan {
+                        core: next_core,
+                        rows: (r0, (r0 + g.rows).min(n_in)),
+                        cols: (c0, (c0 + g.cols).min(n_out)),
+                        owner: rt == 0,
+                    });
+                    next_core += 1;
+                }
+            }
+            layers.push(LayerPlan {
+                layer: l,
+                n_in,
+                n_out,
+                replication,
+                row_tiles,
+                col_tiles,
+                tiles,
+            });
+        }
+        if cfg.max_cores > 0 && next_core > cfg.max_cores {
+            bail!(
+                "plan needs {next_core} cores, budget is {} (geometry {}x{})",
+                cfg.max_cores,
+                g.rows,
+                g.cols
+            );
+        }
+        let plan = Plan { geometry: g, layers, n_cores: next_core };
+        debug_assert!(plan.validate().is_ok(), "planner produced an invalid plan");
+        Ok(plan)
+    }
+
+    /// Structural invariants of a plan: tiles of every layer partition
+    /// the [0,n_in)×[0,n_out) weight plane exactly, fit the geometry,
+    /// core ids are dense and sequential, and exactly the first row tile
+    /// of every column group owns the gate/state column.
+    pub fn validate(&self) -> Result<()> {
+        let g = self.geometry;
+        let mut expect_core = 0usize;
+        for lp in &self.layers {
+            if lp.tiles.len() != lp.row_tiles * lp.col_tiles {
+                bail!("layer {}: tile count mismatch", lp.layer);
+            }
+            if lp.is_row_split() && lp.replication != 1 {
+                bail!("layer {}: row-split layer with replication", lp.layer);
+            }
+            if lp.replication * lp.n_in.min(g.rows) > g.rows {
+                bail!("layer {}: replication overflows the core rows", lp.layer);
+            }
+            let mut area = 0usize;
+            for ct in 0..lp.col_tiles {
+                for rt in 0..lp.row_tiles {
+                    let t = lp.tile(rt, ct);
+                    if t.core != expect_core {
+                        bail!("layer {}: non-sequential core id {}", lp.layer, t.core);
+                    }
+                    expect_core += 1;
+                    if t.owner != (rt == 0) {
+                        bail!("layer {}: owner flag misplaced", lp.layer);
+                    }
+                    if t.rows.0 >= t.rows.1 || t.cols.0 >= t.cols.1 {
+                        bail!("layer {}: empty tile", lp.layer);
+                    }
+                    if t.n_rows() > g.rows || t.n_cols() > g.cols {
+                        bail!("layer {}: tile exceeds the core geometry", lp.layer);
+                    }
+                    if t.rows.0 != rt * g.rows || t.cols.0 != ct * g.cols {
+                        bail!("layer {}: tile origin off the grid", lp.layer);
+                    }
+                    if t.rows.1 > lp.n_in || t.cols.1 > lp.n_out {
+                        bail!("layer {}: tile exceeds the layer shape", lp.layer);
+                    }
+                    area += t.n_rows() * t.n_cols();
+                }
+            }
+            if area != lp.n_in * lp.n_out {
+                bail!(
+                    "layer {}: tiles cover {area} synapse sites, layer has {}",
+                    lp.layer,
+                    lp.n_in * lp.n_out
+                );
+            }
+        }
+        if expect_core != self.n_cores {
+            bail!("core count {} != assigned ids {expect_core}", self.n_cores);
+        }
+        Ok(())
+    }
+
+    /// Check the plan against a concrete checkpoint's shapes.
+    pub fn check_network(&self, nw: &NetworkWeights) -> Result<()> {
+        if self.layers.len() != nw.n_layers() {
+            bail!(
+                "plan has {} layers, network has {}",
+                self.layers.len(),
+                nw.n_layers()
+            );
+        }
+        for (lp, lw) in self.layers.iter().zip(nw.layers.iter()) {
+            if lp.n_in != lw.n_in || lp.n_out != lw.n_out {
+                bail!(
+                    "layer {}: plan is {}x{}, network is {}x{}",
+                    lp.layer,
+                    lp.n_in,
+                    lp.n_out,
+                    lw.n_in,
+                    lw.n_out
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Cores belonging to layer `l`: the half-open range [start, end) in
+    /// the engine's core array (column-tile major, row tile inner).
+    pub fn core_range(&self, l: usize) -> (usize, usize) {
+        let lp = &self.layers[l];
+        let start = lp.tiles[0].core;
+        (start, start + lp.tiles.len())
+    }
+
+    /// Synapse sites occupied vs provisioned (utilization metric).
+    /// Replicated rows count as occupied — they hold real charge.
+    pub fn occupancy(&self) -> (usize, usize) {
+        let used: usize = self
+            .layers
+            .iter()
+            .flat_map(|lp| {
+                lp.tiles
+                    .iter()
+                    .map(move |t| lp.replication * t.n_rows() * t.n_cols())
+            })
+            .sum();
+        let total = self.n_cores * self.geometry.rows * self.geometry.cols;
+        (used, total)
+    }
+
+    /// Human-readable rendering for the CLI (`minimalist plan`).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let (used, total) = self.occupancy();
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "mapping plan: {} layer(s) -> {} core(s) of {}x{}, occupancy {:.1}%",
+            self.layers.len(),
+            self.n_cores,
+            self.geometry.rows,
+            self.geometry.cols,
+            100.0 * used as f64 / total.max(1) as f64
+        );
+        for lp in &self.layers {
+            let _ = writeln!(
+                s,
+                "  layer {}: {}->{}  {} row-tile(s) x {} col-tile(s), replication {}",
+                lp.layer, lp.n_in, lp.n_out, lp.row_tiles, lp.col_tiles, lp.replication
+            );
+            for t in &lp.tiles {
+                let _ = writeln!(
+                    s,
+                    "    core {:3}  rows [{},{})  cols [{},{}){}",
+                    t.core,
+                    t.rows.0,
+                    t.rows.1,
+                    t.cols.0,
+                    t.cols.1,
+                    if t.owner { "  owner" } else { "" }
+                );
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn build(dims: &[usize], rows: usize, cols: usize) -> Plan {
+        Plan::build(
+            dims,
+            &MappingConfig::with_geometry(CoreGeometry { rows, cols }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paper_network_uses_expected_cores() {
+        // 1-64-64-64-64-10 on 64x64 cores: every layer fits one core
+        // (the paper's §4.2 counts the 4 hidden blocks ~ 4 cores; the
+        // 64->10 readout occupies a fifth, partially used).
+        let p = build(&[1, 64, 64, 64, 64, 10], 64, 64);
+        assert_eq!(p.n_cores, 5);
+        for lp in &p.layers {
+            assert_eq!(lp.tiles.len(), 1);
+            assert!(!lp.is_row_split());
+        }
+        // the 1-wide input layer replicates to fill the 64 rows
+        assert_eq!(p.layers[0].replication, 64);
+        assert_eq!(p.layers[1].replication, 1);
+        let (used, total) = p.occupancy();
+        assert!(used <= total);
+        // replicated rows occupy the full input column
+        assert_eq!(used, 64 * 64 + 64 * 64 * 3 + 64 * 10);
+    }
+
+    #[test]
+    fn wide_layer_splits_both_ways() {
+        let p = build(&[128, 96], 64, 64);
+        let lp = &p.layers[0];
+        assert_eq!(lp.tiles.len(), 4); // 2 row tiles x 2 col tiles
+        assert_eq!((lp.row_tiles, lp.col_tiles), (2, 2));
+        assert_eq!(lp.replication, 1);
+        // row/col ranges tile the full weight plane exactly
+        let area: usize = lp.tiles.iter().map(|t| t.n_rows() * t.n_cols()).sum();
+        assert_eq!(area, 128 * 96);
+        // exactly one owner per column group, at row tile 0
+        for ct in 0..lp.col_tiles {
+            assert!(lp.owner_tile(ct).owner);
+            assert!(!lp.tile(1, ct).owner);
+            assert_eq!(lp.owner_tile(ct).rows, (0, 64));
+        }
+    }
+
+    #[test]
+    fn uneven_row_split_keeps_remainder_tile() {
+        let p = build(&[100, 8], 64, 64);
+        let lp = &p.layers[0];
+        assert_eq!((lp.row_tiles, lp.col_tiles), (2, 1));
+        assert_eq!(lp.tile(0, 0).rows, (0, 64));
+        assert_eq!(lp.tile(1, 0).rows, (64, 100));
+        assert_eq!(lp.owner_rows_phys(), 64);
+        assert_eq!(p.core_range(0), (0, 2));
+    }
+
+    #[test]
+    fn tiny_layer_replicates_and_partially_fills() {
+        let p = build(&[1, 10], 64, 64);
+        let lp = &p.layers[0];
+        let t = &lp.tiles[0];
+        assert_eq!(t.rows, (0, 1));
+        assert_eq!(t.cols, (0, 10));
+        assert_eq!(lp.replication, 64);
+        assert_eq!(lp.owner_rows_phys(), 64);
+    }
+
+    #[test]
+    fn replication_knob_caps_fill() {
+        let cfg = MappingConfig {
+            geometry: CoreGeometry { rows: 64, cols: 64 },
+            max_replication: 4,
+            max_cores: 0,
+        };
+        let p = Plan::build(&[1, 10], &cfg).unwrap();
+        assert_eq!(p.layers[0].replication, 4);
+    }
+
+    #[test]
+    fn core_budget_enforced() {
+        let cfg = MappingConfig {
+            geometry: CoreGeometry { rows: 16, cols: 16 },
+            max_replication: 0,
+            max_cores: 2,
+        };
+        // 64x64 layer on 16x16 cores needs 16 tiles > budget 2
+        assert!(Plan::build(&[64, 64], &cfg).is_err());
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        let g = MappingConfig::with_geometry(CoreGeometry { rows: 0, cols: 64 });
+        assert!(Plan::build(&[4, 4], &g).is_err());
+        let ok = MappingConfig::default();
+        assert!(Plan::build(&[4], &ok).is_err());
+        assert!(Plan::build(&[4, 0, 4], &ok).is_err());
+    }
+
+    #[test]
+    fn random_plans_are_valid() {
+        check::property("planner invariants", 200, |rng| {
+            let rows = 1 + rng.below(96) as usize;
+            let cols = 1 + rng.below(96) as usize;
+            let n_layers = 1 + rng.below(4) as usize;
+            let dims: Vec<usize> =
+                (0..=n_layers).map(|_| 1 + rng.below(200) as usize).collect();
+            let cfg = MappingConfig::with_geometry(CoreGeometry { rows, cols });
+            let p = Plan::build(&dims, &cfg).map_err(|e| e.to_string())?;
+            p.validate().map_err(|e| e.to_string())?;
+            // core ranges are dense and ordered
+            let mut next = 0usize;
+            for l in 0..p.layers.len() {
+                let (a, b) = p.core_range(l);
+                if a != next || b < a {
+                    return Err(format!("bad core range ({a},{b})"));
+                }
+                next = b;
+            }
+            if next != p.n_cores {
+                return Err("core ranges do not cover the plan".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn describe_mentions_every_core() {
+        let p = build(&[100, 40], 64, 32);
+        let text = p.describe();
+        for t in &p.layers[0].tiles {
+            assert!(text.contains(&format!("core {:3}", t.core)), "{text}");
+        }
+        assert!(text.contains("owner"));
+    }
+}

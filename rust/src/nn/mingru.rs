@@ -36,11 +36,29 @@ pub struct LayerTrace {
 /// IMC projection (Eq. 6): out_j = (1/N)·Σ_i x_i·w_eff[i,j].
 /// `w_eff` is row-major [n_in, n_out].
 pub fn imc_matmul(x: &[f32], w_eff: &[f32], n_out: usize, out: &mut [f32]) {
+    imc_matmul_partial(x, w_eff, n_out, (0, x.len()), out);
+}
+
+/// Partial IMC projection over the row slice [r0, r1) — what one row
+/// tile of a split layer computes: out_j = (1/(r1−r0))·Σ_{i∈[r0,r1)}
+/// x_i·w_eff[i,j]. `x` and `w_eff` are the *full* input frame and
+/// weight plane; combining the slices with [`imc_combine`] reproduces
+/// [`imc_matmul`] exactly (the charge-share semantics of shorting the
+/// tiles' column lines together).
+pub fn imc_matmul_partial(
+    x: &[f32],
+    w_eff: &[f32],
+    n_out: usize,
+    rows: (usize, usize),
+    out: &mut [f32],
+) {
+    let (r0, r1) = rows;
     let n_in = x.len();
+    debug_assert!(r0 < r1 && r1 <= n_in);
     debug_assert_eq!(w_eff.len(), n_in * n_out);
     debug_assert_eq!(out.len(), n_out);
     out.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
+    for (i, &xi) in x[r0..r1].iter().enumerate().map(|(i, v)| (i + r0, v)) {
         if xi == 0.0 {
             continue; // event-coded input: skip silent rows
         }
@@ -49,9 +67,29 @@ pub fn imc_matmul(x: &[f32], w_eff: &[f32], n_out: usize, out: &mut [f32]) {
             *o += xi * w;
         }
     }
-    let inv_n = 1.0 / n_in as f32;
+    let inv_n = 1.0 / (r1 - r0) as f32;
     for o in out.iter_mut() {
         *o *= inv_n;
+    }
+}
+
+/// Combine per-slice partial IMC means into the full-input mean with
+/// row-count weights: out_j = Σ_t n_t·p_t[j] / Σ_t n_t — the weighted
+/// average `(n₁·out₁ + n₂·out₂)/(n₁+n₂)` of shorted column lines.
+pub fn imc_combine(partials: &[(usize, Vec<f32>)], out: &mut [f32]) {
+    let n_total: usize = partials.iter().map(|(n, _)| n).sum();
+    debug_assert!(n_total > 0, "imc_combine of zero rows");
+    out.fill(0.0);
+    for (n_rows, p) in partials {
+        debug_assert_eq!(p.len(), out.len());
+        let w = *n_rows as f32;
+        for (o, &v) in out.iter_mut().zip(p.iter()) {
+            *o += w * v;
+        }
+    }
+    let inv = 1.0 / n_total as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
     }
 }
 
@@ -94,6 +132,8 @@ pub struct GoldenNetwork {
     /// readout accumulator: last READOUT_STEPS analog states of the head
     readout_ring: Vec<Vec<f32>>,
     ring_pos: usize,
+    /// time steps since the last reset (readout normalization)
+    steps_seen: usize,
     scratch_h: Vec<f32>,
     scratch_z: Vec<f32>,
     scratch_x: Vec<f32>,
@@ -118,6 +158,7 @@ impl GoldenNetwork {
             states,
             readout_ring: vec![vec![0.0; head]; READOUT_STEPS],
             ring_pos: 0,
+            steps_seen: 0,
             scratch_h: vec![0.0; max_h],
             scratch_z: vec![0.0; max_h],
             scratch_x: vec![0.0; max_h],
@@ -133,6 +174,7 @@ impl GoldenNetwork {
             r.fill(0.0);
         }
         self.ring_pos = 0;
+        self.steps_seen = 0;
     }
 
     /// One time step; `x` is the network input (dims[0] values).
@@ -164,10 +206,13 @@ impl GoldenNetwork {
         let head = &self.states[n_layers - 1].h;
         self.readout_ring[self.ring_pos].copy_from_slice(head);
         self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
+        self.steps_seen += 1;
     }
 
     /// Classifier logits after a sequence: mean of the last
     /// READOUT_STEPS head states plus the digital readout bias.
+    /// Sequences shorter than READOUT_STEPS average only the steps
+    /// actually seen — the ring's zero padding carries no weight.
     pub fn logits(&self) -> Vec<f32> {
         let head_lw = self.weights.layers.last().unwrap();
         let n = head_lw.n_out;
@@ -177,8 +222,9 @@ impl GoldenNetwork {
                 out[j] += r[j];
             }
         }
+        let denom = self.steps_seen.clamp(1, READOUT_STEPS) as f32;
         for j in 0..n {
-            out[j] = out[j] / READOUT_STEPS as f32 + head_lw.bh[j];
+            out[j] = out[j] / denom + head_lw.bh[j];
         }
         out
     }
@@ -216,6 +262,74 @@ mod tests {
         let mut out = [0.0f32];
         imc_matmul(&x, &w, 1, &mut out);
         assert!((out[0] - 2.0 / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn partial_matmul_combines_to_full_mean() {
+        // splitting the rows into k arbitrary slices and row-count
+        // weighting the partial means reproduces the full IMC mean
+        use crate::util::check;
+        check::property("partial IMC combine == full matmul", 300, |rng| {
+            let n_in = 2 + rng.below(96) as usize;
+            let n_out = 1 + rng.below(24) as usize;
+            let x: Vec<f32> =
+                (0..n_in).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            let w: Vec<f32> = (0..n_in * n_out)
+                .map(|_| rng.uniform_in(-1.2, 1.2) as f32)
+                .collect();
+            let mut full = vec![0.0f32; n_out];
+            imc_matmul(&x, &w, n_out, &mut full);
+            // k-way split at sorted random interior cut points
+            let k = 1 + rng.below(5) as usize;
+            let mut cuts: Vec<usize> =
+                (0..k - 1).map(|_| 1 + rng.below(n_in as u64 - 1) as usize).collect();
+            cuts.push(0);
+            cuts.push(n_in);
+            cuts.sort_unstable();
+            cuts.dedup();
+            let mut partials = Vec::new();
+            for pair in cuts.windows(2) {
+                let (r0, r1) = (pair[0], pair[1]);
+                let mut p = vec![0.0f32; n_out];
+                imc_matmul_partial(&x, &w, n_out, (r0, r1), &mut p);
+                partials.push((r1 - r0, p));
+            }
+            let mut combined = vec![0.0f32; n_out];
+            imc_combine(&partials, &mut combined);
+            for j in 0..n_out {
+                crate::prop_close!(combined[j] as f64, full[j] as f64, 1e-6);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn short_sequence_logits_average_only_seen_steps() {
+        let nw = synthetic_network(&[2, 8], 3);
+        let mut net = GoldenNetwork::new(nw);
+        // 3 steps < READOUT_STEPS: the mean must be over 3 states
+        let mut sum = vec![0.0f32; 8];
+        for t in 0..3 {
+            net.step(&[(t % 2) as f32, 1.0], None);
+            for (s, &h) in sum.iter_mut().zip(net.states[0].h.iter()) {
+                *s += h;
+            }
+        }
+        let logits = net.logits();
+        for j in 0..8 {
+            let expect = sum[j] / 3.0 + net.weights.layers[0].bh[j];
+            assert!(
+                (logits[j] - expect).abs() < 1e-6,
+                "logit {j}: {} vs {expect}",
+                logits[j]
+            );
+        }
+        // zero-length sequence: logits fall back to the bias alone
+        net.reset();
+        let l0 = net.logits();
+        for j in 0..8 {
+            assert_eq!(l0[j], net.weights.layers[0].bh[j]);
+        }
     }
 
     #[test]

@@ -27,7 +27,9 @@ use crate::quant::W2;
 use crate::satsim::adc::SarAdc;
 use crate::satsim::column::ColumnConfig;
 
-/// Circuit realization of one trained layer.
+/// Circuit realization of one trained layer. `columns` hold the *full*
+/// logical column (replication included); for a row-split layer the
+/// engine slices each column into the row ranges of its plan tiles.
 #[derive(Debug, Clone)]
 pub struct LayerCircuit {
     pub columns: Vec<ColumnConfig>,
@@ -37,7 +39,7 @@ pub struct LayerCircuit {
     /// but the state bank grows to r·n_in capacitors — restoring the
     /// fine swap granularity a 64-row column provides. This is how the
     /// 1-wide input layer of the paper's 1-64-… network occupies a full
-    /// core column.
+    /// core column. Always 1 for row-split layers.
     pub replication: usize,
     /// Diagnostics: desired vs realized ADC slope (codes/V).
     pub slope_desired: f64,
@@ -76,19 +78,42 @@ pub fn snap_network(
     Ok(out)
 }
 
-/// Map one layer's trained weights to column configurations.
-/// `max_rows` is the physical row count of the target cores; narrow
-/// layers are row-replicated up to it.
+/// Map one layer's trained weights to column configurations under the
+/// *default* planner policy. `max_rows` is the physical row count of
+/// the target cores: narrow layers are row-replicated up to it, and
+/// wider layers produce plain full-length columns that a
+/// [`crate::mapping::Plan`] slices into row tiles (the ADC slope is
+/// then realized on the owner tile, whose row count caps `slope_m`).
 pub fn map_layer(lw: &LayerWeights, cfg: &CircuitConfig,
                  max_rows: usize) -> Result<LayerCircuit> {
+    if max_rows == 0 {
+        bail!("core geometry has zero rows");
+    }
+    let n = lw.n_in;
+    let r = if n <= max_rows { (max_rows / n).max(1) } else { 1 };
+    // physical rows of the owner tile: r·n for a replicated/unsplit
+    // layer, the full core height for a row-split one
+    map_layer_with(lw, cfg, r, r * n.min(max_rows))
+}
+
+/// Plan-aware layer mapping: `replication` and `slope_rows` (the owner
+/// tile's physical row count — the segment budget available to realize
+/// the ADC slope) come from a [`crate::mapping::LayerPlan`], so the
+/// engine and the codesign fitter cannot disagree about either.
+pub fn map_layer_with(
+    lw: &LayerWeights,
+    cfg: &CircuitConfig,
+    replication: usize,
+    slope_rows: usize,
+) -> Result<LayerCircuit> {
     let (n, h) = (lw.n_in, lw.n_out);
     if lw.wh_codes.len() != n * h || lw.wz_codes.len() != n * h {
         bail!("weight plane shape mismatch");
     }
-    if n > max_rows {
-        bail!("layer input dim {n} exceeds core rows {max_rows}");
+    if replication == 0 {
+        bail!("zero replication factor");
     }
-    let r = (max_rows / n).max(1);
+    let r = replication;
     let rows_phys = r * n;
 
     // -- ADC slope: codes/volt = 10.5·α·s_z/Δw --------------------------
@@ -98,7 +123,7 @@ pub fn map_layer(lw: &LayerWeights, cfg: &CircuitConfig,
     let c_ext_desired = SarAdc::c_ext_for_slope(slope_desired, cfg);
     // segment granularity: connected caps come in units of c_unit
     let m = ((c_ext_desired - cfg.c_line) / cfg.c_unit).round().max(0.0) as usize;
-    let slope_m = m.min(rows_phys);
+    let slope_m = m.min(slope_rows.min(rows_phys));
     let slope_realized = SarAdc::slope_codes_per_volt(
         slope_m as f64 * cfg.c_unit + cfg.c_line,
         cfg,
@@ -194,6 +219,19 @@ mod tests {
         let lc = map_layer(&lw, &cfg, 8).unwrap();
         assert_eq!(lc.columns[0].offset_code, 32); // β=0 → neutral
         assert_eq!(lc.columns[1].offset_code, 63); // β=+3 → full shift
+    }
+
+    #[test]
+    fn row_split_layer_maps_with_plain_columns() {
+        // input dim wider than the core rows: no replication, columns
+        // keep the full logical length (the engine slices them per
+        // tile), and the slope budget is capped by the owner tile
+        let cfg = CircuitConfig::default();
+        let lc = map_layer(&toy_layer(100, 4, 12.0), &cfg, 64).unwrap();
+        assert_eq!(lc.replication, 1);
+        assert_eq!(lc.columns.len(), 4);
+        assert_eq!(lc.columns[0].w_h.len(), 100);
+        assert!(lc.columns[0].slope_m <= 64);
     }
 
     #[test]

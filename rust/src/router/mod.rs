@@ -5,13 +5,13 @@
 //! * [`event`] — the wire format: (source core, column, polarity, t)
 //! * [`fabric`] — delivery: per-destination event queues, row-state
 //!   reconstruction, transition coding/decoding
-//! * [`mapping`] — placing network layers onto physical cores, splitting
-//!   layers wider than a core and fanning events out to all consumers
+//!
+//! Placing network layers onto physical cores — including splitting
+//! layers wider or taller than a core — is the job of the mapping
+//! planner, [`crate::mapping::Plan`].
 
 pub mod event;
 pub mod fabric;
-pub mod mapping;
 
 pub use event::Event;
 pub use fabric::{Fabric, PortState};
-pub use mapping::{LayerPlacement, Mapping};

@@ -155,6 +155,22 @@ impl Column {
         rng: &mut Rng,
         meter: &mut EnergyMeter,
     ) -> ColumnStep {
+        let (v_htilde, v_z) = self.phase_share(x, cfg, rng, meter);
+        self.phase_update(v_htilde, v_z, cfg, rng, meter)
+    }
+
+    /// Phases P1–P2 only: sample onto the weight rails and charge-share.
+    /// Returns the settled (h̃, z) node voltages — *partial* IMC means
+    /// when this column is one row tile of a split layer. The step is
+    /// completed by [`Column::phase_update`] (after an optional
+    /// [`Column::override_share`] with the inter-tile combined values).
+    pub fn phase_share(
+        &mut self,
+        x: &[f64],
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> (f64, f64) {
         let n = self.rows();
         debug_assert_eq!(x.len(), n);
 
@@ -200,6 +216,43 @@ impl Column {
             meter,
         );
         self.v_line_z = v_z;
+        (v_htilde, v_z)
+    }
+
+    /// Model the inter-tile column-line short of a row-split layer:
+    /// every cap on this column's h̃ and z lines settles at the
+    /// externally combined (row-count-weighted mean) voltages. Calling
+    /// it with the column's own [`Column::phase_share`] results is a
+    /// numeric no-op — the caps already sit at those voltages. The
+    /// dissipation of the inter-tile short itself is not metered (it is
+    /// bounded by the intra-tile share already accounted).
+    pub fn override_share(&mut self, v_htilde: f64, v_z: f64) {
+        debug_assert_eq!(self.idx_free.len(), self.rows());
+        for &i in &self.idx_free {
+            self.pair_bank.v[i] = v_htilde;
+        }
+        self.v_line_htilde = v_htilde;
+        for v in self.z_bank.v.iter_mut() {
+            *v = v_z;
+        }
+        self.v_line_z = v_z;
+    }
+
+    /// Phases P3–P4: SAR digitization of `v_z`, capacitor-swap state
+    /// update, output comparator. Must follow a [`Column::phase_share`]
+    /// in the same time step; `v_htilde`/`v_z` are that share's results
+    /// (or the combined values of a row-split layer, already applied to
+    /// the banks via [`Column::override_share`]).
+    pub fn phase_update(
+        &mut self,
+        v_htilde: f64,
+        v_z: f64,
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> ColumnStep {
+        let n = self.rows();
+        debug_assert_eq!(self.idx_free.len(), n, "phase_update without phase_share");
 
         // ---- P3: SAR digitization of z (Fig 3) ---------------------------
         // The first `slope_m` z caps stay connected; the rest disconnect
@@ -360,6 +413,51 @@ mod tests {
         let out = col.step(&[0.5], &cfg, &mut rng, &mut meter);
         let expect = cfg.v_0 + 0.5 * 1.5 * cfg.delta_w;
         assert!((out.v_htilde - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phased_step_is_bit_identical_to_monolithic_step() {
+        // The engine executes row-split layers via phase_share /
+        // override_share / phase_update; with the column's own share
+        // results that path must reproduce step() exactly — including
+        // the noise stream (same rng draw order).
+        let n = 10;
+        let (mut a, cfg, mut rng_a) = mk_col(n, 3, 1, false);
+        let (mut b, _, mut rng_b) = mk_col(n, 3, 1, false);
+        let mut ma = EnergyMeter::new();
+        let mut mb = EnergyMeter::new();
+        for t in 0..30 {
+            let x: Vec<f64> = (0..n).map(|i| ((t + i) % 3 == 0) as u8 as f64).collect();
+            let sa = a.step(&x, &cfg, &mut rng_a, &mut ma);
+            let (vh, vz) = b.phase_share(&x, &cfg, &mut rng_b, &mut mb);
+            b.override_share(vh, vz);
+            let sb = b.phase_update(vh, vz, &cfg, &mut rng_b, &mut mb);
+            assert_eq!(sa, sb, "diverged at step {t}");
+        }
+        assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn override_share_drives_the_state_update() {
+        // Overriding the shared h̃ line with an external voltage must
+        // make the capacitor-swap update mix toward *that* voltage —
+        // the combine semantics of row-split layers.
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        let mut meter = EnergyMeter::new();
+        let x = vec![1.0; n];
+        let before = col.v_h();
+        let (_vh, vz) = col.phase_share(&x, &cfg, &mut rng, &mut meter);
+        let v_comb = cfg.v_0 + 0.123; // externally combined h̃
+        col.override_share(v_comb, vz);
+        let out = col.phase_update(v_comb, vz, &cfg, &mut rng, &mut meter);
+        let k = out.z.swap_count(n) as f64 / n as f64;
+        let expect = k * v_comb + (1.0 - k) * before;
+        assert!(
+            (out.v_h - expect).abs() < 1e-9,
+            "v_h {} expect {expect} (k={k})",
+            out.v_h
+        );
     }
 
     #[test]

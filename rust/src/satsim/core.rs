@@ -1,6 +1,7 @@
 //! A MINIMALIST mixed-signal computing core: an R×C array of synapse
 //! columns sharing row drivers, executing one GRU block (or a slice of
-//! one — the router splits wider layers across cores).
+//! one — the mapping planner, [`crate::mapping::Plan`], splits wider
+//! layers across cores).
 //!
 //! The core is the unit of physical mapping (paper §3: "Depending on
 //! their dimensionality, these GRU blocks can be mapped to one or
@@ -28,6 +29,9 @@ pub struct Core {
     rng0: Rng,
     /// Scratch output buffer (events), reused across steps.
     out_events: Vec<bool>,
+    /// Per-column noise streams of an in-flight two-phase step (forked
+    /// in `step_partial`, consumed by `step_finish`).
+    col_rngs: Vec<Rng>,
 }
 
 /// Per-step observables for every column (Fig 4 traces; readout states).
@@ -75,6 +79,7 @@ impl Core {
             rng0: rng.clone(),
             rng,
             out_events: vec![false; n_cols],
+            col_rngs: Vec::with_capacity(n_cols),
         }
     }
 
@@ -89,22 +94,68 @@ impl Core {
             c.reset(cfg);
         }
         self.rng = self.rng0.clone();
+        self.col_rngs.clear();
     }
 
     /// One time step over the full array. `x` has `active_rows` entries.
     /// Returns per-column observables; binary events are also kept in an
     /// internal buffer accessible via `last_events`.
+    ///
+    /// Equivalent (bit-for-bit, noise stream included) to
+    /// `step_partial` followed by `step_finish` with the core's own
+    /// partial results — the two-phase path row-split layers use.
     pub fn step(&mut self, x: &[f64], cfg: &CircuitConfig) -> CoreStep {
+        let partials = self.step_partial(x, cfg);
+        self.step_finish(&partials, cfg)
+    }
+
+    /// First half of a time step: sample + charge-share (P1–P2) on every
+    /// column, returning the per-column `(v_htilde, v_z)` node voltages
+    /// — partial IMC means when this core is a row tile of a split
+    /// layer. Complete the step with [`Core::step_finish`] (owner tile)
+    /// or [`Core::finish_partial_only`] (non-owner tiles).
+    pub fn step_partial(&mut self, x: &[f64], cfg: &CircuitConfig) -> Vec<(f64, f64)> {
         assert_eq!(x.len(), self.active_rows);
-        let mut steps = Vec::with_capacity(self.columns.len());
+        self.col_rngs.clear();
+        let mut partials = Vec::with_capacity(self.columns.len());
         for (j, col) in self.columns.iter_mut().enumerate() {
             let mut col_rng = self.rng.fork(j as u64);
-            let s = col.step(x, cfg, &mut col_rng, &mut self.meter);
+            partials.push(col.phase_share(x, cfg, &mut col_rng, &mut self.meter));
+            self.col_rngs.push(col_rng);
+        }
+        partials
+    }
+
+    /// Second half of a time step on the owner tile: short every
+    /// column's h̃/z lines to the `combined` voltages (the row-count
+    /// weighted mean across row tiles — a no-op when they are this
+    /// core's own partials), then digitize, swap, and strobe (P3–P4).
+    pub fn step_finish(&mut self, combined: &[(f64, f64)], cfg: &CircuitConfig) -> CoreStep {
+        assert_eq!(combined.len(), self.columns.len());
+        assert_eq!(
+            self.col_rngs.len(),
+            self.columns.len(),
+            "step_finish without a preceding step_partial"
+        );
+        let mut steps = Vec::with_capacity(self.columns.len());
+        for (j, col) in self.columns.iter_mut().enumerate() {
+            let (v_htilde, v_z) = combined[j];
+            col.override_share(v_htilde, v_z);
+            let s = col.phase_update(v_htilde, v_z, cfg, &mut self.col_rngs[j], &mut self.meter);
             self.out_events[j] = s.y;
             steps.push(s);
         }
+        self.col_rngs.clear();
         self.meter.step_done();
         CoreStep { steps }
+    }
+
+    /// End the time step of a non-owner row tile: its columns only
+    /// contribute partial shares — no gate, swap, or comparator happens
+    /// here. Accounts the step and discards the pending noise streams.
+    pub fn finish_partial_only(&mut self) {
+        self.col_rngs.clear();
+        self.meter.step_done();
     }
 
     pub fn last_events(&self) -> &[bool] {
@@ -174,6 +225,33 @@ mod tests {
         for (p, q) in sa.steps.iter().zip(sb.steps.iter()) {
             assert_eq!(p, q);
         }
+    }
+
+    #[test]
+    fn two_phase_step_matches_monolithic_step() {
+        let cfg = CircuitConfig::default(); // noisy: exercises rng order
+        let (mut a, _) = mk_core(12, 6);
+        let (mut b, _) = mk_core(12, 6);
+        for t in 0..20 {
+            let x: Vec<f64> = (0..12).map(|i| ((t + i) % 2) as f64).collect();
+            let sa = a.step(&x, &cfg);
+            let partials = b.step_partial(&x, &cfg);
+            let sb = b.step_finish(&partials, &cfg);
+            for (p, q) in sa.steps.iter().zip(sb.steps.iter()) {
+                assert_eq!(p, q, "diverged at step {t}");
+            }
+        }
+        assert_eq!(a.meter, b.meter);
+    }
+
+    #[test]
+    fn partial_only_core_accounts_steps_without_outputs() {
+        let (mut core, cfg) = mk_core(8, 4);
+        let partials = core.step_partial(&vec![1.0; 8], &cfg);
+        assert_eq!(partials.len(), 4);
+        core.finish_partial_only();
+        assert_eq!(core.meter.steps, 1);
+        assert_eq!(core.meter.adc_conversions, 0); // no gate ran here
     }
 
     #[test]
