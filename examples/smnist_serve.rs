@@ -36,10 +36,10 @@ fn main() -> Result<()> {
     let workers = args
         .get_usize("workers", minimalist::config::default_workers())?
         .max(1);
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 8)?,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
-    };
+    let policy = BatchPolicy::new(
+        args.get_usize("max-batch", 8)?,
+        Duration::from_millis(args.get_u64("max-wait-ms", 4)?),
+    );
 
     let weights = match args.opt("weights") {
         Some(p) => NetworkWeights::load(p)?,
@@ -108,7 +108,9 @@ fn main() -> Result<()> {
                         .expect("loading sequence artifact");
                     Box::new(PjrtBackend::new(exe, t_len, batch, d_in, n_classes)) as _
                 },
-                policy,
+                // the AOT artifact is compiled for one [T, B, d] shape —
+                // length bucketing guarantees it never sees a ragged batch
+                policy.bucketed(),
             )
         }
         other => bail!("unknown backend '{other}' (golden|satsim|pjrt)"),
@@ -125,9 +127,20 @@ fn main() -> Result<()> {
         .map(|(i, s)| (s.label, client.submit(i as u64, s.pixels.clone())))
         .collect();
     let mut correct = 0usize;
+    let mut failed = 0usize;
     for (label, rx) in rxs {
-        let resp = rx.recv()?;
-        correct += (resp.label == label) as usize;
+        // failed requests are reported, not fatal — the summary (with
+        // its error counter) must still print
+        match rx.recv() {
+            Ok(resp) => match resp.result {
+                Ok(l) => correct += (l == label) as usize,
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("request {} failed: {e}", resp.id);
+                }
+            },
+            Err(_) => failed += 1,
+        }
     }
     let wall = t0.elapsed();
     let metrics = server.shutdown();
@@ -140,7 +153,7 @@ fn main() -> Result<()> {
         n_req as f64 / wall.as_secs_f64()
     );
     println!(
-        "accuracy : {correct}/{n_req} = {:.3}",
+        "accuracy : {correct}/{n_req} = {:.3} ({failed} failed)",
         correct as f64 / n_req as f64
     );
     Ok(())

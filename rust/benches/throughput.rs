@@ -8,6 +8,11 @@
 //! synthetic workload: the speedup column is the direct measurement of
 //! the sharded engine (workers = 1 reproduces the old single-leader
 //! configuration).
+//!
+//! After the human-readable tables, the machine-readable suite
+//! ([`minimalist::bench_suite`]) runs and writes `BENCH_pr3.json` —
+//! the same file `minimalist bench` produces, so CI and local runs
+//! record comparable baselines. Pass `-- --quick` for smoke scale.
 
 use std::time::{Duration, Instant};
 
@@ -64,10 +69,7 @@ fn main() {
     // ---- worker sweep: the sharded-coordinator measurement ------------
     let n_req = 128usize;
     let samples = glyphs::make_split(n_req, img, 3);
-    let policy = BatchPolicy {
-        max_batch: 8,
-        max_wait: Duration::from_millis(1),
-    };
+    let policy = BatchPolicy::new(8, Duration::from_millis(1));
     let max_workers = minimalist::config::default_workers();
     println!(
         "worker sweep: golden backend, {n_req} requests, batch≤{}, host \
@@ -118,10 +120,7 @@ fn main() {
         ("satsim", 1, 4, 12),
         ("satsim", 2, 4, 12),
     ] {
-        let policy = BatchPolicy {
-            max_batch,
-            max_wait: Duration::from_millis(2),
-        };
+        let policy = BatchPolicy::new(max_batch, Duration::from_millis(2));
         let server = match name {
             "golden" => Server::spawn_sharded(
                 GoldenBackend::factory(nw.clone()),
@@ -169,10 +168,7 @@ fn main() {
         "geometry", "cores", "row-split layers", "wall", "seq/s",
     ]);
     for (rows, cols) in [(64usize, 64usize), (32, 32), (16, 16)] {
-        let policy = BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_millis(1),
-        };
+        let policy = BatchPolicy::new(4, Duration::from_millis(1));
         let (plan, factory) = MixedSignalBackend::factory(
             sweep_nw.clone(),
             CircuitConfig::default(),
@@ -196,4 +192,21 @@ fn main() {
          hidden->readout layer across row tiles (weighted partial-sum \
          combination on the owner tile)."
     );
+
+    // ---- machine-readable baseline (BENCH_pr3.json) -------------------
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "\nrecording machine-readable baseline ({}) ...",
+        if quick { "quick" } else { "full" }
+    );
+    let doc = minimalist::bench_suite::run(
+        &minimalist::bench_suite::BenchOpts { quick },
+    );
+    minimalist::bench_suite::print_engine_summary(&doc);
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor on the manifest to refresh the committed root-level file
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr3.json");
+    minimalist::bench_suite::write(out_path, &doc)
+        .expect("writing BENCH_pr3.json");
+    println!("wrote {out_path}");
 }

@@ -1,0 +1,336 @@
+//! The recorded performance baseline (`BENCH_pr3.json`): a
+//! machine-readable benchmark of the satsim serving path, runnable via
+//! `minimalist bench` (CI) or `cargo bench --bench throughput` (which
+//! appends this suite after its human-readable tables).
+//!
+//! Two kinds of numbers:
+//! * **engine** — raw `MixedSignalEngine::step` throughput (steps/s) on
+//!   the paper network, for an unsplit and a row-split mapping, plus an
+//!   *emulated pre-optimization baseline*: the same engine with the
+//!   per-step `CircuitConfig` clones and scratch-vector allocations the
+//!   hot path performed before it was made allocation-free, re-imposed
+//!   on top. The ratio is the measured cost of the removed churn.
+//! * **serving** — end-to-end sequences/s and latency percentiles
+//!   through the sharded coordinator, swept over worker counts (golden
+//!   backend) and core geometries (satsim backend, forcing splits).
+//!
+//! The JSON schema is versioned (`schema`); CI uploads the file as an
+//! artifact so the perf trajectory is recorded per commit, not by hand.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{CircuitConfig, CoreGeometry};
+use crate::coordinator::{
+    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+};
+use crate::dataset::glyphs;
+use crate::nn::synthetic_network;
+use crate::nn::weights::NetworkWeights;
+use crate::util::bench::{bench, black_box};
+use crate::util::json::Json;
+
+/// Suite knobs: `quick` shrinks budgets and request counts to smoke-test
+/// scale (CI); the default sizes measure long enough to be quotable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchOpts {
+    pub quick: bool,
+}
+
+impl BenchOpts {
+    fn budget(&self) -> Duration {
+        if self.quick {
+            Duration::from_millis(200)
+        } else {
+            Duration::from_secs(2)
+        }
+    }
+}
+
+/// Raw engine-step throughput for one mapping, optimized vs emulated
+/// pre-PR3 churn.
+fn engine_entry(
+    label: &str,
+    dims: &[usize],
+    geometry: CoreGeometry,
+    opts: &BenchOpts,
+) -> Json {
+    let d_in = dims[0];
+    let x: Vec<f32> = (0..d_in).map(|i| ((i * 5) % 7) as f32 / 6.0).collect();
+
+    let mut engine = MixedSignalEngine::new(
+        synthetic_network(dims, 42),
+        CircuitConfig::default(),
+        geometry,
+    )
+    .expect("bench network must map");
+    let row_split_layers =
+        engine.plan.layers.iter().filter(|l| l.is_row_split()).count();
+    let n_cores = engine.n_cores();
+    engine.reset();
+    let mut t = 0u32;
+    let optimized = bench(label, opts.budget(), || {
+        engine.step(t, &x, None);
+        t = t.wrapping_add(1);
+    });
+
+    // Emulated baseline: re-impose the per-step heap churn the old hot
+    // path performed, on top of the optimized step. Per layer: the
+    // CircuitConfig clone (a flat copy — no heap, included for
+    // fidelity), the events/h-states output vectors, and the replicated
+    // input frame (allocation + fill, standing in for the data copy).
+    // Per core: the partials vector and the CoreStep observable buffer.
+    // The ratio isolates what removing exactly this churn bought; the
+    // physics itself dominates the step, so expect a modest margin on
+    // big geometries and a growing one as cores shrink.
+    let out_widths: Vec<usize> = dims[1..].to_vec();
+    let rows = geometry.rows;
+    let cols = geometry.cols;
+    let circuit = CircuitConfig::default();
+    engine.reset();
+    let mut t = 0u32;
+    let churn = bench(label, opts.budget(), || {
+        for &n_out in &out_widths {
+            black_box(circuit.clone());
+            black_box(Vec::<bool>::with_capacity(n_out));
+            black_box(Vec::<f32>::with_capacity(n_out));
+            black_box(vec![0.0f64; rows]);
+        }
+        for _ in 0..n_cores {
+            black_box(Vec::<(f64, f64)>::with_capacity(cols));
+            black_box(Vec::<(f64, f64)>::with_capacity(cols));
+        }
+        engine.step(t, &x, None);
+        t = t.wrapping_add(1);
+    });
+
+    let steps_per_s = optimized.throughput(1.0);
+    let churn_steps_per_s = churn.throughput(1.0);
+    Json::obj(vec![
+        ("label", label.into()),
+        ("dims", dims.to_vec().into()),
+        (
+            "geometry",
+            format!("{}x{}", geometry.rows, geometry.cols).into(),
+        ),
+        ("cores", n_cores.into()),
+        ("row_split_layers", row_split_layers.into()),
+        ("steps_per_s", steps_per_s.into()),
+        ("step_us_p50", (optimized.median_ns / 1e3).into()),
+        ("steps_per_s_alloc_churn_emulated", churn_steps_per_s.into()),
+        (
+            "speedup_vs_alloc_churn",
+            (steps_per_s / churn_steps_per_s.max(1e-12)).into(),
+        ),
+    ])
+}
+
+/// Drive `n_req` glyph sequences through a server; returns
+/// (seq/s, p50, p95, p99, errors).
+fn drive(
+    server: Server,
+    samples: &[glyphs::Sample],
+) -> (f64, Duration, Duration, Duration, u64) {
+    let client = server.client();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
+        .collect();
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    let pcts = m.percentiles(&[50.0, 95.0, 99.0]);
+    (
+        samples.len() as f64 / wall.as_secs_f64(),
+        pcts[0],
+        pcts[1],
+        pcts[2],
+        m.errors,
+    )
+}
+
+fn sweep_row(
+    key: &str,
+    val: Json,
+    rate: f64,
+    p50: Duration,
+    p95: Duration,
+    p99: Duration,
+    errors: u64,
+) -> Json {
+    Json::obj(vec![
+        (key, val),
+        ("seq_per_s", rate.into()),
+        ("p50_us", (p50.as_micros() as f64).into()),
+        ("p95_us", (p95.as_micros() as f64).into()),
+        ("p99_us", (p99.as_micros() as f64).into()),
+        ("errors", (errors as f64).into()),
+    ])
+}
+
+/// Worker-count sweep on the golden backend (the sharded-coordinator
+/// measurement) — sequences/s must scale with workers.
+fn worker_sweep(nw: &NetworkWeights, opts: &BenchOpts) -> Json {
+    let (img, n_req) = if opts.quick { (8, 24) } else { (16, 128) };
+    let samples = glyphs::make_split(n_req, img, 3);
+    let mut rows: Vec<Json> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let server = Server::spawn_sharded(
+            GoldenBackend::factory(nw.clone()),
+            BatchPolicy::new(8, Duration::from_millis(1)),
+            workers,
+        );
+        let (rate, p50, p95, p99, errors) = drive(server, &samples);
+        rows.push(sweep_row("workers", workers.into(), rate, p50, p95, p99, errors));
+    }
+    Json::obj(vec![
+        ("backend", "golden".into()),
+        ("img", img.into()),
+        ("n_req", n_req.into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Geometry sweep on the physics backend: smaller cores force column
+/// and then row splits of the same network — the serving cost of the
+/// extra tiles and the partial-sum combine shows up directly.
+fn geometry_sweep(opts: &BenchOpts) -> Json {
+    let nw = synthetic_network(&[1, 48, 10], 7);
+    let (img, n_req) = if opts.quick { (8, 4) } else { (8, 8) };
+    let samples = glyphs::make_split(n_req, img, 3);
+    let mut rows: Vec<Json> = Vec::new();
+    for (r, c) in [(64usize, 64usize), (32, 32), (16, 16)] {
+        let (plan, factory) = MixedSignalBackend::factory(
+            nw.clone(),
+            CircuitConfig::default(),
+            CoreGeometry { rows: r, cols: c },
+        )
+        .expect("sweep geometry must map");
+        let server = Server::spawn_sharded(
+            factory,
+            BatchPolicy::new(4, Duration::from_millis(1)),
+            1,
+        );
+        let (rate, p50, p95, p99, errors) = drive(server, &samples);
+        let mut row = sweep_row(
+            "geometry",
+            format!("{r}x{c}").into(),
+            rate,
+            p50,
+            p95,
+            p99,
+            errors,
+        );
+        row.set("cores", plan.n_cores.into());
+        row.set(
+            "row_split_layers",
+            plan.layers.iter().filter(|l| l.is_row_split()).count().into(),
+        );
+        rows.push(row);
+    }
+    Json::obj(vec![
+        ("backend", "satsim".into()),
+        ("dims", vec![1usize, 48, 10].into()),
+        ("img", img.into()),
+        ("n_req", n_req.into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Run the full suite and return the `BENCH_pr3.json` document.
+pub fn run(opts: &BenchOpts) -> Json {
+    let paper_dims = [1usize, 64, 64, 64, 64, 10];
+    let engine = Json::Arr(vec![
+        engine_entry(
+            "paper-net/64x64/unsplit",
+            &paper_dims,
+            CoreGeometry { rows: 64, cols: 64 },
+            opts,
+        ),
+        engine_entry(
+            "paper-net/32x32/row-split",
+            &paper_dims,
+            CoreGeometry { rows: 32, cols: 32 },
+            opts,
+        ),
+    ]);
+    let nw = synthetic_network(&paper_dims, 42);
+    let serving = Json::obj(vec![
+        ("worker_sweep", worker_sweep(&nw, opts)),
+        ("geometry_sweep", geometry_sweep(opts)),
+    ]);
+    Json::obj(vec![
+        ("bench", "pr3".into()),
+        ("schema", 1usize.into()),
+        ("status", "measured".into()),
+        ("quick", opts.quick.into()),
+        ("engine", engine),
+        ("serving", serving),
+    ])
+}
+
+/// Write a suite result where CI (or the operator) asked for it.
+pub fn write(path: &str, doc: &Json) -> Result<()> {
+    std::fs::write(path, format!("{doc}\n"))?;
+    Ok(())
+}
+
+/// Print the engine entries of a suite document — shared by the CLI
+/// and the throughput bench so the report cannot drift from the
+/// schema. Tolerant of missing fields (prints placeholders) so a
+/// schema mismatch never panics a reporting path.
+pub fn print_engine_summary(doc: &Json) {
+    let Some(entries) = doc.get("engine").and_then(|e| e.as_arr()) else {
+        return;
+    };
+    for e in entries {
+        println!(
+            "  engine {:<28} {:>12.0} steps/s  ({:.2}x vs alloc-churn baseline)",
+            e.get("label").and_then(Json::as_str).unwrap_or("?"),
+            e.get("steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+            e.get("speedup_vs_alloc_churn")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature run must produce the full schema with sane numbers —
+    /// this is what keeps `minimalist bench` and the CI artifact honest.
+    #[test]
+    fn quick_suite_produces_schema() {
+        let opts = BenchOpts { quick: true };
+        let doc = run(&opts);
+        assert_eq!(doc.req_str("status").unwrap(), "measured");
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 1);
+        let engine = doc.req("engine").unwrap().as_arr().unwrap();
+        assert_eq!(engine.len(), 2);
+        for e in engine {
+            assert!(e.req_f64("steps_per_s").unwrap() > 0.0);
+            assert!(e.req_f64("steps_per_s_alloc_churn_emulated").unwrap() > 0.0);
+        }
+        // the row-split entry really is row-split
+        assert!(engine[1].req_f64("row_split_layers").unwrap() > 0.0);
+        let serving = doc.req("serving").unwrap();
+        let ws = serving.req("worker_sweep").unwrap();
+        assert_eq!(ws.req("rows").unwrap().as_arr().unwrap().len(), 3);
+        let gs = serving.req("geometry_sweep").unwrap();
+        for row in gs.req("rows").unwrap().as_arr().unwrap() {
+            assert!(row.req_f64("seq_per_s").unwrap() > 0.0);
+            assert_eq!(row.req_f64("errors").unwrap(), 0.0);
+        }
+        // and the document round-trips through the JSON module
+        let text = format!("{doc}");
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req_str("bench").unwrap(), "pr3");
+    }
+}

@@ -111,6 +111,12 @@ impl Backend for MixedSignalBackend {
 /// PJRT backend: runs the AOT `sequence.hlo.txt` artifact, which maps
 /// [T, B, 1] input sequences to [B, 10] logits. The artifact is compiled
 /// for a fixed batch B; smaller batches are padded.
+///
+/// This backend requires uniform-length batches (it asserts on a
+/// mismatch): serve it with [`crate::coordinator::BatchPolicy::bucketed`]
+/// so the leader never hands it a ragged batch. Should a mismatch slip
+/// through anyway, the serving loop contains the panic — that batch's
+/// requests fail with `ServeError::BackendPanicked`, the worker lives.
 pub struct PjrtBackend {
     exe: Executable,
     pub seq_len: usize,

@@ -13,9 +13,22 @@ use std::time::{Duration, Instant};
 /// One queued classification request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Client-chosen id, echoed in the response. **Not** unique: two
+    /// clients (or one careless client) may reuse an id concurrently.
     pub id: u64,
     pub sequence: Vec<f32>,
     pub enqueued: Instant,
+    /// Server-assigned routing key: the leader stamps each submission
+    /// with a monotonic ticket and pairs drained requests back to their
+    /// response channels by it, so duplicate client ids cannot
+    /// cross-wire responses. 0 until the leader assigns it.
+    pub ticket: u64,
+}
+
+impl Request {
+    pub fn new(id: u64, sequence: Vec<f32>) -> Request {
+        Request { id, sequence, enqueued: Instant::now(), ticket: 0 }
+    }
 }
 
 /// Batching policy.
@@ -23,11 +36,34 @@ pub struct Request {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// When set, a drained batch only ever contains sequences of one
+    /// length (FIFO within the length bucket, oldest bucket first).
+    /// Backends that require uniform batch shapes — the PJRT executable
+    /// is compiled for a fixed [T, B, d] — must be served with this on;
+    /// the default (off) passes ragged batches through untouched, which
+    /// the golden and mixed-signal backends handle per-sequence.
+    pub bucket_by_length: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) }
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            bucket_by_length: false,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Policy with default bucketing (off) — the common construction.
+    pub fn new(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait, bucket_by_length: false }
+    }
+
+    /// Same policy with length bucketing on (uniform-shape backends).
+    pub fn bucketed(self) -> BatchPolicy {
+        BatchPolicy { bucket_by_length: true, ..self }
     }
 }
 
@@ -38,6 +74,7 @@ impl From<&crate::config::ServeConfig> for BatchPolicy {
         BatchPolicy {
             max_batch: c.max_batch,
             max_wait: Duration::from_millis(c.max_wait_ms),
+            bucket_by_length: false,
         }
     }
 }
@@ -98,10 +135,40 @@ impl Batcher {
         }
     }
 
-    /// Remove and return up to max_batch requests (FIFO).
+    /// Remove and return up to max_batch requests: plain FIFO by
+    /// default; with `bucket_by_length`, the FIFO prefix restricted to
+    /// the oldest request's sequence length (so the oldest request is
+    /// always served first and uniform-shape backends never see a
+    /// ragged batch).
     pub fn drain(&mut self) -> Vec<Request> {
         let n = self.queue.len().min(self.policy.max_batch);
-        let batch: Vec<Request> = self.queue.drain(..n).collect();
+        let batch: Vec<Request> = if self.policy.bucket_by_length
+            && !self.queue.is_empty()
+            && self.queue[..n].iter().any(|r| {
+                r.sequence.len() != self.queue[0].sequence.len()
+            }) {
+            // mixed-length prefix: one order-preserving partition pass —
+            // O(queue) moves, not O(queue × batch) element shifts
+            let len0 = self.queue[0].sequence.len();
+            let max = self.policy.max_batch;
+            let mut batch = Vec::with_capacity(n);
+            let mut rest = Vec::with_capacity(self.queue.len());
+            for req in self.queue.drain(..) {
+                if batch.len() < max && req.sequence.len() == len0 {
+                    batch.push(req);
+                } else {
+                    rest.push(req);
+                }
+            }
+            self.queue = rest;
+            batch
+        } else {
+            // plain FIFO, and the bucketed common case: a prefix that is
+            // already uniform-length drains in place
+            self.queue.drain(..n).collect()
+        };
+        // pushes arrive in enqueue order, so the remaining head is the
+        // oldest survivor even after a bucketed (non-prefix) removal
         self.oldest = self.queue.first().map(|r| r.enqueued);
         batch
     }
@@ -112,12 +179,12 @@ mod tests {
     use super::*;
 
     fn req(id: u64, t: Instant) -> Request {
-        Request { id, sequence: vec![0.0; 4], enqueued: t }
+        Request { id, sequence: vec![0.0; 4], enqueued: t, ticket: 0 }
     }
 
     #[test]
     fn fills_then_fires() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let mut b = Batcher::new(BatchPolicy::new(3, Duration::from_secs(10)));
         let t = Instant::now();
         b.push(req(1, t));
         b.push(req(2, t));
@@ -131,7 +198,7 @@ mod tests {
 
     #[test]
     fn deadline_fires_partial_batch() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let mut b = Batcher::new(BatchPolicy::new(100, Duration::from_millis(1)));
         let t0 = Instant::now();
         b.push(req(1, t0));
         assert!(!b.ready(t0));
@@ -142,7 +209,7 @@ mod tests {
 
     #[test]
     fn fifo_overflow_keeps_remainder() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
+        let mut b = Batcher::new(BatchPolicy::new(2, Duration::from_secs(1)));
         let t = Instant::now();
         for i in 0..5 {
             b.push(req(i, t));
@@ -171,10 +238,7 @@ mod tests {
 
     #[test]
     fn deadline_tracks_oldest_and_clears_on_drain() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 100,
-            max_wait: Duration::from_millis(10),
-        });
+        let mut b = Batcher::new(BatchPolicy::new(100, Duration::from_millis(10)));
         let t0 = Instant::now();
         b.push(req(1, t0));
         b.push(req(2, t0 + Duration::from_millis(5)));
@@ -186,10 +250,7 @@ mod tests {
 
     #[test]
     fn timeout_fires_partial_batch_then_deadline_advances() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 2,
-            max_wait: Duration::from_millis(1),
-        });
+        let mut b = Batcher::new(BatchPolicy::new(2, Duration::from_millis(1)));
         let t0 = Instant::now();
         for i in 0..3 {
             b.push(req(i, t0 + Duration::from_millis(i)));
@@ -207,10 +268,7 @@ mod tests {
 
     #[test]
     fn mixed_sequence_lengths_pass_through_untouched() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_secs(1),
-        });
+        let mut b = Batcher::new(BatchPolicy::new(8, Duration::from_secs(1)));
         let t = Instant::now();
         let lens = [1usize, 256, 0, 64, 7];
         for (i, &n) in lens.iter().enumerate() {
@@ -218,13 +276,15 @@ mod tests {
                 id: i as u64,
                 sequence: vec![0.5; n],
                 enqueued: t,
+                ticket: 0,
             });
         }
         let batch = b.drain();
         assert_eq!(batch.len(), lens.len());
-        // FIFO order and per-request payloads survive batching — the
-        // batcher groups by arrival, not by shape; shape handling is the
-        // backend's contract
+        // FIFO order and per-request payloads survive batching — with
+        // bucketing OFF (the default), the batcher groups by arrival,
+        // not by shape; ragged batches are the documented contract the
+        // golden and mixed-signal backends serve per-sequence
         for (r, &n) in batch.iter().zip(lens.iter()) {
             assert_eq!(r.sequence.len(), n);
         }
@@ -235,11 +295,52 @@ mod tests {
     }
 
     #[test]
+    fn length_bucketing_never_mixes_shapes() {
+        let mut b = Batcher::new(
+            BatchPolicy::new(8, Duration::from_secs(1)).bucketed(),
+        );
+        let t = Instant::now();
+        for (i, &n) in [4usize, 4, 2, 4, 2].iter().enumerate() {
+            b.push(Request {
+                id: i as u64,
+                sequence: vec![0.5; n],
+                enqueued: t + Duration::from_millis(i as u64),
+                ticket: 0,
+            });
+        }
+        // first drain: the oldest request's length (4), FIFO within it
+        let a = b.drain();
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert!(a.iter().all(|r| r.sequence.len() == 4));
+        // the leftovers' deadline re-anchors on the now-oldest request
+        assert_eq!(b.deadline(), Some(t + Duration::from_millis(2) + Duration::from_secs(1)));
+        // second drain: the remaining length-2 bucket
+        let c = b.drain();
+        assert_eq!(c.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn length_bucketing_respects_max_batch() {
+        let mut b = Batcher::new(
+            BatchPolicy::new(2, Duration::from_secs(1)).bucketed(),
+        );
+        let t = Instant::now();
+        for i in 0..3u64 {
+            b.push(Request {
+                id: i,
+                sequence: vec![0.0; 6],
+                enqueued: t,
+                ticket: 0,
+            });
+        }
+        assert_eq!(b.drain().len(), 2);
+        assert_eq!(b.drain().len(), 1);
+    }
+
+    #[test]
     fn zero_max_batch_is_clamped_not_livelocked() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 0,
-            max_wait: Duration::from_millis(1),
-        });
+        let mut b = Batcher::new(BatchPolicy::new(0, Duration::from_millis(1)));
         assert_eq!(b.policy.max_batch, 1);
         // an empty queue must never report ready (len 0 >= 0 trap)
         assert!(!b.ready(Instant::now() + Duration::from_secs(1)));

@@ -53,6 +53,20 @@ pub struct MixedSignalEngine {
     steps_seen: usize,
     /// scratch input buffer
     x_buf: Vec<f64>,
+    /// scratch: the logical frame tiled `replication` times (the
+    /// physical input of a row-replicated layer)
+    x_rep: Vec<f64>,
+    /// per-layer output scratch, reused across steps (the steady-state
+    /// step makes zero heap allocations — see tests/hot_path_alloc.rs)
+    events: Vec<bool>,
+    h_states: Vec<f32>,
+    z_vals: Vec<f32>,
+    ht_vals: Vec<f32>,
+    /// row-split scratch: weighted partial sums, divided in place into
+    /// the combined (row-count-weighted mean) node voltages
+    acc: Vec<(f64, f64)>,
+    /// reusable per-core observable buffer
+    core_out: CoreStep,
 }
 
 impl MixedSignalEngine {
@@ -124,6 +138,15 @@ impl MixedSignalEngine {
             ring_pos: 0,
             steps_seen: 0,
             x_buf: vec![0.0; max_dim],
+            // a replicated frame never exceeds the physical rows
+            x_rep: Vec::with_capacity(geometry.rows),
+            events: Vec::with_capacity(max_dim),
+            h_states: Vec::with_capacity(max_dim),
+            z_vals: Vec::with_capacity(max_dim),
+            ht_vals: Vec::with_capacity(max_dim),
+            // a column group is at most one core wide
+            acc: Vec::with_capacity(geometry.cols),
+            core_out: CoreStep::default(),
             weights,
             circuit,
             plan,
@@ -153,9 +176,8 @@ impl MixedSignalEngine {
     }
 
     pub fn reset(&mut self) {
-        let cfg = self.circuit.clone();
         for c in self.cores.iter_mut() {
-            c.reset(&cfg);
+            c.reset(&self.circuit);
         }
         self.fabric.reset();
         for r in self.ring.iter_mut() {
@@ -168,6 +190,11 @@ impl MixedSignalEngine {
     /// One network time step. `x` = dims[0] input values (analog pixel
     /// for the paper workload). If `traces` is Some, logical-unit
     /// observables are appended per layer.
+    ///
+    /// The steady-state path is allocation- and clone-free: the circuit
+    /// config is threaded by reference and all per-step scratch lives in
+    /// engine/core-owned buffers (tracing, a diagnostic path, allocates
+    /// for the copies it appends).
     pub fn step(&mut self, t: u32, x: &[f32],
                 mut traces: Option<&mut Vec<LayerTraceSeq>>) {
         let n_layers = self.weights.n_layers();
@@ -176,45 +203,43 @@ impl MixedSignalEngine {
             *b = v as f64;
         }
         let mut x_len = x.len();
+        let want_traces = traces.is_some();
         for l in 0..n_layers {
-            let lw = &self.weights.layers[l];
-            let cfg = self.circuit.clone();
-            let mut events: Vec<bool> = Vec::with_capacity(lw.n_out);
-            let mut h_states: Vec<f32> = Vec::with_capacity(lw.n_out);
-            let mut z_vals: Vec<f32> = Vec::new();
-            let mut ht_vals: Vec<f32> = Vec::new();
-            let push_outputs = |out: &CoreStep,
-                                    z_vals: &mut Vec<f32>,
-                                    ht_vals: &mut Vec<f32>,
-                                    events: &mut Vec<bool>,
-                                    h_states: &mut Vec<f32>,
-                                    want_traces: bool| {
-                for s in &out.steps {
-                    events.push(s.y);
-                    h_states.push(volts_to_logical(s.v_h, lw.wh_scale, &cfg) as f32);
-                    if want_traces {
-                        z_vals.push(s.z.value());
-                        ht_vals.push(
-                            volts_to_logical(s.v_htilde, lw.wh_scale, &cfg) as f32
-                        );
-                    }
-                }
-            };
-            let want_traces = traces.is_some();
+            let wh_scale = self.weights.layers[l].wh_scale;
+            self.events.clear();
+            self.h_states.clear();
+            self.z_vals.clear();
+            self.ht_vals.clear();
             let lp = &self.plan.layers[l];
             if lp.row_tiles == 1 {
                 // physical input: the logical frame tiled `replication`
-                // times (row replication of narrow layers)
+                // times (row replication of narrow layers); unreplicated
+                // layers drive straight from the frame buffer
                 let r = lp.replication;
-                let mut x_slice: Vec<f64> = Vec::with_capacity(r * x_len);
-                for _ in 0..r {
-                    x_slice.extend_from_slice(&self.x_buf[..x_len]);
+                if r > 1 {
+                    self.x_rep.clear();
+                    for _ in 0..r {
+                        self.x_rep.extend_from_slice(&self.x_buf[..x_len]);
+                    }
                 }
                 let (c0, c1) = self.plan.core_range(l);
                 for core in self.cores[c0..c1].iter_mut() {
-                    let out = core.step(&x_slice, &cfg);
-                    push_outputs(&out, &mut z_vals, &mut ht_vals,
-                                 &mut events, &mut h_states, want_traces);
+                    let x_phys: &[f64] = if r > 1 {
+                        &self.x_rep
+                    } else {
+                        &self.x_buf[..x_len]
+                    };
+                    core.step(x_phys, &self.circuit, &mut self.core_out);
+                    push_outputs(
+                        &self.core_out,
+                        wh_scale,
+                        &self.circuit,
+                        want_traces,
+                        &mut self.events,
+                        &mut self.h_states,
+                        &mut self.z_vals,
+                        &mut self.ht_vals,
+                    );
                 }
             } else {
                 // row-split layer: every row tile contributes a partial
@@ -225,15 +250,16 @@ impl MixedSignalEngine {
                 for ct in 0..lp.col_tiles {
                     let owner = lp.owner_tile(ct).core;
                     let width = lp.owner_tile(ct).n_cols();
-                    let mut acc = vec![(0.0f64, 0.0f64); width];
+                    self.acc.clear();
+                    self.acc.resize(width, (0.0, 0.0));
                     for rt in 0..lp.row_tiles {
                         let tile = lp.tile(rt, ct);
                         let (r0, r1) = tile.rows;
                         let weight = (r1 - r0) as f64;
                         let partials = self.cores[tile.core]
-                            .step_partial(&self.x_buf[r0..r1], &cfg);
+                            .step_partial(&self.x_buf[r0..r1], &self.circuit);
                         debug_assert_eq!(partials.len(), width);
-                        for (a, p) in acc.iter_mut().zip(partials.iter()) {
+                        for (a, p) in self.acc.iter_mut().zip(partials.iter()) {
                             a.0 += weight * p.0;
                             a.1 += weight * p.1;
                         }
@@ -241,36 +267,50 @@ impl MixedSignalEngine {
                             self.cores[tile.core].finish_partial_only();
                         }
                     }
-                    let combined: Vec<(f64, f64)> = acc
-                        .iter()
-                        .map(|&(vh, vz)| (vh / n_in_total, vz / n_in_total))
-                        .collect();
-                    let out = self.cores[owner].step_finish(&combined, &cfg);
-                    push_outputs(&out, &mut z_vals, &mut ht_vals,
-                                 &mut events, &mut h_states, want_traces);
+                    // divide in place: acc becomes the combined means
+                    for a in self.acc.iter_mut() {
+                        a.0 /= n_in_total;
+                        a.1 /= n_in_total;
+                    }
+                    self.cores[owner].step_finish(
+                        &self.acc,
+                        &self.circuit,
+                        &mut self.core_out,
+                    );
+                    push_outputs(
+                        &self.core_out,
+                        wh_scale,
+                        &self.circuit,
+                        want_traces,
+                        &mut self.events,
+                        &mut self.h_states,
+                        &mut self.z_vals,
+                        &mut self.ht_vals,
+                    );
                 }
             }
             if let Some(ts) = traces.as_deref_mut() {
                 if ts.len() <= l {
                     ts.resize_with(l + 1, LayerTraceSeq::default);
                 }
-                ts[l].z.push(z_vals);
-                ts[l].htilde.push(ht_vals);
-                ts[l].h.push(h_states.clone());
-                ts[l].y.push(events.iter().map(|&b| b as u8 as f32).collect());
+                ts[l].z.push(self.z_vals.clone());
+                ts[l].htilde.push(self.ht_vals.clone());
+                ts[l].h.push(self.h_states.clone());
+                ts[l].y
+                    .push(self.events.iter().map(|&b| b as u8 as f32).collect());
             }
             if l == n_layers - 1 {
                 // head readout: analog states into the ring
-                self.ring[self.ring_pos].copy_from_slice(&h_states);
+                self.ring[self.ring_pos].copy_from_slice(&self.h_states);
                 self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
             } else {
                 // route binary events to the next layer's row drivers
-                self.fabric.route(l, t, &events);
+                self.fabric.route(l, t, &self.events);
                 let port = &self.fabric.ports[l];
                 for (b, &bit) in self.x_buf.iter_mut().zip(port.frame.iter()) {
                     *b = bit as u8 as f64;
                 }
-                x_len = lw.n_out;
+                x_len = self.weights.layers[l].n_out;
             }
         }
         self.steps_seen += 1;
@@ -316,6 +356,29 @@ impl MixedSignalEngine {
 
     pub fn fabric_stats(&self) -> (u64, f64) {
         (self.fabric.events_routed, self.fabric.mean_events_per_frame())
+    }
+}
+
+/// Append one core's observables to the layer output buffers (free
+/// function so the engine can lend out disjoint scratch fields).
+#[allow(clippy::too_many_arguments)]
+fn push_outputs(
+    out: &CoreStep,
+    wh_scale: f32,
+    cfg: &CircuitConfig,
+    want_traces: bool,
+    events: &mut Vec<bool>,
+    h_states: &mut Vec<f32>,
+    z_vals: &mut Vec<f32>,
+    ht_vals: &mut Vec<f32>,
+) {
+    for s in &out.steps {
+        events.push(s.y);
+        h_states.push(volts_to_logical(s.v_h, wh_scale, cfg) as f32);
+        if want_traces {
+            z_vals.push(s.z.value());
+            ht_vals.push(volts_to_logical(s.v_htilde, wh_scale, cfg) as f32);
+        }
     }
 }
 

@@ -7,7 +7,15 @@ use std::time::{Duration, Instant};
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
     started: Instant,
+    /// When the most recent sample was recorded — the end of the
+    /// throughput window (an idle recorder queried later must not see
+    /// its rate decay toward zero, and a merged aggregate must not
+    /// count a late-joining worker's dead time).
+    last_sample: Option<Instant>,
     pub items: u64,
+    /// Requests that failed (backend panic, worker lost) — latency is
+    /// not recorded for these, only the count.
+    pub errors: u64,
 }
 
 impl Default for LatencyRecorder {
@@ -18,22 +26,49 @@ impl Default for LatencyRecorder {
 
 impl LatencyRecorder {
     pub fn new() -> LatencyRecorder {
-        LatencyRecorder { samples_us: Vec::new(), started: Instant::now(), items: 0 }
+        LatencyRecorder {
+            samples_us: Vec::new(),
+            started: Instant::now(),
+            last_sample: None,
+            items: 0,
+            errors: 0,
+        }
     }
 
     pub fn record(&mut self, latency: Duration) {
         self.samples_us.push(latency.as_micros() as u64);
         self.items += 1;
+        self.last_sample = Some(Instant::now());
     }
 
+    /// Account `n` failed requests (no latency sample — the error path's
+    /// timing says nothing about serving latency).
+    pub fn record_errors(&mut self, n: u64) {
+        self.errors += n;
+        if n > 0 {
+            self.last_sample = Some(Instant::now());
+        }
+    }
+
+    /// Single-percentile query (sorts a copy — fine for one-off asks;
+    /// use [`LatencyRecorder::percentiles`] for several at once).
     pub fn percentile(&self, p: f64) -> Duration {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles from **one** sort of the sample buffer.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
         if self.samples_us.is_empty() {
-            return Duration::ZERO;
+            return vec![Duration::ZERO; ps.len()];
         }
         let mut s = self.samples_us.clone();
         s.sort_unstable();
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        Duration::from_micros(s[idx.min(s.len() - 1)])
+        ps.iter().map(|&p| Self::pct_of(&s, p)).collect()
+    }
+
+    fn pct_of(sorted: &[u64], p: f64) -> Duration {
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        Duration::from_micros(sorted[idx.min(sorted.len() - 1)])
     }
 
     pub fn mean(&self) -> Duration {
@@ -45,9 +80,14 @@ impl LatencyRecorder {
         )
     }
 
-    /// Requests per second since construction.
+    /// Requests per second over the active window — from construction to
+    /// the *last recorded sample* (not to the moment of the call, which
+    /// would dilute the rate of any recorder queried after it went
+    /// idle, and would skew merged recorders whose workers started or
+    /// finished at different times).
     pub fn throughput(&self) -> f64 {
-        let dt = self.started.elapsed().as_secs_f64();
+        let Some(end) = self.last_sample else { return 0.0 };
+        let dt = end.duration_since(self.started).as_secs_f64();
         if dt == 0.0 {
             0.0
         } else {
@@ -57,22 +97,28 @@ impl LatencyRecorder {
 
     /// Fold another recorder into this one (per-worker recorders are
     /// merged into the aggregate at shutdown). Latency samples are
-    /// concatenated; `started` becomes the earliest of the two so the
-    /// aggregate throughput covers the whole serving window.
+    /// concatenated; `started` becomes the earliest and `last_sample`
+    /// the latest of the two, so the aggregate throughput covers the
+    /// whole serving window and nothing more.
     pub fn merge(&mut self, other: &LatencyRecorder) {
         self.samples_us.extend_from_slice(&other.samples_us);
         self.items += other.items;
+        self.errors += other.errors;
         self.started = self.started.min(other.started);
+        self.last_sample = self.last_sample.max(other.last_sample);
     }
 
     pub fn summary(&self) -> String {
+        // one sort for all three percentiles
+        let pcts = self.percentiles(&[50.0, 95.0, 99.0]);
         format!(
-            "n={} mean={:?} p50={:?} p95={:?} p99={:?} thpt={:.1}/s",
+            "n={} err={} mean={:?} p50={:?} p95={:?} p99={:?} thpt={:.1}/s",
             self.items,
+            self.errors,
             self.mean(),
-            self.percentile(50.0),
-            self.percentile(95.0),
-            self.percentile(99.0),
+            pcts[0],
+            pcts[1],
+            pcts[2],
             self.throughput()
         )
     }
@@ -92,6 +138,11 @@ mod tests {
         assert!(r.percentile(95.0) <= r.percentile(99.0));
         assert_eq!(r.items, 100);
         assert!(r.mean() > Duration::ZERO);
+        // the batched query agrees with the one-off queries
+        let pcts = r.percentiles(&[50.0, 95.0, 99.0]);
+        assert_eq!(pcts[0], r.percentile(50.0));
+        assert_eq!(pcts[1], r.percentile(95.0));
+        assert_eq!(pcts[2], r.percentile(99.0));
     }
 
     #[test]
@@ -99,6 +150,7 @@ mod tests {
         let r = LatencyRecorder::new();
         assert_eq!(r.percentile(99.0), Duration::ZERO);
         assert_eq!(r.mean(), Duration::ZERO);
+        assert_eq!(r.throughput(), 0.0);
     }
 
     #[test]
@@ -109,14 +161,40 @@ mod tests {
             a.record(Duration::from_micros(i * 100));
             b.record(Duration::from_micros(i * 200));
         }
+        b.record_errors(2);
         let started_a = a.started;
         a.merge(&b);
         assert_eq!(a.items, 20);
+        assert_eq!(a.errors, 2);
         assert!(a.percentile(100.0) >= Duration::from_micros(2000));
         assert!(a.started <= started_a);
         // merging an empty recorder is a no-op on the samples
         let items = a.items;
         a.merge(&LatencyRecorder::new());
         assert_eq!(a.items, items);
+    }
+
+    #[test]
+    fn throughput_window_ends_at_last_sample() {
+        let mut r = LatencyRecorder::new();
+        for _ in 0..50 {
+            r.record(Duration::from_micros(100));
+        }
+        let at_once = r.throughput();
+        assert!(at_once > 0.0);
+        // going idle must not decay the measured rate: the window is
+        // anchored on the recorded instants, not on the query time
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(r.throughput(), at_once);
+    }
+
+    #[test]
+    fn errors_counted_without_latency_samples() {
+        let mut r = LatencyRecorder::new();
+        r.record_errors(3);
+        assert_eq!(r.errors, 3);
+        assert_eq!(r.items, 0);
+        assert_eq!(r.mean(), Duration::ZERO);
+        assert!(r.summary().contains("err=3"));
     }
 }

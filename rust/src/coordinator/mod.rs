@@ -23,4 +23,4 @@ pub use backends::{GoldenBackend, MixedSignalBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, Batcher, Request};
 pub use engine::MixedSignalEngine;
 pub use metrics::LatencyRecorder;
-pub use server::{Backend, Client, Response, Server};
+pub use server::{Backend, Client, Response, ServeError, Server};

@@ -3,17 +3,28 @@
 //! an async reactor would buy nothing here anyway).
 //!
 //! Architecture: clients submit requests over an mpsc channel to a
-//! *leader* thread that runs the dynamic batcher. Ready batches are
-//! pushed onto a shared work queue feeding N *worker* threads, each of
-//! which owns one backend instance — constructed *on* the worker thread
-//! via the factory it was spawned with, because the PJRT backend wraps
-//! non-`Send` XLA handles. Every worker records latencies into its own
-//! [`LatencyRecorder`]; [`Server::shutdown`] joins all threads and
-//! merges the per-worker recorders into the aggregate it returns.
+//! *leader* thread that runs the dynamic batcher. The leader stamps
+//! every submission with a monotonic **ticket** and keeps the response
+//! channel keyed by it, so drained requests pair back to their waiters
+//! in O(1) — client-chosen ids are echoed, never used for routing
+//! (duplicates are harmless). Ready batches are pushed onto a shared
+//! work queue feeding N *worker* threads, each of which owns one
+//! backend instance — constructed *on* the worker thread via the
+//! factory it was spawned with, because the PJRT backend wraps
+//! non-`Send` XLA handles.
+//!
+//! Failure containment: a backend panic fails only the requests of the
+//! batch it was classifying — the panic is caught, every request of the
+//! batch receives [`ServeError::BackendPanicked`], and the worker keeps
+//! serving. A worker that dies outright (e.g. its factory panicked)
+//! only loses its own metrics; [`Server::shutdown`] joins what survives
+//! and returns the merged [`LatencyRecorder`] instead of propagating.
 //!
 //! Backends are pluggable ([`Backend`]): golden model, mixed-signal
 //! engine, or the PJRT executable.
 
+use std::collections::HashMap;
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -28,16 +39,56 @@ use crate::coordinator::metrics::LatencyRecorder;
 /// [`Server::spawn_with`] / [`Server::spawn_sharded`].
 pub trait Backend {
     fn name(&self) -> &str;
-    /// Classify a batch of sequences (all the same length).
+    /// Classify a batch of sequences. The default serving contract is
+    /// **ragged** — sequences may differ in length, and the golden and
+    /// mixed-signal backends process them per-sequence. Backends
+    /// compiled for one batch shape (PJRT) must be served with
+    /// [`BatchPolicy::bucketed`], which guarantees uniform-length
+    /// batches at the leader.
     fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize>;
 }
+
+/// Why a request failed instead of producing a label.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The backend panicked while classifying this request's batch; the
+    /// payload message is preserved for diagnosis.
+    BackendPanicked(String),
+    /// The server (leader or the serving worker) went away before a
+    /// response could be produced.
+    Lost,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BackendPanicked(msg) => {
+                write!(f, "backend panicked: {msg}")
+            }
+            ServeError::Lost => write!(f, "server dropped the response"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Response to one request.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub label: usize,
+    pub result: Result<usize, ServeError>,
     pub latency: Duration,
+}
+
+impl Response {
+    /// The served label, for drivers that expect success; panics with
+    /// the serving error otherwise.
+    pub fn label(&self) -> usize {
+        match &self.result {
+            Ok(l) => *l,
+            Err(e) => panic!("request {} failed: {e}", self.id),
+        }
+    }
 }
 
 enum Msg {
@@ -58,27 +109,35 @@ pub struct Client {
 }
 
 impl Client {
-    /// Blocking classify: submit and wait.
+    /// Blocking classify: submit and wait. Never panics — if the server
+    /// (or the worker holding this request) dies, the response carries
+    /// [`ServeError::Lost`].
     pub fn classify(&self, id: u64, sequence: Vec<f32>) -> Response {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Submit(
-                Request { id, sequence, enqueued: Instant::now() },
-                rtx,
-            ))
-            .expect("server gone");
-        rrx.recv().expect("server dropped response")
+        let req = Request::new(id, sequence);
+        let enqueued = req.enqueued;
+        if self.tx.send(Msg::Submit(req, rtx)).is_err() {
+            return Response {
+                id,
+                result: Err(ServeError::Lost),
+                latency: enqueued.elapsed(),
+            };
+        }
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Response {
+                id,
+                result: Err(ServeError::Lost),
+                latency: enqueued.elapsed(),
+            },
+        }
     }
 
-    /// Fire-and-forget submit returning the response receiver.
+    /// Fire-and-forget submit returning the response receiver. If the
+    /// server is gone the receiver's `recv()` errors immediately.
     pub fn submit(&self, id: u64, sequence: Vec<f32>) -> mpsc::Receiver<Response> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Submit(
-                Request { id, sequence, enqueued: Instant::now() },
-                rtx,
-            ))
-            .expect("server gone");
+        let _ = self.tx.send(Msg::Submit(Request::new(id, sequence), rtx));
         rrx
     }
 }
@@ -87,7 +146,10 @@ impl Client {
 /// merged metrics of all workers.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
-    leader: thread::JoinHandle<()>,
+    /// The leader returns its own recorder: requests it had to drop
+    /// (every worker dead) are counted there as errors, so losses are
+    /// visible in the merged metrics, not just client-side.
+    leader: thread::JoinHandle<LatencyRecorder>,
     workers: Vec<thread::JoinHandle<LatencyRecorder>>,
 }
 
@@ -157,29 +219,71 @@ impl Server {
         self.workers.len()
     }
 
-    /// Stop accepting requests, drain the queue, return merged metrics.
+    /// Stop accepting requests, drain the queue, return the merged
+    /// metrics of every worker that survived. Thread panics are
+    /// reported, not propagated — a dead worker costs its metrics, not
+    /// the shutdown.
     pub fn shutdown(self) -> LatencyRecorder {
         let _ = self.tx.send(Msg::Shutdown);
-        self.leader.join().expect("leader thread panicked");
+        let leader_metrics = match self.leader.join() {
+            Ok(m) => Some(m),
+            Err(_) => {
+                eprintln!(
+                    "minimalist-server: leader thread panicked; \
+                     in-flight requests were dropped"
+                );
+                None
+            }
+        };
         let mut merged: Option<LatencyRecorder> = None;
         for w in self.workers {
-            let m = w.join().expect("worker thread panicked");
-            match merged.as_mut() {
-                Some(acc) => acc.merge(&m),
-                None => merged = Some(m),
+            match w.join() {
+                Ok(m) => match merged.as_mut() {
+                    Some(acc) => acc.merge(&m),
+                    None => merged = Some(m),
+                },
+                Err(_) => eprintln!(
+                    "minimalist-server: a worker thread panicked; \
+                     its metrics are lost"
+                ),
             }
         }
-        merged.expect("server had no workers")
+        let mut merged = merged.unwrap_or_default();
+        if let Some(lm) = leader_metrics {
+            merged.merge(&lm);
+        }
+        merged
     }
 }
 
+/// Stamp a submission with the next routing ticket and queue it.
+fn enqueue(
+    batcher: &mut Batcher,
+    waiters: &mut HashMap<u64, mpsc::Sender<Response>>,
+    next_ticket: &mut u64,
+    mut req: Request,
+    rtx: mpsc::Sender<Response>,
+) {
+    req.ticket = *next_ticket;
+    *next_ticket += 1;
+    waiters.insert(req.ticket, rtx);
+    batcher.push(req);
+}
+
 /// The leader: accepts submissions, runs the batching policy, pairs
-/// each drained request with its response channel, and pushes the batch
-/// onto the work queue. Exits (dropping the queue sender, which stops
-/// the workers) once shut down and fully drained.
-fn leader_loop(rx: mpsc::Receiver<Msg>, job_tx: mpsc::Sender<Job>, policy: BatchPolicy) {
+/// each drained request with its response channel by ticket, and pushes
+/// the batch onto the work queue. Exits (dropping the queue sender,
+/// which stops the workers) once shut down and fully drained. Returns a
+/// recorder holding only the error count of requests it had to drop.
+fn leader_loop(
+    rx: mpsc::Receiver<Msg>,
+    job_tx: mpsc::Sender<Job>,
+    policy: BatchPolicy,
+) -> LatencyRecorder {
+    let mut lost = LatencyRecorder::new();
     let mut batcher = Batcher::new(policy);
-    let mut waiters: Vec<(u64, mpsc::Sender<Response>)> = Vec::new();
+    let mut waiters: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
+    let mut next_ticket: u64 = 1; // 0 marks "not yet assigned"
     let mut open = true;
     while open || !batcher.is_empty() {
         // Block until the next message or the oldest request's deadline
@@ -192,13 +296,17 @@ fn leader_loop(rx: mpsc::Receiver<Msg>, job_tx: mpsc::Sender<Job>, policy: Batch
             .max(Duration::from_micros(100));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Submit(req, rtx)) => {
-                waiters.push((req.id, rtx));
-                batcher.push(req);
+                enqueue(&mut batcher, &mut waiters, &mut next_ticket, req, rtx);
                 while let Ok(m) = rx.try_recv() {
                     match m {
                         Msg::Submit(req, rtx) => {
-                            waiters.push((req.id, rtx));
-                            batcher.push(req);
+                            enqueue(
+                                &mut batcher,
+                                &mut waiters,
+                                &mut next_ticket,
+                                req,
+                                rtx,
+                            );
                         }
                         Msg::Shutdown => open = false,
                     }
@@ -222,23 +330,40 @@ fn leader_loop(rx: mpsc::Receiver<Msg>, job_tx: mpsc::Sender<Job>, policy: Batch
             let job: Job = batch
                 .into_iter()
                 .map(|req| {
-                    let pos = waiters
-                        .iter()
-                        .position(|(id, _)| *id == req.id)
-                        .expect("response channel lost");
-                    let (_, rtx) = waiters.swap_remove(pos);
+                    let rtx = waiters
+                        .remove(&req.ticket)
+                        .expect("waiter registered at submit");
                     (req, rtx)
                 })
                 .collect();
-            if job_tx.send(job).is_err() {
-                return; // every worker died; nothing left to serve
+            if let Err(mpsc::SendError(job)) = job_tx.send(job) {
+                // every worker died: this job's requests plus everything
+                // still queued are lost — account them so the merged
+                // metrics show the failure instead of "err=0"
+                lost.record_errors((job.len() + waiters.len()) as u64);
+                return lost;
             }
         }
+    }
+    lost
+}
+
+/// Render a caught panic payload for the error response.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
 /// One worker: construct the backend on this thread, then pull batches
-/// off the shared queue until the leader hangs up.
+/// off the shared queue until the leader hangs up. A backend panic
+/// fails that batch's requests and the worker keeps serving (every
+/// backend re-derives its per-sequence state from scratch on classify,
+/// so a caught panic cannot corrupt later results).
 fn worker_loop(
     factory: BoxedFactory,
     job_rx: Arc<Mutex<mpsc::Receiver<Job>>>,
@@ -259,11 +384,32 @@ fn worker_loop(
             .iter_mut()
             .map(|(r, _)| std::mem::take(&mut r.sequence))
             .collect();
-        let labels = backend.classify_batch(&seqs);
-        for ((req, rtx), label) in job.into_iter().zip(labels) {
-            let latency = req.enqueued.elapsed();
-            metrics.record(latency);
-            let _ = rtx.send(Response { id: req.id, label, latency });
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || backend.classify_batch(&seqs),
+        ));
+        match outcome {
+            Ok(labels) => {
+                for ((req, rtx), label) in job.into_iter().zip(labels) {
+                    let latency = req.enqueued.elapsed();
+                    metrics.record(latency);
+                    let _ = rtx.send(Response {
+                        id: req.id,
+                        result: Ok(label),
+                        latency,
+                    });
+                }
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                metrics.record_errors(job.len() as u64);
+                for (req, rtx) in job {
+                    let _ = rtx.send(Response {
+                        id: req.id,
+                        result: Err(ServeError::BackendPanicked(msg.clone())),
+                        latency: req.enqueued.elapsed(),
+                    });
+                }
+            }
         }
     }
     metrics
@@ -292,20 +438,21 @@ mod tests {
     fn serves_blocking_requests() {
         let server = Server::spawn(
             Box::new(SumBackend),
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatchPolicy::new(4, Duration::from_millis(1)),
         );
         let client = server.client();
         let r = client.classify(1, vec![1.0, 2.0]);
-        assert_eq!(r.label, 3);
+        assert_eq!(r.label(), 3);
         let metrics = server.shutdown();
         assert_eq!(metrics.items, 1);
+        assert_eq!(metrics.errors, 0);
     }
 
     #[test]
     fn batches_concurrent_requests() {
         let server = Server::spawn(
             Box::new(SumBackend),
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            BatchPolicy::new(8, Duration::from_millis(2)),
         );
         let client = server.client();
         let receivers: Vec<_> = (0..20)
@@ -313,7 +460,7 @@ mod tests {
             .collect();
         for (i, rx) in receivers.into_iter().enumerate() {
             let r = rx.recv().unwrap();
-            assert_eq!(r.label, i % 10);
+            assert_eq!(r.label(), i % 10);
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.items, 20);
@@ -324,7 +471,7 @@ mod tests {
     fn shutdown_drains_pending() {
         let server = Server::spawn(
             Box::new(SumBackend),
-            BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
+            BatchPolicy::new(1000, Duration::from_secs(60)),
         );
         let client = server.client();
         let rxs: Vec<_> = (0..5).map(|i| client.submit(i, vec![i as f32])).collect();
@@ -339,7 +486,7 @@ mod tests {
     fn sharded_serves_all_and_merges_metrics() {
         let server = Server::spawn_sharded(
             || Box::new(SumBackend) as Box<dyn Backend>,
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatchPolicy::new(4, Duration::from_millis(1)),
             4,
         );
         assert_eq!(server.n_workers(), 4);
@@ -348,7 +495,7 @@ mod tests {
             .map(|i| client.submit(i, vec![i as f32]))
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().label, i % 10);
+            assert_eq!(rx.recv().unwrap().label(), i % 10);
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.items, 40);
@@ -358,7 +505,7 @@ mod tests {
     fn sharded_shutdown_drains_pending() {
         let server = Server::spawn_sharded(
             || Box::new(SumBackend) as Box<dyn Backend>,
-            BatchPolicy { max_batch: 1000, max_wait: Duration::from_secs(60) },
+            BatchPolicy::new(1000, Duration::from_secs(60)),
             3,
         );
         let client = server.client();
@@ -379,8 +526,144 @@ mod tests {
         );
         assert_eq!(server.n_workers(), 1);
         let r = server.client().classify(9, vec![4.0]);
-        assert_eq!(r.label, 4);
+        assert_eq!(r.label(), 4);
         server.shutdown();
+    }
+
+    #[test]
+    fn duplicate_request_ids_route_to_their_own_waiters() {
+        // Regression: routing used to pair responses with waiters by the
+        // client-chosen id — two in-flight requests with the same id
+        // could swap answers. Tickets make the id purely cosmetic.
+        let server = Server::spawn(
+            Box::new(SumBackend),
+            BatchPolicy::new(8, Duration::from_millis(5)),
+        );
+        let client = server.client();
+        // same id, different payloads, in one batch window
+        let rx_a = client.submit(7, vec![1.0]);
+        let rx_b = client.submit(7, vec![2.0]);
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(a.id, 7);
+        assert_eq!(b.id, 7);
+        assert_eq!(a.label(), 1, "first waiter must get its own answer");
+        assert_eq!(b.label(), 2, "second waiter must get its own answer");
+        server.shutdown();
+    }
+
+    /// Panics on any sequence whose first element is negative.
+    struct FussyBackend;
+
+    impl Backend for FussyBackend {
+        fn name(&self) -> &str {
+            "fussy"
+        }
+
+        fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+            assert!(
+                seqs.iter().all(|s| s.first().map(|&x| x >= 0.0).unwrap_or(true)),
+                "negative input"
+            );
+            seqs.iter().map(|s| s.len() % 10).collect()
+        }
+    }
+
+    #[test]
+    fn backend_panic_fails_only_its_batch() {
+        let server = Server::spawn(
+            Box::new(FussyBackend),
+            // batch size 1 isolates the poison request in its own batch
+            BatchPolicy::new(1, Duration::from_millis(1)),
+        );
+        let client = server.client();
+        let bad = client.classify(1, vec![-1.0, 0.0]);
+        match bad.result {
+            Err(ServeError::BackendPanicked(ref msg)) => {
+                assert!(msg.contains("negative input"), "got: {msg}");
+            }
+            other => panic!("expected BackendPanicked, got {other:?}"),
+        }
+        // the worker survives and keeps serving
+        let good = client.classify(2, vec![0.5, 0.5, 0.5]);
+        assert_eq!(good.result, Ok(3));
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, 1);
+        assert_eq!(metrics.errors, 1);
+    }
+
+    #[test]
+    fn dead_worker_fails_requests_and_shutdown_still_returns() {
+        // the factory itself panics → the worker thread dies before
+        // serving anything; clients must see Lost, not hang or panic,
+        // and shutdown must return metrics that show the loss
+        let (dead_tx, dead_rx) = mpsc::channel::<()>();
+        let server = Server::spawn_with(
+            move || {
+                let _hold = dead_tx; // dropped as the panic unwinds
+                panic!("factory exploded")
+            },
+            BatchPolicy::new(1, Duration::from_millis(1)),
+        );
+        // recv() errs once the worker's unwind has begun; the job-queue
+        // receiver drops in that same unwind, so retry a few dispatches
+        // until the leader observes the closed queue and counts the
+        // loss (exactly once — it exits after the first failed send;
+        // later classifies fail client-side, uncounted)
+        assert!(dead_rx.recv().is_err());
+        let client = server.client();
+        for _ in 0..20 {
+            let r = client.classify(1, vec![1.0]);
+            assert_eq!(r.result, Err(ServeError::Lost));
+            thread::sleep(Duration::from_millis(1));
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, 0);
+        assert_eq!(metrics.errors, 1);
+    }
+
+    /// Asserts the uniform-batch contract PJRT relies on.
+    struct StrictShapeBackend;
+
+    impl Backend for StrictShapeBackend {
+        fn name(&self) -> &str {
+            "strict-shape"
+        }
+
+        fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+            let len0 = seqs.first().map(|s| s.len()).unwrap_or(0);
+            assert!(
+                seqs.iter().all(|s| s.len() == len0),
+                "ragged batch reached a uniform-shape backend"
+            );
+            seqs.iter().map(|s| s.len() % 10).collect()
+        }
+    }
+
+    #[test]
+    fn bucketed_policy_feeds_uniform_batches_to_strict_backend() {
+        // mixed-length load under a bucketed policy: the strict backend
+        // would panic on any ragged batch (surfacing as error results),
+        // and correct labels prove the ticket routing survives the
+        // drain-order shuffling that bucketing introduces
+        let server = Server::spawn(
+            Box::new(StrictShapeBackend),
+            BatchPolicy::new(4, Duration::from_millis(2)).bucketed(),
+        );
+        let client = server.client();
+        let lens = [3usize, 5, 3, 5, 3, 5, 5];
+        let rxs: Vec<_> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| client.submit(i as u64, vec![0.0; n]))
+            .collect();
+        for (rx, &n) in rxs.into_iter().zip(lens.iter()) {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.result, Ok(n % 10), "wrong or failed response");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.items, lens.len() as u64);
+        assert_eq!(metrics.errors, 0);
     }
 
     #[test]
@@ -407,7 +690,7 @@ mod tests {
         let seen2 = Arc::clone(&seen);
         let server = Server::spawn_sharded(
             move || Box::new(MarkingBackend(Arc::clone(&seen2))) as Box<dyn Backend>,
-            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            BatchPolicy::new(1, Duration::from_millis(1)),
             4,
         );
         let client = server.client();

@@ -15,6 +15,7 @@
 //!   AOT-lowered to `artifacts/*.hlo.txt`.
 //! * Layer 3 (this crate): everything on the request path.
 
+pub mod bench_suite;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;

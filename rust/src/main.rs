@@ -4,6 +4,7 @@
 //!   info                      system + config summary
 //!   serve                     batched serving loop over synthMNIST load
 //!   plan                      print the layer→core mapping plan
+//!   bench                     recorded perf baseline → BENCH_pr3.json
 //!   adc                       ADC transfer characterization (Fig 3C)
 //!   trace                     software vs mixed-signal traces (Fig 4)
 //!   energy                    energy report (§4.2)
@@ -31,11 +32,12 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("plan") => cmd_plan(&args),
+        Some("bench") => cmd_bench(&args),
         Some("energy") => cmd_energy(&args),
         Some("eval") => cmd_eval(&args),
         _ => {
             eprintln!(
-                "usage: minimalist <info|serve|plan|energy|eval> [--options]\n\
+                "usage: minimalist <info|serve|plan|bench|energy|eval> [--options]\n\
                  (Fig 3C / Fig 4 generators live in examples/: \
                  adc_characterization, trace_compare)"
             );
@@ -142,22 +144,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let client = server.client();
     let samples = glyphs::make_split(n_req, img, args.get_u64("seed", 1)?);
     let mut correct = 0usize;
+    let mut failed = 0usize;
     let rxs: Vec<_> = samples
         .iter()
         .enumerate()
         .map(|(i, s)| (s.label, client.submit(i as u64, s.pixels.clone())))
         .collect();
     for (label, rx) in rxs {
-        let resp = rx.recv()?;
-        correct += (resp.label == label) as usize;
+        // a failed request must not kill the driver before the metrics
+        // print — that is the whole point of Result-carrying responses
+        match rx.recv() {
+            Ok(resp) => match resp.result {
+                Ok(l) => correct += (l == label) as usize,
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("request {} failed: {e}", resp.id);
+                }
+            },
+            Err(_) => failed += 1,
+        }
     }
     let metrics = server.shutdown();
     println!("backend={backend} {}", metrics.summary());
     println!(
-        "accuracy {}/{} = {:.3}",
+        "accuracy {}/{} = {:.3} ({} failed)",
         correct,
         n_req,
-        correct as f64 / n_req as f64
+        correct as f64 / n_req as f64,
+        failed
     );
     Ok(())
 }
@@ -183,6 +197,23 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let plan = Plan::build(&dims, &mapping_from_args(args)?)?;
     print!("{}", plan.describe());
+    Ok(())
+}
+
+/// Run the recorded perf suite and write the machine-readable baseline:
+///   minimalist bench [--quick] [--out BENCH_pr3.json]
+/// `--quick` shrinks budgets/request counts to CI smoke-test scale.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let opts = minimalist::bench_suite::BenchOpts { quick: args.flag("quick") };
+    let out = args.get_or("out", "BENCH_pr3.json");
+    eprintln!(
+        "running bench suite ({}) ...",
+        if opts.quick { "quick" } else { "full" }
+    );
+    let doc = minimalist::bench_suite::run(&opts);
+    minimalist::bench_suite::print_engine_summary(&doc);
+    minimalist::bench_suite::write(out, &doc)?;
+    println!("wrote {out}");
     Ok(())
 }
 

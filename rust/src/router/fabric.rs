@@ -48,10 +48,13 @@ impl Fabric {
     /// `widths[l]` = output width of layer l (events from the readout
     /// layer are not routed — its analog states go to the classifier).
     pub fn new(widths: &[usize]) -> Fabric {
+        // a frame can emit at most `width` transition events — reserving
+        // the widest port up front keeps `route` allocation-free
+        let max_width = widths.iter().copied().max().unwrap_or(0);
         Fabric {
             ports: widths.iter().map(|&w| PortState::new(w)).collect(),
             prev: widths.iter().map(|&w| vec![false; w]).collect(),
-            events: Vec::new(),
+            events: Vec::with_capacity(max_width),
             events_routed: 0,
             frames_routed: 0,
         }

@@ -86,7 +86,8 @@ impl Column {
         let z_bank = CapBank::new(n, cfg.c_unit, cfg, rng);
         let adc = SarAdc::new(cfg, rng);
         let idx_z: Vec<usize> = (0..n).collect();
-        // nominal "one cap per pair" set for the aggregates
+        // nominal "one cap per pair" set for the aggregates; also the
+        // initial h index list (h_sel all false → caps 2i hold the state)
         let half: Vec<usize> = (0..n).map(|i| 2 * i).collect();
         let agg_sigma_pair = pair_bank.aggregate_sample_sigma(&half);
         let agg_shift_pair = pair_bank.aggregate_injection_shift(&half);
@@ -102,7 +103,7 @@ impl Column {
             v_line_z: cfg.v_0,
             v_line_h: cfg.v_0,
             idx_free: Vec::with_capacity(n),
-            idx_h: Vec::with_capacity(n),
+            idx_h: half,
             idx_z,
             agg_sigma_pair,
             agg_shift_pair,
@@ -115,12 +116,10 @@ impl Column {
         self.h_sel.len()
     }
 
-    /// Current hidden-state voltage (capacitance-weighted over the h bank).
+    /// Current hidden-state voltage (capacitance-weighted over the h
+    /// bank). Reads the maintained `idx_h` scratch list — no allocation.
     pub fn v_h(&self) -> f64 {
-        let idx: Vec<usize> = (0..self.rows())
-            .map(|i| 2 * i + self.h_sel[i] as usize)
-            .collect();
-        self.pair_bank.weighted_mean(&idx)
+        self.pair_bank.weighted_mean(&self.idx_h)
     }
 
     /// Reset the state caps (and lines) to V_0.
@@ -136,6 +135,16 @@ impl Column {
         self.v_line_h = cfg.v_0;
         for s in self.h_sel.iter_mut() {
             *s = false;
+        }
+        self.rebuild_idx_h();
+    }
+
+    /// Keep `idx_h` in sync with `h_sel` (it doubles as the index list
+    /// `v_h()` reads between steps).
+    fn rebuild_idx_h(&mut self) {
+        self.idx_h.clear();
+        for i in 0..self.h_sel.len() {
+            self.idx_h.push(2 * i + self.h_sel[i] as usize);
         }
     }
 
@@ -177,10 +186,10 @@ impl Column {
         // ---- P1: sample (noise deferred to the share; exact — see
         // caps::sample_deferred) -------------------------------------------
         self.idx_free.clear();
-        self.idx_h.clear();
         for i in 0..n {
+            // `idx_h` stays valid across the step: the holding caps are
+            // untouched until the P4 swap rebuilds the list.
             let free = 2 * i + (!self.h_sel[i]) as usize;
-            let hold = 2 * i + (self.h_sel[i]) as usize;
             self.pair_bank.sample_deferred(
                 free,
                 Self::drive(cfg, x[i], self.cfg_col.w_h[i]),
@@ -192,7 +201,6 @@ impl Column {
                 meter,
             );
             self.idx_free.push(free);
-            self.idx_h.push(hold);
         }
 
         // ---- P2: charge share (Eq. 6) ------------------------------------
@@ -278,10 +286,7 @@ impl Column {
             meter.toggles(cfg, 2); // the pair's two bank-select switches
         }
         // rebuild the h index list after the swap
-        self.idx_h.clear();
-        for i in 0..n {
-            self.idx_h.push(2 * i + self.h_sel[i] as usize);
-        }
+        self.rebuild_idx_h();
         let v_h = self.pair_bank.share(
             &self.idx_h,
             Some((cfg.c_line, self.v_line_h)),

@@ -32,6 +32,9 @@ pub struct Core {
     /// Per-column noise streams of an in-flight two-phase step (forked
     /// in `step_partial`, consumed by `step_finish`).
     col_rngs: Vec<Rng>,
+    /// Scratch partial-share buffer filled by `step_partial` — owned by
+    /// the core so the steady-state step makes no heap allocation.
+    partials: Vec<(f64, f64)>,
 }
 
 /// Per-step observables for every column (Fig 4 traces; readout states).
@@ -80,6 +83,7 @@ impl Core {
             rng,
             out_events: vec![false; n_cols],
             col_rngs: Vec::with_capacity(n_cols),
+            partials: Vec::with_capacity(n_cols),
         }
     }
 
@@ -98,56 +102,69 @@ impl Core {
     }
 
     /// One time step over the full array. `x` has `active_rows` entries.
-    /// Returns per-column observables; binary events are also kept in an
-    /// internal buffer accessible via `last_events`.
+    /// Per-column observables are written into `out` (a reusable buffer
+    /// — the steady-state step allocates nothing); binary events are
+    /// also kept in an internal buffer accessible via `last_events`.
     ///
     /// Equivalent (bit-for-bit, noise stream included) to
     /// `step_partial` followed by `step_finish` with the core's own
     /// partial results — the two-phase path row-split layers use.
-    pub fn step(&mut self, x: &[f64], cfg: &CircuitConfig) -> CoreStep {
-        let partials = self.step_partial(x, cfg);
-        self.step_finish(&partials, cfg)
+    pub fn step(&mut self, x: &[f64], cfg: &CircuitConfig, out: &mut CoreStep) {
+        self.step_partial(x, cfg);
+        // lend the scratch partials out so `step_finish` can borrow
+        // `self` mutably — a pointer swap, not an allocation
+        let partials = std::mem::take(&mut self.partials);
+        self.step_finish(&partials, cfg, out);
+        self.partials = partials;
     }
 
     /// First half of a time step: sample + charge-share (P1–P2) on every
     /// column, returning the per-column `(v_htilde, v_z)` node voltages
     /// — partial IMC means when this core is a row tile of a split
-    /// layer. Complete the step with [`Core::step_finish`] (owner tile)
-    /// or [`Core::finish_partial_only`] (non-owner tiles).
-    pub fn step_partial(&mut self, x: &[f64], cfg: &CircuitConfig) -> Vec<(f64, f64)> {
+    /// layer. The returned slice borrows a core-owned scratch buffer
+    /// (overwritten by the next `step_partial`). Complete the step with
+    /// [`Core::step_finish`] (owner tile) or
+    /// [`Core::finish_partial_only`] (non-owner tiles).
+    pub fn step_partial(&mut self, x: &[f64], cfg: &CircuitConfig) -> &[(f64, f64)] {
         assert_eq!(x.len(), self.active_rows);
         self.col_rngs.clear();
-        let mut partials = Vec::with_capacity(self.columns.len());
+        self.partials.clear();
         for (j, col) in self.columns.iter_mut().enumerate() {
             let mut col_rng = self.rng.fork(j as u64);
-            partials.push(col.phase_share(x, cfg, &mut col_rng, &mut self.meter));
+            self.partials
+                .push(col.phase_share(x, cfg, &mut col_rng, &mut self.meter));
             self.col_rngs.push(col_rng);
         }
-        partials
+        &self.partials
     }
 
     /// Second half of a time step on the owner tile: short every
     /// column's h̃/z lines to the `combined` voltages (the row-count
     /// weighted mean across row tiles — a no-op when they are this
     /// core's own partials), then digitize, swap, and strobe (P3–P4).
-    pub fn step_finish(&mut self, combined: &[(f64, f64)], cfg: &CircuitConfig) -> CoreStep {
+    /// Observables are appended into the cleared `out` buffer.
+    pub fn step_finish(
+        &mut self,
+        combined: &[(f64, f64)],
+        cfg: &CircuitConfig,
+        out: &mut CoreStep,
+    ) {
         assert_eq!(combined.len(), self.columns.len());
         assert_eq!(
             self.col_rngs.len(),
             self.columns.len(),
             "step_finish without a preceding step_partial"
         );
-        let mut steps = Vec::with_capacity(self.columns.len());
+        out.steps.clear();
         for (j, col) in self.columns.iter_mut().enumerate() {
             let (v_htilde, v_z) = combined[j];
             col.override_share(v_htilde, v_z);
             let s = col.phase_update(v_htilde, v_z, cfg, &mut self.col_rngs[j], &mut self.meter);
             self.out_events[j] = s.y;
-            steps.push(s);
+            out.steps.push(s);
         }
         self.col_rngs.clear();
         self.meter.step_done();
-        CoreStep { steps }
     }
 
     /// End the time step of a non-owner row tile: its columns only
@@ -198,7 +215,8 @@ mod tests {
     fn step_produces_all_columns() {
         let (mut core, cfg) = mk_core(16, 8);
         let x = vec![1.0; 16];
-        let out = core.step(&x, &cfg);
+        let mut out = CoreStep::default();
+        core.step(&x, &cfg, &mut out);
         assert_eq!(out.steps.len(), 8);
         assert_eq!(core.last_events().len(), 8);
         assert_eq!(core.meter.steps, 1);
@@ -208,7 +226,8 @@ mod tests {
     #[test]
     fn reset_restores_v0() {
         let (mut core, cfg) = mk_core(8, 4);
-        core.step(&vec![1.0; 8], &cfg);
+        let mut out = CoreStep::default();
+        core.step(&vec![1.0; 8], &cfg, &mut out);
         core.reset(&cfg);
         for v in core.state_voltages() {
             assert!((v - cfg.v_0).abs() < 1e-12);
@@ -220,8 +239,9 @@ mod tests {
         let (mut a, cfg) = mk_core(8, 4);
         let (mut b, _) = mk_core(8, 4);
         let x = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
-        let sa = a.step(&x, &cfg);
-        let sb = b.step(&x, &cfg);
+        let (mut sa, mut sb) = (CoreStep::default(), CoreStep::default());
+        a.step(&x, &cfg, &mut sa);
+        b.step(&x, &cfg, &mut sb);
         for (p, q) in sa.steps.iter().zip(sb.steps.iter()) {
             assert_eq!(p, q);
         }
@@ -232,11 +252,12 @@ mod tests {
         let cfg = CircuitConfig::default(); // noisy: exercises rng order
         let (mut a, _) = mk_core(12, 6);
         let (mut b, _) = mk_core(12, 6);
+        let (mut sa, mut sb) = (CoreStep::default(), CoreStep::default());
         for t in 0..20 {
             let x: Vec<f64> = (0..12).map(|i| ((t + i) % 2) as f64).collect();
-            let sa = a.step(&x, &cfg);
-            let partials = b.step_partial(&x, &cfg);
-            let sb = b.step_finish(&partials, &cfg);
+            a.step(&x, &cfg, &mut sa);
+            let partials = b.step_partial(&x, &cfg).to_vec();
+            b.step_finish(&partials, &cfg, &mut sb);
             for (p, q) in sa.steps.iter().zip(sb.steps.iter()) {
                 assert_eq!(p, q, "diverged at step {t}");
             }
@@ -258,8 +279,9 @@ mod tests {
     fn energy_scales_with_array_size() {
         let (mut small, cfg) = mk_core(8, 4);
         let (mut big, _) = mk_core(32, 16);
-        small.step(&vec![1.0; 8], &cfg);
-        big.step(&vec![1.0; 32], &cfg);
+        let mut out = CoreStep::default();
+        small.step(&vec![1.0; 8], &cfg, &mut out);
+        big.step(&vec![1.0; 32], &cfg, &mut out);
         // 16× the synapses → energy should be roughly an order more
         assert!(big.meter.total_j() > 5.0 * small.meter.total_j());
     }

@@ -1,0 +1,99 @@
+//! The zero-allocation invariant of the satsim hot path (PR 3 tentpole):
+//! after a warmup sequence has grown every scratch buffer to its steady
+//! state, `MixedSignalEngine::step` must perform **zero** heap
+//! allocations — for unsplit (including row-replicated) plans and for
+//! row-split plans alike.
+//!
+//! Mechanism: a counting `#[global_allocator]` wrapping the system
+//! allocator. Everything runs inside a single `#[test]` so no
+//! concurrently running test can pollute the counter (each integration
+//! test file is its own binary, and this one contains exactly one test).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::nn::synthetic_network;
+
+struct CountingAllocator;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn allocations() -> usize {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+/// Warm an engine up (buffers grow to steady state), then count heap
+/// allocations over a window of steady-state steps — must be zero.
+fn assert_zero_alloc_steps(engine: &mut MixedSignalEngine, d_in: usize, label: &str) {
+    let x: Vec<f32> = (0..d_in).map(|i| ((i * 5) % 7) as f32 / 6.0).collect();
+    engine.reset();
+    for t in 0..16u32 {
+        engine.step(t, &x, None);
+    }
+    let before = allocations();
+    for t in 16..48u32 {
+        engine.step(t, &x, None);
+    }
+    let n = allocations() - before;
+    assert_eq!(
+        n, 0,
+        "{label}: {n} heap allocation(s) over 32 steady-state steps \
+         (the hot path must be allocation-free)"
+    );
+}
+
+#[test]
+fn engine_step_is_allocation_free_after_warmup() {
+    // the counter counts — construction alone must register
+    let base = allocations();
+
+    // unsplit plan with row replication: 1→32→10 on 64×64 cores (the
+    // 1-wide input layer replicates 64×, exercising the x_rep scratch)
+    let nw = synthetic_network(&[1, 32, 10], 11);
+    let mut unsplit = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 64, cols: 64 },
+    )
+    .unwrap();
+    assert!(allocations() > base, "allocation counter is not counting");
+    assert_zero_alloc_steps(&mut unsplit, 1, "unsplit/replicated");
+
+    // row-split plan: 100 inputs on 64-row cores → 2 row tiles, the
+    // weighted partial-sum combine path
+    let nw = synthetic_network(&[100, 8], 3);
+    let mut split = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 64, cols: 64 },
+    )
+    .unwrap();
+    assert!(split.plan.layers[0].is_row_split());
+    assert_zero_alloc_steps(&mut split, 100, "row-split");
+}

@@ -37,7 +37,7 @@ fn golden_backend_end_to_end() {
 
     let server = Server::spawn(
         Box::new(GoldenBackend::new(GoldenNetwork::new(nw))),
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        BatchPolicy::new(8, Duration::from_millis(2)),
     );
     let client = server.client();
     let rxs: Vec<_> = samples
@@ -47,7 +47,7 @@ fn golden_backend_end_to_end() {
         .collect();
     for (rx, want) in rxs.into_iter().zip(expected) {
         let resp = rx.recv().unwrap();
-        assert_eq!(resp.label, want, "served label must equal direct model");
+        assert_eq!(resp.label(), want, "served label must equal direct model");
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.items, 30);
@@ -67,7 +67,7 @@ fn sharded_golden_backend_matches_direct_model() {
 
     let server = Server::spawn_sharded(
         GoldenBackend::factory(nw),
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        BatchPolicy::new(4, Duration::from_millis(1)),
         4,
     );
     assert_eq!(server.n_workers(), 4);
@@ -78,7 +78,7 @@ fn sharded_golden_backend_matches_direct_model() {
         .map(|(i, s)| client.submit(i as u64, s.pixels.clone()))
         .collect();
     for (rx, want) in rxs.into_iter().zip(expected) {
-        assert_eq!(rx.recv().unwrap().label, want);
+        assert_eq!(rx.recv().unwrap().label(), want);
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.items, 24);
@@ -97,7 +97,7 @@ fn mixed_signal_backend_end_to_end() {
     .unwrap();
     let server = Server::spawn_with(
         move || Box::new(MixedSignalBackend::new(engine)) as _,
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        BatchPolicy::new(4, Duration::from_millis(1)),
     );
     let client = server.client();
     let samples = glyphs::make_split(8, 8, 6);
@@ -108,7 +108,7 @@ fn mixed_signal_backend_end_to_end() {
         .collect();
     for rx in rxs {
         let resp = rx.recv().unwrap();
-        assert!(resp.label < 10);
+        assert!(resp.label() < 10);
     }
     let metrics = server.shutdown();
     assert_eq!(metrics.items, 8);
