@@ -76,7 +76,9 @@ fn main() -> Result<()> {
                 "mapping: {} core(s) of {}x{}",
                 plan.n_cores, plan.geometry.rows, plan.geometry.cols
             );
-            Server::spawn_sharded(factory, policy, workers)
+            // uniform-length batches arrive as one lockstep group for
+            // the engine's batched path
+            Server::spawn_sharded(factory, policy.bucketed(), workers)
         }
         "pjrt" => {
             let meta_text = std::fs::read_to_string("artifacts/meta.json")

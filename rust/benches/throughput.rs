@@ -10,9 +10,10 @@
 //! configuration).
 //!
 //! After the human-readable tables, the machine-readable suite
-//! ([`minimalist::bench_suite`]) runs and writes `BENCH_pr3.json` —
-//! the same file `minimalist bench` produces, so CI and local runs
-//! record comparable baselines. Pass `-- --quick` for smoke scale.
+//! ([`minimalist::bench_suite`]) runs — engine steps/s, the lockstep
+//! batch-size sweep, serving sweeps — and writes `BENCH_pr4.json`, the
+//! same file `minimalist bench` produces, so CI and local runs record
+//! comparable baselines. Pass `-- --quick` for smoke scale.
 
 use std::time::{Duration, Instant};
 
@@ -193,7 +194,7 @@ fn main() {
          combination on the owner tile)."
     );
 
-    // ---- machine-readable baseline (BENCH_pr3.json) -------------------
+    // ---- machine-readable baseline (BENCH_pr4.json) -------------------
     let quick = std::env::args().any(|a| a == "--quick");
     println!(
         "\nrecording machine-readable baseline ({}) ...",
@@ -205,8 +206,8 @@ fn main() {
     minimalist::bench_suite::print_engine_summary(&doc);
     // cargo runs bench binaries with cwd = the package dir (rust/), so
     // anchor on the manifest to refresh the committed root-level file
-    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr3.json");
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr4.json");
     minimalist::bench_suite::write(out_path, &doc)
-        .expect("writing BENCH_pr3.json");
+        .expect("writing BENCH_pr4.json");
     println!("wrote {out_path}");
 }

@@ -1,21 +1,27 @@
-//! The recorded performance baseline (`BENCH_pr3.json`): a
+//! The recorded performance baseline (`BENCH_pr4.json`): a
 //! machine-readable benchmark of the satsim serving path, runnable via
 //! `minimalist bench` (CI) or `cargo bench --bench throughput` (which
 //! appends this suite after its human-readable tables).
 //!
-//! Two kinds of numbers:
+//! Three kinds of numbers:
 //! * **engine** — raw `MixedSignalEngine::step` throughput (steps/s) on
 //!   the paper network, for an unsplit and a row-split mapping, plus an
 //!   *emulated pre-optimization baseline*: the same engine with the
 //!   per-step `CircuitConfig` clones and scratch-vector allocations the
 //!   hot path performed before it was made allocation-free, re-imposed
 //!   on top. The ratio is the measured cost of the removed churn.
+//! * **batch_sweep** — lockstep `step_batch` throughput in
+//!   sequence-steps/s at B ∈ {1, 4, 16, 64}: the measurement of the
+//!   batched engine (per-core weight/placement state amortized across
+//!   concurrent streams).
 //! * **serving** — end-to-end sequences/s and latency percentiles
 //!   through the sharded coordinator, swept over worker counts (golden
 //!   backend) and core geometries (satsim backend, forcing splits).
 //!
-//! The JSON schema is versioned (`schema`); CI uploads the file as an
-//! artifact so the perf trajectory is recorded per commit, not by hand.
+//! The JSON schema is versioned (`schema`); CI regenerates the file per
+//! commit, gates on regressions against the committed baseline
+//! ([`check_against`], `minimalist bench --check`), and uploads it as
+//! an artifact so the perf trajectory is recorded, not hand-curated.
 
 use std::time::{Duration, Instant};
 
@@ -123,6 +129,51 @@ fn engine_entry(
             "speedup_vs_alloc_churn",
             (steps_per_s / churn_steps_per_s.max(1e-12)).into(),
         ),
+    ])
+}
+
+/// Lockstep batch sweep on the paper network: sequence-steps/s of
+/// `MixedSignalEngine::step_batch` as the slot count grows. B = 1 is
+/// the sequential cost; the ratio column is the amortization the
+/// batched engine buys.
+fn batch_sweep(dims: &[usize], geometry: CoreGeometry, opts: &BenchOpts) -> Json {
+    let d_in = dims[0];
+    let mut engine = MixedSignalEngine::new(
+        synthetic_network(dims, 42),
+        CircuitConfig::default(),
+        geometry,
+    )
+    .expect("bench network must map");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base = 0.0f64;
+    for &b in &[1usize, 4, 16, 64] {
+        engine.reset_batch(b);
+        let xs: Vec<f32> =
+            (0..b * d_in).map(|i| ((i * 5) % 7) as f32 / 6.0).collect();
+        let mut t = 0u32;
+        let r = bench(&format!("batch-{b}"), opts.budget(), || {
+            engine.step_batch(t, &xs);
+            t = t.wrapping_add(1);
+        });
+        // one step_batch call advances b sequences by one step each
+        let seq_steps_per_s = r.throughput(b as f64);
+        if b == 1 {
+            base = seq_steps_per_s;
+        }
+        rows.push(Json::obj(vec![
+            ("batch", b.into()),
+            ("seq_steps_per_s", seq_steps_per_s.into()),
+            ("step_us_p50", (r.median_ns / 1e3).into()),
+            ("speedup_vs_b1", (seq_steps_per_s / base.max(1e-12)).into()),
+        ]));
+    }
+    Json::obj(vec![
+        ("dims", dims.to_vec().into()),
+        (
+            "geometry",
+            format!("{}x{}", geometry.rows, geometry.cols).into(),
+        ),
+        ("rows", Json::Arr(rows)),
     ])
 }
 
@@ -242,7 +293,7 @@ fn geometry_sweep(opts: &BenchOpts) -> Json {
     ])
 }
 
-/// Run the full suite and return the `BENCH_pr3.json` document.
+/// Run the full suite and return the `BENCH_pr4.json` document.
 pub fn run(opts: &BenchOpts) -> Json {
     let paper_dims = [1usize, 64, 64, 64, 64, 10];
     let engine = Json::Arr(vec![
@@ -259,19 +310,190 @@ pub fn run(opts: &BenchOpts) -> Json {
             opts,
         ),
     ]);
+    let sweep = batch_sweep(
+        &paper_dims,
+        CoreGeometry { rows: 64, cols: 64 },
+        opts,
+    );
     let nw = synthetic_network(&paper_dims, 42);
     let serving = Json::obj(vec![
         ("worker_sweep", worker_sweep(&nw, opts)),
         ("geometry_sweep", geometry_sweep(opts)),
     ]);
     Json::obj(vec![
-        ("bench", "pr3".into()),
-        ("schema", 1usize.into()),
+        ("bench", "pr4".into()),
+        ("schema", 2usize.into()),
         ("status", "measured".into()),
         ("quick", opts.quick.into()),
         ("engine", engine),
+        ("batch_sweep", sweep),
         ("serving", serving),
     ])
+}
+
+/// Hard-failure threshold of the CI regression gate: a drop of more
+/// than 25 % in any compared throughput fails the job.
+pub const CHECK_FAIL_FRAC: f64 = 0.25;
+/// Advisory threshold: drops past 10 % (but within the hard limit) are
+/// annotated, not failed — CI runner variance lives below this.
+pub const CHECK_WARN_FRAC: f64 = 0.10;
+
+/// Result of comparing a fresh suite run against a committed baseline.
+#[derive(Debug, Default)]
+pub struct CheckOutcome {
+    /// Entries that regressed past the hard threshold — the gate fails.
+    pub hard_regressions: Vec<String>,
+    /// Advisory drifts (between the warn and fail thresholds).
+    pub warnings: Vec<String>,
+    /// Non-comparisons (placeholder baseline, missing entries).
+    pub notes: Vec<String>,
+}
+
+impl CheckOutcome {
+    pub fn passed(&self) -> bool {
+        self.hard_regressions.is_empty()
+    }
+}
+
+/// Compare one throughput metric; classify the drop.
+fn check_metric(
+    out: &mut CheckOutcome,
+    what: &str,
+    current: f64,
+    baseline: f64,
+    fail_frac: f64,
+    warn_frac: f64,
+) {
+    if baseline <= 0.0 {
+        out.notes.push(format!("{what}: baseline is not positive, skipped"));
+        return;
+    }
+    let drop = 1.0 - current / baseline;
+    let pct = 100.0 * drop;
+    if drop > fail_frac {
+        out.hard_regressions.push(format!(
+            "{what}: {current:.0} vs baseline {baseline:.0} ({pct:.1}% drop)"
+        ));
+    } else if drop > warn_frac {
+        out.warnings.push(format!(
+            "{what}: {current:.0} vs baseline {baseline:.0} ({pct:.1}% drop)"
+        ));
+    }
+}
+
+/// Compare a fresh suite document against a committed baseline: engine
+/// steps/s per matching label, and lockstep batch-sweep seq-steps/s per
+/// matching batch size when both documents carry a sweep (a schema-1
+/// `BENCH_pr3.json` baseline has none — only the engine entries
+/// compare). A placeholder baseline (`status` ≠ `"measured"`, the
+/// committed state until the first CI run lands numbers) produces a
+/// note and an empty comparison, so the gate passes vacuously until a
+/// measured baseline is committed.
+pub fn check_against(
+    current: &Json,
+    baseline: &Json,
+    fail_frac: f64,
+    warn_frac: f64,
+) -> CheckOutcome {
+    let mut out = CheckOutcome::default();
+    if baseline.get("status").and_then(Json::as_str) != Some("measured") {
+        out.notes.push(
+            "baseline is a placeholder (status != \"measured\"); \
+             nothing to compare — commit a measured baseline to arm the gate"
+                .to_string(),
+        );
+        return out;
+    }
+    // Throughput is only comparable at the same budget scale: a
+    // full-budget baseline measured on a dev box vs a --quick run on a
+    // small CI runner differs by far more than any threshold. Refuse
+    // the comparison instead of failing on phantom regressions — the
+    // baseline should come from the same job that checks it (CI's
+    // bench-gate runs --quick; commit its artifact as the baseline).
+    let (cq, bq) = (
+        current.get("quick").and_then(Json::as_bool),
+        baseline.get("quick").and_then(Json::as_bool),
+    );
+    if cq != bq {
+        out.notes.push(format!(
+            "baseline budget scale (quick={bq:?}) differs from the current \
+             run (quick={cq:?}); throughput is not comparable across budget \
+             scales — regenerate the baseline with the same flags"
+        ));
+        return out;
+    }
+    let empty: [Json; 0] = [];
+    let base_engine =
+        baseline.get("engine").and_then(Json::as_arr).unwrap_or(&empty);
+    if base_engine.is_empty() {
+        out.notes
+            .push("baseline has no engine entries; nothing to compare".into());
+    }
+    for be in base_engine {
+        let Some(label) = be.get("label").and_then(Json::as_str) else {
+            continue;
+        };
+        let cur = current
+            .get("engine")
+            .and_then(Json::as_arr)
+            .unwrap_or(&empty)
+            .iter()
+            .find(|e| e.get("label").and_then(Json::as_str) == Some(label));
+        let Some(cur) = cur else {
+            out.notes.push(format!(
+                "engine entry '{label}' missing from the current run"
+            ));
+            continue;
+        };
+        let (c, b) = (
+            cur.get("steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+            be.get("steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+        check_metric(
+            &mut out,
+            &format!("engine '{label}' steps/s"),
+            c,
+            b,
+            fail_frac,
+            warn_frac,
+        );
+    }
+    let sweep_rows = |doc: &Json| -> Vec<(u64, f64)> {
+        doc.get("batch_sweep")
+            .and_then(|s| s.get("rows"))
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .filter_map(|r| {
+                        Some((
+                            r.get("batch")?.as_f64()? as u64,
+                            r.get("seq_steps_per_s")?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let base_sweep = sweep_rows(baseline);
+    let cur_sweep = sweep_rows(current);
+    for (batch, b) in base_sweep {
+        let Some(&(_, c)) = cur_sweep.iter().find(|(cb, _)| *cb == batch)
+        else {
+            out.notes.push(format!(
+                "batch-sweep B={batch} missing from the current run"
+            ));
+            continue;
+        };
+        check_metric(
+            &mut out,
+            &format!("batch-sweep B={batch} seq-steps/s"),
+            c,
+            b,
+            fail_frac,
+            warn_frac,
+        );
+    }
+    out
 }
 
 /// Write a suite result where CI (or the operator) asked for it.
@@ -285,18 +507,31 @@ pub fn write(path: &str, doc: &Json) -> Result<()> {
 /// schema. Tolerant of missing fields (prints placeholders) so a
 /// schema mismatch never panics a reporting path.
 pub fn print_engine_summary(doc: &Json) {
-    let Some(entries) = doc.get("engine").and_then(|e| e.as_arr()) else {
-        return;
-    };
-    for e in entries {
-        println!(
-            "  engine {:<28} {:>12.0} steps/s  ({:.2}x vs alloc-churn baseline)",
-            e.get("label").and_then(Json::as_str).unwrap_or("?"),
-            e.get("steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
-            e.get("speedup_vs_alloc_churn")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-        );
+    if let Some(entries) = doc.get("engine").and_then(|e| e.as_arr()) {
+        for e in entries {
+            println!(
+                "  engine {:<28} {:>12.0} steps/s  ({:.2}x vs alloc-churn baseline)",
+                e.get("label").and_then(Json::as_str).unwrap_or("?"),
+                e.get("steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+                e.get("speedup_vs_alloc_churn")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+            );
+        }
+    }
+    if let Some(rows) = doc
+        .get("batch_sweep")
+        .and_then(|s| s.get("rows"))
+        .and_then(Json::as_arr)
+    {
+        for r in rows {
+            println!(
+                "  lockstep B={:<3} {:>12.0} seq-steps/s  ({:.2}x vs B=1)",
+                r.get("batch").and_then(Json::as_f64).unwrap_or(0.0),
+                r.get("seq_steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+                r.get("speedup_vs_b1").and_then(Json::as_f64).unwrap_or(0.0),
+            );
+        }
     }
 }
 
@@ -311,7 +546,7 @@ mod tests {
         let opts = BenchOpts { quick: true };
         let doc = run(&opts);
         assert_eq!(doc.req_str("status").unwrap(), "measured");
-        assert_eq!(doc.req_f64("schema").unwrap() as u64, 1);
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 2);
         let engine = doc.req("engine").unwrap().as_arr().unwrap();
         assert_eq!(engine.len(), 2);
         for e in engine {
@@ -320,6 +555,18 @@ mod tests {
         }
         // the row-split entry really is row-split
         assert!(engine[1].req_f64("row_split_layers").unwrap() > 0.0);
+        // the lockstep sweep covers B = 1 through 64 with real numbers
+        let sweep = doc.req("batch_sweep").unwrap();
+        let rows = sweep.req("rows").unwrap().as_arr().unwrap();
+        let batches: Vec<u64> = rows
+            .iter()
+            .map(|r| r.req_f64("batch").unwrap() as u64)
+            .collect();
+        assert_eq!(batches, vec![1, 4, 16, 64]);
+        for r in rows {
+            assert!(r.req_f64("seq_steps_per_s").unwrap() > 0.0);
+            assert!(r.req_f64("speedup_vs_b1").unwrap() > 0.0);
+        }
         let serving = doc.req("serving").unwrap();
         let ws = serving.req("worker_sweep").unwrap();
         assert_eq!(ws.req("rows").unwrap().as_arr().unwrap().len(), 3);
@@ -331,6 +578,104 @@ mod tests {
         // and the document round-trips through the JSON module
         let text = format!("{doc}");
         let back = Json::parse(&text).unwrap();
-        assert_eq!(back.req_str("bench").unwrap(), "pr3");
+        assert_eq!(back.req_str("bench").unwrap(), "pr4");
+    }
+
+    fn doc_with(engine_steps: f64, sweep_b4: f64) -> Json {
+        Json::obj(vec![
+            ("status", "measured".into()),
+            (
+                "engine",
+                Json::Arr(vec![Json::obj(vec![
+                    ("label", "paper-net/64x64/unsplit".into()),
+                    ("steps_per_s", engine_steps.into()),
+                ])]),
+            ),
+            (
+                "batch_sweep",
+                Json::obj(vec![(
+                    "rows",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("batch", 4usize.into()),
+                        ("seq_steps_per_s", sweep_b4.into()),
+                    ])]),
+                )]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn check_flags_hard_regressions_and_warns_on_drift() {
+        let baseline = doc_with(1000.0, 4000.0);
+        // within warn threshold: clean pass
+        let ok = check_against(&doc_with(950.0, 3900.0), &baseline, 0.25, 0.10);
+        assert!(ok.passed());
+        assert!(ok.warnings.is_empty(), "{:?}", ok.warnings);
+        // 15% engine drop: advisory, not fatal
+        let drift =
+            check_against(&doc_with(850.0, 3900.0), &baseline, 0.25, 0.10);
+        assert!(drift.passed());
+        assert_eq!(drift.warnings.len(), 1, "{:?}", drift.warnings);
+        // 50% batch-sweep drop: the gate fails
+        let bad =
+            check_against(&doc_with(950.0, 2000.0), &baseline, 0.25, 0.10);
+        assert!(!bad.passed());
+        assert_eq!(bad.hard_regressions.len(), 1, "{:?}", bad.hard_regressions);
+        assert!(bad.hard_regressions[0].contains("B=4"));
+        // improvements never warn
+        let better =
+            check_against(&doc_with(2000.0, 8000.0), &baseline, 0.25, 0.10);
+        assert!(better.passed() && better.warnings.is_empty());
+    }
+
+    #[test]
+    fn check_passes_vacuously_on_placeholder_baseline() {
+        // the committed BENCH_pr3.json placeholder must not arm the gate
+        let placeholder = Json::obj(vec![
+            ("status", "pending-first-ci-run".into()),
+            ("engine", Json::Arr(vec![])),
+        ]);
+        let out = check_against(
+            &doc_with(1.0, 1.0),
+            &placeholder,
+            CHECK_FAIL_FRAC,
+            CHECK_WARN_FRAC,
+        );
+        assert!(out.passed());
+        assert_eq!(out.notes.len(), 1);
+        assert!(out.warnings.is_empty());
+    }
+
+    #[test]
+    fn check_refuses_cross_budget_comparisons() {
+        // a full-budget dev baseline vs CI's --quick run: numbers are
+        // not comparable — the gate must note and pass, not phantom-fail
+        let mut baseline = doc_with(100_000.0, 400_000.0);
+        baseline.set("quick", false.into());
+        let mut current = doc_with(1000.0, 4000.0); // "90% slower"
+        current.set("quick", true.into());
+        let out = check_against(&current, &baseline, 0.25, 0.10);
+        assert!(out.passed());
+        assert!(out.hard_regressions.is_empty() && out.warnings.is_empty());
+        assert_eq!(out.notes.len(), 1);
+        assert!(out.notes[0].contains("budget scale"), "{:?}", out.notes);
+        // same scale on both sides still compares (and catches the drop)
+        baseline.set("quick", true.into());
+        assert!(!check_against(&current, &baseline, 0.25, 0.10).passed());
+    }
+
+    #[test]
+    fn check_tolerates_schema_1_baselines_without_sweep() {
+        // a measured BENCH_pr3.json has engine entries but no
+        // batch_sweep: the engine entries compare, the sweep is skipped
+        let mut baseline = doc_with(1000.0, 0.0);
+        baseline.set("batch_sweep", Json::Null);
+        let out =
+            check_against(&doc_with(500.0, 9999.0), &baseline, 0.25, 0.10);
+        assert!(!out.passed(), "engine regression must still be caught");
+        assert!(out
+            .hard_regressions
+            .iter()
+            .all(|r| r.contains("engine")));
     }
 }

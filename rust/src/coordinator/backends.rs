@@ -101,10 +101,40 @@ impl Backend for MixedSignalBackend {
         "mixed-signal"
     }
 
+    /// Route the batch through the engine's lockstep batch path: the
+    /// cores hold one analog state slot per sequence and every time
+    /// step advances the whole batch through a single plan traversal.
+    ///
+    /// The engine requires uniform-shape batches, so a ragged batch
+    /// (possible under the default, non-bucketed policy) is grouped by
+    /// sequence length first and the labels scattered back into request
+    /// order; a bucketed policy ([`crate::coordinator::BatchPolicy::bucketed`],
+    /// the recommended serving configuration for this backend) always
+    /// arrives as a single group. Results are bit-identical to
+    /// per-sequence `classify` either way (tests/batch_parity.rs).
     fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
-        // A physical core bank holds one sequence's state: drain the
-        // batch sequentially through the array.
-        seqs.iter().map(|s| self.engine.classify(s)).collect()
+        let mut labels = vec![0usize; seqs.len()];
+        // stable sort: requests keep their arrival order within a group
+        let mut order: Vec<usize> = (0..seqs.len()).collect();
+        order.sort_by_key(|&i| seqs[i].len());
+        let mut group: Vec<&[f32]> = Vec::new();
+        let mut start = 0;
+        while start < order.len() {
+            let len0 = seqs[order[start]].len();
+            let end = start
+                + order[start..]
+                    .iter()
+                    .take_while(|&&i| seqs[i].len() == len0)
+                    .count();
+            group.clear();
+            group.extend(order[start..end].iter().map(|&i| seqs[i].as_slice()));
+            let group_labels = self.engine.classify_batch(&group);
+            for (&i, l) in order[start..end].iter().zip(group_labels) {
+                labels[i] = l;
+            }
+            start = end;
+        }
+        labels
     }
 }
 
@@ -221,6 +251,32 @@ mod tests {
         assert_eq!(plan.n_cores, 2);
         let (mut c, mut d) = (mf(), mf());
         assert_eq!(c.classify_batch(&seqs), d.classify_batch(&seqs));
+    }
+
+    #[test]
+    fn mixed_signal_backend_scatters_ragged_batches_by_length() {
+        // ragged batch (default, non-bucketed policy): the backend must
+        // group by length for the lockstep engine and return the labels
+        // in request order — equal to per-sequence classification
+        let nw = synthetic_network(&[1, 8, 10], 3);
+        let engine = MixedSignalEngine::new(
+            nw,
+            CircuitConfig::default(),
+            CoreGeometry { rows: 8, cols: 16 },
+        )
+        .unwrap();
+        let mut reference = MixedSignalBackend::new(engine.replicate().unwrap());
+        let mut b = MixedSignalBackend::new(engine);
+        let seqs: Vec<Vec<f32>> = [16usize, 8, 16, 4, 8]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (0..n).map(|t| ((t + i) % 3) as f32 / 2.0).collect())
+            .collect();
+        let want: Vec<usize> = seqs
+            .iter()
+            .map(|s| reference.classify_batch(&[s.clone()])[0])
+            .collect();
+        assert_eq!(b.classify_batch(&seqs), want);
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! AOT artifact is compiled for a fixed batch dimension), so the
 //! coordinator collects requests until the batch fills or a deadline
 //! expires — the standard serving trade-off between utilization and
-//! tail latency. The mixed-signal backend processes per-sequence (a
-//! physical core bank holds one sequence's state), so it drains batches
-//! of size 1..n through the core array sequentially.
+//! tail latency. The mixed-signal backend executes uniform-shape
+//! batches in lockstep (one analog state slot per sequence, one plan
+//! traversal per time step) — serve it with `bucket_by_length` so every
+//! drained batch is a single lockstep group.
 
 use std::time::{Duration, Instant};
 

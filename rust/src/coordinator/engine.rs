@@ -13,6 +13,15 @@
 //! `imc_matmul`'s 1/N normalization), and the gate digitization plus
 //! capacitor-swap state update run on the owner tile. Arbitrary network
 //! shapes are therefore servable on the physics path.
+//!
+//! Serving throughput comes from **lockstep batching**: the cores hold
+//! multi-slot analog state (one slot per concurrent sequence), and
+//! `step_batch` advances all B sequences of a uniform-shape batch
+//! through a single plan traversal per time step — per-core
+//! weight/placement state is touched once per layer instead of once per
+//! sequence (the amortization EdgeDRNN and Chipmunk build RNN
+//! accelerators around). Slot RNG streams all clone the construction
+//! stream, so batched results are bit-identical to sequential ones.
 
 use anyhow::Result;
 
@@ -36,6 +45,12 @@ pub struct LayerTraceSeq {
 }
 
 /// A network instantiated on physical cores.
+///
+/// Holds `batch` lockstep slots of per-sequence state (slot 0 is the
+/// sequential path): one event fabric, one readout ring, and one
+/// inter-layer frame buffer per slot, on top of the cores' per-slot
+/// analog state. `step` advances slot 0; `step_batch` advances every
+/// slot of a uniform-shape batch through a single plan traversal.
 pub struct MixedSignalEngine {
     pub weights: NetworkWeights,
     pub circuit: CircuitConfig,
@@ -45,26 +60,36 @@ pub struct MixedSignalEngine {
     pub cores: Vec<Core>,
     /// Codesign diagnostics per layer.
     pub layer_circuits: Vec<LayerCircuit>,
-    fabric: Fabric,
-    /// readout ring (analog head states, logical units)
-    ring: Vec<Vec<f32>>,
+    /// lockstep batch slots currently provisioned (≥ 1)
+    batch: usize,
+    /// per-slot event fabrics
+    fabrics: Vec<Fabric>,
+    /// per-slot readout rings (analog head states, logical units)
+    rings: Vec<Vec<Vec<f32>>>,
     ring_pos: usize,
-    /// time steps since the last reset (readout normalization)
+    /// time steps since the last reset (readout normalization; lockstep
+    /// batches are uniform-length, so one counter covers every slot)
     steps_seen: usize,
-    /// scratch input buffer
-    x_buf: Vec<f64>,
-    /// scratch: the logical frame tiled `replication` times (the
-    /// physical input of a row-replicated layer)
-    x_rep: Vec<f64>,
+    /// per-slot input / inter-layer frame buffers
+    x_bufs: Vec<Vec<f64>>,
+    /// per-slot scratch: the logical frame tiled `replication` times
+    /// (the physical input of a row-replicated layer)
+    x_reps: Vec<Vec<f64>>,
     /// per-layer output scratch, reused across steps (the steady-state
-    /// step makes zero heap allocations — see tests/hot_path_alloc.rs)
+    /// step makes zero heap allocations — see tests/hot_path_alloc.rs);
+    /// the sequential/tracing path uses the singular buffers, the
+    /// batched path the per-slot `_b` ones
     events: Vec<bool>,
     h_states: Vec<f32>,
     z_vals: Vec<f32>,
     ht_vals: Vec<f32>,
-    /// row-split scratch: weighted partial sums, divided in place into
-    /// the combined (row-count-weighted mean) node voltages
-    acc: Vec<(f64, f64)>,
+    events_b: Vec<Vec<bool>>,
+    h_states_b: Vec<Vec<f32>>,
+    /// row-split scratch, per slot: weighted partial sums, divided in
+    /// place into the combined (row-count-weighted mean) node voltages
+    accs: Vec<Vec<(f64, f64)>>,
+    /// packed per-step input scratch for `classify_batch`
+    batch_x: Vec<f32>,
     /// reusable per-core observable buffer
     core_out: CoreStep,
 }
@@ -133,19 +158,23 @@ impl MixedSignalEngine {
         let head = *weights.dims.last().unwrap();
         let max_dim = *weights.dims.iter().max().unwrap();
         Ok(MixedSignalEngine {
-            fabric: Fabric::new(&widths),
-            ring: vec![vec![0.0; head]; READOUT_STEPS],
+            batch: 1,
+            fabrics: vec![Fabric::new(&widths)],
+            rings: vec![vec![vec![0.0; head]; READOUT_STEPS]],
             ring_pos: 0,
             steps_seen: 0,
-            x_buf: vec![0.0; max_dim],
+            x_bufs: vec![vec![0.0; max_dim]],
             // a replicated frame never exceeds the physical rows
-            x_rep: Vec::with_capacity(geometry.rows),
+            x_reps: vec![Vec::with_capacity(geometry.rows)],
             events: Vec::with_capacity(max_dim),
             h_states: Vec::with_capacity(max_dim),
             z_vals: Vec::with_capacity(max_dim),
             ht_vals: Vec::with_capacity(max_dim),
+            events_b: vec![Vec::with_capacity(max_dim)],
+            h_states_b: vec![Vec::with_capacity(max_dim)],
             // a column group is at most one core wide
-            acc: Vec::with_capacity(geometry.cols),
+            accs: vec![Vec::with_capacity(geometry.cols)],
+            batch_x: vec![0.0; weights.dims[0]],
             core_out: CoreStep::default(),
             weights,
             circuit,
@@ -175,21 +204,62 @@ impl MixedSignalEngine {
         self.cores.len()
     }
 
+    /// Lockstep batch slots currently provisioned on the cores.
+    pub fn batch_slots(&self) -> usize {
+        self.batch
+    }
+
+    /// Reset every provisioned slot (sequence boundary): core states,
+    /// per-slot noise streams, fabrics, and readout rings.
     pub fn reset(&mut self) {
         for c in self.cores.iter_mut() {
             c.reset(&self.circuit);
         }
-        self.fabric.reset();
-        for r in self.ring.iter_mut() {
-            r.fill(0.0);
+        for f in self.fabrics.iter_mut() {
+            f.reset();
+        }
+        for ring in self.rings.iter_mut() {
+            for r in ring.iter_mut() {
+                r.fill(0.0);
+            }
         }
         self.ring_pos = 0;
         self.steps_seen = 0;
     }
 
-    /// One network time step. `x` = dims[0] input values (analog pixel
-    /// for the paper workload). If `traces` is Some, logical-unit
-    /// observables are appended per layer.
+    /// Provision `batch` lockstep slots (clamped to ≥ 1) and reset —
+    /// the start of a batched classification. Allocation happens here,
+    /// at batch boundaries, never inside the steady-state `step_batch`
+    /// (see tests/hot_path_alloc.rs).
+    pub fn reset_batch(&mut self, batch: usize) {
+        let b = batch.max(1);
+        if b != self.batch {
+            for core in self.cores.iter_mut() {
+                core.set_slots(b, &self.circuit);
+            }
+            let widths: Vec<usize> =
+                self.weights.layers.iter().map(|l| l.n_out).collect();
+            let head = *self.weights.dims.last().unwrap();
+            let max_dim = *self.weights.dims.iter().max().unwrap();
+            let rows = self.plan.geometry.rows;
+            let cols = self.plan.geometry.cols;
+            self.fabrics.resize_with(b, || Fabric::new(&widths));
+            self.rings
+                .resize_with(b, || vec![vec![0.0; head]; READOUT_STEPS]);
+            self.x_bufs.resize_with(b, || vec![0.0; max_dim]);
+            self.x_reps.resize_with(b, || Vec::with_capacity(rows));
+            self.events_b.resize_with(b, || Vec::with_capacity(max_dim));
+            self.h_states_b.resize_with(b, || Vec::with_capacity(max_dim));
+            self.accs.resize_with(b, || Vec::with_capacity(cols));
+            self.batch_x.resize(b * self.weights.dims[0], 0.0);
+            self.batch = b;
+        }
+        self.reset();
+    }
+
+    /// One network time step on slot 0 (the sequential path). `x` =
+    /// dims[0] input values (analog pixel for the paper workload). If
+    /// `traces` is Some, logical-unit observables are appended per layer.
     ///
     /// The steady-state path is allocation- and clone-free: the circuit
     /// config is threaded by reference and all per-step scratch lives in
@@ -199,7 +269,7 @@ impl MixedSignalEngine {
                 mut traces: Option<&mut Vec<LayerTraceSeq>>) {
         let n_layers = self.weights.n_layers();
         debug_assert_eq!(x.len(), self.weights.dims[0]);
-        for (b, &v) in self.x_buf.iter_mut().zip(x.iter()) {
+        for (b, &v) in self.x_bufs[0].iter_mut().zip(x.iter()) {
             *b = v as f64;
         }
         let mut x_len = x.len();
@@ -217,17 +287,18 @@ impl MixedSignalEngine {
                 // layers drive straight from the frame buffer
                 let r = lp.replication;
                 if r > 1 {
-                    self.x_rep.clear();
+                    let (x_rep, x_buf) = (&mut self.x_reps[0], &self.x_bufs[0]);
+                    x_rep.clear();
                     for _ in 0..r {
-                        self.x_rep.extend_from_slice(&self.x_buf[..x_len]);
+                        x_rep.extend_from_slice(&x_buf[..x_len]);
                     }
                 }
                 let (c0, c1) = self.plan.core_range(l);
                 for core in self.cores[c0..c1].iter_mut() {
                     let x_phys: &[f64] = if r > 1 {
-                        &self.x_rep
+                        &self.x_reps[0]
                     } else {
-                        &self.x_buf[..x_len]
+                        &self.x_bufs[0][..x_len]
                     };
                     core.step(x_phys, &self.circuit, &mut self.core_out);
                     push_outputs(
@@ -250,16 +321,16 @@ impl MixedSignalEngine {
                 for ct in 0..lp.col_tiles {
                     let owner = lp.owner_tile(ct).core;
                     let width = lp.owner_tile(ct).n_cols();
-                    self.acc.clear();
-                    self.acc.resize(width, (0.0, 0.0));
+                    self.accs[0].clear();
+                    self.accs[0].resize(width, (0.0, 0.0));
                     for rt in 0..lp.row_tiles {
                         let tile = lp.tile(rt, ct);
                         let (r0, r1) = tile.rows;
                         let weight = (r1 - r0) as f64;
                         let partials = self.cores[tile.core]
-                            .step_partial(&self.x_buf[r0..r1], &self.circuit);
+                            .step_partial(&self.x_bufs[0][r0..r1], &self.circuit);
                         debug_assert_eq!(partials.len(), width);
-                        for (a, p) in self.acc.iter_mut().zip(partials.iter()) {
+                        for (a, p) in self.accs[0].iter_mut().zip(partials.iter()) {
                             a.0 += weight * p.0;
                             a.1 += weight * p.1;
                         }
@@ -268,12 +339,12 @@ impl MixedSignalEngine {
                         }
                     }
                     // divide in place: acc becomes the combined means
-                    for a in self.acc.iter_mut() {
+                    for a in self.accs[0].iter_mut() {
                         a.0 /= n_in_total;
                         a.1 /= n_in_total;
                     }
                     self.cores[owner].step_finish(
-                        &self.acc,
+                        &self.accs[0],
                         &self.circuit,
                         &mut self.core_out,
                     );
@@ -301,13 +372,13 @@ impl MixedSignalEngine {
             }
             if l == n_layers - 1 {
                 // head readout: analog states into the ring
-                self.ring[self.ring_pos].copy_from_slice(&self.h_states);
+                self.rings[0][self.ring_pos].copy_from_slice(&self.h_states);
                 self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
             } else {
                 // route binary events to the next layer's row drivers
-                self.fabric.route(l, t, &self.events);
-                let port = &self.fabric.ports[l];
-                for (b, &bit) in self.x_buf.iter_mut().zip(port.frame.iter()) {
+                self.fabrics[0].route(l, t, &self.events);
+                let port = &self.fabrics[0].ports[l];
+                for (b, &bit) in self.x_bufs[0].iter_mut().zip(port.frame.iter()) {
                     *b = bit as u8 as f64;
                 }
                 x_len = self.weights.layers[l].n_out;
@@ -316,14 +387,171 @@ impl MixedSignalEngine {
         self.steps_seen += 1;
     }
 
-    /// Classifier logits: mean of the *populated* readout ring entries
-    /// plus the digital bias — sequences shorter than `READOUT_STEPS`
-    /// average only the steps actually seen (no zero-padding bias).
-    pub fn logits(&self) -> Vec<f32> {
+    /// One lockstep time step of every provisioned batch slot: all B
+    /// sequences advance through a *single* traversal of the plan, so
+    /// per-core weight/placement state is touched once per layer and
+    /// amortized across the concurrent streams. `xs` is the packed
+    /// slot-major input, `batch_slots() * dims[0]` values (slot `s`'s
+    /// frame at `xs[s*d_in .. (s+1)*d_in]`).
+    ///
+    /// Slot `s` of a freshly reset batch is bit-identical to a fresh
+    /// sequential run over the same sequence: every slot's noise stream
+    /// is a clone of the core's construction stream, exactly what
+    /// `reset` + `step` replays (see `Core::slot_rngs`).
+    ///
+    /// Like `step`, the steady-state path performs zero heap
+    /// allocations after warmup (tests/hot_path_alloc.rs).
+    pub fn step_batch(&mut self, t: u32, xs: &[f32]) {
+        let b = self.batch;
+        let d_in = self.weights.dims[0];
+        assert_eq!(
+            xs.len(),
+            b * d_in,
+            "step_batch wants {b} slot-major frames of {d_in} values"
+        );
+        let n_layers = self.weights.n_layers();
+        for s in 0..b {
+            let frame = &xs[s * d_in..(s + 1) * d_in];
+            for (dst, &v) in self.x_bufs[s].iter_mut().zip(frame.iter()) {
+                *dst = v as f64;
+            }
+        }
+        let mut x_len = d_in;
+        for l in 0..n_layers {
+            let wh_scale = self.weights.layers[l].wh_scale;
+            let lp = &self.plan.layers[l];
+            for s in 0..b {
+                self.events_b[s].clear();
+                self.h_states_b[s].clear();
+            }
+            if lp.row_tiles == 1 {
+                let r = lp.replication;
+                if r > 1 {
+                    for s in 0..b {
+                        let (x_rep, x_buf) =
+                            (&mut self.x_reps[s], &self.x_bufs[s]);
+                        x_rep.clear();
+                        for _ in 0..r {
+                            x_rep.extend_from_slice(&x_buf[..x_len]);
+                        }
+                    }
+                }
+                let (c0, c1) = self.plan.core_range(l);
+                // slots iterate *inside* the core loop: the core's
+                // capacitor arrays (weights, mismatch, noise aggregates)
+                // stay hot across all B slot-steps
+                for core in self.cores[c0..c1].iter_mut() {
+                    for s in 0..b {
+                        let x_phys: &[f64] = if r > 1 {
+                            &self.x_reps[s]
+                        } else {
+                            &self.x_bufs[s][..x_len]
+                        };
+                        core.step_slot(s, x_phys, &self.circuit, &mut self.core_out);
+                        push_outputs(
+                            &self.core_out,
+                            wh_scale,
+                            &self.circuit,
+                            false,
+                            &mut self.events_b[s],
+                            &mut self.h_states_b[s],
+                            &mut self.z_vals,
+                            &mut self.ht_vals,
+                        );
+                    }
+                }
+            } else {
+                // row-split layer: per-slot weighted partial sums; the
+                // per-slot in-flight noise streams of the owner tile let
+                // every tile run all B slots before the owner finishes
+                let n_in_total = lp.n_in as f64;
+                for ct in 0..lp.col_tiles {
+                    let owner = lp.owner_tile(ct).core;
+                    let width = lp.owner_tile(ct).n_cols();
+                    for acc in self.accs.iter_mut() {
+                        acc.clear();
+                        acc.resize(width, (0.0, 0.0));
+                    }
+                    for rt in 0..lp.row_tiles {
+                        let tile = lp.tile(rt, ct);
+                        let (r0, r1) = tile.rows;
+                        let weight = (r1 - r0) as f64;
+                        for s in 0..b {
+                            let partials = self.cores[tile.core]
+                                .step_partial_slot(
+                                    s,
+                                    &self.x_bufs[s][r0..r1],
+                                    &self.circuit,
+                                );
+                            debug_assert_eq!(partials.len(), width);
+                            for (a, p) in
+                                self.accs[s].iter_mut().zip(partials.iter())
+                            {
+                                a.0 += weight * p.0;
+                                a.1 += weight * p.1;
+                            }
+                        }
+                        if rt != 0 {
+                            for s in 0..b {
+                                self.cores[tile.core].finish_partial_only_slot(s);
+                            }
+                        }
+                    }
+                    for s in 0..b {
+                        for a in self.accs[s].iter_mut() {
+                            a.0 /= n_in_total;
+                            a.1 /= n_in_total;
+                        }
+                        self.cores[owner].step_finish_slot(
+                            s,
+                            &self.accs[s],
+                            &self.circuit,
+                            &mut self.core_out,
+                        );
+                        push_outputs(
+                            &self.core_out,
+                            wh_scale,
+                            &self.circuit,
+                            false,
+                            &mut self.events_b[s],
+                            &mut self.h_states_b[s],
+                            &mut self.z_vals,
+                            &mut self.ht_vals,
+                        );
+                    }
+                }
+            }
+            if l == n_layers - 1 {
+                for s in 0..b {
+                    self.rings[s][self.ring_pos]
+                        .copy_from_slice(&self.h_states_b[s]);
+                }
+                self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
+            } else {
+                for s in 0..b {
+                    self.fabrics[s].route(l, t, &self.events_b[s]);
+                    let port = &self.fabrics[s].ports[l];
+                    for (dst, &bit) in
+                        self.x_bufs[s].iter_mut().zip(port.frame.iter())
+                    {
+                        *dst = bit as u8 as f64;
+                    }
+                }
+                x_len = self.weights.layers[l].n_out;
+            }
+        }
+        self.steps_seen += 1;
+    }
+
+    /// Classifier logits of batch slot `slot`: mean of the *populated*
+    /// readout ring entries plus the digital bias — sequences shorter
+    /// than `READOUT_STEPS` average only the steps actually seen (no
+    /// zero-padding bias).
+    pub fn logits_slot(&self, slot: usize) -> Vec<f32> {
         let head_lw = self.weights.layers.last().unwrap();
         let n = head_lw.n_out;
         let mut out = vec![0.0f32; n];
-        for r in &self.ring {
+        for r in &self.rings[slot] {
             for j in 0..n {
                 out[j] += r[j];
             }
@@ -333,6 +561,11 @@ impl MixedSignalEngine {
             out[j] = out[j] / denom + head_lw.bh[j];
         }
         out
+    }
+
+    /// Classifier logits of the sequential path (slot 0).
+    pub fn logits(&self) -> Vec<f32> {
+        self.logits_slot(0)
     }
 
     /// Run a full sequence and classify (resets state first).
@@ -345,6 +578,49 @@ impl MixedSignalEngine {
         argmax(&self.logits())
     }
 
+    /// Classify a uniform-shape batch in lockstep: all sequences advance
+    /// together, one plan traversal per time step. Returns one label per
+    /// sequence, equal to what `classify` would return for each of them
+    /// individually (the per-slot RNG convention makes the two paths
+    /// bit-identical — pinned by tests/batch_parity.rs).
+    ///
+    /// Sequences must share one length, and that length must be a
+    /// multiple of the input width — serve ragged traffic through
+    /// [`crate::coordinator::BatchPolicy::bucketed`] (the leader then
+    /// only ever drains uniform-length batches), or group by length as
+    /// [`crate::coordinator::MixedSignalBackend`] does.
+    pub fn classify_batch(&mut self, seqs: &[&[f32]]) -> Vec<usize> {
+        let Some(first) = seqs.first() else {
+            return Vec::new();
+        };
+        let d_in = self.weights.dims[0];
+        assert!(
+            seqs.iter().all(|s| s.len() == first.len()),
+            "classify_batch requires a uniform-length batch \
+             (got lengths {:?})",
+            seqs.iter().map(|s| s.len()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            first.len() % d_in,
+            0,
+            "sequence length must be a multiple of the input width {d_in}"
+        );
+        let b = seqs.len();
+        let t_len = first.len() / d_in;
+        self.reset_batch(b);
+        // lend the packed scratch out so `step_batch` can borrow `self`
+        let mut xs = std::mem::take(&mut self.batch_x);
+        for t in 0..t_len {
+            for (s, seq) in seqs.iter().enumerate() {
+                xs[s * d_in..(s + 1) * d_in]
+                    .copy_from_slice(&seq[t * d_in..(t + 1) * d_in]);
+            }
+            self.step_batch(t as u32, &xs);
+        }
+        self.batch_x = xs;
+        (0..b).map(|s| argmax(&self.logits_slot(s))).collect()
+    }
+
     /// Aggregate energy across all cores.
     pub fn energy(&self) -> EnergyMeter {
         let mut m = EnergyMeter::new();
@@ -354,8 +630,17 @@ impl MixedSignalEngine {
         m
     }
 
+    /// (events routed, mean events per frame) aggregated over every
+    /// slot's fabric — the sparsity measurement of all traffic served.
     pub fn fabric_stats(&self) -> (u64, f64) {
-        (self.fabric.events_routed, self.fabric.mean_events_per_frame())
+        let events: u64 = self.fabrics.iter().map(|f| f.events_routed).sum();
+        let frames: u64 = self.fabrics.iter().map(|f| f.frames_routed).sum();
+        let mean = if frames == 0 {
+            0.0
+        } else {
+            events as f64 / frames as f64
+        };
+        (events, mean)
     }
 }
 
@@ -512,6 +797,50 @@ mod tests {
         // owner bank has 64 pairs → fine swap granularity; the bound
         // matches the unsplit toy parity test above
         assert!(worst < 0.25, "row-split worst |Δh| = {worst}");
+    }
+
+    #[test]
+    fn classify_batch_of_one_matches_classify() {
+        // noisy circuit: this pins the per-slot RNG convention, not just
+        // the arithmetic
+        let mut a = toy_engine(false);
+        let mut b = a.replicate().unwrap();
+        let seq: Vec<f32> = (0..30).map(|t| (t % 4) as f32 / 3.0).collect();
+        let want = a.classify(&seq);
+        assert_eq!(b.classify_batch(&[&seq]), vec![want]);
+        // bit-exact, not just same argmax
+        assert_eq!(b.logits_slot(0), a.logits());
+        // and the engine still serves the sequential path afterwards
+        assert_eq!(b.classify(&seq), want);
+    }
+
+    #[test]
+    fn batch_slots_classify_their_own_sequences() {
+        let mut seq_engine = toy_engine(false);
+        let mut bat_engine = seq_engine.replicate().unwrap();
+        let seqs: Vec<Vec<f32>> = (0..3)
+            .map(|s| {
+                (0..24).map(|t| ((t * (s + 2)) % 5) as f32 / 4.0).collect()
+            })
+            .collect();
+        let want: Vec<usize> =
+            seqs.iter().map(|s| seq_engine.classify(s)).collect();
+        let refs: Vec<&[f32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        assert_eq!(bat_engine.classify_batch(&refs), want);
+        assert_eq!(bat_engine.batch_slots(), 3);
+    }
+
+    #[test]
+    fn classify_batch_rejects_ragged_and_accepts_empty() {
+        let mut e = toy_engine(true);
+        assert!(e.classify_batch(&[]).is_empty());
+        let (a, b) = (vec![0.5f32; 8], vec![0.5f32; 12]);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                e.classify_batch(&[&a, &b])
+            }),
+        );
+        assert!(result.is_err(), "ragged batch must be rejected");
     }
 
     #[test]

@@ -40,11 +40,13 @@ use crate::coordinator::metrics::LatencyRecorder;
 pub trait Backend {
     fn name(&self) -> &str;
     /// Classify a batch of sequences. The default serving contract is
-    /// **ragged** — sequences may differ in length, and the golden and
-    /// mixed-signal backends process them per-sequence. Backends
-    /// compiled for one batch shape (PJRT) must be served with
+    /// **ragged** — sequences may differ in length: the golden backend
+    /// processes them per-sequence and the mixed-signal backend groups
+    /// them by length for its lockstep batch path. Backends compiled
+    /// for one batch shape (PJRT) must be served with
     /// [`BatchPolicy::bucketed`], which guarantees uniform-length
-    /// batches at the leader.
+    /// batches at the leader; the mixed-signal backend is fastest under
+    /// the same policy (one lockstep group per batch).
     fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize>;
 }
 

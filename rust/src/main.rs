@@ -4,7 +4,8 @@
 //!   info                      system + config summary
 //!   serve                     batched serving loop over synthMNIST load
 //!   plan                      print the layer→core mapping plan
-//!   bench                     recorded perf baseline → BENCH_pr3.json
+//!   bench                     recorded perf baseline → BENCH_pr4.json
+//!                             (--check gates on regressions vs --baseline)
 //!   adc                       ADC transfer characterization (Fig 3C)
 //!   trace                     software vs mixed-signal traces (Fig 4)
 //!   energy                    energy report (§4.2)
@@ -122,16 +123,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 CircuitConfig::default(),
                 planned,
             )?;
-            let (used, total) = plan.occupancy();
+            let (used, total) = plan.occupancy_at(serve.max_batch);
             println!(
-                "mapping: {} core(s) of {}x{}, occupancy {:.1}% \
-                 (`minimalist plan` prints the full placement)",
+                "mapping: {} core(s) of {}x{}, {} lockstep slot(s)/core at \
+                 max batch, occupancy {:.1}% \
+                 (`minimalist plan --slots N` prints the full placement)",
                 plan.n_cores,
                 plan.geometry.rows,
                 plan.geometry.cols,
+                serve.max_batch,
                 100.0 * used as f64 / total.max(1) as f64
             );
-            Server::spawn_sharded(factory, policy, serve.workers)
+            // uniform-length batches feed the engine's lockstep path as
+            // one group — the fast configuration for this backend
+            Server::spawn_sharded(factory, policy.bucketed(), serve.workers)
         }
         other => anyhow::bail!("unknown backend '{other}' (golden|satsim)"),
     };
@@ -179,7 +184,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Print the layer→core placement for a network and geometry:
 ///   minimalist plan [--dims 100,32,10] [--rows 64] [--cols 64]
 ///                   [--max-replication N] [--max-cores N] [--weights p]
+///                   [--slots B]
 /// Without --dims, the checkpoint's (or the paper network's) dims plan.
+/// `--slots` reports the per-layer slot capacity (tiles × slots) the
+/// batched engine provisions when serving batches of that size.
 fn cmd_plan(args: &Args) -> Result<()> {
     let dims: Vec<usize> = match args.opt("dims") {
         Some(s) => s
@@ -196,24 +204,62 @@ fn cmd_plan(args: &Args) -> Result<()> {
         },
     };
     let plan = Plan::build(&dims, &mapping_from_args(args)?)?;
-    print!("{}", plan.describe());
+    print!("{}", plan.describe_at(args.get_usize("slots", 1)?));
     Ok(())
 }
 
 /// Run the recorded perf suite and write the machine-readable baseline:
-///   minimalist bench [--quick] [--out BENCH_pr3.json]
+///   minimalist bench [--quick] [--out BENCH_pr4.json]
+///                    [--check] [--baseline BENCH_pr3.json]
 /// `--quick` shrinks budgets/request counts to CI smoke-test scale.
+/// `--check` compares the fresh run against the committed baseline and
+/// exits non-zero on a hard (>25%) throughput regression; smaller
+/// drifts print `::warning::` annotations (surfaced by GitHub Actions).
 fn cmd_bench(args: &Args) -> Result<()> {
-    let opts = minimalist::bench_suite::BenchOpts { quick: args.flag("quick") };
-    let out = args.get_or("out", "BENCH_pr3.json");
+    use minimalist::bench_suite;
+    let opts = bench_suite::BenchOpts { quick: args.flag("quick") };
+    let out = args.get_or("out", "BENCH_pr4.json");
     eprintln!(
         "running bench suite ({}) ...",
         if opts.quick { "quick" } else { "full" }
     );
-    let doc = minimalist::bench_suite::run(&opts);
-    minimalist::bench_suite::print_engine_summary(&doc);
-    minimalist::bench_suite::write(out, &doc)?;
+    let doc = bench_suite::run(&opts);
+    bench_suite::print_engine_summary(&doc);
+    bench_suite::write(out, &doc)?;
     println!("wrote {out}");
+    if args.flag("check") {
+        let baseline_path = args.get_or("baseline", "BENCH_pr3.json");
+        let text = std::fs::read_to_string(baseline_path).map_err(|e| {
+            anyhow::anyhow!("reading baseline {baseline_path}: {e}")
+        })?;
+        let baseline = minimalist::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+        let outcome = bench_suite::check_against(
+            &doc,
+            &baseline,
+            bench_suite::CHECK_FAIL_FRAC,
+            bench_suite::CHECK_WARN_FRAC,
+        );
+        for n in &outcome.notes {
+            println!("bench-check: {n}");
+        }
+        for w in &outcome.warnings {
+            // GitHub Actions renders these as advisory annotations
+            println!("::warning::bench-check drift: {w}");
+        }
+        for r in &outcome.hard_regressions {
+            println!("::error::bench-check regression: {r}");
+        }
+        if !outcome.passed() {
+            anyhow::bail!(
+                "bench regression gate failed: {} metric(s) dropped more \
+                 than {:.0}% vs {baseline_path}",
+                outcome.hard_regressions.len(),
+                100.0 * bench_suite::CHECK_FAIL_FRAC
+            );
+        }
+        println!("bench-check: OK vs {baseline_path}");
+    }
     Ok(())
 }
 

@@ -243,6 +243,16 @@ impl Plan {
     /// Synapse sites occupied vs provisioned (utilization metric).
     /// Replicated rows count as occupied — they hold real charge.
     pub fn occupancy(&self) -> (usize, usize) {
+        self.occupancy_at(1)
+    }
+
+    /// Occupancy with `slots` lockstep batch slots provisioned per core
+    /// (clamped to ≥ 1): the batched engine multiplies every column's
+    /// held state by the slot count, so both occupied and provisioned
+    /// state-slot counts scale by `slots` — the numbers the engine
+    /// actually executes when serving batches of that size.
+    pub fn occupancy_at(&self, slots: usize) -> (usize, usize) {
+        let slots = slots.max(1);
         let used: usize = self
             .layers
             .iter()
@@ -253,28 +263,51 @@ impl Plan {
             })
             .sum();
         let total = self.n_cores * self.geometry.rows * self.geometry.cols;
-        (used, total)
+        (used * slots, total * slots)
     }
 
     /// Human-readable rendering for the CLI (`minimalist plan`).
     pub fn describe(&self) -> String {
+        self.describe_at(1)
+    }
+
+    /// [`Plan::describe`] for an engine provisioned with `slots`
+    /// lockstep batch slots per core: reports, per layer, the slot
+    /// capacity `tiles × slots` — the analog state slots the batched
+    /// engine holds for that layer, i.e. `slots` concurrent sequences,
+    /// each occupying one slot on every tile of the layer.
+    pub fn describe_at(&self, slots: usize) -> String {
         use std::fmt::Write as _;
-        let (used, total) = self.occupancy();
+        let slots = slots.max(1);
+        let (used, total) = self.occupancy_at(slots);
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "mapping plan: {} layer(s) -> {} core(s) of {}x{}, occupancy {:.1}%",
+            "mapping plan: {} layer(s) -> {} core(s) of {}x{}, \
+             {} lockstep slot(s)/core, occupancy {:.1}%",
             self.layers.len(),
             self.n_cores,
             self.geometry.rows,
             self.geometry.cols,
+            slots,
             100.0 * used as f64 / total.max(1) as f64
         );
         for lp in &self.layers {
             let _ = writeln!(
                 s,
-                "  layer {}: {}->{}  {} row-tile(s) x {} col-tile(s), replication {}",
-                lp.layer, lp.n_in, lp.n_out, lp.row_tiles, lp.col_tiles, lp.replication
+                "  layer {}: {}->{}  {} row-tile(s) x {} col-tile(s), \
+                 replication {}, slot capacity {} x {} = {} \
+                 ({} concurrent seq)",
+                lp.layer,
+                lp.n_in,
+                lp.n_out,
+                lp.row_tiles,
+                lp.col_tiles,
+                lp.replication,
+                lp.tiles.len(),
+                slots,
+                lp.tiles.len() * slots,
+                slots
             );
             for t in &lp.tiles {
                 let _ = writeln!(
@@ -432,5 +465,26 @@ mod tests {
             assert!(text.contains(&format!("core {:3}", t.core)), "{text}");
         }
         assert!(text.contains("owner"));
+    }
+
+    #[test]
+    fn slot_capacity_reporting_scales_with_slots() {
+        let p = build(&[100, 40], 64, 32);
+        // 2 row tiles x 2 col tiles = 4 tiles on layer 0
+        assert_eq!(p.layers[0].tiles.len(), 4);
+        let (u1, t1) = p.occupancy_at(1);
+        assert_eq!((u1, t1), p.occupancy());
+        let (used8, total8) = p.occupancy_at(8);
+        assert_eq!((used8, total8), (u1 * 8, t1 * 8));
+        // slots = 0 clamps to 1 (a core always holds at least one slot)
+        assert_eq!(p.occupancy_at(0), (u1, t1));
+        let text = p.describe_at(8);
+        assert!(text.contains("8 lockstep slot(s)/core"), "{text}");
+        assert!(
+            text.contains("slot capacity 4 x 8 = 32 (8 concurrent seq)"),
+            "{text}"
+        );
+        // describe() stays the slots = 1 rendering
+        assert!(p.describe().contains("1 lockstep slot(s)/core"));
     }
 }

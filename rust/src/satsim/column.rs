@@ -47,6 +47,59 @@ pub struct ColumnStep {
     pub y: bool,
 }
 
+/// Parked analog state of one lockstep batch slot — everything a
+/// concurrently-held sequence owns on this column, struct-of-arrays
+/// across the column's capacitors. The *bound* slot's state lives in the
+/// column's working fields; [`Column::bind_slot`] exchanges slots by
+/// `mem::swap` of the vectors (pointer swaps — no copying, no allocation
+/// in the steady state). The capacitor array itself (mismatch draws,
+/// noise aggregates, the ADC) is shared hardware: slots only multiply
+/// the held *state*, modelling a core that time-multiplexes B concurrent
+/// sequences across its clock phases.
+#[derive(Debug, Clone)]
+struct ColumnSlot {
+    pair_v: Vec<f64>,
+    z_v: Vec<f64>,
+    h_sel: Vec<bool>,
+    idx_h: Vec<usize>,
+    /// In-flight free-cap list of a two-phase step (between
+    /// `phase_share` and `phase_update` of *this* slot, other slots may
+    /// run their own phases — the list must park with the slot).
+    idx_free: Vec<usize>,
+    v_line_htilde: f64,
+    v_line_z: f64,
+    v_line_h: f64,
+}
+
+impl ColumnSlot {
+    fn blank(n: usize, v_0: f64) -> ColumnSlot {
+        ColumnSlot {
+            pair_v: vec![v_0; 2 * n],
+            z_v: vec![v_0; n],
+            h_sel: vec![false; n],
+            idx_h: (0..n).map(|i| 2 * i).collect(),
+            idx_free: Vec::with_capacity(n),
+            v_line_htilde: v_0,
+            v_line_z: v_0,
+            v_line_h: v_0,
+        }
+    }
+
+    fn reset(&mut self, v_0: f64) {
+        self.pair_v.fill(v_0);
+        self.z_v.fill(v_0);
+        self.h_sel.fill(false);
+        self.idx_h.clear();
+        for i in 0..self.h_sel.len() {
+            self.idx_h.push(2 * i);
+        }
+        self.idx_free.clear();
+        self.v_line_htilde = v_0;
+        self.v_line_z = v_0;
+        self.v_line_h = v_0;
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Column {
     pub cfg_col: ColumnConfig,
@@ -75,6 +128,11 @@ pub struct Column {
     agg_shift_pair: f64,
     agg_sigma_z: f64,
     agg_shift_z: f64,
+    /// Parked per-slot state (lockstep batching). `slots[bound]` holds a
+    /// placeholder while that slot's real state sits in the working
+    /// fields above.
+    slots: Vec<ColumnSlot>,
+    bound: usize,
 }
 
 impl Column {
@@ -109,11 +167,59 @@ impl Column {
             agg_shift_pair,
             agg_sigma_z,
             agg_shift_z,
+            slots: vec![ColumnSlot::blank(n, cfg.v_0)],
+            bound: 0,
         }
     }
 
     pub fn rows(&self) -> usize {
         self.h_sel.len()
+    }
+
+    /// Number of lockstep batch slots this column holds state for.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Provision `n` batch slots (clamped to ≥ 1) and reset them all —
+    /// a batch boundary. Allocation happens here, never in `bind_slot`.
+    pub fn set_slots(&mut self, n: usize, cfg: &CircuitConfig) {
+        let n = n.max(1);
+        let rows = self.rows();
+        let v_0 = cfg.v_0;
+        self.slots.resize_with(n, || ColumnSlot::blank(rows, v_0));
+        self.bound = 0;
+        self.reset(cfg);
+    }
+
+    /// Make batch slot `slot` the working state: park the currently
+    /// bound slot and swap `slot`'s vectors in. Pure pointer swaps — the
+    /// steady-state batched step allocates nothing here.
+    pub fn bind_slot(&mut self, slot: usize) {
+        assert!(
+            slot < self.slots.len(),
+            "slot {slot} out of range ({} provisioned)",
+            self.slots.len()
+        );
+        if slot == self.bound {
+            return;
+        }
+        let prev = self.bound;
+        self.swap_slot(prev);
+        self.swap_slot(slot);
+        self.bound = slot;
+    }
+
+    fn swap_slot(&mut self, s: usize) {
+        let st = &mut self.slots[s];
+        std::mem::swap(&mut self.pair_bank.v, &mut st.pair_v);
+        std::mem::swap(&mut self.z_bank.v, &mut st.z_v);
+        std::mem::swap(&mut self.h_sel, &mut st.h_sel);
+        std::mem::swap(&mut self.idx_h, &mut st.idx_h);
+        std::mem::swap(&mut self.idx_free, &mut st.idx_free);
+        std::mem::swap(&mut self.v_line_htilde, &mut st.v_line_htilde);
+        std::mem::swap(&mut self.v_line_z, &mut st.v_line_z);
+        std::mem::swap(&mut self.v_line_h, &mut st.v_line_h);
     }
 
     /// Current hidden-state voltage (capacitance-weighted over the h
@@ -122,7 +228,7 @@ impl Column {
         self.pair_bank.weighted_mean(&self.idx_h)
     }
 
-    /// Reset the state caps (and lines) to V_0.
+    /// Reset the state caps (and lines) of **every** slot to V_0.
     pub fn reset(&mut self, cfg: &CircuitConfig) {
         for v in self.pair_bank.v.iter_mut() {
             *v = cfg.v_0;
@@ -137,6 +243,10 @@ impl Column {
             *s = false;
         }
         self.rebuild_idx_h();
+        self.idx_free.clear();
+        for slot in self.slots.iter_mut() {
+            slot.reset(cfg.v_0);
+        }
     }
 
     /// Keep `idx_h` in sync with `h_sel` (it doubles as the index list
@@ -463,6 +573,76 @@ mod tests {
             "v_h {} expect {expect} (k={k})",
             out.v_h
         );
+    }
+
+    #[test]
+    fn slots_hold_independent_state_and_swap_cleanly() {
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        col.set_slots(2, &cfg);
+        assert_eq!(col.n_slots(), 2);
+        let mut meter = EnergyMeter::new();
+        // slot 0 sees active inputs and moves; slot 1 sees silence
+        col.bind_slot(0);
+        let s0 = col.step(&vec![1.0; n], &cfg, &mut rng, &mut meter);
+        col.bind_slot(1);
+        let s1 = col.step(&vec![0.0; n], &cfg, &mut rng, &mut meter);
+        assert!(s0.v_h > cfg.v_0, "driven slot must move off V_0");
+        assert!(
+            (s1.v_h - cfg.v_0).abs() < 1e-9,
+            "silent slot must stay at V_0, got {}",
+            s1.v_h
+        );
+        // rebinding restores each slot's state (v_h() re-averages the
+        // bank, so allow f64 summation rounding)
+        col.bind_slot(0);
+        assert!((col.v_h() - s0.v_h).abs() < 1e-12);
+        col.bind_slot(1);
+        assert!((col.v_h() - s1.v_h).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slot_zero_of_multi_slot_column_matches_single_slot_run() {
+        // Interleaving another slot's steps must not perturb slot 0 —
+        // the state swap has to be exact, phases included. Same rng
+        // stream drives both columns' slot-0 steps; the multi-slot
+        // column's slot-1 steps draw from a separate stream, as the
+        // core's per-slot streams do.
+        let n = 10;
+        let (mut a, cfg, mut rng_a) = mk_col(n, 3, 1, false);
+        let (mut b, _, mut rng_b) = mk_col(n, 3, 1, false);
+        b.set_slots(3, &cfg);
+        let mut rng_b1 = Rng::new(777);
+        let (mut ma, mut mb) = (EnergyMeter::new(), EnergyMeter::new());
+        for t in 0..20 {
+            let x: Vec<f64> =
+                (0..n).map(|i| ((t + i) % 3 == 0) as u8 as f64).collect();
+            let y: Vec<f64> = (0..n).map(|i| ((t + i) % 2) as f64).collect();
+            let sa = a.step(&x, &cfg, &mut rng_a, &mut ma);
+            b.bind_slot(1);
+            b.step(&y, &cfg, &mut rng_b1, &mut mb);
+            b.bind_slot(0);
+            let sb = b.step(&x, &cfg, &mut rng_b, &mut mb);
+            assert_eq!(sa, sb, "slot 0 diverged at step {t}");
+        }
+    }
+
+    #[test]
+    fn set_slots_resets_every_slot() {
+        let n = 6;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        col.set_slots(2, &cfg);
+        let mut meter = EnergyMeter::new();
+        col.bind_slot(1);
+        col.step(&vec![1.0; n], &cfg, &mut rng, &mut meter);
+        assert!(col.v_h() > cfg.v_0);
+        // re-provisioning (same count) is a batch boundary: all slots
+        // return to V_0 and slot 0 is bound again
+        col.set_slots(2, &cfg);
+        for s in 0..2 {
+            col.bind_slot(s);
+            assert!((col.v_h() - cfg.v_0).abs() < 1e-12, "slot {s} not reset");
+        }
     }
 
     #[test]

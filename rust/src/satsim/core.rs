@@ -22,16 +22,24 @@ pub struct Core {
     pub active_rows: usize,
     pub columns: Vec<Column>,
     pub meter: EnergyMeter,
-    rng: Rng,
+    /// Per-slot master noise streams: slot `s` drives sequence `s` of a
+    /// lockstep batch. Every slot starts as a clone of `rng0`, so each
+    /// slot replays exactly the noise realization a fresh sequential run
+    /// sees — the seeding convention that makes batched and sequential
+    /// execution bit-identical (see `MixedSignalEngine::classify_batch`).
+    slot_rngs: Vec<Rng>,
     /// RNG state at construction: `reset()` restores it so that a given
     /// seed reproduces a trial exactly (deterministic simulation; fresh
     /// noise across trials is obtained by changing the config seed).
     rng0: Rng,
-    /// Scratch output buffer (events), reused across steps.
+    /// Scratch output buffer (events) of the most recent `step_finish`,
+    /// whichever slot it served; reused across steps.
     out_events: Vec<bool>,
-    /// Per-column noise streams of an in-flight two-phase step (forked
-    /// in `step_partial`, consumed by `step_finish`).
-    col_rngs: Vec<Rng>,
+    /// Per-slot, per-column noise streams of in-flight two-phase steps
+    /// (forked in `step_partial_slot`, consumed by `step_finish_slot`) —
+    /// per slot so the batched engine can interleave the phases of
+    /// several slots across the tiles of a row-split layer.
+    col_rngs: Vec<Vec<Rng>>,
     /// Scratch partial-share buffer filled by `step_partial` — owned by
     /// the core so the steady-state step makes no heap allocation.
     partials: Vec<(f64, f64)>,
@@ -80,9 +88,9 @@ impl Core {
             columns,
             meter: EnergyMeter::new(),
             rng0: rng.clone(),
-            rng,
+            slot_rngs: vec![rng],
             out_events: vec![false; n_cols],
-            col_rngs: Vec::with_capacity(n_cols),
+            col_rngs: vec![Vec::with_capacity(n_cols)],
             partials: Vec::with_capacity(n_cols),
         }
     }
@@ -91,30 +99,71 @@ impl Core {
         self.columns.len()
     }
 
-    /// Reset all column states to V_0 (sequence boundary) and restore the
-    /// noise stream, making per-sequence simulation deterministic.
+    /// Number of lockstep batch slots provisioned on this core.
+    pub fn n_slots(&self) -> usize {
+        self.slot_rngs.len()
+    }
+
+    /// Provision `n` lockstep batch slots (clamped to ≥ 1) across every
+    /// column and reset them all — a batch boundary. Allocation happens
+    /// here, never in the per-slot steady-state step.
+    pub fn set_slots(&mut self, n: usize, cfg: &CircuitConfig) {
+        let n = n.max(1);
+        for c in self.columns.iter_mut() {
+            c.set_slots(n, cfg);
+        }
+        let n_cols = self.columns.len();
+        let rng0 = self.rng0.clone();
+        self.slot_rngs.clear();
+        self.slot_rngs.resize_with(n, || rng0.clone());
+        self.col_rngs.clear();
+        self.col_rngs.resize_with(n, || Vec::with_capacity(n_cols));
+    }
+
+    /// Reset all column states (every slot) to V_0 (sequence boundary)
+    /// and restore each slot's noise stream to the construction state,
+    /// making per-sequence simulation deterministic — and every slot's
+    /// stream identical to a fresh sequential run's.
     pub fn reset(&mut self, cfg: &CircuitConfig) {
         for c in self.columns.iter_mut() {
             c.reset(cfg);
         }
-        self.rng = self.rng0.clone();
-        self.col_rngs.clear();
+        for r in self.slot_rngs.iter_mut() {
+            *r = self.rng0.clone();
+        }
+        for cr in self.col_rngs.iter_mut() {
+            cr.clear();
+        }
     }
 
-    /// One time step over the full array. `x` has `active_rows` entries.
-    /// Per-column observables are written into `out` (a reusable buffer
-    /// — the steady-state step allocates nothing); binary events are
-    /// also kept in an internal buffer accessible via `last_events`.
+    /// One time step over the full array on batch slot 0. `x` has
+    /// `active_rows` entries. Per-column observables are written into
+    /// `out` (a reusable buffer — the steady-state step allocates
+    /// nothing); binary events are also kept in an internal buffer
+    /// accessible via `last_events`.
     ///
     /// Equivalent (bit-for-bit, noise stream included) to
     /// `step_partial` followed by `step_finish` with the core's own
     /// partial results — the two-phase path row-split layers use.
     pub fn step(&mut self, x: &[f64], cfg: &CircuitConfig, out: &mut CoreStep) {
-        self.step_partial(x, cfg);
-        // lend the scratch partials out so `step_finish` can borrow
+        self.step_slot(0, x, cfg, out);
+    }
+
+    /// One time step of batch slot `slot` — `step` is the `slot == 0`
+    /// special case, and slot 0 of a freshly reset core is bit-identical
+    /// to the sequential path regardless of how many slots exist.
+    pub fn step_slot(
+        &mut self,
+        slot: usize,
+        x: &[f64],
+        cfg: &CircuitConfig,
+        out: &mut CoreStep,
+    ) {
+        self.step_partial_slot(slot, x, cfg);
+        // lend the scratch partials out so `step_finish_slot` can borrow
         // `self` mutably — a pointer swap, not an allocation
         let partials = std::mem::take(&mut self.partials);
-        self.step_finish(&partials, cfg, out);
+        self.step_finish_slot(slot, &partials, cfg, out);
         self.partials = partials;
     }
 
@@ -126,14 +175,30 @@ impl Core {
     /// [`Core::step_finish`] (owner tile) or
     /// [`Core::finish_partial_only`] (non-owner tiles).
     pub fn step_partial(&mut self, x: &[f64], cfg: &CircuitConfig) -> &[(f64, f64)] {
+        self.step_partial_slot(0, x, cfg)
+    }
+
+    /// [`Core::step_partial`] on batch slot `slot`. In-flight per-column
+    /// noise streams are kept per slot, so the phases of different slots
+    /// may interleave freely between `step_partial_slot` and the
+    /// matching `step_finish_slot`; the shared `partials` scratch is
+    /// overwritten by the next call, whatever its slot — consume it
+    /// before issuing another partial.
+    pub fn step_partial_slot(
+        &mut self,
+        slot: usize,
+        x: &[f64],
+        cfg: &CircuitConfig,
+    ) -> &[(f64, f64)] {
         assert_eq!(x.len(), self.active_rows);
-        self.col_rngs.clear();
+        self.col_rngs[slot].clear();
         self.partials.clear();
         for (j, col) in self.columns.iter_mut().enumerate() {
-            let mut col_rng = self.rng.fork(j as u64);
+            col.bind_slot(slot);
+            let mut col_rng = self.slot_rngs[slot].fork(j as u64);
             self.partials
                 .push(col.phase_share(x, cfg, &mut col_rng, &mut self.meter));
-            self.col_rngs.push(col_rng);
+            self.col_rngs[slot].push(col_rng);
         }
         &self.partials
     }
@@ -149,21 +214,40 @@ impl Core {
         cfg: &CircuitConfig,
         out: &mut CoreStep,
     ) {
+        self.step_finish_slot(0, combined, cfg, out);
+    }
+
+    /// [`Core::step_finish`] on batch slot `slot`, consuming the noise
+    /// streams its `step_partial_slot` forked.
+    pub fn step_finish_slot(
+        &mut self,
+        slot: usize,
+        combined: &[(f64, f64)],
+        cfg: &CircuitConfig,
+        out: &mut CoreStep,
+    ) {
         assert_eq!(combined.len(), self.columns.len());
         assert_eq!(
-            self.col_rngs.len(),
+            self.col_rngs[slot].len(),
             self.columns.len(),
-            "step_finish without a preceding step_partial"
+            "step_finish without a preceding step_partial (slot {slot})"
         );
         out.steps.clear();
         for (j, col) in self.columns.iter_mut().enumerate() {
+            col.bind_slot(slot);
             let (v_htilde, v_z) = combined[j];
             col.override_share(v_htilde, v_z);
-            let s = col.phase_update(v_htilde, v_z, cfg, &mut self.col_rngs[j], &mut self.meter);
+            let s = col.phase_update(
+                v_htilde,
+                v_z,
+                cfg,
+                &mut self.col_rngs[slot][j],
+                &mut self.meter,
+            );
             self.out_events[j] = s.y;
             out.steps.push(s);
         }
-        self.col_rngs.clear();
+        self.col_rngs[slot].clear();
         self.meter.step_done();
     }
 
@@ -171,15 +255,23 @@ impl Core {
     /// contribute partial shares — no gate, swap, or comparator happens
     /// here. Accounts the step and discards the pending noise streams.
     pub fn finish_partial_only(&mut self) {
-        self.col_rngs.clear();
+        self.finish_partial_only_slot(0);
+    }
+
+    /// [`Core::finish_partial_only`] for batch slot `slot`.
+    pub fn finish_partial_only_slot(&mut self, slot: usize) {
+        self.col_rngs[slot].clear();
         self.meter.step_done();
     }
 
+    /// Events of the most recent `step_finish`, whichever slot ran last.
     pub fn last_events(&self) -> &[bool] {
         &self.out_events
     }
 
-    /// Analog hidden-state voltages of all columns (readout path).
+    /// Analog hidden-state voltages of all columns — the slot each
+    /// column currently has bound (diagnostic; after a sequential run or
+    /// a single-slot batch this is slot 0).
     pub fn state_voltages(&self) -> Vec<f64> {
         self.columns.iter().map(|c| c.v_h()).collect()
     }
@@ -273,6 +365,79 @@ mod tests {
         core.finish_partial_only();
         assert_eq!(core.meter.steps, 1);
         assert_eq!(core.meter.adc_conversions, 0); // no gate ran here
+    }
+
+    #[test]
+    fn batch_slots_replay_the_sequential_noise_stream() {
+        // The seeding convention: every slot's stream is a clone of the
+        // construction stream, so a lockstep batch fed the same inputs
+        // on every slot produces the sequential run's outputs on every
+        // slot — under full noise, not just ideally.
+        let cfg = CircuitConfig::default();
+        let mk = || {
+            let col_cfgs: Vec<ColumnConfig> = (0..5)
+                .map(|j| ColumnConfig {
+                    w_h: (0..12).map(|i| W2::new(((i + j) % 4) as u8)).collect(),
+                    w_z: (0..12).map(|i| W2::new(((i + 2 * j) % 4) as u8)).collect(),
+                    slope_m: 6,
+                    offset_code: OFFSET_NEUTRAL,
+                    v_theta: cfg.v_0,
+                })
+                .collect();
+            Core::new(CoreGeometry { rows: 12, cols: 8 }, col_cfgs, &cfg, 3)
+        };
+        let mut seq = mk();
+        let mut bat = mk();
+        bat.set_slots(3, &cfg);
+        let (mut so, mut bo) = (CoreStep::default(), CoreStep::default());
+        for t in 0..15 {
+            let x: Vec<f64> = (0..12).map(|i| ((t + i) % 2) as f64).collect();
+            seq.step(&x, &cfg, &mut so);
+            for s in 0..3 {
+                bat.step_slot(s, &x, &cfg, &mut bo);
+                for (p, q) in so.steps.iter().zip(bo.steps.iter()) {
+                    assert_eq!(p, q, "slot {s} diverged at step {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slots_carry_distinct_sequences_without_crosstalk() {
+        // all-positive weights so the driven slot visibly moves off V_0
+        let cfg = CircuitConfig::ideal();
+        let col_cfgs: Vec<ColumnConfig> = (0..4)
+            .map(|_| ColumnConfig {
+                w_h: vec![W2::new(3); 8],
+                w_z: vec![W2::new(3); 8],
+                slope_m: 4,
+                offset_code: OFFSET_NEUTRAL,
+                v_theta: cfg.v_0,
+            })
+            .collect();
+        let mut core =
+            Core::new(CoreGeometry { rows: 8, cols: 4 }, col_cfgs, &cfg, 7);
+        core.set_slots(2, &cfg);
+        let mut out = CoreStep::default();
+        let active = vec![1.0; 8];
+        let silent = vec![0.0; 8];
+        for _ in 0..4 {
+            core.step_slot(0, &active, &cfg, &mut out);
+            core.step_slot(1, &silent, &cfg, &mut out);
+        }
+        // slot 1 (bound last) stayed at V_0; slot 0's state moved
+        for v in core.state_voltages() {
+            assert!((v - cfg.v_0).abs() < 1e-9, "silent slot moved: {v}");
+        }
+        for c in core.columns.iter_mut() {
+            c.bind_slot(0);
+        }
+        assert!(
+            core.state_voltages().iter().any(|v| (v - cfg.v_0).abs() > 1e-3),
+            "driven slot never moved"
+        );
+        // 2 slots × 4 lockstep steps = 8 accounted sequence-steps
+        assert_eq!(core.meter.steps, 8);
     }
 
     #[test]

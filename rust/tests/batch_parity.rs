@@ -1,0 +1,240 @@
+//! Batched-vs-sequential parity (PR 4 tentpole).
+//!
+//! The lockstep batch path must be **bit-identical** to sequential
+//! serving: `classify_batch` over B sequences equals B sequential
+//! `classify` calls, for the golden and the mixed-signal backends, under
+//! full circuit noise. The per-slot RNG convention (every slot's noise
+//! stream clones the core's construction stream — exactly what a fresh
+//! sequential run replays) is what makes this exact rather than
+//! statistical.
+//!
+//! Also here: the ragged-traffic end-to-end — a server with
+//! `BatchPolicy::bucketed()` must only ever hand uniform-length batches
+//! to the batched engine (asserted by a wrapper backend), and every
+//! served label must equal the direct sequential reference.
+
+use std::time::Duration;
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::{
+    Backend, BatchPolicy, GoldenBackend, MixedSignalBackend,
+    MixedSignalEngine, Server,
+};
+use minimalist::nn::{synthetic_network, GoldenNetwork};
+
+/// Deterministic test load: `b` sequences of `t_len` frames of `d_in`.
+fn make_seqs(b: usize, t_len: usize, d_in: usize, salt: usize) -> Vec<Vec<f32>> {
+    (0..b)
+        .map(|s| {
+            (0..t_len * d_in)
+                .map(|t| (((t + 1) * (s + 2) * (salt + 3)) % 7) as f32 / 6.0)
+                .collect()
+        })
+        .collect()
+}
+
+/// Classify `seqs` sequentially and batched on two same-seed engines,
+/// asserting label parity AND **bit-exact** logits parity per slot —
+/// argmax alone could mask a small numeric divergence between the
+/// sequential and lockstep traversals; exact f32 equality cannot.
+fn assert_bitwise_parity(
+    seq_engine: &mut MixedSignalEngine,
+    bat_engine: &mut MixedSignalEngine,
+    seqs: &[Vec<f32>],
+    ctx: &str,
+) {
+    let mut want_labels = Vec::new();
+    let mut want_logits = Vec::new();
+    for s in seqs {
+        want_labels.push(seq_engine.classify(s));
+        want_logits.push(seq_engine.logits());
+    }
+    let refs: Vec<&[f32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    assert_eq!(
+        bat_engine.classify_batch(&refs),
+        want_labels,
+        "{ctx}: lockstep labels diverged from sequential"
+    );
+    for (slot, want) in want_logits.iter().enumerate() {
+        assert_eq!(
+            &bat_engine.logits_slot(slot),
+            want,
+            "{ctx}: slot {slot} logits are not bit-identical to sequential"
+        );
+    }
+}
+
+#[test]
+fn engine_batch_parity_unsplit_noisy() {
+    // replicated narrow input layer (1 -> 24) under full noise,
+    // B ∈ {1, 3, 8}
+    for &b in &[1usize, 3, 8] {
+        let nw = synthetic_network(&[1, 24, 10], 17);
+        let mut seq_engine = MixedSignalEngine::new(
+            nw,
+            CircuitConfig::default(),
+            CoreGeometry { rows: 32, cols: 32 },
+        )
+        .unwrap();
+        let mut bat_engine = seq_engine.replicate().unwrap();
+        let seqs = make_seqs(b, 20, 1, b);
+        assert_bitwise_parity(
+            &mut seq_engine,
+            &mut bat_engine,
+            &seqs,
+            &format!("unsplit B={b}"),
+        );
+    }
+}
+
+#[test]
+fn engine_batch_parity_row_split_noisy() {
+    // 40 inputs on 32-row cores -> 2 row tiles: the batched partial-sum
+    // combine path, interleaving every slot's phases across tiles
+    for &b in &[1usize, 3, 8] {
+        let nw = synthetic_network(&[40, 8], 5);
+        let mut seq_engine = MixedSignalEngine::new(
+            nw,
+            CircuitConfig::default(),
+            CoreGeometry { rows: 32, cols: 32 },
+        )
+        .unwrap();
+        assert!(seq_engine.plan.layers[0].is_row_split());
+        let mut bat_engine = seq_engine.replicate().unwrap();
+        let seqs = make_seqs(b, 6, 40, b);
+        assert_bitwise_parity(
+            &mut seq_engine,
+            &mut bat_engine,
+            &seqs,
+            &format!("row-split B={b}"),
+        );
+    }
+}
+
+#[test]
+fn engine_batch_reuse_stays_consistent() {
+    // growing, shrinking, and reusing the slot provisioning must not
+    // leak state between batches
+    let nw = synthetic_network(&[1, 16, 10], 23);
+    let mut seq_engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let mut bat_engine = seq_engine.replicate().unwrap();
+    for &b in &[3usize, 8, 2, 8, 1] {
+        let seqs = make_seqs(b, 12, 1, b);
+        let want: Vec<usize> =
+            seqs.iter().map(|s| seq_engine.classify(s)).collect();
+        let refs: Vec<&[f32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        assert_eq!(bat_engine.classify_batch(&refs), want, "reuse at B={b}");
+    }
+}
+
+#[test]
+fn golden_backend_batch_matches_sequential() {
+    let nw = synthetic_network(&[1, 12, 10], 9);
+    let mut a = GoldenBackend::new(GoldenNetwork::new(nw.clone()));
+    let mut b = GoldenBackend::new(GoldenNetwork::new(nw));
+    for &n in &[1usize, 3, 8] {
+        let seqs = make_seqs(n, 16, 1, n);
+        let want: Vec<usize> = seqs
+            .iter()
+            .map(|s| a.classify_batch(std::slice::from_ref(s))[0])
+            .collect();
+        assert_eq!(b.classify_batch(&seqs), want, "B={n}");
+    }
+}
+
+#[test]
+fn mixed_signal_backend_batch_matches_sequential_even_ragged() {
+    let nw = synthetic_network(&[1, 16, 10], 31);
+    let engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let mut reference = MixedSignalBackend::new(engine.replicate().unwrap());
+    let mut backend = MixedSignalBackend::new(engine);
+    // ragged: three different lengths, interleaved
+    let seqs: Vec<Vec<f32>> = [16usize, 24, 16, 8, 24, 8]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            (0..n).map(|t| (((t + 2) * (i + 3)) % 5) as f32 / 4.0).collect()
+        })
+        .collect();
+    let want: Vec<usize> = seqs
+        .iter()
+        .map(|s| reference.classify_batch(std::slice::from_ref(s))[0])
+        .collect();
+    assert_eq!(backend.classify_batch(&seqs), want);
+}
+
+/// Wrapper proving what the server hands the batched engine: panics on
+/// any ragged batch (surfacing as `BackendPanicked` error responses),
+/// delegates to the real mixed-signal backend otherwise.
+struct AssertUniform(MixedSignalBackend);
+
+impl Backend for AssertUniform {
+    fn name(&self) -> &str {
+        "assert-uniform-satsim"
+    }
+
+    fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+        let len0 = seqs.first().map(|s| s.len()).unwrap_or(0);
+        assert!(
+            seqs.iter().all(|s| s.len() == len0),
+            "bucketed policy leaked a ragged batch to the batched engine"
+        );
+        self.0.classify_batch(seqs)
+    }
+}
+
+#[test]
+fn bucketed_server_feeds_uniform_batches_and_matches_sequential() {
+    let nw = synthetic_network(&[1, 12, 10], 41);
+    let template = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let mut reference = template.replicate().unwrap();
+    let engine = template.replicate().unwrap();
+    // ragged traffic: two sequence lengths interleaved within one batch
+    // window, so an unbucketed drain would be ragged
+    let seqs: Vec<Vec<f32>> = (0..12)
+        .map(|i| {
+            let n = if i % 2 == 0 { 16 } else { 24 };
+            (0..n).map(|t| (((t + 1) * (i + 2)) % 7) as f32 / 6.0).collect()
+        })
+        .collect();
+    let want: Vec<usize> = seqs.iter().map(|s| reference.classify(s)).collect();
+    let server = Server::spawn_with(
+        move || {
+            Box::new(AssertUniform(MixedSignalBackend::new(engine))) as _
+        },
+        BatchPolicy::new(4, Duration::from_millis(2)).bucketed(),
+    );
+    let client = server.client();
+    let rxs: Vec<_> = seqs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| client.submit(i as u64, s.clone()))
+        .collect();
+    for (rx, want) in rxs.into_iter().zip(want) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(
+            resp.result,
+            Ok(want),
+            "ragged traffic through the bucketed batched path must serve \
+             the sequential labels"
+        );
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.items, 12);
+    assert_eq!(metrics.errors, 0);
+}

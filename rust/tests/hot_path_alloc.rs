@@ -1,8 +1,11 @@
-//! The zero-allocation invariant of the satsim hot path (PR 3 tentpole):
-//! after a warmup sequence has grown every scratch buffer to its steady
-//! state, `MixedSignalEngine::step` must perform **zero** heap
-//! allocations — for unsplit (including row-replicated) plans and for
-//! row-split plans alike.
+//! The zero-allocation invariant of the satsim hot path (PR 3 tentpole,
+//! extended to the lockstep batch path in PR 4): after a warmup sequence
+//! has grown every scratch buffer to its steady state,
+//! `MixedSignalEngine::step` **and** `MixedSignalEngine::step_batch`
+//! must perform **zero** heap allocations — for unsplit (including
+//! row-replicated) plans and for row-split plans alike. Batch
+//! boundaries (`reset_batch` with a new size) may allocate; steps may
+//! not.
 //!
 //! Mechanism: a counting `#[global_allocator]` wrapping the system
 //! allocator. Everything runs inside a single `#[test]` so no
@@ -68,6 +71,33 @@ fn assert_zero_alloc_steps(engine: &mut MixedSignalEngine, d_in: usize, label: &
     );
 }
 
+/// Same invariant for the lockstep batch path: provision `b` slots
+/// (allocation allowed here — a batch boundary), warm up, then assert
+/// zero allocations over a window of steady-state batched steps.
+fn assert_zero_alloc_batch_steps(
+    engine: &mut MixedSignalEngine,
+    d_in: usize,
+    b: usize,
+    label: &str,
+) {
+    let xs: Vec<f32> =
+        (0..b * d_in).map(|i| ((i * 5) % 7) as f32 / 6.0).collect();
+    engine.reset_batch(b);
+    for t in 0..16u32 {
+        engine.step_batch(t, &xs);
+    }
+    let before = allocations();
+    for t in 16..48u32 {
+        engine.step_batch(t, &xs);
+    }
+    let n = allocations() - before;
+    assert_eq!(
+        n, 0,
+        "{label}: {n} heap allocation(s) over 32 steady-state batched \
+         steps at B={b} (the lockstep path must be allocation-free)"
+    );
+}
+
 #[test]
 fn engine_step_is_allocation_free_after_warmup() {
     // the counter counts — construction alone must register
@@ -84,6 +114,10 @@ fn engine_step_is_allocation_free_after_warmup() {
     .unwrap();
     assert!(allocations() > base, "allocation counter is not counting");
     assert_zero_alloc_steps(&mut unsplit, 1, "unsplit/replicated");
+    // the same engine's lockstep batch path, after a B=8 batch boundary
+    assert_zero_alloc_batch_steps(&mut unsplit, 1, 8, "unsplit/replicated");
+    // and the sequential path again on the multi-slot engine (slot 0)
+    assert_zero_alloc_steps(&mut unsplit, 1, "unsplit/multi-slot seq");
 
     // row-split plan: 100 inputs on 64-row cores → 2 row tiles, the
     // weighted partial-sum combine path
@@ -96,4 +130,5 @@ fn engine_step_is_allocation_free_after_warmup() {
     .unwrap();
     assert!(split.plan.layers[0].is_row_split());
     assert_zero_alloc_steps(&mut split, 100, "row-split");
+    assert_zero_alloc_batch_steps(&mut split, 100, 4, "row-split");
 }
