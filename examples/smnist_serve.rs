@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §4, extension row): batched serving of
+//! End-to-end driver: batched serving of
 //! sequential-digit classification through the full stack — request
 //! queue → dynamic batcher → backend (PJRT-compiled JAX model, golden
 //! rust model, or the switched-capacitor simulator) — reporting

@@ -1,0 +1,171 @@
+//! Streaming end-to-end driver: sequential-digit classification with
+//! frames arriving incrementally, the way a memory-constrained edge
+//! sensor would deliver them — instead of handing the server whole
+//! sequences, each client opens a **session**, pushes pixels a chunk at
+//! a time, polls the running logits mid-sequence (watch the prediction
+//! firm up as evidence accumulates), and closes for the final label.
+//!
+//!     cargo run --release --example smnist_stream -- \
+//!         [--backend golden|satsim] [--requests 32] [--img-size 16] \
+//!         [--workers 2] [--sessions 8] [--frames-per-push 32] \
+//!         [--weights runs/hw_s0/weights.mtf]
+//!
+//! Every live session's analog state stays resident in one engine slot
+//! of its worker (capacitor voltages, swap configuration, RNG stream
+//! position), and each tick advances all sessions with pending frames
+//! through a single lockstep plan traversal. The streamed labels are
+//! bit-identical to one-shot classification of the same pixels —
+//! verified here against the golden model's direct answer.
+
+use anyhow::{bail, Result};
+use minimalist::config::{CircuitConfig, CoreGeometry, MappingConfig};
+use minimalist::coordinator::{GoldenBackend, MixedSignalBackend, StreamServer};
+use minimalist::dataset::glyphs;
+use minimalist::mapping::Plan;
+use minimalist::nn::{argmax, synthetic_network, GoldenNetwork, NetworkWeights};
+use minimalist::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let backend_kind = args.get_or("backend", "golden").to_string();
+    let n_req = args.get_usize("requests", 32)?;
+    let img = args.get_usize("img-size", 16)?;
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let sessions = args.get_usize("sessions", 8)?.max(1);
+    let chunk = args.get_usize("frames-per-push", 32)?.max(1);
+
+    let weights = match args.opt("weights") {
+        Some(p) => NetworkWeights::load(p)?,
+        None => {
+            eprintln!("note: no trained checkpoint; synthetic weights");
+            synthetic_network(&[1, 64, 64, 64, 64, 10], 7)
+        }
+    };
+    let mut golden = GoldenNetwork::new(weights.clone());
+
+    println!(
+        "== smnist_stream: backend={backend_kind}, {n_req} sessions over \
+         {workers} worker(s) × {sessions} slot(s), {chunk} frame(s)/push =="
+    );
+
+    let server = match backend_kind.as_str() {
+        "golden" => StreamServer::spawn(
+            GoldenBackend::streaming_factory(weights.clone(), sessions),
+            workers,
+            sessions,
+        ),
+        "satsim" => {
+            let planned = Plan::build(
+                &weights.dims,
+                &MappingConfig::with_geometry(CoreGeometry::default()),
+            )?;
+            let (plan, factory) = MixedSignalBackend::streaming_factory_from_plan(
+                weights.clone(),
+                CircuitConfig::default(),
+                planned,
+                sessions,
+            )?;
+            println!(
+                "mapping: {} core(s) of {}x{}, {} resident slot(s)/worker",
+                plan.n_cores, plan.geometry.rows, plan.geometry.cols, sessions
+            );
+            StreamServer::spawn(factory, workers, sessions)
+        }
+        other => bail!("unknown backend '{other}' (golden|satsim)"),
+    };
+
+    let client = server.client();
+    let samples = glyphs::make_split(n_req, img, args.get_u64("seed", 1)?);
+    let capacity = workers * sessions;
+    let (mut correct, mut agree, mut failed) = (0usize, 0usize, 0usize);
+    let mut watched = false;
+    let t0 = std::time::Instant::now();
+    for wave in samples.chunks(capacity) {
+        // open one session per sample of this wave (≤ capacity, so no
+        // Busy rejections in this driver — serve --streaming has the
+        // oversubscription knob)
+        let mut live = Vec::new();
+        for s in wave {
+            match client.open() {
+                Ok(sess) => live.push((s, sess, 0usize)),
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("open failed: {e}");
+                }
+            }
+        }
+        // frame-paced rounds: a chunk per session per round, pushed
+        // without waiting so the worker advances them in lockstep
+        let total = img * img;
+        while live.iter().any(|(_, _, cur)| *cur < total) {
+            let mut acks = Vec::with_capacity(live.len());
+            for (s, sess, cur) in live.iter_mut() {
+                if *cur >= s.pixels.len() {
+                    continue;
+                }
+                let end = (*cur + chunk).min(s.pixels.len());
+                acks.push(sess.push_frames_nowait(s.pixels[*cur..end].to_vec()));
+                *cur = end;
+            }
+            for rx in acks {
+                let _ = rx.recv();
+            }
+            // once per run, watch a prediction firm up mid-sequence
+            if !watched {
+                if let Some((s, sess, cur)) = live.first() {
+                    if *cur * 2 >= total && *cur < total {
+                        if let Ok(l) = sess.logits() {
+                            println!(
+                                "  session {} at {}/{} frames: running \
+                                 argmax={} (true label {})",
+                                sess.id,
+                                cur,
+                                total,
+                                argmax(&l),
+                                s.label
+                            );
+                            watched = true;
+                        }
+                    }
+                }
+            }
+        }
+        for (s, sess, _) in live {
+            match sess.close() {
+                Ok(label) => {
+                    correct += (label == s.label) as usize;
+                    // the streamed label equals one-shot classification
+                    if backend_kind == "golden" {
+                        agree += (label == golden.classify(&s.pixels)) as usize;
+                    }
+                }
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("close failed: {e}");
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+
+    println!("latency  : {}", metrics.summary());
+    println!(
+        "wall     : {:?} for {n_req} streamed sequences of T={} → {:.1} seq/s",
+        wall,
+        img * img,
+        n_req as f64 / wall.as_secs_f64()
+    );
+    if backend_kind == "golden" {
+        println!(
+            "parity   : {agree}/{} streamed labels equal one-shot golden \
+             classification",
+            n_req - failed
+        );
+    }
+    println!(
+        "accuracy : {correct}/{n_req} = {:.3} ({failed} failed)",
+        correct as f64 / n_req as f64
+    );
+    Ok(())
+}

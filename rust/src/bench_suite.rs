@@ -3,7 +3,7 @@
 //! `minimalist bench` (CI) or `cargo bench --bench throughput` (which
 //! appends this suite after its human-readable tables).
 //!
-//! Three kinds of numbers:
+//! Four kinds of numbers:
 //! * **engine** — raw `MixedSignalEngine::step` throughput (steps/s) on
 //!   the paper network, for an unsplit and a row-split mapping, plus an
 //!   *emulated pre-optimization baseline*: the same engine with the
@@ -17,6 +17,11 @@
 //! * **serving** — end-to-end sequences/s and latency percentiles
 //!   through the sharded coordinator, swept over worker counts (golden
 //!   backend) and core geometries (satsim backend, forcing splits).
+//! * **streaming_sweep** (schema 3) — sessions/s and per-frame push
+//!   latency percentiles through the streaming-session path at N
+//!   concurrent resident sessions on one mixed-signal worker: the
+//!   lockstep amortization measured end to end, frames arriving
+//!   incrementally.
 //!
 //! The JSON schema is versioned (`schema`); CI regenerates the file per
 //! commit, gates on regressions against the committed baseline
@@ -27,11 +32,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{CircuitConfig, CoreGeometry};
+use crate::config::{CircuitConfig, CoreGeometry, MappingConfig};
 use crate::coordinator::{
     BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+    StreamServer,
 };
 use crate::dataset::glyphs;
+use crate::mapping::Plan;
 use crate::nn::synthetic_network;
 use crate::nn::weights::NetworkWeights;
 use crate::util::bench::{bench, black_box};
@@ -293,6 +300,77 @@ fn geometry_sweep(opts: &BenchOpts) -> Json {
     ])
 }
 
+/// Streaming-session sweep on the physics backend: one worker holding
+/// N resident sessions, frames pushed one per session per round (the
+/// worker's tick advances all N through a single lockstep traversal).
+/// Reports completed sessions/s, frames/s, and the per-frame push
+/// latency percentiles — the serving numbers of `serve --streaming`.
+fn streaming_sweep(opts: &BenchOpts) -> Json {
+    let dims = [1usize, 32, 10];
+    let nw = synthetic_network(&dims, 7);
+    let geometry = CoreGeometry { rows: 32, cols: 32 };
+    let (t_len, generations) = if opts.quick { (16, 1) } else { (64, 4) };
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in &[1usize, 4, 16] {
+        let plan = Plan::build(&dims, &MappingConfig::with_geometry(geometry))
+            .expect("sweep network must map");
+        let (_, factory) = MixedSignalBackend::streaming_factory_from_plan(
+            nw.clone(),
+            CircuitConfig::default(),
+            plan,
+            n,
+        )
+        .expect("sweep network must map");
+        let server = StreamServer::spawn(factory, 1, n);
+        let client = server.client();
+        let t0 = Instant::now();
+        let mut completed = 0usize;
+        for _ in 0..generations {
+            let sessions: Vec<_> = (0..n)
+                .map(|_| client.open().expect("capacity sized to the sweep"))
+                .collect();
+            for t in 0..t_len {
+                // push without waiting so all N frames queue before the
+                // worker's tick — the lockstep measurement
+                let acks: Vec<_> = sessions
+                    .iter()
+                    .map(|s| s.push_frames_nowait(vec![((t * 5) % 7) as f32 / 6.0]))
+                    .collect();
+                for rx in acks {
+                    let _ = rx.recv();
+                }
+            }
+            for s in sessions {
+                s.close().expect("close of a live session");
+                completed += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        let pcts = m.percentiles(&[50.0, 95.0, 99.0]);
+        rows.push(Json::obj(vec![
+            ("sessions", n.into()),
+            ("sessions_per_s", (completed as f64 / wall).into()),
+            ("frames_per_s", ((completed * t_len) as f64 / wall).into()),
+            ("frame_p50_us", (pcts[0].as_micros() as f64).into()),
+            ("frame_p95_us", (pcts[1].as_micros() as f64).into()),
+            ("frame_p99_us", (pcts[2].as_micros() as f64).into()),
+            ("errors", (m.errors as f64).into()),
+        ]));
+    }
+    Json::obj(vec![
+        ("backend", "satsim".into()),
+        ("dims", dims.to_vec().into()),
+        (
+            "geometry",
+            format!("{}x{}", geometry.rows, geometry.cols).into(),
+        ),
+        ("t_len", t_len.into()),
+        ("generations", generations.into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Run the full suite and return the `BENCH_pr4.json` document.
 pub fn run(opts: &BenchOpts) -> Json {
     let paper_dims = [1usize, 64, 64, 64, 64, 10];
@@ -319,10 +397,13 @@ pub fn run(opts: &BenchOpts) -> Json {
     let serving = Json::obj(vec![
         ("worker_sweep", worker_sweep(&nw, opts)),
         ("geometry_sweep", geometry_sweep(opts)),
+        ("streaming_sweep", streaming_sweep(opts)),
     ]);
     Json::obj(vec![
         ("bench", "pr4".into()),
-        ("schema", 2usize.into()),
+        // schema 3: adds serving.streaming_sweep (sessions/s + per-frame
+        // latency percentiles at N concurrent resident sessions)
+        ("schema", 3usize.into()),
         ("status", "measured".into()),
         ("quick", opts.quick.into()),
         ("engine", engine),
@@ -546,7 +627,7 @@ mod tests {
         let opts = BenchOpts { quick: true };
         let doc = run(&opts);
         assert_eq!(doc.req_str("status").unwrap(), "measured");
-        assert_eq!(doc.req_f64("schema").unwrap() as u64, 2);
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 3);
         let engine = doc.req("engine").unwrap().as_arr().unwrap();
         assert_eq!(engine.len(), 2);
         for e in engine {
@@ -574,6 +655,20 @@ mod tests {
         for row in gs.req("rows").unwrap().as_arr().unwrap() {
             assert!(row.req_f64("seq_per_s").unwrap() > 0.0);
             assert_eq!(row.req_f64("errors").unwrap(), 0.0);
+        }
+        // the streaming sweep covers N ∈ {1, 4, 16} live sessions with
+        // real rates and no serving errors
+        let ss = serving.req("streaming_sweep").unwrap();
+        let srows = ss.req("rows").unwrap().as_arr().unwrap();
+        let counts: Vec<u64> = srows
+            .iter()
+            .map(|r| r.req_f64("sessions").unwrap() as u64)
+            .collect();
+        assert_eq!(counts, vec![1, 4, 16]);
+        for r in srows {
+            assert!(r.req_f64("sessions_per_s").unwrap() > 0.0);
+            assert!(r.req_f64("frames_per_s").unwrap() > 0.0);
+            assert_eq!(r.req_f64("errors").unwrap(), 0.0);
         }
         // and the document round-trips through the JSON module
         let text = format!("{doc}");

@@ -94,7 +94,8 @@ impl CircuitConfig {
                         c_line: 0.0, ..Default::default() }
     }
 
-    /// Weight rail voltage for a 2-bit code (DESIGN.md §5).
+    /// Weight rail voltage for a 2-bit code: the four equidistant rails
+    /// `V_00..V_11` around `V_0` (paper §3.2).
     pub fn rail_voltage(&self, code: u8) -> f64 {
         debug_assert!(code < 4);
         self.v_0 + (code as f64 - 1.5) * self.delta_w
@@ -275,11 +276,21 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// …or once the oldest queued request has waited this long (ms).
     pub max_wait_ms: u64,
+    /// Streaming mode (`serve --streaming`): resident session slots per
+    /// worker. A session leases one slot for its whole lifetime, so
+    /// `workers × sessions` is the live-session capacity; opening one
+    /// past it is rejected with `ServeError::Busy`.
+    pub sessions: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: default_workers(), max_batch: 16, max_wait_ms: 5 }
+        ServeConfig {
+            workers: default_workers(),
+            max_batch: 16,
+            max_wait_ms: 5,
+            sessions: 8,
+        }
     }
 }
 
@@ -289,6 +300,7 @@ impl ServeConfig {
             ("workers", self.workers.into()),
             ("max_batch", self.max_batch.into()),
             ("max_wait_ms", (self.max_wait_ms as f64).into()),
+            ("sessions", self.sessions.into()),
         ])
     }
 
@@ -303,6 +315,7 @@ impl ServeConfig {
                 .and_then(Json::as_f64)
                 .map(|x| x as u64)
                 .unwrap_or(d.max_wait_ms),
+            sessions: json_usize(j, "sessions", d.sessions).max(1),
         })
     }
 }
@@ -373,20 +386,28 @@ mod tests {
         let s = ServeConfig::default();
         assert!(s.workers >= 1);
         assert!(s.max_batch >= 1);
+        assert!(s.sessions >= 1);
     }
 
     #[test]
     fn serve_json_roundtrip_and_clamping() {
-        let s = ServeConfig { workers: 6, max_batch: 32, max_wait_ms: 9 };
+        let s = ServeConfig {
+            workers: 6,
+            max_batch: 32,
+            max_wait_ms: 9,
+            sessions: 4,
+        };
         let back = ServeConfig::from_json(&s.to_json()).unwrap();
         assert_eq!(s, back);
-        // workers/max_batch are clamped to ≥ 1 on load
+        // workers/max_batch/sessions are clamped to ≥ 1 on load
         let j = Json::obj(vec![
             ("workers", 0usize.into()),
             ("max_batch", 0usize.into()),
+            ("sessions", 0usize.into()),
         ]);
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.workers, 1);
         assert_eq!(c.max_batch, 1);
+        assert_eq!(c.sessions, 1);
     }
 }

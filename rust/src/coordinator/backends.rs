@@ -5,12 +5,20 @@
 //! * [`MixedSignalBackend`] — the switched-capacitor engine (physics)
 //! * [`PjrtBackend`] — the AOT-compiled JAX model through the XLA CPU
 //!   client (the paper's "software model", executed hermetically)
+//!
+//! The golden and mixed-signal backends also implement the streaming
+//! interface ([`crate::coordinator::SessionBackend`]) when constructed
+//! with provisioned session slots (`with_sessions` /
+//! `streaming_factory`): the golden backend keeps one resident
+//! [`GoldenNetwork`] per slot, the mixed-signal backend leases slots of
+//! its engine's analog state pool — both produce streamed logits
+//! bit-identical to their one-shot classification of the same frames.
 
 use anyhow::Result;
 
 use crate::config::{CircuitConfig, CoreGeometry, MappingConfig};
 use crate::coordinator::engine::MixedSignalEngine;
-use crate::coordinator::server::Backend;
+use crate::coordinator::server::{Backend, SessionBackend};
 use crate::mapping::Plan;
 use crate::nn::mingru::{argmax, GoldenNetwork};
 use crate::nn::weights::NetworkWeights;
@@ -18,11 +26,38 @@ use crate::runtime::Executable;
 
 pub struct GoldenBackend {
     net: GoldenNetwork,
+    /// Streaming sessions: one resident network per slot (empty unless
+    /// constructed via [`GoldenBackend::with_sessions`]).
+    session_nets: Vec<GoldenNetwork>,
+    free: Vec<usize>,
+    leased: Vec<bool>,
 }
 
 impl GoldenBackend {
     pub fn new(net: GoldenNetwork) -> GoldenBackend {
-        GoldenBackend { net }
+        GoldenBackend {
+            net,
+            session_nets: Vec::new(),
+            free: Vec::new(),
+            leased: Vec::new(),
+        }
+    }
+
+    /// A golden backend with `sessions` resident streaming slots — the
+    /// trivial stateful counterpart of the mixed-signal session pool,
+    /// so streaming parity can be pinned against the exact software
+    /// model (tests/stream_parity.rs).
+    pub fn with_sessions(net: GoldenNetwork, sessions: usize) -> GoldenBackend {
+        let c = sessions.max(1);
+        let session_nets = (0..c)
+            .map(|_| GoldenNetwork::new(net.weights.clone()))
+            .collect();
+        GoldenBackend {
+            net,
+            session_nets,
+            free: (0..c).rev().collect(),
+            leased: vec![false; c],
+        }
     }
 
     /// Worker factory for [`crate::coordinator::Server::spawn_sharded`]:
@@ -36,6 +71,20 @@ impl GoldenBackend {
                 as Box<dyn Backend>
         }
     }
+
+    /// Worker factory for [`crate::coordinator::StreamServer::spawn`]:
+    /// each worker holds `sessions` resident golden session slots.
+    pub fn streaming_factory(
+        weights: NetworkWeights,
+        sessions: usize,
+    ) -> impl Fn() -> Box<dyn Backend> + Send + Sync + 'static {
+        move || {
+            Box::new(GoldenBackend::with_sessions(
+                GoldenNetwork::new(weights.clone()),
+                sessions,
+            )) as Box<dyn Backend>
+        }
+    }
 }
 
 impl Backend for GoldenBackend {
@@ -46,6 +95,50 @@ impl Backend for GoldenBackend {
     fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
         seqs.iter().map(|s| self.net.classify(s)).collect()
     }
+
+    fn streaming(&mut self) -> Option<&mut dyn SessionBackend> {
+        if self.session_nets.is_empty() {
+            None
+        } else {
+            Some(self)
+        }
+    }
+}
+
+impl SessionBackend for GoldenBackend {
+    fn session_capacity(&self) -> usize {
+        self.session_nets.len()
+    }
+
+    fn frame_width(&self) -> usize {
+        self.net.weights.dims[0]
+    }
+
+    fn open_session(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.leased[slot] = true;
+        self.session_nets[slot].reset();
+        Some(slot)
+    }
+
+    fn step_sessions(&mut self, slots: &[usize], frames: &[f32]) {
+        let w = self.frame_width();
+        for (k, &slot) in slots.iter().enumerate() {
+            debug_assert!(self.leased[slot], "step on an unleased slot");
+            self.session_nets[slot].step(&frames[k * w..(k + 1) * w], None);
+        }
+    }
+
+    fn session_logits(&self, slot: usize) -> Vec<f32> {
+        self.session_nets[slot].logits()
+    }
+
+    fn close_session(&mut self, slot: usize) -> usize {
+        assert!(self.leased[slot], "close of an unleased slot {slot}");
+        self.leased[slot] = false;
+        self.free.push(slot);
+        argmax(&self.session_nets[slot].logits())
+    }
 }
 
 pub struct MixedSignalBackend {
@@ -54,6 +147,18 @@ pub struct MixedSignalBackend {
 
 impl MixedSignalBackend {
     pub fn new(engine: MixedSignalEngine) -> MixedSignalBackend {
+        MixedSignalBackend { engine }
+    }
+
+    /// A mixed-signal backend with `sessions` resident streaming slots:
+    /// each live session leases one engine slot, whose analog state
+    /// (capacitor voltages, swap configuration, RNG stream position)
+    /// persists across requests until close. The backend then serves
+    /// the streaming path only — `classify_batch` would dissolve the
+    /// slot pool, so it refuses to run while sessions are live (the
+    /// engine asserts).
+    pub fn with_sessions(mut engine: MixedSignalEngine, sessions: usize) -> MixedSignalBackend {
+        engine.provision_sessions(sessions);
         MixedSignalBackend { engine }
     }
 
@@ -92,6 +197,28 @@ impl MixedSignalBackend {
                 .replicate()
                 .expect("mapping validated at factory construction");
             Box::new(MixedSignalBackend::new(engine)) as Box<dyn Backend>
+        }))
+    }
+
+    /// Worker factory for [`crate::coordinator::StreamServer::spawn`]:
+    /// each worker's engine provisions `sessions` resident slots, so
+    /// the worker holds that many live sequences' analog state at once
+    /// and advances them in lockstep. Validates the plan up front like
+    /// [`MixedSignalBackend::factory_from_plan`].
+    pub fn streaming_factory_from_plan(
+        weights: NetworkWeights,
+        circuit: CircuitConfig,
+        plan: Plan,
+        sessions: usize,
+    ) -> Result<(Plan, impl Fn() -> Box<dyn Backend> + Send + Sync + 'static)> {
+        let template = MixedSignalEngine::from_plan(weights, circuit, plan)?;
+        let plan = template.plan.clone();
+        Ok((plan, move || {
+            let engine = template
+                .replicate()
+                .expect("mapping validated at factory construction");
+            Box::new(MixedSignalBackend::with_sessions(engine, sessions))
+                as Box<dyn Backend>
         }))
     }
 }
@@ -135,6 +262,49 @@ impl Backend for MixedSignalBackend {
             start = end;
         }
         labels
+    }
+
+    fn streaming(&mut self) -> Option<&mut dyn SessionBackend> {
+        if self.engine.session_capacity() > 0 {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+/// The streaming interface over the engine's slot pool: each live
+/// session's analog state is resident in one engine slot, and every
+/// tick advances the listed sessions through a single lockstep plan
+/// traversal (`MixedSignalEngine::step_slots`). Streamed logits are
+/// bit-identical to a one-shot classification of the same frames — the
+/// slot-RNG seeding convention again (docs/adr/001, pinned by
+/// tests/stream_parity.rs).
+impl SessionBackend for MixedSignalBackend {
+    fn session_capacity(&self) -> usize {
+        self.engine.session_capacity()
+    }
+
+    fn frame_width(&self) -> usize {
+        self.engine.weights.dims[0]
+    }
+
+    fn open_session(&mut self) -> Option<usize> {
+        self.engine.lease_slot()
+    }
+
+    fn step_sessions(&mut self, slots: &[usize], frames: &[f32]) {
+        self.engine.step_slots(slots, frames);
+    }
+
+    fn session_logits(&self, slot: usize) -> Vec<f32> {
+        self.engine.logits_slot(slot)
+    }
+
+    fn close_session(&mut self, slot: usize) -> usize {
+        let label = argmax(&self.engine.logits_slot(slot));
+        self.engine.release_slot(slot);
+        label
     }
 }
 
@@ -300,6 +470,77 @@ mod tests {
         let la = a.classify_batch(&seqs);
         assert_eq!(la.len(), 2);
         assert_eq!(la, b.classify_batch(&seqs));
+    }
+
+    #[test]
+    fn plain_backends_expose_no_streaming_interface() {
+        let nw = synthetic_network(&[1, 8, 10], 3);
+        let mut g = GoldenBackend::new(GoldenNetwork::new(nw.clone()));
+        assert!(g.streaming().is_none());
+        let engine = MixedSignalEngine::new(
+            nw,
+            CircuitConfig::ideal(),
+            CoreGeometry { rows: 8, cols: 16 },
+        )
+        .unwrap();
+        let mut m = MixedSignalBackend::new(engine);
+        assert!(m.streaming().is_none());
+    }
+
+    #[test]
+    fn golden_streaming_matches_one_shot_classification() {
+        let nw = synthetic_network(&[1, 8, 10], 3);
+        let mut reference = GoldenNetwork::new(nw.clone());
+        let mut b = GoldenBackend::with_sessions(GoldenNetwork::new(nw), 2);
+        let sb = b.streaming().expect("provisioned sessions");
+        assert_eq!(sb.session_capacity(), 2);
+        assert_eq!(sb.frame_width(), 1);
+        let s0 = sb.open_session().unwrap();
+        let s1 = sb.open_session().unwrap();
+        assert!(sb.open_session().is_none(), "pool of 2 must exhaust");
+        let seq_a: Vec<f32> = (0..16).map(|t| (t % 3) as f32 / 2.0).collect();
+        let seq_b: Vec<f32> = (0..16).map(|t| (t % 5) as f32 / 4.0).collect();
+        for t in 0..16 {
+            // one lockstep tick advancing both interleaved sessions
+            sb.step_sessions(&[s0, s1], &[seq_a[t], seq_b[t]]);
+        }
+        reference.classify(&seq_a);
+        assert_eq!(sb.session_logits(s0), reference.logits());
+        let want_a = argmax(&reference.logits());
+        reference.classify(&seq_b);
+        assert_eq!(sb.session_logits(s1), reference.logits());
+        assert_eq!(sb.close_session(s0), want_a);
+        // the freed slot admits (and resets for) a new session
+        let s2 = sb.open_session().unwrap();
+        assert_eq!(s2, s0);
+        sb.step_sessions(&[s2], &[0.5]);
+        reference.classify(&[0.5]);
+        assert_eq!(sb.session_logits(s2), reference.logits());
+    }
+
+    #[test]
+    fn mixed_signal_streaming_factory_provisions_slots() {
+        let nw = synthetic_network(&[1, 8, 10], 3);
+        let plan = Plan::build(
+            &nw.dims,
+            &MappingConfig::with_geometry(CoreGeometry { rows: 8, cols: 16 }),
+        )
+        .unwrap();
+        let (_plan, mf) = MixedSignalBackend::streaming_factory_from_plan(
+            nw,
+            CircuitConfig::default(),
+            plan,
+            3,
+        )
+        .unwrap();
+        let mut b = mf();
+        let sb = b.streaming().expect("factory must provision sessions");
+        assert_eq!(sb.session_capacity(), 3);
+        let s = sb.open_session().unwrap();
+        sb.step_sessions(&[s], &[0.7]);
+        let logits = sb.session_logits(s);
+        assert!(logits.iter().all(|l| l.is_finite()));
+        assert!(sb.close_session(s) < 10);
     }
 
     #[test]

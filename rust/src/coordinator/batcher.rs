@@ -1,14 +1,27 @@
-//! Dynamic request batching.
+//! Dynamic request batching, and the session-aware frame assembly of
+//! the streaming path.
 //!
-//! The PJRT backend amortizes XLA dispatch over batched sequences (the
-//! AOT artifact is compiled for a fixed batch dimension), so the
-//! coordinator collects requests until the batch fills or a deadline
-//! expires — the standard serving trade-off between utilization and
-//! tail latency. The mixed-signal backend executes uniform-shape
-//! batches in lockstep (one analog state slot per sequence, one plan
-//! traversal per time step) — serve it with `bucket_by_length` so every
-//! drained batch is a single lockstep group.
+//! **One-shot requests** ([`Batcher`]): the PJRT backend amortizes XLA
+//! dispatch over batched sequences (the AOT artifact is compiled for a
+//! fixed batch dimension), so the coordinator collects requests until
+//! the batch fills or a deadline expires — the standard serving
+//! trade-off between utilization and tail latency. The mixed-signal
+//! backend executes uniform-shape batches in lockstep (one analog state
+//! slot per sequence, one plan traversal per time step) — serve it with
+//! `bucket_by_length` so every drained batch is a single lockstep group.
+//!
+//! **Streaming sessions** ([`SessionQueue`]): frames arrive
+//! incrementally per session instead of as whole sequences, so there is
+//! nothing to bucket — the queue buffers each live session's pushed
+//! values and, per tick, hands the serving worker *one frame from every
+//! session that has one* ([`SessionQueue::next_tick`]), which the
+//! backend advances through a single lockstep traversal
+//! (`MixedSignalEngine::step_slots`). Sessions that pushed more than
+//! one frame drain over consecutive ticks; sessions with nothing
+//! pending simply sit out the tick, their analog state resident in
+//! their slot.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 /// One queued classification request.
@@ -172,6 +185,122 @@ impl Batcher {
         // oldest survivor even after a bucketed (non-prefix) removal
         self.oldest = self.queue.first().map(|r| r.enqueued);
         batch
+    }
+}
+
+/// Per-session pending input of the streaming path.
+#[derive(Debug)]
+struct SessionBuf {
+    /// Engine slot the session's analog state is pinned to.
+    slot: usize,
+    /// Pushed values not yet consumed by a tick (flat; frames are cut
+    /// off the front `frame_width` values at a time).
+    pending: VecDeque<f32>,
+}
+
+/// The session-aware companion of [`Batcher`]: buffers incrementally
+/// pushed frames per live session and assembles lockstep ticks. Keyed
+/// by session id in a `BTreeMap`, so tick composition is deterministic
+/// (ascending session id) — convenient for tests, irrelevant for
+/// results, which are bit-exact per slot regardless of interleaving.
+///
+/// Pending input is unbounded: backpressure is the client's ack — the
+/// serving worker only replies `Pushed` after a push's frames are
+/// consumed, so a client that waits for acks (everything in this repo
+/// does) keeps at most one push in flight per session. A client that
+/// fires `push_frames_nowait` without ever draining acks can grow the
+/// buffer without limit; a per-session cap is future work if untrusted
+/// clients ever reach this queue.
+#[derive(Debug)]
+pub struct SessionQueue {
+    frame_width: usize,
+    sessions: BTreeMap<u64, SessionBuf>,
+}
+
+impl SessionQueue {
+    /// `frame_width` = input values per time step (the network's
+    /// `dims[0]`); pushed payloads are cut into frames of this width.
+    pub fn new(frame_width: usize) -> SessionQueue {
+        assert!(frame_width >= 1, "frame width must be positive");
+        SessionQueue { frame_width, sessions: BTreeMap::new() }
+    }
+
+    pub fn frame_width(&self) -> usize {
+        self.frame_width
+    }
+
+    /// Register a live session on engine slot `slot`.
+    pub fn open(&mut self, session: u64, slot: usize) {
+        let prev = self.sessions.insert(
+            session,
+            SessionBuf { slot, pending: VecDeque::new() },
+        );
+        debug_assert!(prev.is_none(), "session {session} opened twice");
+    }
+
+    pub fn contains(&self, session: u64) -> bool {
+        self.sessions.contains_key(&session)
+    }
+
+    /// Engine slot of a live session.
+    pub fn slot(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).map(|b| b.slot)
+    }
+
+    /// Live sessions registered.
+    pub fn live(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Append pushed values to a session's pending input. Returns the
+    /// number of full frames this push completed — counting a frame
+    /// finished by previously buffered residue values, so the count a
+    /// client paces itself on is the frames that will actually advance.
+    /// `None` (payload dropped) for unknown sessions.
+    pub fn push(&mut self, session: u64, values: &[f32]) -> Option<usize> {
+        let w = self.frame_width;
+        match self.sessions.get_mut(&session) {
+            Some(buf) => {
+                let before = buf.pending.len();
+                buf.pending.extend(values.iter().copied());
+                Some(buf.pending.len() / w - before / w)
+            }
+            None => None,
+        }
+    }
+
+    /// Unregister a session, returning its slot (to be released back to
+    /// the backend's pool). Pending values that never formed a full
+    /// frame — or frames not yet ticked — are dropped with it: close is
+    /// a statement that the sequence ends *now*.
+    pub fn close(&mut self, session: u64) -> Option<usize> {
+        self.sessions.remove(&session).map(|b| b.slot)
+    }
+
+    /// True while any session has at least one full frame pending.
+    pub fn has_ready(&self) -> bool {
+        self.sessions
+            .values()
+            .any(|b| b.pending.len() >= self.frame_width)
+    }
+
+    /// Assemble one lockstep tick: pop one frame from every session
+    /// with a full frame pending, filling `slots` (engine slot ids) and
+    /// `frames` (packed values, `frame_width` per slot, in `slots`
+    /// order). Returns the number of sessions advancing this tick; the
+    /// output buffers are caller-owned scratch, cleared here.
+    pub fn next_tick(&mut self, slots: &mut Vec<usize>, frames: &mut Vec<f32>) -> usize {
+        slots.clear();
+        frames.clear();
+        for buf in self.sessions.values_mut() {
+            if buf.pending.len() >= self.frame_width {
+                slots.push(buf.slot);
+                for _ in 0..self.frame_width {
+                    frames.push(buf.pending.pop_front().expect("len checked"));
+                }
+            }
+        }
+        slots.len()
     }
 }
 
@@ -357,9 +486,52 @@ mod tests {
             workers: 4,
             max_batch: 32,
             max_wait_ms: 7,
+            sessions: 8,
         };
         let p = BatchPolicy::from(&sc);
         assert_eq!(p.max_batch, 32);
         assert_eq!(p.max_wait, Duration::from_millis(7));
+    }
+
+    #[test]
+    fn session_queue_assembles_lockstep_ticks() {
+        let mut q = SessionQueue::new(2);
+        q.open(10, 0);
+        q.open(11, 3);
+        assert_eq!(q.live(), 2);
+        assert_eq!(q.slot(11), Some(3));
+        // session 10: two full frames; session 11: one frame + residue
+        assert_eq!(q.push(10, &[1.0, 2.0, 3.0, 4.0]), Some(2));
+        assert_eq!(q.push(11, &[5.0, 6.0, 7.0]), Some(1));
+        assert_eq!(q.push(99, &[0.0]), None, "unknown session refused");
+        let (mut slots, mut frames) = (Vec::new(), Vec::new());
+        // tick 1: both sessions advance, ascending session-id order
+        assert_eq!(q.next_tick(&mut slots, &mut frames), 2);
+        assert_eq!(slots, vec![0, 3]);
+        assert_eq!(frames, vec![1.0, 2.0, 5.0, 6.0]);
+        // tick 2: only session 10 has a full frame left (11 holds half)
+        assert_eq!(q.next_tick(&mut slots, &mut frames), 1);
+        assert_eq!(slots, vec![0]);
+        assert_eq!(frames, vec![3.0, 4.0]);
+        assert!(!q.has_ready());
+        assert_eq!(q.next_tick(&mut slots, &mut frames), 0);
+        // the residue completes once the rest of the frame arrives —
+        // and the completed frame is credited to the completing push
+        assert_eq!(q.push(11, &[8.0]), Some(1));
+        assert!(q.has_ready());
+        assert_eq!(q.next_tick(&mut slots, &mut frames), 1);
+        assert_eq!(frames, vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn session_queue_close_returns_slot_and_drops_residue() {
+        let mut q = SessionQueue::new(1);
+        q.open(1, 5);
+        assert_eq!(q.push(1, &[0.5, 0.6]), Some(2));
+        assert_eq!(q.close(1), Some(5));
+        assert_eq!(q.close(1), None, "double close must be visible");
+        assert!(!q.contains(1));
+        assert!(!q.has_ready(), "closed session's frames must be gone");
+        assert_eq!(q.live(), 0);
     }
 }

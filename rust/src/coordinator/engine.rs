@@ -21,7 +21,18 @@
 //! weight/placement state is touched once per layer instead of once per
 //! sequence (the amortization EdgeDRNN and Chipmunk build RNN
 //! accelerators around). Slot RNG streams all clone the construction
-//! stream, so batched results are bit-identical to sequential ones.
+//! stream, so batched results are bit-identical to sequential ones
+//! (docs/adr/001 and 002 record both decisions).
+//!
+//! The same slot substrate carries **streaming sessions** (docs/adr/003):
+//! [`MixedSignalEngine::provision_sessions`] builds a free pool of
+//! resident slots, [`MixedSignalEngine::lease_slot`] pins a new
+//! session's analog state (capacitor voltages, swap configuration, RNG
+//! stream position) to one of them, and [`MixedSignalEngine::step_slots`]
+//! advances any subset of live sessions — each on its own local clock —
+//! through one lockstep traversal per tick. A streamed sequence is
+//! bit-identical to a one-shot [`MixedSignalEngine::classify`] of the
+//! same frames.
 
 use anyhow::Result;
 
@@ -66,10 +77,12 @@ pub struct MixedSignalEngine {
     fabrics: Vec<Fabric>,
     /// per-slot readout rings (analog head states, logical units)
     rings: Vec<Vec<Vec<f32>>>,
-    ring_pos: usize,
-    /// time steps since the last reset (readout normalization; lockstep
-    /// batches are uniform-length, so one counter covers every slot)
-    steps_seen: usize,
+    /// per-slot readout ring cursor (all cursors advance together under
+    /// `step_batch`; streaming slots advance on their own ticks)
+    ring_pos: Vec<usize>,
+    /// per-slot time steps since that slot's last reset (readout
+    /// normalization, and the local clock of a streaming session)
+    steps_seen: Vec<usize>,
     /// per-slot input / inter-layer frame buffers
     x_bufs: Vec<Vec<f64>>,
     /// per-slot scratch: the logical frame tiled `replication` times
@@ -90,6 +103,14 @@ pub struct MixedSignalEngine {
     accs: Vec<Vec<(f64, f64)>>,
     /// packed per-step input scratch for `classify_batch`
     batch_x: Vec<f32>,
+    /// scratch slot-id list `step_batch` lends to the shared traversal
+    /// (kept as `0..batch` so the batched step allocates nothing)
+    slot_ids: Vec<usize>,
+    /// free-slot pool of the streaming-session mode (LIFO); empty in
+    /// batch mode — see [`MixedSignalEngine::provision_sessions`]
+    free_slots: Vec<usize>,
+    /// per-slot lease flags of the streaming-session mode
+    leased: Vec<bool>,
     /// reusable per-core observable buffer
     core_out: CoreStep,
 }
@@ -161,8 +182,8 @@ impl MixedSignalEngine {
             batch: 1,
             fabrics: vec![Fabric::new(&widths)],
             rings: vec![vec![vec![0.0; head]; READOUT_STEPS]],
-            ring_pos: 0,
-            steps_seen: 0,
+            ring_pos: vec![0],
+            steps_seen: vec![0],
             x_bufs: vec![vec![0.0; max_dim]],
             // a replicated frame never exceeds the physical rows
             x_reps: vec![Vec::with_capacity(geometry.rows)],
@@ -175,6 +196,9 @@ impl MixedSignalEngine {
             // a column group is at most one core wide
             accs: vec![Vec::with_capacity(geometry.cols)],
             batch_x: vec![0.0; weights.dims[0]],
+            slot_ids: vec![0],
+            free_slots: Vec::new(),
+            leased: vec![false],
             core_out: CoreStep::default(),
             weights,
             circuit,
@@ -210,8 +234,15 @@ impl MixedSignalEngine {
     }
 
     /// Reset every provisioned slot (sequence boundary): core states,
-    /// per-slot noise streams, fabrics, and readout rings.
+    /// per-slot noise streams, fabrics, and readout rings. A global
+    /// boundary — it would clobber live streaming sessions, so it
+    /// refuses to run while any slot is leased.
     pub fn reset(&mut self) {
+        assert_eq!(
+            self.live_sessions(),
+            0,
+            "reset would clobber live streaming sessions — close them first"
+        );
         for c in self.cores.iter_mut() {
             c.reset(&self.circuit);
         }
@@ -223,15 +254,24 @@ impl MixedSignalEngine {
                 r.fill(0.0);
             }
         }
-        self.ring_pos = 0;
-        self.steps_seen = 0;
+        self.ring_pos.fill(0);
+        self.steps_seen.fill(0);
     }
 
     /// Provision `batch` lockstep slots (clamped to ≥ 1) and reset —
     /// the start of a batched classification. Allocation happens here,
     /// at batch boundaries, never inside the steady-state `step_batch`
-    /// (see tests/hot_path_alloc.rs).
+    /// (see tests/hot_path_alloc.rs). Leaves the engine in batch mode:
+    /// any streaming-session pool is dissolved, so this refuses to run
+    /// while sessions are live.
     pub fn reset_batch(&mut self, batch: usize) {
+        // check before the pool is dissolved below, or live leases
+        // would be erased unnoticed
+        assert_eq!(
+            self.live_sessions(),
+            0,
+            "reset_batch would clobber live streaming sessions — close them first"
+        );
         let b = batch.max(1);
         if b != self.batch {
             for core in self.cores.iter_mut() {
@@ -246,15 +286,96 @@ impl MixedSignalEngine {
             self.fabrics.resize_with(b, || Fabric::new(&widths));
             self.rings
                 .resize_with(b, || vec![vec![0.0; head]; READOUT_STEPS]);
+            self.ring_pos.resize(b, 0);
+            self.steps_seen.resize(b, 0);
             self.x_bufs.resize_with(b, || vec![0.0; max_dim]);
             self.x_reps.resize_with(b, || Vec::with_capacity(rows));
             self.events_b.resize_with(b, || Vec::with_capacity(max_dim));
             self.h_states_b.resize_with(b, || Vec::with_capacity(max_dim));
             self.accs.resize_with(b, || Vec::with_capacity(cols));
             self.batch_x.resize(b * self.weights.dims[0], 0.0);
+            self.slot_ids.clear();
+            self.slot_ids.extend(0..b);
             self.batch = b;
         }
+        // batch mode: no leasable slots until provision_sessions
+        self.free_slots.clear();
+        self.leased.clear();
+        self.leased.resize(b, false);
         self.reset();
+    }
+
+    /// Provision `capacity` resident **session slots** (clamped to ≥ 1)
+    /// and build the free pool — the start of streaming-session mode.
+    /// Sessions then lease slots with [`MixedSignalEngine::lease_slot`],
+    /// advance leased slots (each on its own clock) with
+    /// [`MixedSignalEngine::step_slots`], read partial-sequence logits
+    /// with [`MixedSignalEngine::logits_slot`], and return slots with
+    /// [`MixedSignalEngine::release_slot`]. Batch and session mode
+    /// share the slot substrate but not a lifetime: `reset_batch` (and
+    /// therefore `classify_batch`) dissolves the pool, and both refuse
+    /// to run while sessions are live.
+    pub fn provision_sessions(&mut self, capacity: usize) {
+        let c = capacity.max(1);
+        self.reset_batch(c);
+        self.free_slots.clear();
+        self.free_slots.extend((0..c).rev());
+    }
+
+    /// Number of slots currently leased to streaming sessions.
+    pub fn live_sessions(&self) -> usize {
+        self.leased.iter().filter(|&&l| l).count()
+    }
+
+    /// Total session slots provisioned (0 in batch mode).
+    pub fn session_capacity(&self) -> usize {
+        self.free_slots.len() + self.live_sessions()
+    }
+
+    /// Lease a free session slot: the slot is reset to sequence-boundary
+    /// state (fresh analog state, the construction noise stream, cleared
+    /// fabric and readout) and marked live. Returns `None` when every
+    /// provisioned slot is leased — the caller's eviction policy (the
+    /// serving layer rejects with `ServeError::Busy`) decides what
+    /// happens then.
+    pub fn lease_slot(&mut self) -> Option<usize> {
+        let slot = self.free_slots.pop()?;
+        self.leased[slot] = true;
+        self.reset_slot(slot);
+        Some(slot)
+    }
+
+    /// Return a leased slot to the free pool (session close). The
+    /// slot's analog state is left as-is — the next lease resets it.
+    pub fn release_slot(&mut self, slot: usize) {
+        assert!(
+            self.leased.get(slot).copied().unwrap_or(false),
+            "release of slot {slot}, which is not leased"
+        );
+        self.leased[slot] = false;
+        self.free_slots.push(slot);
+    }
+
+    /// Reset one slot alone to sequence-boundary state — core slot
+    /// state, noise stream, fabric, readout ring, and local clock —
+    /// without touching any other slot. A recycled slot is
+    /// bit-indistinguishable from a fresh sequential engine
+    /// (tests/stream_parity.rs).
+    pub fn reset_slot(&mut self, slot: usize) {
+        assert!(
+            slot < self.batch,
+            "slot {slot} out of range ({} provisioned)",
+            self.batch
+        );
+        for c in self.cores.iter_mut() {
+            c.reset_slot(slot, &self.circuit);
+        }
+        self.fabrics[slot].reset();
+        for r in self.rings[slot].iter_mut() {
+            r.fill(0.0);
+        }
+        self.ring_pos[slot] = 0;
+        self.steps_seen[slot] = 0;
     }
 
     /// One network time step on slot 0 (the sequential path). `x` =
@@ -372,8 +493,8 @@ impl MixedSignalEngine {
             }
             if l == n_layers - 1 {
                 // head readout: analog states into the ring
-                self.rings[0][self.ring_pos].copy_from_slice(&self.h_states);
-                self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
+                self.rings[0][self.ring_pos[0]].copy_from_slice(&self.h_states);
+                self.ring_pos[0] = (self.ring_pos[0] + 1) % READOUT_STEPS;
             } else {
                 // route binary events to the next layer's row drivers
                 self.fabrics[0].route(l, t, &self.events);
@@ -384,7 +505,7 @@ impl MixedSignalEngine {
                 x_len = self.weights.layers[l].n_out;
             }
         }
-        self.steps_seen += 1;
+        self.steps_seen[0] += 1;
     }
 
     /// One lockstep time step of every provisioned batch slot: all B
@@ -409,9 +530,60 @@ impl MixedSignalEngine {
             b * d_in,
             "step_batch wants {b} slot-major frames of {d_in} values"
         );
+        // lend the 0..batch scratch list out so the shared traversal can
+        // borrow `self` — a pointer swap, not an allocation
+        let slots = std::mem::take(&mut self.slot_ids);
+        self.step_slots_inner(&slots, xs, Some(t));
+        self.slot_ids = slots;
+    }
+
+    /// One lockstep time step of an arbitrary **subset** of slots — the
+    /// streaming-session path. `slots` names the slots to advance
+    /// (distinct, each `< batch_slots()`); `xs` packs one frame of
+    /// `dims[0]` values per named slot, in `slots` order. Every listed
+    /// slot advances its own local clock ([`MixedSignalEngine::logits_slot`]
+    /// normalizes by it), so concurrently resident sessions of different
+    /// ages advance through a single traversal of the plan exactly as a
+    /// uniform batch does. Slots not listed are untouched.
+    ///
+    /// Bit-exactness: a slot stepped through any interleaving of
+    /// `step_slots` calls produces exactly the outputs of a fresh
+    /// sequential engine fed the same frames in the same order —
+    /// per-slot noise streams, analog state, fabric, and readout are
+    /// fully slot-local (pinned by tests/stream_parity.rs).
+    pub fn step_slots(&mut self, slots: &[usize], xs: &[f32]) {
+        self.step_slots_inner(slots, xs, None);
+    }
+
+    /// The single lockstep traversal behind `step_batch` (all slots,
+    /// shared wall-clock `t`) and `step_slots` (subset, per-slot local
+    /// clocks). `t_all` only tags routed events — it feeds no
+    /// arithmetic — but the per-slot clock keeps streamed event traces
+    /// coherent with their session's own time axis.
+    fn step_slots_inner(&mut self, slots: &[usize], xs: &[f32], t_all: Option<u32>) {
+        let d_in = self.weights.dims[0];
+        assert_eq!(
+            xs.len(),
+            slots.len() * d_in,
+            "step wants one frame of {d_in} values per listed slot"
+        );
+        for &s in slots {
+            assert!(
+                s < self.batch,
+                "slot {s} out of range ({} provisioned)",
+                self.batch
+            );
+        }
+        debug_assert!(
+            slots
+                .iter()
+                .enumerate()
+                .all(|(i, s)| !slots[..i].contains(s)),
+            "duplicate slot in one lockstep step"
+        );
         let n_layers = self.weights.n_layers();
-        for s in 0..b {
-            let frame = &xs[s * d_in..(s + 1) * d_in];
+        for (k, &s) in slots.iter().enumerate() {
+            let frame = &xs[k * d_in..(k + 1) * d_in];
             for (dst, &v) in self.x_bufs[s].iter_mut().zip(frame.iter()) {
                 *dst = v as f64;
             }
@@ -420,14 +592,14 @@ impl MixedSignalEngine {
         for l in 0..n_layers {
             let wh_scale = self.weights.layers[l].wh_scale;
             let lp = &self.plan.layers[l];
-            for s in 0..b {
+            for &s in slots {
                 self.events_b[s].clear();
                 self.h_states_b[s].clear();
             }
             if lp.row_tiles == 1 {
                 let r = lp.replication;
                 if r > 1 {
-                    for s in 0..b {
+                    for &s in slots {
                         let (x_rep, x_buf) =
                             (&mut self.x_reps[s], &self.x_bufs[s]);
                         x_rep.clear();
@@ -439,9 +611,9 @@ impl MixedSignalEngine {
                 let (c0, c1) = self.plan.core_range(l);
                 // slots iterate *inside* the core loop: the core's
                 // capacitor arrays (weights, mismatch, noise aggregates)
-                // stay hot across all B slot-steps
+                // stay hot across all the slot-steps
                 for core in self.cores[c0..c1].iter_mut() {
-                    for s in 0..b {
+                    for &s in slots {
                         let x_phys: &[f64] = if r > 1 {
                             &self.x_reps[s]
                         } else {
@@ -463,20 +635,21 @@ impl MixedSignalEngine {
             } else {
                 // row-split layer: per-slot weighted partial sums; the
                 // per-slot in-flight noise streams of the owner tile let
-                // every tile run all B slots before the owner finishes
+                // every tile run all listed slots before the owner
+                // finishes
                 let n_in_total = lp.n_in as f64;
                 for ct in 0..lp.col_tiles {
                     let owner = lp.owner_tile(ct).core;
                     let width = lp.owner_tile(ct).n_cols();
-                    for acc in self.accs.iter_mut() {
-                        acc.clear();
-                        acc.resize(width, (0.0, 0.0));
+                    for &s in slots {
+                        self.accs[s].clear();
+                        self.accs[s].resize(width, (0.0, 0.0));
                     }
                     for rt in 0..lp.row_tiles {
                         let tile = lp.tile(rt, ct);
                         let (r0, r1) = tile.rows;
                         let weight = (r1 - r0) as f64;
-                        for s in 0..b {
+                        for &s in slots {
                             let partials = self.cores[tile.core]
                                 .step_partial_slot(
                                     s,
@@ -492,12 +665,12 @@ impl MixedSignalEngine {
                             }
                         }
                         if rt != 0 {
-                            for s in 0..b {
+                            for &s in slots {
                                 self.cores[tile.core].finish_partial_only_slot(s);
                             }
                         }
                     }
-                    for s in 0..b {
+                    for &s in slots {
                         for a in self.accs[s].iter_mut() {
                             a.0 /= n_in_total;
                             a.1 /= n_in_total;
@@ -522,13 +695,14 @@ impl MixedSignalEngine {
                 }
             }
             if l == n_layers - 1 {
-                for s in 0..b {
-                    self.rings[s][self.ring_pos]
+                for &s in slots {
+                    self.rings[s][self.ring_pos[s]]
                         .copy_from_slice(&self.h_states_b[s]);
+                    self.ring_pos[s] = (self.ring_pos[s] + 1) % READOUT_STEPS;
                 }
-                self.ring_pos = (self.ring_pos + 1) % READOUT_STEPS;
             } else {
-                for s in 0..b {
+                for &s in slots {
+                    let t = t_all.unwrap_or(self.steps_seen[s] as u32);
                     self.fabrics[s].route(l, t, &self.events_b[s]);
                     let port = &self.fabrics[s].ports[l];
                     for (dst, &bit) in
@@ -540,13 +714,17 @@ impl MixedSignalEngine {
                 x_len = self.weights.layers[l].n_out;
             }
         }
-        self.steps_seen += 1;
+        for &s in slots {
+            self.steps_seen[s] += 1;
+        }
     }
 
     /// Classifier logits of batch slot `slot`: mean of the *populated*
     /// readout ring entries plus the digital bias — sequences shorter
     /// than `READOUT_STEPS` average only the steps actually seen (no
-    /// zero-padding bias).
+    /// zero-padding bias). Normalized by the **slot's own** step count,
+    /// so a streaming session polled mid-sequence reads the running
+    /// logits of exactly the frames it has pushed so far.
     pub fn logits_slot(&self, slot: usize) -> Vec<f32> {
         let head_lw = self.weights.layers.last().unwrap();
         let n = head_lw.n_out;
@@ -556,7 +734,7 @@ impl MixedSignalEngine {
                 out[j] += r[j];
             }
         }
-        let denom = self.steps_seen.clamp(1, READOUT_STEPS) as f32;
+        let denom = self.steps_seen[slot].clamp(1, READOUT_STEPS) as f32;
         for j in 0..n {
             out[j] = out[j] / denom + head_lw.bh[j];
         }
@@ -841,6 +1019,83 @@ mod tests {
             }),
         );
         assert!(result.is_err(), "ragged batch must be rejected");
+    }
+
+    #[test]
+    fn leased_slots_stream_bit_identical_to_sequential() {
+        // two sessions of different lengths, interleaved frame by frame
+        // through the subset path, under full noise — each must read the
+        // exact logits of a one-shot sequential run of its own frames
+        let mut seq = toy_engine(false);
+        let mut stream = seq.replicate().unwrap();
+        stream.provision_sessions(3);
+        assert_eq!(stream.session_capacity(), 3);
+        let a = stream.lease_slot().unwrap();
+        let b = stream.lease_slot().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(stream.live_sessions(), 2);
+        let seq_a: Vec<f32> = (0..20).map(|t| (t % 4) as f32 / 3.0).collect();
+        let seq_b: Vec<f32> = (0..12).map(|t| ((t * 3) % 5) as f32 / 4.0).collect();
+        for t in 0..20 {
+            if t < 12 {
+                stream.step_slots(&[a, b], &[seq_a[t], seq_b[t]]);
+            } else {
+                stream.step_slots(&[a], &[seq_a[t]]);
+            }
+        }
+        let (la, lb) = (stream.logits_slot(a), stream.logits_slot(b));
+        seq.classify(&seq_a);
+        assert_eq!(la, seq.logits(), "session A diverged from one-shot");
+        seq.classify(&seq_b);
+        assert_eq!(lb, seq.logits(), "session B diverged from one-shot");
+    }
+
+    #[test]
+    fn released_slot_recycles_bit_clean() {
+        let mut seq = toy_engine(false);
+        let mut stream = seq.replicate().unwrap();
+        stream.provision_sessions(1);
+        // first session: abandoned mid-sequence
+        let s0 = stream.lease_slot().unwrap();
+        assert!(stream.lease_slot().is_none(), "capacity 1 must exhaust");
+        stream.step_slots(&[s0], &[0.7]);
+        stream.step_slots(&[s0], &[0.2]);
+        stream.release_slot(s0);
+        assert_eq!(stream.live_sessions(), 0);
+        // second session reuses the slot and must match a fresh run
+        let s1 = stream.lease_slot().unwrap();
+        assert_eq!(s1, s0);
+        let frames: Vec<f32> = (0..24).map(|t| (t % 3) as f32 / 2.0).collect();
+        for &f in &frames {
+            stream.step_slots(&[s1], &[f]);
+        }
+        seq.classify(&frames);
+        assert_eq!(stream.logits_slot(s1), seq.logits());
+    }
+
+    #[test]
+    fn batch_mode_has_no_leasable_slots() {
+        let mut e = toy_engine(true);
+        assert_eq!(e.session_capacity(), 0);
+        assert!(e.lease_slot().is_none());
+        // provisioning sessions, then returning to batch mode, drains
+        // the pool again
+        e.provision_sessions(2);
+        assert_eq!(e.session_capacity(), 2);
+        e.reset_batch(4);
+        assert_eq!(e.session_capacity(), 0);
+        assert!(e.lease_slot().is_none());
+    }
+
+    #[test]
+    fn reset_refuses_while_sessions_live() {
+        let mut e = toy_engine(true);
+        e.provision_sessions(2);
+        let s = e.lease_slot().unwrap();
+        let blew = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.reset_batch(2)));
+        assert!(blew.is_err(), "reset_batch must refuse with a live session");
+        e.release_slot(s);
+        e.reset_batch(2); // fine once the session is closed
     }
 
     #[test]

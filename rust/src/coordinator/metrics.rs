@@ -3,6 +3,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::coordinator::server::ServeError;
+
 #[derive(Debug, Clone)]
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
@@ -13,9 +15,17 @@ pub struct LatencyRecorder {
     /// count a late-joining worker's dead time).
     last_sample: Option<Instant>,
     pub items: u64,
-    /// Requests that failed (backend panic, worker lost) — latency is
-    /// not recorded for these, only the count.
+    /// Requests that failed (backend panic, worker lost, session slots
+    /// exhausted) — latency is not recorded for these, only the count.
+    /// Total across every variant, including errors recorded without a
+    /// classification via [`LatencyRecorder::record_errors`].
     pub errors: u64,
+    /// [`ServeError::Lost`] failures (server/worker went away).
+    pub errors_lost: u64,
+    /// [`ServeError::Busy`] rejections (streaming slots exhausted).
+    pub errors_busy: u64,
+    /// [`ServeError::BackendPanicked`] failures (batch poisoned).
+    pub errors_panicked: u64,
 }
 
 impl Default for LatencyRecorder {
@@ -32,6 +42,9 @@ impl LatencyRecorder {
             last_sample: None,
             items: 0,
             errors: 0,
+            errors_lost: 0,
+            errors_busy: 0,
+            errors_panicked: 0,
         }
     }
 
@@ -42,12 +55,31 @@ impl LatencyRecorder {
     }
 
     /// Account `n` failed requests (no latency sample — the error path's
-    /// timing says nothing about serving latency).
+    /// timing says nothing about serving latency). Unclassified: the
+    /// per-variant counters stay untouched. Prefer
+    /// [`LatencyRecorder::record_error_n`] where the [`ServeError`] is
+    /// at hand, so the end-of-run report can break failures out.
     pub fn record_errors(&mut self, n: u64) {
         self.errors += n;
         if n > 0 {
             self.last_sample = Some(Instant::now());
         }
+    }
+
+    /// Account one classified failure.
+    pub fn record_error(&mut self, e: &ServeError) {
+        self.record_error_n(e, 1);
+    }
+
+    /// Account `n` failures of one [`ServeError`] variant — feeds both
+    /// the total and the per-variant breakdown `summary()` prints.
+    pub fn record_error_n(&mut self, e: &ServeError, n: u64) {
+        match e {
+            ServeError::Lost => self.errors_lost += n,
+            ServeError::Busy => self.errors_busy += n,
+            ServeError::BackendPanicked(_) => self.errors_panicked += n,
+        }
+        self.record_errors(n);
     }
 
     /// Single-percentile query (sorts a copy — fine for one-off asks;
@@ -104,6 +136,9 @@ impl LatencyRecorder {
         self.samples_us.extend_from_slice(&other.samples_us);
         self.items += other.items;
         self.errors += other.errors;
+        self.errors_lost += other.errors_lost;
+        self.errors_busy += other.errors_busy;
+        self.errors_panicked += other.errors_panicked;
         self.started = self.started.min(other.started);
         self.last_sample = self.last_sample.max(other.last_sample);
     }
@@ -111,7 +146,7 @@ impl LatencyRecorder {
     pub fn summary(&self) -> String {
         // one sort for all three percentiles
         let pcts = self.percentiles(&[50.0, 95.0, 99.0]);
-        format!(
+        let mut s = format!(
             "n={} err={} mean={:?} p50={:?} p95={:?} p99={:?} thpt={:.1}/s",
             self.items,
             self.errors,
@@ -120,7 +155,16 @@ impl LatencyRecorder {
             pcts[1],
             pcts[2],
             self.throughput()
-        )
+        );
+        if self.errors > 0 {
+            // break the failures out so e.g. streaming Busy rejections
+            // are visible at a glance, not folded into one number
+            s.push_str(&format!(
+                " [lost={} busy={} panicked={}]",
+                self.errors_lost, self.errors_busy, self.errors_panicked
+            ));
+        }
+        s
     }
 }
 
@@ -196,5 +240,27 @@ mod tests {
         assert_eq!(r.items, 0);
         assert_eq!(r.mean(), Duration::ZERO);
         assert!(r.summary().contains("err=3"));
+    }
+
+    #[test]
+    fn error_variants_break_out_and_merge() {
+        let mut a = LatencyRecorder::new();
+        a.record_error(&ServeError::Busy);
+        a.record_error_n(&ServeError::Lost, 2);
+        a.record_error(&ServeError::BackendPanicked("boom".into()));
+        assert_eq!(a.errors, 4);
+        assert_eq!((a.errors_lost, a.errors_busy, a.errors_panicked), (2, 1, 1));
+        let s = a.summary();
+        assert!(s.contains("err=4"), "{s}");
+        assert!(s.contains("lost=2") && s.contains("busy=1"), "{s}");
+        assert!(s.contains("panicked=1"), "{s}");
+        // merging folds the per-variant counters too
+        let mut b = LatencyRecorder::new();
+        b.record_error(&ServeError::Busy);
+        a.merge(&b);
+        assert_eq!(a.errors_busy, 2);
+        assert_eq!(a.errors, 5);
+        // an error-free recorder prints no breakdown
+        assert!(!LatencyRecorder::new().summary().contains("lost="));
     }
 }

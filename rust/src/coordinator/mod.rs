@@ -4,14 +4,21 @@
 //! * [`engine`] — network-on-cores: the trained model mapped onto
 //!   switched-capacitor cores with the event fabric in between
 //! * [`backends`] — pluggable classification backends (golden /
-//!   mixed-signal / PJRT) plus per-worker factories for sharding
-//! * [`batcher`] — dynamic batching policy
-//! * [`server`] — sharded serving engine: a leader thread batches
-//!   requests and feeds a work queue consumed by N worker threads, each
-//!   owning one backend instance (constructed on-thread; PJRT handles
-//!   are not `Send`)
+//!   mixed-signal / PJRT) plus per-worker factories for sharding, and
+//!   the streaming-session implementations over the golden nets and the
+//!   engine's slot pool
+//! * [`batcher`] — dynamic batching policy for one-shot requests, and
+//!   the per-session frame assembly ([`batcher::SessionQueue`]) of the
+//!   streaming path
+//! * [`server`] — the two serving modes: [`server::Server`], a sharded
+//!   batch engine (a leader thread batches requests and feeds a work
+//!   queue consumed by N worker threads, each owning one backend
+//!   instance — constructed on-thread; PJRT handles are not `Send`),
+//!   and [`server::StreamServer`], streaming stateful sessions with
+//!   worker affinity (each session's slot lives in one worker's
+//!   backend; see docs/adr/003)
 //! * [`metrics`] — latency/throughput accounting (per-worker recorders,
-//!   merged into the aggregate at shutdown)
+//!   merged into the aggregate at shutdown; per-variant error counts)
 
 pub mod backends;
 pub mod batcher;
@@ -20,7 +27,10 @@ pub mod metrics;
 pub mod server;
 
 pub use backends::{GoldenBackend, MixedSignalBackend, PjrtBackend};
-pub use batcher::{BatchPolicy, Batcher, Request};
+pub use batcher::{BatchPolicy, Batcher, Request, SessionQueue};
 pub use engine::MixedSignalEngine;
 pub use metrics::LatencyRecorder;
-pub use server::{Backend, Client, Response, ServeError, Server};
+pub use server::{
+    Backend, Client, Response, ServeError, Server, SessionBackend,
+    SessionRequest, SessionResponse, StreamClient, StreamServer, StreamSession,
+};

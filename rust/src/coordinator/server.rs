@@ -22,6 +22,19 @@
 //!
 //! Backends are pluggable ([`Backend`]): golden model, mixed-signal
 //! engine, or the PJRT executable.
+//!
+//! **Streaming sessions** ([`StreamServer`]): the second serving mode,
+//! for frame-by-frame traffic whose state outlives any single request.
+//! A client opens a session, pushes frames incrementally, polls running
+//! logits, and closes for the final label. Sessions have **worker
+//! affinity**: the leader pins each session to one worker at open (the
+//! session's slot — its analog state — lives in that worker's backend),
+//! routes every subsequent op of the session to the same worker, and
+//! rejects opens beyond `workers × slots-per-worker` with
+//! [`ServeError::Busy`] (sessions are resident state, so exhaustion is
+//! rejected, not queued — see docs/adr/003). Within a worker, all live
+//! sessions with pending frames advance together, one lockstep
+//! traversal per tick ([`SessionQueue`] assembles the ticks).
 
 use std::collections::HashMap;
 use std::fmt;
@@ -30,7 +43,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Request, SessionQueue};
 use crate::coordinator::metrics::LatencyRecorder;
 
 /// A sequence classifier backend. Not required to be `Send`: the PJRT
@@ -48,6 +61,46 @@ pub trait Backend {
     /// batches at the leader; the mixed-signal backend is fastest under
     /// the same policy (one lockstep group per batch).
     fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize>;
+
+    /// The backend's streaming-session interface, when it has one.
+    /// `None` (the default) means the backend can only classify whole
+    /// sequences — [`StreamServer`] fails every session op against it.
+    /// Backends that *can* pin per-session state to resident slots
+    /// (golden with provisioned session nets, mixed-signal with a
+    /// provisioned engine slot pool) return themselves.
+    fn streaming(&mut self) -> Option<&mut dyn SessionBackend> {
+        None
+    }
+}
+
+/// Streaming-session counterpart of [`Backend`]: state that outlives a
+/// request. A session leases one backend **slot** at open, pushes
+/// frames incrementally (any subset of live sessions advances together
+/// through one lockstep traversal per tick), can be polled for running
+/// logits mid-sequence, and frees its slot at close. The serving
+/// guarantee is the one-shot guarantee: a streamed sequence yields
+/// **bit-identical** logits to a single `classify_batch` of the same
+/// frames (tests/stream_parity.rs).
+pub trait SessionBackend {
+    /// Resident session slots this backend holds (live + free).
+    fn session_capacity(&self) -> usize;
+    /// Input values per frame (one time step) — pushed payloads are cut
+    /// into frames of this width.
+    fn frame_width(&self) -> usize;
+    /// Lease a slot for a new session, resetting it to
+    /// sequence-boundary state. `None` when every slot is leased — the
+    /// caller rejects with [`ServeError::Busy`].
+    fn open_session(&mut self) -> Option<usize>;
+    /// Advance the listed sessions by one frame each, in lockstep.
+    /// `frames` packs `frame_width()` values per listed slot, in
+    /// `slots` order.
+    fn step_sessions(&mut self, slots: &[usize], frames: &[f32]);
+    /// Running logits of a live session — the partial-sequence readout
+    /// over the frames consumed so far.
+    fn session_logits(&self, slot: usize) -> Vec<f32>;
+    /// Close a session: final label over the frames seen; the slot
+    /// returns to the free pool.
+    fn close_session(&mut self, slot: usize) -> usize;
 }
 
 /// Why a request failed instead of producing a label.
@@ -57,8 +110,14 @@ pub enum ServeError {
     /// payload message is preserved for diagnosis.
     BackendPanicked(String),
     /// The server (leader or the serving worker) went away before a
-    /// response could be produced.
+    /// response could be produced — or, on the streaming path, the
+    /// session is not (or no longer) known to the server.
     Lost,
+    /// Every streaming-session slot is leased: the open was rejected.
+    /// Sessions are resident state, so unlike one-shot requests they
+    /// are not queued — the client retries after closing something (or
+    /// the operator provisions more slots via `--sessions`/workers).
+    Busy,
 }
 
 impl fmt::Display for ServeError {
@@ -68,6 +127,9 @@ impl fmt::Display for ServeError {
                 write!(f, "backend panicked: {msg}")
             }
             ServeError::Lost => write!(f, "server dropped the response"),
+            ServeError::Busy => {
+                write!(f, "all streaming session slots are busy")
+            }
         }
     }
 }
@@ -342,7 +404,10 @@ fn leader_loop(
                 // every worker died: this job's requests plus everything
                 // still queued are lost — account them so the merged
                 // metrics show the failure instead of "err=0"
-                lost.record_errors((job.len() + waiters.len()) as u64);
+                lost.record_error_n(
+                    &ServeError::Lost,
+                    (job.len() + waiters.len()) as u64,
+                );
                 return lost;
             }
         }
@@ -403,15 +468,486 @@ fn worker_loop(
             }
             Err(payload) => {
                 let msg = panic_message(payload.as_ref());
-                metrics.record_errors(job.len() as u64);
+                let err = ServeError::BackendPanicked(msg);
+                metrics.record_error_n(&err, job.len() as u64);
                 for (req, rtx) in job {
                     let _ = rtx.send(Response {
                         id: req.id,
-                        result: Err(ServeError::BackendPanicked(msg.clone())),
+                        result: Err(err.clone()),
                         latency: req.enqueued.elapsed(),
                     });
                 }
             }
+        }
+    }
+    metrics
+}
+
+// ---------------------------------------------------------------------------
+// Streaming sessions
+// ---------------------------------------------------------------------------
+
+/// One operation on a streaming session — the request half of the
+/// session protocol. Clients normally use the typed methods on
+/// [`StreamClient`] / [`StreamSession`] rather than building these.
+#[derive(Debug, Clone)]
+pub enum SessionRequest {
+    /// Open a new session: lease a resident backend slot.
+    Open,
+    /// Append input values — one or more frames' worth; values that do
+    /// not complete a frame are buffered until the rest arrives.
+    PushFrames(Vec<f32>),
+    /// Read the running logits over the frames consumed so far.
+    PollLogits,
+    /// End the sequence: final label, slot back to the free pool.
+    Close,
+}
+
+/// The response half of the session protocol.
+#[derive(Debug, Clone)]
+pub enum SessionResponse {
+    /// Session opened; `session` keys every later op.
+    Opened { session: u64 },
+    /// Push accepted and consumed; `frames` counts the full frames this
+    /// push completed — including one finished by previously buffered
+    /// residue values (values short of a frame are buffered until the
+    /// rest of the frame arrives).
+    Pushed { frames: usize },
+    /// Running logits of the partial sequence.
+    Logits(Vec<f32>),
+    /// Final label; the session is gone.
+    Closed { label: usize },
+    /// The op failed ([`ServeError::Busy`] on open when every slot is
+    /// leased; [`ServeError::Lost`] for unknown sessions or a dead
+    /// worker).
+    Failed(ServeError),
+}
+
+/// Leader-bound envelope: a session op with its response channel.
+struct SessionMsg {
+    session: u64,
+    req: SessionRequest,
+    rtx: mpsc::Sender<SessionResponse>,
+}
+
+enum StreamMsg {
+    Op(SessionMsg),
+    /// Worker→leader note: an open the leader admitted failed on the
+    /// worker side (defensive pool exhaustion, or a backend without a
+    /// streaming interface) — the leader must un-register the session
+    /// and give the capacity back, or the admission counter leaks.
+    OpenFailed { session: u64 },
+    Shutdown,
+}
+
+/// Worker-bound envelope (the leader has already routed it).
+struct SessionJob {
+    session: u64,
+    req: SessionRequest,
+    rtx: mpsc::Sender<SessionResponse>,
+    enqueued: Instant,
+}
+
+/// Handle for opening sessions on a running [`StreamServer`].
+#[derive(Clone)]
+pub struct StreamClient {
+    tx: mpsc::Sender<StreamMsg>,
+}
+
+impl StreamClient {
+    /// Open a session (blocking). [`ServeError::Busy`] when every slot
+    /// across all workers is leased.
+    pub fn open(&self) -> Result<StreamSession, ServeError> {
+        let (rtx, rrx) = mpsc::channel();
+        let msg = StreamMsg::Op(SessionMsg {
+            session: 0,
+            req: SessionRequest::Open,
+            rtx,
+        });
+        if self.tx.send(msg).is_err() {
+            return Err(ServeError::Lost);
+        }
+        match rrx.recv() {
+            Ok(SessionResponse::Opened { session }) => {
+                Ok(StreamSession { tx: self.tx.clone(), id: session })
+            }
+            Ok(SessionResponse::Failed(e)) => Err(e),
+            Ok(_) | Err(_) => Err(ServeError::Lost),
+        }
+    }
+}
+
+/// One live streaming session. Dropping the handle without
+/// [`StreamSession::close`] leaks the slot until shutdown — close is
+/// what returns it to the pool.
+pub struct StreamSession {
+    tx: mpsc::Sender<StreamMsg>,
+    /// Server-assigned session id (echoed in [`SessionResponse::Opened`]).
+    pub id: u64,
+}
+
+impl StreamSession {
+    fn submit(&self, req: SessionRequest) -> mpsc::Receiver<SessionResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(StreamMsg::Op(SessionMsg { session: self.id, req, rtx }));
+        rrx
+    }
+
+    fn roundtrip(&self, req: SessionRequest) -> Result<SessionResponse, ServeError> {
+        match self.submit(req).recv() {
+            Ok(SessionResponse::Failed(e)) => Err(e),
+            Ok(r) => Ok(r),
+            Err(_) => Err(ServeError::Lost),
+        }
+    }
+
+    /// Push input values (one or more frames) and wait for them to be
+    /// consumed; returns the number of full frames advanced.
+    pub fn push_frames(&self, values: Vec<f32>) -> Result<usize, ServeError> {
+        match self.roundtrip(SessionRequest::PushFrames(values))? {
+            SessionResponse::Pushed { frames } => Ok(frames),
+            _ => Err(ServeError::Lost),
+        }
+    }
+
+    /// Fire-and-forget push returning the ack receiver — what a driver
+    /// uses to keep several sessions' frames in flight at once, so the
+    /// worker's tick sees them together and advances them in lockstep.
+    pub fn push_frames_nowait(
+        &self,
+        values: Vec<f32>,
+    ) -> mpsc::Receiver<SessionResponse> {
+        self.submit(SessionRequest::PushFrames(values))
+    }
+
+    /// Running logits over the frames pushed (and consumed) so far —
+    /// bit-identical to a one-shot classification of that prefix.
+    pub fn logits(&self) -> Result<Vec<f32>, ServeError> {
+        match self.roundtrip(SessionRequest::PollLogits)? {
+            SessionResponse::Logits(l) => Ok(l),
+            _ => Err(ServeError::Lost),
+        }
+    }
+
+    /// Close the session: final label over every frame pushed; the slot
+    /// returns to the free pool for the next open.
+    pub fn close(self) -> Result<usize, ServeError> {
+        match self.roundtrip(SessionRequest::Close)? {
+            SessionResponse::Closed { label } => Ok(label),
+            _ => Err(ServeError::Lost),
+        }
+    }
+}
+
+/// A running streaming-session server; `shutdown()` drains in-flight
+/// ops and returns the merged metrics (per-frame push latencies, error
+/// breakdown). Live sessions at shutdown are dropped — later ops on
+/// their handles fail with [`ServeError::Lost`].
+pub struct StreamServer {
+    tx: mpsc::Sender<StreamMsg>,
+    leader: thread::JoinHandle<LatencyRecorder>,
+    workers: Vec<thread::JoinHandle<LatencyRecorder>>,
+}
+
+impl StreamServer {
+    /// Spawn a streaming server: `workers` threads, each constructing
+    /// its own streaming-capable backend via `factory` (on its own
+    /// thread, as [`Server::spawn_sharded`] does), each holding
+    /// `slots_per_worker` resident session slots. The leader admits at
+    /// most `workers × slots_per_worker` live sessions and rejects the
+    /// rest with [`ServeError::Busy`]; `slots_per_worker` must match
+    /// what the factory provisions (the backend's own pool is the
+    /// defensive second check).
+    pub fn spawn<F>(factory: F, workers: usize, slots_per_worker: usize) -> StreamServer
+    where
+        F: Fn() -> Box<dyn Backend> + Send + Sync + 'static,
+    {
+        let n = workers.max(1);
+        let factory = Arc::new(factory);
+        let (tx, rx) = mpsc::channel::<StreamMsg>();
+        let mut worker_txs = Vec::with_capacity(n);
+        let workers: Vec<thread::JoinHandle<LatencyRecorder>> = (0..n)
+            .map(|w| {
+                let f = Arc::clone(&factory);
+                let (jtx, jrx) = mpsc::channel::<SessionJob>();
+                worker_txs.push(jtx);
+                let leader_tx = tx.clone();
+                thread::Builder::new()
+                    .name(format!("minimalist-stream-worker-{w}"))
+                    .spawn(move || {
+                        stream_worker_loop(Box::new(move || (*f)()), jrx, leader_tx)
+                    })
+                    .expect("spawning stream worker thread")
+            })
+            .collect();
+        let capacity = slots_per_worker.max(1);
+        let leader = thread::Builder::new()
+            .name("minimalist-stream-leader".to_string())
+            .spawn(move || stream_leader_loop(rx, worker_txs, capacity))
+            .expect("spawning stream leader thread");
+        StreamServer { tx, leader, workers }
+    }
+
+    pub fn client(&self) -> StreamClient {
+        StreamClient { tx: self.tx.clone() }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stop accepting ops, drain what is queued, and return the merged
+    /// metrics of the leader and every worker that survived (same
+    /// containment policy as [`Server::shutdown`]).
+    pub fn shutdown(self) -> LatencyRecorder {
+        let _ = self.tx.send(StreamMsg::Shutdown);
+        let mut merged = match self.leader.join() {
+            Ok(m) => m,
+            Err(_) => {
+                eprintln!(
+                    "minimalist-stream-server: leader thread panicked; \
+                     in-flight session ops were dropped"
+                );
+                LatencyRecorder::new()
+            }
+        };
+        for w in self.workers {
+            match w.join() {
+                Ok(m) => merged.merge(&m),
+                Err(_) => eprintln!(
+                    "minimalist-stream-server: a worker thread panicked; \
+                     its sessions and metrics are lost"
+                ),
+            }
+        }
+        merged
+    }
+}
+
+/// The streaming leader: owns the session table (session id → worker),
+/// admits or rejects opens against the capacity, and forwards each
+/// session's ops to its pinned worker. A worker whose channel is gone
+/// is marked dead and excluded from placement — its capacity is lost,
+/// not resurrected as a black hole that eats every subsequent open.
+/// Returns a recorder holding the leader-side error counts (Busy
+/// rejections, ops lost to dead workers).
+fn stream_leader_loop(
+    rx: mpsc::Receiver<StreamMsg>,
+    worker_txs: Vec<mpsc::Sender<SessionJob>>,
+    capacity: usize,
+) -> LatencyRecorder {
+    let mut rec = LatencyRecorder::new();
+    let mut sessions: HashMap<u64, usize> = HashMap::new();
+    let mut live = vec![0usize; worker_txs.len()];
+    let mut dead = vec![false; worker_txs.len()];
+    let mut next_session: u64 = 1;
+    while let Ok(msg) = rx.recv() {
+        let SessionMsg { session, req, rtx } = match msg {
+            StreamMsg::Op(op) => op,
+            StreamMsg::OpenFailed { session } => {
+                // the worker could not actually lease a slot for an
+                // admitted open: give the capacity back
+                if let Some(w) = sessions.remove(&session) {
+                    live[w] = live[w].saturating_sub(1);
+                }
+                continue;
+            }
+            StreamMsg::Shutdown => break,
+        };
+        match req {
+            SessionRequest::Open => {
+                // place on the least-loaded *alive* worker with a free
+                // slot; a worker discovered dead at send time is marked
+                // and the open re-placed on the next candidate — a
+                // client's open only fails once no alive worker has
+                // room, never because the probe happened to pick a
+                // corpse first
+                let mut rtx = rtx;
+                loop {
+                    let target = live
+                        .iter()
+                        .enumerate()
+                        .filter(|&(w, &n)| !dead[w] && n < capacity)
+                        .min_by_key(|&(_, &n)| n)
+                        .map(|(w, _)| w);
+                    let Some(w) = target else {
+                        // all alive workers full (or none alive): reject
+                        let e = if dead.iter().all(|&d| d) {
+                            ServeError::Lost
+                        } else {
+                            ServeError::Busy
+                        };
+                        rec.record_error(&e);
+                        let _ = rtx.send(SessionResponse::Failed(e));
+                        break;
+                    };
+                    let id = next_session;
+                    next_session += 1;
+                    let job = SessionJob {
+                        session: id,
+                        req: SessionRequest::Open,
+                        rtx,
+                        enqueued: Instant::now(),
+                    };
+                    match worker_txs[w].send(job) {
+                        Ok(()) => {
+                            sessions.insert(id, w);
+                            live[w] += 1;
+                            break;
+                        }
+                        Err(mpsc::SendError(job)) => {
+                            dead[w] = true;
+                            rtx = job.rtx;
+                        }
+                    }
+                }
+            }
+            req => {
+                let Some(&w) = sessions.get(&session) else {
+                    let _ = rtx.send(SessionResponse::Failed(ServeError::Lost));
+                    continue;
+                };
+                let closing = matches!(req, SessionRequest::Close);
+                let job = SessionJob { session, req, rtx, enqueued: Instant::now() };
+                match worker_txs[w].send(job) {
+                    Ok(()) => {
+                        if closing {
+                            sessions.remove(&session);
+                            live[w] -= 1;
+                        }
+                    }
+                    Err(mpsc::SendError(job)) => {
+                        // the worker died with the session's state
+                        dead[w] = true;
+                        rec.record_error(&ServeError::Lost);
+                        sessions.remove(&session);
+                        live[w] = live[w].saturating_sub(1);
+                        let _ = job.rtx.send(SessionResponse::Failed(ServeError::Lost));
+                    }
+                }
+            }
+        }
+    }
+    rec
+}
+
+/// Drain every full frame queued across the worker's live sessions:
+/// each iteration advances *all* sessions with a pending frame through
+/// one lockstep traversal (`SessionBackend::step_sessions`).
+fn flush_session_ticks(
+    sb: &mut dyn SessionBackend,
+    queue: &mut SessionQueue,
+    slots: &mut Vec<usize>,
+    frames: &mut Vec<f32>,
+) {
+    while queue.next_tick(slots, frames) > 0 {
+        sb.step_sessions(slots, frames);
+    }
+}
+
+/// One streaming worker: owns a streaming-capable backend and the
+/// sessions pinned to it. Ops are drained in arrival order; pushes are
+/// buffered and consumed by lockstep ticks once the worker has seen
+/// everything queued, so concurrently pushed sessions advance together.
+/// Logits/close flush the session's pending frames first — an op
+/// ordered after a push observes that push. No panic containment here:
+/// a panicking streaming backend has corrupt resident state, so the
+/// worker dies and its sessions fail with [`ServeError::Lost`] (see
+/// docs/adr/003).
+fn stream_worker_loop(
+    factory: BoxedFactory,
+    rx: mpsc::Receiver<SessionJob>,
+    leader_tx: mpsc::Sender<StreamMsg>,
+) -> LatencyRecorder {
+    let mut backend = factory();
+    let mut metrics = LatencyRecorder::new();
+    if backend.streaming().is_none() {
+        // not streaming-capable: fail everything (configuration error
+        // surfaced per-op instead of a worker panic); admitted opens
+        // are reported back so the leader's capacity does not leak
+        while let Ok(job) = rx.recv() {
+            if matches!(job.req, SessionRequest::Open) {
+                let _ = leader_tx.send(StreamMsg::OpenFailed { session: job.session });
+            }
+            metrics.record_error(&ServeError::Lost);
+            let _ = job.rtx.send(SessionResponse::Failed(ServeError::Lost));
+        }
+        return metrics;
+    }
+    let width = backend.streaming().expect("checked above").frame_width().max(1);
+    let mut queue = SessionQueue::new(width);
+    // pushes acked after the tick flush that consumed their frames
+    let mut pending_acks: Vec<(mpsc::Sender<SessionResponse>, Instant, usize)> = Vec::new();
+    let (mut slots, mut frames) = (Vec::new(), Vec::new());
+    loop {
+        let Ok(first) = rx.recv() else { break };
+        let mut batch = vec![first];
+        while let Ok(j) = rx.try_recv() {
+            batch.push(j);
+        }
+        for job in batch {
+            let SessionJob { session, req, rtx, enqueued } = job;
+            let sb = backend.streaming().expect("checked above");
+            match req {
+                SessionRequest::Open => match sb.open_session() {
+                    Some(slot) => {
+                        queue.open(session, slot);
+                        let _ = rtx.send(SessionResponse::Opened { session });
+                    }
+                    None => {
+                        // the leader's admission should prevent this;
+                        // kept as the defensive second check — and the
+                        // leader is told, so its live count rolls back
+                        let _ = leader_tx.send(StreamMsg::OpenFailed { session });
+                        metrics.record_error(&ServeError::Busy);
+                        let _ = rtx.send(SessionResponse::Failed(ServeError::Busy));
+                    }
+                },
+                SessionRequest::PushFrames(values) => {
+                    match queue.push(session, &values) {
+                        Some(n) => pending_acks.push((rtx, enqueued, n)),
+                        None => {
+                            metrics.record_error(&ServeError::Lost);
+                            let _ = rtx.send(SessionResponse::Failed(ServeError::Lost));
+                        }
+                    }
+                }
+                SessionRequest::PollLogits => {
+                    // consume everything pushed before the poll
+                    flush_session_ticks(sb, &mut queue, &mut slots, &mut frames);
+                    match queue.slot(session) {
+                        Some(slot) => {
+                            let l = sb.session_logits(slot);
+                            let _ = rtx.send(SessionResponse::Logits(l));
+                        }
+                        None => {
+                            metrics.record_error(&ServeError::Lost);
+                            let _ = rtx.send(SessionResponse::Failed(ServeError::Lost));
+                        }
+                    }
+                }
+                SessionRequest::Close => {
+                    flush_session_ticks(sb, &mut queue, &mut slots, &mut frames);
+                    match queue.close(session) {
+                        Some(slot) => {
+                            let label = sb.close_session(slot);
+                            let _ = rtx.send(SessionResponse::Closed { label });
+                        }
+                        None => {
+                            metrics.record_error(&ServeError::Lost);
+                            let _ = rtx.send(SessionResponse::Failed(ServeError::Lost));
+                        }
+                    }
+                }
+            }
+        }
+        // the lockstep tick: every session that queued frames in this
+        // round advances together through one traversal per time step
+        let sb = backend.streaming().expect("checked above");
+        flush_session_ticks(sb, &mut queue, &mut slots, &mut frames);
+        for (rtx, enqueued, n) in pending_acks.drain(..) {
+            metrics.record(enqueued.elapsed());
+            let _ = rtx.send(SessionResponse::Pushed { frames: n });
         }
     }
     metrics
@@ -666,6 +1202,215 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.items, lens.len() as u64);
         assert_eq!(metrics.errors, 0);
+    }
+
+    /// Streaming test backend: per-session running sum. Logits =
+    /// `[sum]`, label = round(sum) mod 10 — a trivial stateful model
+    /// whose streamed result trivially equals its one-shot result.
+    struct SumStream {
+        sums: Vec<f32>,
+        free: Vec<usize>,
+        leased: Vec<bool>,
+        explode_on_step: bool,
+    }
+
+    impl SumStream {
+        fn new(capacity: usize) -> SumStream {
+            SumStream {
+                sums: vec![0.0; capacity],
+                free: (0..capacity).rev().collect(),
+                leased: vec![false; capacity],
+                explode_on_step: false,
+            }
+        }
+
+        /// A variant whose first tick panics — kills its worker thread
+        /// (streaming workers deliberately have no panic containment).
+        fn exploding(capacity: usize) -> SumStream {
+            SumStream { explode_on_step: true, ..SumStream::new(capacity) }
+        }
+    }
+
+    impl Backend for SumStream {
+        fn name(&self) -> &str {
+            "sum-stream"
+        }
+
+        fn classify_batch(&mut self, seqs: &[Vec<f32>]) -> Vec<usize> {
+            seqs.iter()
+                .map(|s| (s.iter().sum::<f32>().round() as usize) % 10)
+                .collect()
+        }
+
+        fn streaming(&mut self) -> Option<&mut dyn SessionBackend> {
+            Some(self)
+        }
+    }
+
+    impl SessionBackend for SumStream {
+        fn session_capacity(&self) -> usize {
+            self.sums.len()
+        }
+
+        fn frame_width(&self) -> usize {
+            1
+        }
+
+        fn open_session(&mut self) -> Option<usize> {
+            let slot = self.free.pop()?;
+            self.leased[slot] = true;
+            self.sums[slot] = 0.0;
+            Some(slot)
+        }
+
+        fn step_sessions(&mut self, slots: &[usize], frames: &[f32]) {
+            assert!(!self.explode_on_step, "backend exploded mid-tick");
+            for (&slot, &x) in slots.iter().zip(frames.iter()) {
+                assert!(self.leased[slot], "step on an unleased slot");
+                self.sums[slot] += x;
+            }
+        }
+
+        fn session_logits(&self, slot: usize) -> Vec<f32> {
+            vec![self.sums[slot]]
+        }
+
+        fn close_session(&mut self, slot: usize) -> usize {
+            self.leased[slot] = false;
+            self.free.push(slot);
+            (self.sums[slot].round() as usize) % 10
+        }
+    }
+
+    #[test]
+    fn stream_sessions_end_to_end() {
+        let server = StreamServer::spawn(|| Box::new(SumStream::new(4)) as _, 1, 4);
+        let client = server.client();
+        let a = client.open().unwrap();
+        let b = client.open().unwrap();
+        assert_ne!(a.id, b.id);
+        // interleaved incremental pushes, one or many frames at a time
+        assert_eq!(a.push_frames(vec![1.0]).unwrap(), 1);
+        assert_eq!(b.push_frames(vec![2.0, 2.0]).unwrap(), 2);
+        // mid-sequence poll reflects exactly the frames pushed so far
+        assert_eq!(a.logits().unwrap(), vec![1.0]);
+        assert_eq!(b.logits().unwrap(), vec![4.0]);
+        a.push_frames(vec![2.0]).unwrap();
+        b.push_frames(vec![3.0]).unwrap();
+        assert_eq!(a.close().unwrap(), 3);
+        assert_eq!(b.close().unwrap(), 7);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.errors, 0);
+        assert!(metrics.items >= 4, "push latencies must be recorded");
+    }
+
+    #[test]
+    fn stream_open_rejected_busy_when_slots_exhausted() {
+        // 2 workers × 1 slot = capacity 2; leases are resident, so the
+        // third open is rejected, not queued — and closing one admits
+        // the next
+        let server = StreamServer::spawn(|| Box::new(SumStream::new(1)) as _, 2, 1);
+        let client = server.client();
+        let a = client.open().unwrap();
+        let b = client.open().unwrap();
+        assert_eq!(client.open().err(), Some(ServeError::Busy));
+        a.push_frames(vec![4.0]).unwrap();
+        assert_eq!(a.close().unwrap(), 4);
+        let c = client.open().expect("freed slot must admit a new session");
+        c.push_frames(vec![5.0]).unwrap();
+        assert_eq!(c.close().unwrap(), 5);
+        b.close().unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.errors, 1);
+        assert_eq!(metrics.errors_busy, 1, "the rejection must be counted");
+    }
+
+    #[test]
+    fn stream_shutdown_with_live_sessions_fails_later_ops() {
+        let server = StreamServer::spawn(|| Box::new(SumStream::new(2)) as _, 1, 2);
+        let client = server.client();
+        let live = client.open().unwrap();
+        live.push_frames(vec![1.0]).unwrap();
+        server.shutdown(); // session still open: dropped with the server
+        assert_eq!(live.push_frames(vec![1.0]).err(), Some(ServeError::Lost));
+        assert_eq!(live.close().err(), Some(ServeError::Lost));
+        assert!(client.open().is_err());
+    }
+
+    #[test]
+    fn stream_against_non_streaming_backend_fails_cleanly() {
+        // SumBackend has no streaming interface: the worker must fail
+        // ops per-session instead of panicking — and every failed open
+        // must roll the leader's admission back, so opens keep failing
+        // with Lost instead of exhausting phantom capacity into Busy
+        let server = StreamServer::spawn(|| Box::new(SumBackend) as _, 1, 2);
+        let client = server.client();
+        for _ in 0..5 {
+            // 5 > capacity 2: a leaked live count would turn these Busy
+            assert_eq!(client.open().err(), Some(ServeError::Lost));
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.errors_lost, 5);
+        assert_eq!(metrics.errors_busy, 0);
+    }
+
+    #[test]
+    fn dead_stream_worker_excluded_from_placement() {
+        // one of two workers gets a backend that panics on its first
+        // tick (killing the worker thread); the leader must mark it
+        // dead on the first failed send and keep placing new sessions
+        // on the survivor instead of black-holing every open
+        let built = Arc::new(Mutex::new(0usize));
+        let built2 = Arc::clone(&built);
+        let server = StreamServer::spawn(
+            move || {
+                let mut n = built2.lock().unwrap();
+                *n += 1;
+                if *n == 1 {
+                    Box::new(SumStream::exploding(2)) as Box<dyn Backend>
+                } else {
+                    Box::new(SumStream::new(2)) as Box<dyn Backend>
+                }
+            },
+            2,
+            2,
+        );
+        let client = server.client();
+        // fill both workers, then push everywhere: the exploding
+        // worker's sessions fail, the survivor's serve normally
+        let sessions: Vec<_> = (0..4).map(|_| client.open().unwrap()).collect();
+        let mut survived = 0;
+        for s in sessions {
+            let pushed = s.push_frames(vec![2.0]);
+            match pushed {
+                Ok(_) => {
+                    survived += 1;
+                    assert_eq!(s.close().unwrap(), 2);
+                }
+                Err(ServeError::Lost) => {
+                    // its worker is gone; close fails too, freeing the
+                    // leader-side accounting
+                    assert_eq!(s.close().err(), Some(ServeError::Lost));
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(survived, 2, "the healthy worker's sessions must serve");
+        // new sessions must land on the survivor. The leader re-places
+        // an open whose chosen worker turns out dead, so this succeeds
+        // directly — the retry loop only guards the narrow race where
+        // the dying worker's channel still accepts the send mid-unwind.
+        let mut reopened = None;
+        for _ in 0..4 {
+            if let Ok(s) = client.open() {
+                reopened = Some(s);
+                break;
+            }
+        }
+        let s = reopened.expect("opens must route to the surviving worker");
+        s.push_frames(vec![3.0]).unwrap();
+        assert_eq!(s.close().unwrap(), 3);
+        server.shutdown();
     }
 
     #[test]

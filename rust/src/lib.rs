@@ -7,13 +7,51 @@
 //! behavioral switched-capacitor implementation — charge-sharing IMC,
 //! SAR-ADC gate digitization with tunable slope/offset, and the
 //! capacitor-swap state update — plus the serving infrastructure around
-//! it (event router, multi-core coordinator, PJRT runtime for the
-//! AOT-compiled JAX reference model).
+//! it (event router, batched and streaming coordinator, PJRT runtime
+//! for the AOT-compiled JAX reference model).
 //!
-//! Layer map (see DESIGN.md):
-//! * Layer 1/2 (python, build-time only): Pallas kernels + JAX model,
-//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! ## Layer map
+//!
+//! * Layers 1/2 (python, build-time only): Pallas kernels + JAX model,
+//!   trained and AOT-lowered to `artifacts/*.hlo.txt`.
 //! * Layer 3 (this crate): everything on the request path.
+//!
+//! ## Module graph
+//!
+//! Physics, bottom-up: [`satsim`] resolves the charge-domain circuits
+//! (cap banks → ADC → GRU columns → cores), [`router`] carries binary
+//! events between cores, and [`energy`] accounts every cap event and
+//! conversion. The model side: [`nn`] is the golden software network in
+//! logical units plus checkpoint loading, [`quant`] holds the 2-/6-bit
+//! code types and the codesign mapping from trained parameters to
+//! circuit knobs, and [`mapping`] plans validated layer→core placements
+//! ([`mapping::Plan`]) over a fixed [`config::CoreGeometry`]. Serving,
+//! on top: [`coordinator`] executes plans on simulated cores
+//! ([`coordinator::MixedSignalEngine`]) and serves them — batched
+//! one-shot requests ([`coordinator::Server`]) and streaming stateful
+//! sessions ([`coordinator::StreamServer`]); [`runtime`] runs the AOT
+//! artifacts through PJRT (feature-gated); [`dataset`], [`io`],
+//! [`util`], [`bench_suite`], and [`config`] supply data, containers,
+//! and knobs throughout.
+//!
+//! ## The two parity invariants
+//!
+//! Everything above the circuit level is pinned by two equivalences,
+//! enforced as equality in the test suite:
+//!
+//! 1. **Engine ≡ golden** (physics vs arithmetic): an ideal-circuit
+//!    [`coordinator::MixedSignalEngine`] tracks the exact
+//!    [`nn::GoldenNetwork`] recurrence up to the capacitor-swap
+//!    granularity, for unsplit, replicated, column-split, and row-split
+//!    placements alike (engine tests, tests/row_split.rs).
+//! 2. **Batched/streamed ≡ sequential** (serving vs physics): lockstep
+//!    batches and frame-by-frame streaming sessions produce logits
+//!    **bit-identical** to one-shot sequential classification, under
+//!    full circuit noise — the slot-RNG seeding convention of
+//!    docs/adr/001 (tests/batch_parity.rs, tests/stream_parity.rs).
+//!
+//! Architecture decision records live in `docs/adr/` (slot-RNG seeding,
+//! lockstep batching, the streaming slot-lease design).
 
 pub mod bench_suite;
 pub mod config;

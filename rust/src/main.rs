@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   info                      system + config summary
 //!   serve                     batched serving loop over synthMNIST load
+//!   serve --streaming         streaming sessions over frame-paced load
 //!   plan                      print the layer→core mapping plan
 //!   bench                     recorded perf baseline → BENCH_pr4.json
 //!                             (--check gates on regressions vs --baseline)
@@ -19,7 +20,8 @@ use minimalist::config::{
     CircuitConfig, CoreGeometry, MappingConfig, NetworkConfig, ServeConfig,
 };
 use minimalist::coordinator::{
-    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
+    BatchPolicy, GoldenBackend, LatencyRecorder, MixedSignalBackend,
+    MixedSignalEngine, ServeError, Server, StreamServer, StreamSession,
 };
 use minimalist::dataset::glyphs;
 use minimalist::energy;
@@ -107,7 +109,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", defaults.workers)?.max(1),
         max_batch: args.get_usize("max-batch", defaults.max_batch)?,
         max_wait_ms: args.get_u64("max-wait-ms", defaults.max_wait_ms)?,
+        sessions: args.get_usize("sessions", defaults.sessions)?.max(1),
     };
+    if args.flag("streaming") {
+        return cmd_serve_streaming(args, weights, &serve, &backend, n_req, img);
+    }
     let policy = BatchPolicy::from(&serve);
     let server = match backend.as_str() {
         "golden" => Server::spawn_sharded(
@@ -171,12 +177,170 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let metrics = server.shutdown();
     println!("backend={backend} {}", metrics.summary());
+    print_error_breakdown(&metrics);
     println!(
         "accuracy {}/{} = {:.3} ({} failed)",
         correct,
         n_req,
         correct as f64 / n_req as f64,
         failed
+    );
+    Ok(())
+}
+
+/// Break the merged error counter out per [`ServeError`] variant, so
+/// e.g. streaming `Busy` rejections are distinguishable from lost
+/// requests and poisoned batches in the end-of-run report.
+fn print_error_breakdown(metrics: &LatencyRecorder) {
+    if metrics.errors > 0 {
+        println!(
+            "errors   : {} total — lost={} busy={} panicked={}",
+            metrics.errors,
+            metrics.errors_lost,
+            metrics.errors_busy,
+            metrics.errors_panicked
+        );
+    }
+}
+
+/// `minimalist serve --streaming`: frame-paced synthetic load through
+/// the streaming-session path. The driver keeps up to `--concurrent`
+/// sessions open (default: the slot capacity, `workers × --sessions`;
+/// set it higher to watch `Busy` rejections), pushes
+/// `--frames-per-push` pixels per round to every live session — the
+/// worker advances them together in lockstep — polls one session's
+/// running logits mid-sequence, and closes each finished session for
+/// its label.
+fn cmd_serve_streaming(
+    args: &Args,
+    weights: minimalist::nn::NetworkWeights,
+    serve: &ServeConfig,
+    backend: &str,
+    n_req: usize,
+    img: usize,
+) -> Result<()> {
+    let capacity = serve.workers * serve.sessions;
+    let concurrent = args.get_usize("concurrent", capacity)?.max(1);
+    let chunk = args.get_usize("frames-per-push", 32)?.max(1);
+    let server = match backend {
+        "golden" => StreamServer::spawn(
+            GoldenBackend::streaming_factory(weights, serve.sessions),
+            serve.workers,
+            serve.sessions,
+        ),
+        "satsim" => {
+            let mapping = mapping_from_args(args)?;
+            let planned = Plan::build(&weights.dims, &mapping)?;
+            let (plan, factory) = MixedSignalBackend::streaming_factory_from_plan(
+                weights,
+                CircuitConfig::default(),
+                planned,
+                serve.sessions,
+            )?;
+            let (used, total) = plan.occupancy_at(serve.sessions);
+            println!(
+                "mapping: {} core(s) of {}x{}, {} resident session slot(s) \
+                 per worker, occupancy {:.1}%",
+                plan.n_cores,
+                plan.geometry.rows,
+                plan.geometry.cols,
+                serve.sessions,
+                100.0 * used as f64 / total.max(1) as f64
+            );
+            StreamServer::spawn(factory, serve.workers, serve.sessions)
+        }
+        other => anyhow::bail!("unknown backend '{other}' (golden|satsim)"),
+    };
+    println!(
+        "streaming with {} worker(s) × {} slot(s) = capacity {capacity}, \
+         {concurrent} concurrent session(s), {chunk} frame(s)/push",
+        server.n_workers(),
+        serve.sessions,
+    );
+    let client = server.client();
+    let samples = glyphs::make_split(n_req, img, args.get_u64("seed", 1)?);
+    // (label, session, pixels, cursor) per live session
+    let mut active: Vec<(usize, StreamSession, Vec<f32>, usize)> = Vec::new();
+    let mut it = samples.into_iter();
+    let (mut correct, mut failed, mut busy_rejected) = (0usize, 0usize, 0usize);
+    let mut polled = false;
+    loop {
+        // top up the live-session window; a Busy rejection ends the
+        // top-up for this round (the sample counts as rejected load)
+        while active.len() < concurrent {
+            let Some(s) = it.next() else { break };
+            match client.open() {
+                Ok(sess) => active.push((s.label, sess, s.pixels, 0)),
+                Err(e) => {
+                    failed += 1;
+                    busy_rejected += (e == ServeError::Busy) as usize;
+                    break;
+                }
+            }
+        }
+        if active.is_empty() {
+            break;
+        }
+        // one frame-paced round: a chunk to every live session, pushed
+        // without waiting so the worker ticks them in lockstep
+        let acks: Vec<_> = active
+            .iter_mut()
+            .map(|(_, sess, px, cur)| {
+                let end = (*cur + chunk).min(px.len());
+                let payload = px[*cur..end].to_vec();
+                *cur = end;
+                sess.push_frames_nowait(payload)
+            })
+            .collect();
+        for rx in acks {
+            let _ = rx.recv();
+        }
+        // demonstrate the mid-sequence poll once, on a half-done session
+        if !polled {
+            if let Some((_, sess, px, cur)) =
+                active.iter().find(|(_, _, px, cur)| *cur * 2 >= px.len())
+            {
+                if *cur < px.len() {
+                    if let Ok(logits) = sess.logits() {
+                        println!(
+                            "running logits after {}/{} frames: argmax={}",
+                            cur,
+                            px.len(),
+                            minimalist::nn::argmax(&logits)
+                        );
+                        polled = true;
+                    }
+                }
+            }
+        }
+        // close finished sessions (slots return to the pool, so the
+        // next round's top-up reuses them)
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].3 >= active[i].2.len() {
+                let (label, sess, _, _) = active.swap_remove(i);
+                match sess.close() {
+                    Ok(l) => correct += (l == label) as usize,
+                    Err(e) => {
+                        failed += 1;
+                        eprintln!("session close failed: {e}");
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+    let metrics = server.shutdown();
+    println!("backend={backend} streaming {}", metrics.summary());
+    print_error_breakdown(&metrics);
+    println!(
+        "accuracy {}/{} = {:.3} ({} failed, {} busy-rejected)",
+        correct,
+        n_req,
+        correct as f64 / n_req as f64,
+        failed,
+        busy_rejected
     );
     Ok(())
 }

@@ -1,5 +1,5 @@
 //! Codesign mapping: trained `hw`-variant parameters → per-layer circuit
-//! configuration (DESIGN.md §5).
+//! configuration (paper §3.2).
 //!
 //! The software model works in *logical* units: effective weights
 //! `codes·scale`, IMC means, a gate pre-activation `u = α·imc + β` pushed

@@ -2,7 +2,7 @@
 //! `python/compile/quant.py`) and the codesign mapping from trained
 //! parameters to circuit configuration.
 //!
-//! Conventions (DESIGN.md §5):
+//! Conventions (paper §3.1–3.2):
 //! * 2-bit weight codes `w ∈ {0,1,2,3}` → effective value `(w−1.5)·scale`
 //!   — the four equidistant rails `V_00..V_11` around `V_0`.
 //! * 6-bit bias codes `b ∈ {−32..31}` → `b·scale`.
@@ -85,7 +85,7 @@ impl Z6 {
         self.0 as f32 / 63.0
     }
 
-    /// Number of capacitors to swap in a bank of `n_caps` (DESIGN.md §5).
+    /// Number of capacitors to swap in a bank of `n_caps` (paper Eq. 1).
     pub fn swap_count(self, n_caps: usize) -> usize {
         ((self.0 as f32 / 63.0) * n_caps as f32).round() as usize
     }

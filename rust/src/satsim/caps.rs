@@ -1,7 +1,7 @@
 //! Capacitor banks and charge-sharing arithmetic — the primitive every
 //! MINIMALIST operation reduces to.
 //!
-//! Physics (DESIGN.md §6): shorting a set of capacitors {C_i, V_i}
+//! Physics: shorting a set of capacitors {C_i, V_i}
 //! settles, by charge conservation, at V = Σ C_i·V_i / Σ C_i. Mismatch
 //! makes C_i = C_unit·(1+ε_i); sampling adds kT/C noise; turning a
 //! transmission gate off injects a deterministic channel-charge kick.

@@ -2,7 +2,7 @@
 //! with three capacitors — a swappable h/h̃ pair and a z sampling cap —
 //! plus the column's SAR ADC channel and output comparator.
 //!
-//! The four clock phases of one time step (DESIGN.md §6):
+//! The four clock phases of one time step (paper §3.2):
 //!   P1  sample: the *free* cap of every pair and the z cap charge to the
 //!       weight rail selected by the local 2-bit SRAM code (row driver
 //!       clamps to V_0 when x_i = 0; the first layer's analog pixel
@@ -226,6 +226,38 @@ impl Column {
     /// bank). Reads the maintained `idx_h` scratch list — no allocation.
     pub fn v_h(&self) -> f64 {
         self.pair_bank.weighted_mean(&self.idx_h)
+    }
+
+    /// Reset the state of batch slot `slot` **alone** to V_0, leaving
+    /// every other slot's parked state untouched — the slot-lease path
+    /// of streaming sessions, where one sequence ends while its
+    /// neighbors keep running. After this, the slot is indistinguishable
+    /// from a freshly [`Column::reset`] one.
+    pub fn reset_slot(&mut self, slot: usize, cfg: &CircuitConfig) {
+        assert!(
+            slot < self.slots.len(),
+            "slot {slot} out of range ({} provisioned)",
+            self.slots.len()
+        );
+        if slot == self.bound {
+            // the bound slot's real state lives in the working fields
+            for v in self.pair_bank.v.iter_mut() {
+                *v = cfg.v_0;
+            }
+            for v in self.z_bank.v.iter_mut() {
+                *v = cfg.v_0;
+            }
+            self.v_line_htilde = cfg.v_0;
+            self.v_line_z = cfg.v_0;
+            self.v_line_h = cfg.v_0;
+            for s in self.h_sel.iter_mut() {
+                *s = false;
+            }
+            self.rebuild_idx_h();
+            self.idx_free.clear();
+        } else {
+            self.slots[slot].reset(cfg.v_0);
+        }
     }
 
     /// Reset the state caps (and lines) of **every** slot to V_0.
@@ -625,6 +657,35 @@ mod tests {
             let sb = b.step(&x, &cfg, &mut rng_b, &mut mb);
             assert_eq!(sa, sb, "slot 0 diverged at step {t}");
         }
+    }
+
+    #[test]
+    fn reset_slot_touches_only_its_slot() {
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 3, true);
+        col.set_slots(3, &cfg);
+        let mut meter = EnergyMeter::new();
+        let x = vec![1.0; n];
+        // drive all three slots off V_0
+        for s in 0..3 {
+            col.bind_slot(s);
+            col.step(&x, &cfg, &mut rng, &mut meter);
+        }
+        let v2 = {
+            col.bind_slot(2);
+            col.v_h()
+        };
+        // reset a parked slot (0) and the bound slot (2)
+        col.reset_slot(0, &cfg);
+        assert!(v2 > cfg.v_0);
+        col.reset_slot(2, &cfg);
+        col.bind_slot(0);
+        assert!((col.v_h() - cfg.v_0).abs() < 1e-12, "slot 0 not reset");
+        col.bind_slot(2);
+        assert!((col.v_h() - cfg.v_0).abs() < 1e-12, "slot 2 not reset");
+        // slot 1 survived both resets
+        col.bind_slot(1);
+        assert!(col.v_h() > cfg.v_0, "slot 1 must keep its state");
     }
 
     #[test]

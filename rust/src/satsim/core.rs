@@ -136,6 +136,22 @@ impl Core {
         }
     }
 
+    /// Reset batch slot `slot` **alone** to sequence-boundary state:
+    /// its column state returns to V_0, its noise stream to the
+    /// construction state, and any in-flight two-phase step of the slot
+    /// is discarded — the other slots keep running untouched. This is
+    /// the lease path of streaming sessions: a slot freed by one
+    /// sequence is handed to the next mid-flight, and the recycled slot
+    /// replays exactly the stream a fresh [`Core::reset`] run sees
+    /// (bit-identical results, pinned by tests/stream_parity.rs).
+    pub fn reset_slot(&mut self, slot: usize, cfg: &CircuitConfig) {
+        for c in self.columns.iter_mut() {
+            c.reset_slot(slot, cfg);
+        }
+        self.slot_rngs[slot] = self.rng0.clone();
+        self.col_rngs[slot].clear();
+    }
+
     /// One time step over the full array on batch slot 0. `x` has
     /// `active_rows` entries. Per-column observables are written into
     /// `out` (a reusable buffer — the steady-state step allocates
@@ -438,6 +454,57 @@ mod tests {
         );
         // 2 slots × 4 lockstep steps = 8 accounted sequence-steps
         assert_eq!(core.meter.steps, 8);
+    }
+
+    #[test]
+    fn reset_slot_replays_the_construction_stream() {
+        // A recycled slot must be indistinguishable from a fresh one:
+        // after reset_slot, its step outputs equal a freshly reset
+        // core's slot-0 outputs — under full noise (stream included) —
+        // while a neighbor slot keeps its state.
+        let cfg = CircuitConfig::default();
+        let mk = || {
+            let col_cfgs: Vec<ColumnConfig> = (0..6)
+                .map(|j| ColumnConfig {
+                    w_h: (0..12).map(|i| W2::new(((i + j) % 4) as u8)).collect(),
+                    w_z: (0..12).map(|i| W2::new(((i + 2 * j) % 4) as u8)).collect(),
+                    slope_m: 6,
+                    offset_code: OFFSET_NEUTRAL,
+                    v_theta: cfg.v_0,
+                })
+                .collect();
+            Core::new(CoreGeometry { rows: 12, cols: 12 }, col_cfgs, &cfg, 9)
+        };
+        let mut fresh = mk();
+        let mut used = mk();
+        used.set_slots(2, &cfg);
+        let (mut fo, mut uo) = (CoreStep::default(), CoreStep::default());
+        let x: Vec<f64> = (0..12).map(|i| (i % 2) as f64).collect();
+        // burn some steps on both slots of `used`
+        for _ in 0..5 {
+            used.step_slot(0, &x, &cfg, &mut uo);
+            used.step_slot(1, &x, &cfg, &mut uo);
+        }
+        let v1_before = {
+            for c in used.columns.iter_mut() {
+                c.bind_slot(1);
+            }
+            used.state_voltages()
+        };
+        used.reset_slot(0, &cfg);
+        for t in 0..10 {
+            let y: Vec<f64> = (0..12).map(|i| ((t + i) % 3) as f64 / 2.0).collect();
+            fresh.step_slot(0, &y, &cfg, &mut fo);
+            used.step_slot(0, &y, &cfg, &mut uo);
+            for (p, q) in fo.steps.iter().zip(uo.steps.iter()) {
+                assert_eq!(p, q, "recycled slot diverged at step {t}");
+            }
+        }
+        // slot 1 was not disturbed by the slot-0 reset
+        for c in used.columns.iter_mut() {
+            c.bind_slot(1);
+        }
+        assert_eq!(used.state_voltages(), v1_before);
     }
 
     #[test]

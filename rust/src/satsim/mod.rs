@@ -1,5 +1,5 @@
 //! Behavioral switched-capacitor simulator — the substitution for the
-//! paper's Cadence Spectre AMS mixed-signal verification (DESIGN.md §2).
+//! paper's Cadence Spectre AMS mixed-signal verification (§4).
 //!
 //! Everything the MINIMALIST cores do is charge-domain arithmetic:
 //! pre-charge capacitors to rail voltages, short groups of capacitors,

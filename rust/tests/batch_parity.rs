@@ -133,6 +133,41 @@ fn engine_batch_reuse_stays_consistent() {
 }
 
 #[test]
+fn engine_streamed_slots_match_batch_and_sequential() {
+    // the PR 5 extension of the invariant: the same sequences through
+    // (a) sequential classify, (b) lockstep classify_batch, and (c) the
+    // streaming slot-lease path advanced frame by frame — all three
+    // bit-identical under full noise
+    let nw = synthetic_network(&[1, 20, 10], 29);
+    let mut seq_engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 32, cols: 32 },
+    )
+    .unwrap();
+    let mut bat_engine = seq_engine.replicate().unwrap();
+    let mut stream_engine = seq_engine.replicate().unwrap();
+    let seqs = make_seqs(3, 18, 1, 2);
+    // (a) vs (b)
+    assert_bitwise_parity(&mut seq_engine, &mut bat_engine, &seqs, "pr5");
+    // (c): lease a slot per sequence and advance all three per tick
+    stream_engine.provision_sessions(3);
+    let slots: Vec<usize> = (0..3).map(|_| stream_engine.lease_slot().unwrap()).collect();
+    for t in 0..18 {
+        let frames: Vec<f32> = seqs.iter().map(|s| s[t]).collect();
+        stream_engine.step_slots(&slots, &frames);
+    }
+    for (i, s) in seqs.iter().enumerate() {
+        seq_engine.classify(s);
+        assert_eq!(
+            stream_engine.logits_slot(slots[i]),
+            seq_engine.logits(),
+            "streamed slot {i} diverged from sequential"
+        );
+    }
+}
+
+#[test]
 fn golden_backend_batch_matches_sequential() {
     let nw = synthetic_network(&[1, 12, 10], 9);
     let mut a = GoldenBackend::new(GoldenNetwork::new(nw.clone()));

@@ -1,0 +1,270 @@
+//! Streamed-vs-one-shot parity (PR 5 tentpole).
+//!
+//! A sequence fed frame by frame through a streaming session — however
+//! it is chunked, and however many other live sessions' ticks interleave
+//! with it — must produce **bit-identical** logits to a one-shot
+//! classification of the same frames, for the golden *and* the
+//! mixed-signal backends, under full circuit noise. The mixed-signal
+//! guarantee is the slot-RNG seeding convention once more (every leased
+//! slot replays the construction noise stream from its own local clock;
+//! docs/adr/001 and 003): state that makes streaming *possible* is
+//! exactly the state that makes it *exact*.
+//!
+//! Also pinned here: slot exhaustion (`ServeError::Busy`, leader-side
+//! admission), and close-mid-sequence cleanup — a slot abandoned partway
+//! through a sequence returns to the free pool, and the next session
+//! leasing it matches a fresh sequential run bit for bit.
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::{
+    Backend, GoldenBackend, MixedSignalBackend, MixedSignalEngine, ServeError,
+    StreamServer,
+};
+use minimalist::nn::{argmax, synthetic_network, GoldenNetwork};
+
+/// Deterministic per-session test sequence.
+fn seq(len: usize, salt: usize) -> Vec<f32> {
+    (0..len)
+        .map(|t| (((t + 2) * (salt + 3)) % 7) as f32 / 6.0)
+        .collect()
+}
+
+#[test]
+fn golden_streamed_interleaved_matches_one_shot() {
+    let nw = synthetic_network(&[1, 12, 10], 9);
+    let mut reference = GoldenNetwork::new(nw.clone());
+    let mut backend = GoldenBackend::with_sessions(GoldenNetwork::new(nw), 3);
+    let sb = backend.streaming().expect("sessions provisioned");
+    // three sessions of different lengths, advanced through shared
+    // lockstep ticks until each runs out of frames
+    let seqs = [seq(24, 0), seq(16, 1), seq(20, 2)];
+    let slots: Vec<usize> = (0..3).map(|_| sb.open_session().expect("capacity 3")).collect();
+    for t in 0..24 {
+        let (mut tick_slots, mut tick_frames) = (Vec::new(), Vec::new());
+        for (i, s) in seqs.iter().enumerate() {
+            if t < s.len() {
+                tick_slots.push(slots[i]);
+                tick_frames.push(s[t]);
+            }
+        }
+        sb.step_sessions(&tick_slots, &tick_frames);
+    }
+    for (i, s) in seqs.iter().enumerate() {
+        reference.classify(s);
+        assert_eq!(
+            sb.session_logits(slots[i]),
+            reference.logits(),
+            "golden session {i} diverged from one-shot logits"
+        );
+        assert_eq!(sb.close_session(slots[i]), argmax(&reference.logits()));
+    }
+}
+
+#[test]
+fn mixed_signal_streamed_interleaved_matches_one_shot_noisy() {
+    // full circuit noise: this pins the per-slot RNG convention on the
+    // streaming path, not just the arithmetic
+    let nw = synthetic_network(&[1, 16, 10], 21);
+    let mut seq_engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let engine = seq_engine.replicate().unwrap();
+    let mut backend = MixedSignalBackend::with_sessions(engine, 3);
+    let sb = backend.streaming().expect("sessions provisioned");
+    let seqs = [seq(20, 4), seq(12, 5), seq(16, 6)];
+    let slots: Vec<usize> = (0..3).map(|_| sb.open_session().expect("capacity 3")).collect();
+    for t in 0..20 {
+        let (mut tick_slots, mut tick_frames) = (Vec::new(), Vec::new());
+        for (i, s) in seqs.iter().enumerate() {
+            if t < s.len() {
+                tick_slots.push(slots[i]);
+                tick_frames.push(s[t]);
+            }
+        }
+        sb.step_sessions(&tick_slots, &tick_frames);
+    }
+    for (i, s) in seqs.iter().enumerate() {
+        let want = seq_engine.classify(s);
+        assert_eq!(
+            sb.session_logits(slots[i]),
+            seq_engine.logits(),
+            "mixed-signal session {i} is not bit-identical to one-shot"
+        );
+        assert_eq!(sb.close_session(slots[i]), want);
+    }
+}
+
+#[test]
+fn mixed_signal_row_split_streams_bit_identical() {
+    // 40 inputs on 32-row cores → 2 row tiles: the streamed subset path
+    // through the partial-sum combine, interleaved with a second session
+    let nw = synthetic_network(&[40, 8], 5);
+    let mut seq_engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 32, cols: 32 },
+    )
+    .unwrap();
+    assert!(seq_engine.plan.layers[0].is_row_split());
+    let engine = seq_engine.replicate().unwrap();
+    let mut backend = MixedSignalBackend::with_sessions(engine, 2);
+    let sb = backend.streaming().expect("sessions provisioned");
+    let (a, b) = (seq(40 * 8, 7), seq(40 * 5, 8));
+    let (sa, sb_slot) = (sb.open_session().unwrap(), sb.open_session().unwrap());
+    for t in 0..8 {
+        let mut slots = vec![sa];
+        let mut frames = a[t * 40..(t + 1) * 40].to_vec();
+        if t < 5 {
+            slots.push(sb_slot);
+            frames.extend_from_slice(&b[t * 40..(t + 1) * 40]);
+        }
+        sb.step_sessions(&slots, &frames);
+    }
+    let want_a = seq_engine.classify(&a);
+    assert_eq!(sb.session_logits(sa), seq_engine.logits());
+    let want_b = seq_engine.classify(&b);
+    assert_eq!(sb.session_logits(sb_slot), seq_engine.logits());
+    assert_eq!(sb.close_session(sa), want_a);
+    assert_eq!(sb.close_session(sb_slot), want_b);
+}
+
+#[test]
+fn close_mid_sequence_recycles_slot_bit_clean() {
+    // a session abandoned partway through returns its slot to the pool,
+    // and the next session leasing that slot matches a fresh sequential
+    // run exactly — no residue from the abandoned analog state
+    let nw = synthetic_network(&[1, 16, 10], 33);
+    let mut seq_engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let engine = seq_engine.replicate().unwrap();
+    let mut backend = MixedSignalBackend::with_sessions(engine, 1);
+    let sb = backend.streaming().expect("sessions provisioned");
+    let abandoned = sb.open_session().expect("capacity 1");
+    assert!(sb.open_session().is_none(), "slot pool must exhaust");
+    // advance the abandoned session partway, then close mid-sequence
+    for t in 0..7 {
+        sb.step_sessions(&[abandoned], &[seq(20, 9)[t]]);
+    }
+    sb.close_session(abandoned);
+    // the freed slot serves a fresh session
+    let fresh = sb.open_session().expect("slot must return to the pool");
+    assert_eq!(fresh, abandoned);
+    let s = seq(20, 10);
+    for &f in &s {
+        sb.step_sessions(&[fresh], &[f]);
+    }
+    let want = seq_engine.classify(&s);
+    assert_eq!(
+        sb.session_logits(fresh),
+        seq_engine.logits(),
+        "recycled slot must match a fresh sequential run bit for bit"
+    );
+    assert_eq!(sb.close_session(fresh), want);
+}
+
+#[test]
+fn stream_server_e2e_matches_one_shot_golden_and_satsim() {
+    // the full protocol path — leader routing, worker affinity, frame
+    // assembly — on both backends, sessions interleaved and chunked
+    // unevenly; every streamed label must equal one-shot classification
+    let nw = synthetic_network(&[1, 12, 10], 13);
+    let mut golden_ref = GoldenNetwork::new(nw.clone());
+    let satsim_template = MixedSignalEngine::new(
+        nw.clone(),
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let mut satsim_ref = satsim_template.replicate().unwrap();
+
+    let golden_server =
+        StreamServer::spawn(GoldenBackend::streaming_factory(nw.clone(), 4), 1, 4);
+    let (_, satsim_factory) = MixedSignalBackend::streaming_factory_from_plan(
+        nw,
+        CircuitConfig::default(),
+        satsim_template.plan.clone(),
+        4,
+    )
+    .unwrap();
+    let satsim_server = StreamServer::spawn(satsim_factory, 1, 4);
+
+    for (name, server) in [("golden", golden_server), ("satsim", satsim_server)] {
+        let client = server.client();
+        let seqs = [seq(24, 0), seq(18, 1), seq(21, 2), seq(24, 3)];
+        let sessions: Vec<_> = (0..4).map(|_| client.open().expect("capacity 4")).collect();
+        // uneven chunking: session i pushes i+1 frames per round
+        let mut cursors = [0usize; 4];
+        loop {
+            let mut acks = Vec::new();
+            for (i, sess) in sessions.iter().enumerate() {
+                let end = (cursors[i] + i + 1).min(seqs[i].len());
+                if cursors[i] < end {
+                    acks.push(sess.push_frames_nowait(seqs[i][cursors[i]..end].to_vec()));
+                    cursors[i] = end;
+                }
+            }
+            if acks.is_empty() {
+                break;
+            }
+            for rx in acks {
+                rx.recv().expect("push must be acked");
+            }
+        }
+        // mid-run logits poll on a live session is exactly the one-shot
+        // logits of its pushed prefix
+        let polled = sessions[1].logits().expect("poll must serve");
+        let want_logits = match name {
+            "golden" => {
+                golden_ref.classify(&seqs[1]);
+                golden_ref.logits()
+            }
+            _ => {
+                satsim_ref.classify(&seqs[1]);
+                satsim_ref.logits()
+            }
+        };
+        assert_eq!(polled, want_logits, "{name}: polled logits diverged");
+        for (i, sess) in sessions.into_iter().enumerate() {
+            let label = sess.close().expect("close must serve");
+            let want = match name {
+                "golden" => golden_ref.classify(&seqs[i]),
+                _ => satsim_ref.classify(&seqs[i]),
+            };
+            assert_eq!(label, want, "{name}: session {i} label diverged");
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.errors, 0, "{name}: no serving errors expected");
+        assert!(metrics.items > 0, "{name}: push latencies recorded");
+    }
+}
+
+#[test]
+fn stream_server_rejects_busy_and_readmits_after_close() {
+    let nw = synthetic_network(&[1, 8, 10], 3);
+    let server = StreamServer::spawn(GoldenBackend::streaming_factory(nw, 2), 1, 2);
+    let client = server.client();
+    let a = client.open().unwrap();
+    let b = client.open().unwrap();
+    // capacity 1×2 exhausted: leader rejects without touching a worker
+    match client.open() {
+        Err(ServeError::Busy) => {}
+        other => panic!("expected Busy, got {:?}", other.err()),
+    }
+    a.push_frames(seq(8, 0)).unwrap();
+    a.close().unwrap();
+    // the freed slot admits the next session
+    let c = client.open().expect("slot freed by close");
+    c.push_frames(seq(8, 1)).unwrap();
+    c.close().unwrap();
+    b.close().unwrap();
+    let metrics = server.shutdown();
+    assert_eq!(metrics.errors_busy, 1, "the rejection must be counted");
+    assert_eq!(metrics.errors, 1);
+}
