@@ -22,6 +22,12 @@
 //!   concurrent resident sessions on one mixed-signal worker: the
 //!   lockstep amortization measured end to end, frames arriving
 //!   incrementally.
+//! * **http_sweep** (schema 4) — the same closed-loop streaming load
+//!   measured twice over the golden backend: once directly against the
+//!   in-process [`crate::coordinator::StreamClient`], once over the
+//!   wire through the HTTP/1.1 front end via the load generator. The
+//!   delta between the two rows is the measured cost of the wire:
+//!   HTTP parse, JSON encode/decode, and the connection threads.
 //!
 //! The JSON schema is versioned (`schema`); CI regenerates the file per
 //! commit, gates on regressions against the committed baseline
@@ -33,9 +39,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::{CircuitConfig, CoreGeometry, MappingConfig};
+use crate::coordinator::loadgen::{self, LoadGenOpts};
 use crate::coordinator::{
-    BatchPolicy, GoldenBackend, MixedSignalBackend, MixedSignalEngine, Server,
-    StreamServer,
+    BatchPolicy, GoldenBackend, HttpConfig, HttpServer, LatencyRecorder,
+    MixedSignalBackend, MixedSignalEngine, Server, StreamServer,
 };
 use crate::dataset::glyphs;
 use crate::mapping::Plan;
@@ -371,6 +378,138 @@ fn streaming_sweep(opts: &BenchOpts) -> Json {
     ])
 }
 
+/// Wire-overhead sweep (schema 4): the identical closed-loop streaming
+/// load measured over two transports on the golden backend. The
+/// `in-process` row drives [`StreamServer`] directly — `connections`
+/// driver threads, each completing `sessions_per_conn` sessions in
+/// series, pushing `frames` single-value frames in chunks. The `http`
+/// row puts the same engine behind the HTTP/1.1 front end on an
+/// ephemeral port and drives it with [`loadgen::run`] at the same
+/// shape. Comparing `sessions_per_s` / `push_p50_us` across the rows
+/// is the per-request price of the wire.
+fn http_sweep(nw: &NetworkWeights, opts: &BenchOpts) -> Json {
+    let (conns, sessions_per_conn, frames, chunk) = if opts.quick {
+        (4usize, 2usize, 16usize, 4usize)
+    } else {
+        (16, 4, 64, 8)
+    };
+    // each driver holds one live session at a time, so `conns` slots on
+    // one worker means opens never hit Busy in either row
+    let capacity = conns;
+    let mut rows: Vec<Json> = Vec::new();
+
+    // transport: in-process — the no-wire reference measurement
+    {
+        let server = StreamServer::spawn(
+            GoldenBackend::streaming_factory(nw.clone(), capacity),
+            1,
+            capacity,
+        );
+        let client = server.client();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let client = client.clone();
+                std::thread::spawn(move || {
+                    let mut push = LatencyRecorder::default();
+                    for s in 0..sessions_per_conn {
+                        let sess = client
+                            .open()
+                            .expect("capacity sized to the sweep");
+                        let mut pushed = 0usize;
+                        while pushed < frames {
+                            let n = chunk.min(frames - pushed);
+                            let vals: Vec<f32> = (0..n)
+                                .map(|i| {
+                                    (((c + s) * 31 + pushed + i) % 17) as f32
+                                        / 16.0
+                                })
+                                .collect();
+                            let t = Instant::now();
+                            sess.push_frames(vals)
+                                .expect("push on a live session");
+                            push.record(t.elapsed());
+                            pushed += n;
+                        }
+                        sess.close().expect("close of a live session");
+                    }
+                    push
+                })
+            })
+            .collect();
+        let mut push = LatencyRecorder::default();
+        for h in handles {
+            push.merge(&h.join().expect("driver thread must not panic"));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        let completed = conns * sessions_per_conn;
+        let pcts = push.percentiles(&[50.0, 95.0, 99.0]);
+        rows.push(Json::obj(vec![
+            ("transport", "in-process".into()),
+            ("sessions_per_s", (completed as f64 / wall.max(1e-9)).into()),
+            (
+                "frames_per_s",
+                ((completed * frames) as f64 / wall.max(1e-9)).into(),
+            ),
+            ("push_p50_us", (pcts[0].as_micros() as f64).into()),
+            ("push_p95_us", (pcts[1].as_micros() as f64).into()),
+            ("push_p99_us", (pcts[2].as_micros() as f64).into()),
+            ("errors", 0.0.into()),
+        ]));
+    }
+
+    // transport: http — the same engine behind the wire front end
+    {
+        let server = StreamServer::spawn(
+            GoldenBackend::streaming_factory(nw.clone(), capacity),
+            1,
+            capacity,
+        );
+        let http = HttpServer::bind(
+            "127.0.0.1:0",
+            None,
+            Some(server.client()),
+            HttpConfig::default(),
+        )
+        .expect("ephemeral-port bind");
+        let lg = LoadGenOpts {
+            connections: conns,
+            sessions_per_conn,
+            frames,
+            frames_per_push: chunk,
+            frame_width: 1,
+            poll_logits: false,
+        };
+        let report = loadgen::run(&http.addr().to_string(), &lg);
+        http.shutdown();
+        server.shutdown();
+        let pcts = report.push.percentiles(&[50.0, 95.0, 99.0]);
+        rows.push(Json::obj(vec![
+            ("transport", "http".into()),
+            ("sessions_per_s", report.sessions_per_s().into()),
+            ("frames_per_s", report.frames_per_s().into()),
+            ("push_p50_us", (pcts[0].as_micros() as f64).into()),
+            ("push_p95_us", (pcts[1].as_micros() as f64).into()),
+            ("push_p99_us", (pcts[2].as_micros() as f64).into()),
+            (
+                "errors",
+                ((report.protocol_errors + report.transport_errors) as f64)
+                    .into(),
+            ),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("backend", "golden".into()),
+        ("connections", conns.into()),
+        ("sessions_per_conn", sessions_per_conn.into()),
+        ("frames", frames.into()),
+        ("frames_per_push", chunk.into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Run the full suite and return the `BENCH_pr4.json` document.
 pub fn run(opts: &BenchOpts) -> Json {
     let paper_dims = [1usize, 64, 64, 64, 64, 10];
@@ -398,12 +537,14 @@ pub fn run(opts: &BenchOpts) -> Json {
         ("worker_sweep", worker_sweep(&nw, opts)),
         ("geometry_sweep", geometry_sweep(opts)),
         ("streaming_sweep", streaming_sweep(opts)),
+        ("http_sweep", http_sweep(&nw, opts)),
     ]);
     Json::obj(vec![
         ("bench", "pr4".into()),
-        // schema 3: adds serving.streaming_sweep (sessions/s + per-frame
-        // latency percentiles at N concurrent resident sessions)
-        ("schema", 3usize.into()),
+        // schema 4: adds serving.http_sweep (the same streaming load
+        // over the wire vs in-process — the measured HTTP overhead);
+        // schema 3 added serving.streaming_sweep
+        ("schema", 4usize.into()),
         ("status", "measured".into()),
         ("quick", opts.quick.into()),
         ("engine", engine),
@@ -627,7 +768,7 @@ mod tests {
         let opts = BenchOpts { quick: true };
         let doc = run(&opts);
         assert_eq!(doc.req_str("status").unwrap(), "measured");
-        assert_eq!(doc.req_f64("schema").unwrap() as u64, 3);
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 4);
         let engine = doc.req("engine").unwrap().as_arr().unwrap();
         assert_eq!(engine.len(), 2);
         for e in engine {
@@ -666,6 +807,20 @@ mod tests {
             .collect();
         assert_eq!(counts, vec![1, 4, 16]);
         for r in srows {
+            assert!(r.req_f64("sessions_per_s").unwrap() > 0.0);
+            assert!(r.req_f64("frames_per_s").unwrap() > 0.0);
+            assert_eq!(r.req_f64("errors").unwrap(), 0.0);
+        }
+        // the http sweep carries both transports, with real rates over
+        // the wire and no protocol/transport errors
+        let hs = serving.req("http_sweep").unwrap();
+        let hrows = hs.req("rows").unwrap().as_arr().unwrap();
+        let transports: Vec<&str> = hrows
+            .iter()
+            .map(|r| r.req_str("transport").unwrap())
+            .collect();
+        assert_eq!(transports, vec!["in-process", "http"]);
+        for r in hrows {
             assert!(r.req_f64("sessions_per_s").unwrap() > 0.0);
             assert!(r.req_f64("frames_per_s").unwrap() > 0.0);
             assert_eq!(r.req_f64("errors").unwrap(), 0.0);

@@ -281,6 +281,17 @@ pub struct ServeConfig {
     /// `workers × sessions` is the live-session capacity; opening one
     /// past it is rejected with `ServeError::Busy`.
     pub sessions: usize,
+    /// Wire mode (`serve --http`): TCP port to listen on; 0 picks an
+    /// ephemeral port (the CLI prints — and `--port-file` records —
+    /// the bound address).
+    pub http_port: u16,
+    /// Largest request body the HTTP parser will buffer (bytes);
+    /// oversized requests are refused with 413 before allocation.
+    pub http_max_body_bytes: usize,
+    /// Keep-alive read timeout (ms) — also the drain poll tick: an
+    /// idle connection notices a shutdown within one tick, so this
+    /// bounds the graceful-drain time too.
+    pub http_keepalive_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -290,6 +301,9 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_wait_ms: 5,
             sessions: 8,
+            http_port: 0,
+            http_max_body_bytes: 1024 * 1024,
+            http_keepalive_ms: 2000,
         }
     }
 }
@@ -301,6 +315,9 @@ impl ServeConfig {
             ("max_batch", self.max_batch.into()),
             ("max_wait_ms", (self.max_wait_ms as f64).into()),
             ("sessions", self.sessions.into()),
+            ("http_port", (self.http_port as usize).into()),
+            ("http_max_body_bytes", self.http_max_body_bytes.into()),
+            ("http_keepalive_ms", (self.http_keepalive_ms as f64).into()),
         ])
     }
 
@@ -316,6 +333,19 @@ impl ServeConfig {
                 .map(|x| x as u64)
                 .unwrap_or(d.max_wait_ms),
             sessions: json_usize(j, "sessions", d.sessions).max(1),
+            http_port: json_usize(j, "http_port", d.http_port as usize)
+                .min(u16::MAX as usize) as u16,
+            http_max_body_bytes: json_usize(
+                j,
+                "http_max_body_bytes",
+                d.http_max_body_bytes,
+            )
+            .max(1024),
+            http_keepalive_ms: j
+                .get("http_keepalive_ms")
+                .and_then(Json::as_f64)
+                .map(|x| (x as u64).max(10))
+                .unwrap_or(d.http_keepalive_ms),
         })
     }
 }
@@ -396,18 +426,34 @@ mod tests {
             max_batch: 32,
             max_wait_ms: 9,
             sessions: 4,
+            http_port: 8080,
+            http_max_body_bytes: 64 * 1024,
+            http_keepalive_ms: 500,
         };
         let back = ServeConfig::from_json(&s.to_json()).unwrap();
         assert_eq!(s, back);
-        // workers/max_batch/sessions are clamped to ≥ 1 on load
+        // workers/max_batch/sessions are clamped to ≥ 1 on load, the
+        // HTTP knobs to their own floors (1 KiB body, 10 ms tick)
         let j = Json::obj(vec![
             ("workers", 0usize.into()),
             ("max_batch", 0usize.into()),
             ("sessions", 0usize.into()),
+            ("http_max_body_bytes", 3usize.into()),
+            ("http_keepalive_ms", 1usize.into()),
         ]);
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.workers, 1);
         assert_eq!(c.max_batch, 1);
         assert_eq!(c.sessions, 1);
+        assert_eq!(c.http_max_body_bytes, 1024);
+        assert_eq!(c.http_keepalive_ms, 10);
+        // missing HTTP keys fall back to defaults (older config files)
+        let old = Json::obj(vec![("workers", 2usize.into())]);
+        let c = ServeConfig::from_json(&old).unwrap();
+        assert_eq!(c.http_port, ServeConfig::default().http_port);
+        assert_eq!(
+            c.http_max_body_bytes,
+            ServeConfig::default().http_max_body_bytes
+        );
     }
 }

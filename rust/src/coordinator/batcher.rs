@@ -486,7 +486,7 @@ mod tests {
             workers: 4,
             max_batch: 32,
             max_wait_ms: 7,
-            sessions: 8,
+            ..Default::default()
         };
         let p = BatchPolicy::from(&sc);
         assert_eq!(p.max_batch, 32);

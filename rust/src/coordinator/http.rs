@@ -1,0 +1,718 @@
+//! The wire-level front end: `std::net` HTTP/1.1 serving over the
+//! in-process coordinator (docs/adr/004, wire contract in
+//! docs/http-api.md).
+//!
+//! One [`HttpServer`] owns a `TcpListener` plus handles to the two
+//! serving engines — a [`Client`] for one-shot classification and a
+//! [`StreamClient`] for streaming sessions — and bridges bytes to
+//! them:
+//!
+//! * an **accept thread** takes connections off the listener and hands
+//!   each to its own **connection thread** (blocking reads with a
+//!   timeout, so idle keep-alive connections poll the drain flag
+//!   instead of pinning the process);
+//! * the connection thread parses requests with the bounded
+//!   [`crate::util::http`] parser, routes on `(method, path)`, and
+//!   answers JSON; protocol violations get the status the parser
+//!   assigned and close the connection — a malformed peer can never
+//!   take the listener down (routing is additionally panic-contained,
+//!   answering 500);
+//! * streaming sessions are resident server-side state: `POST
+//!   /v1/session` leases a slot via [`StreamClient::open`] and parks
+//!   the [`StreamSession`] handle in a registry keyed by the
+//!   server-assigned id, which later `frames`/`logits`/`DELETE`
+//!   requests — on any connection — look up by path. Admission is
+//!   reject-not-queue, straight from docs/adr/003:
+//!   [`ServeError::Busy`] maps to 429, [`ServeError::Lost`] and
+//!   [`ServeError::BackendPanicked`] to 503 ([`serve_status`]).
+//!
+//! Shutdown is a graceful drain ([`HttpServer::shutdown`]): set the
+//! drain flag, nudge the accept thread awake, let every connection
+//! thread finish the request it is on (responses during drain say
+//! `Connection: close`), join them all, then return the merged
+//! [`HttpMetrics`]. The engines behind the front end are intentionally
+//! *not* owned here — drain the front end first, then shut the engines
+//! down, and in-flight requests complete instead of surfacing as 503s.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::coordinator::metrics::LatencyRecorder;
+use crate::coordinator::server::{
+    Client, ServeError, StreamClient, StreamSession,
+};
+use crate::nn::argmax;
+use crate::util::http::{
+    read_request, write_response, HttpRequest, Limits, ReadError,
+};
+use crate::util::json::Json;
+
+const JSON: &str = "application/json";
+const TEXT: &str = "text/plain; charset=utf-8";
+
+/// Front-end knobs: parser limits plus the keep-alive read timeout
+/// (which doubles as the drain poll tick — an idle connection notices
+/// `shutdown` within one tick).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    pub limits: Limits,
+    pub keepalive: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            limits: Limits::default(),
+            keepalive: Duration::from_millis(2000),
+        }
+    }
+}
+
+impl From<&ServeConfig> for HttpConfig {
+    fn from(c: &ServeConfig) -> HttpConfig {
+        HttpConfig {
+            limits: Limits {
+                max_body_bytes: c.http_max_body_bytes.max(1024),
+                ..Limits::default()
+            },
+            keepalive: Duration::from_millis(c.http_keepalive_ms.max(10)),
+        }
+    }
+}
+
+/// Counters and latency distribution of the front end itself (the
+/// engines keep their own [`LatencyRecorder`]s; these are the
+/// over-the-wire numbers). Snapshotted by [`HttpServer::shutdown`],
+/// rendered live by `GET /metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct HttpMetrics {
+    /// Wire latency of every 2xx request (parse → response flushed is
+    /// excluded; this is the routed-work window).
+    pub recorder: LatencyRecorder,
+    /// Connections accepted.
+    pub connections: u64,
+    /// Requests refused by the parser (400/411/413/431/501/505).
+    pub protocol_errors: u64,
+    /// Responses written, by status code.
+    pub by_status: BTreeMap<u16, u64>,
+}
+
+impl HttpMetrics {
+    /// Responses written, all statuses.
+    pub fn requests(&self) -> u64 {
+        self.by_status.values().sum()
+    }
+
+    /// The `GET /metrics` text exposition (Prometheus-style lines):
+    /// front-end counters, request-latency quantiles, and the
+    /// per-variant [`ServeError`] counts the recorder broke out.
+    pub fn render(&self, live_sessions: usize) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "minimalist_http_connections_total {}\n",
+            self.connections
+        ));
+        s.push_str(&format!(
+            "minimalist_http_requests_total {}\n",
+            self.requests()
+        ));
+        s.push_str(&format!(
+            "minimalist_http_protocol_errors_total {}\n",
+            self.protocol_errors
+        ));
+        s.push_str(&format!(
+            "minimalist_http_sessions_live {live_sessions}\n"
+        ));
+        for (st, n) in &self.by_status {
+            s.push_str(&format!(
+                "minimalist_http_responses_total{{status=\"{st}\"}} {n}\n"
+            ));
+        }
+        let pcts = self.recorder.percentiles(&[50.0, 95.0, 99.0]);
+        for (q, d) in [("0.5", pcts[0]), ("0.95", pcts[1]), ("0.99", pcts[2])] {
+            s.push_str(&format!(
+                "minimalist_http_request_latency_us{{quantile=\"{q}\"}} {}\n",
+                d.as_micros()
+            ));
+        }
+        s.push_str(&format!(
+            "minimalist_http_request_latency_us_count {}\n",
+            self.recorder.items
+        ));
+        for (kind, n) in [
+            ("busy", self.recorder.errors_busy),
+            ("lost", self.recorder.errors_lost),
+            ("panicked", self.recorder.errors_panicked),
+        ] {
+            s.push_str(&format!(
+                "minimalist_serve_errors_total{{kind=\"{kind}\"}} {n}\n"
+            ));
+        }
+        s
+    }
+
+    /// One-line end-of-run report for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "connections={} requests={} protocol_errors={} {}",
+            self.connections,
+            self.requests(),
+            self.protocol_errors,
+            self.recorder.summary()
+        )
+    }
+}
+
+/// Status code + error kind for a failed serving op — the admission
+/// mapping of the spec (docs/http-api.md): reject-not-queue `Busy` is
+/// the client's backpressure signal (429, retry after closing
+/// something); `Lost`/`BackendPanicked` mean the serving side is gone
+/// or poisoned (503).
+pub fn serve_status(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::Busy => (429, "busy"),
+        ServeError::Lost => (503, "lost"),
+        ServeError::BackendPanicked(_) => (503, "backend_panicked"),
+    }
+}
+
+/// `{"error": kind, "message": msg}` — the error body shape every
+/// non-2xx JSON response carries.
+pub fn error_body(kind: &str, msg: &str) -> String {
+    Json::obj(vec![("error", kind.into()), ("message", msg.into())])
+        .to_string()
+}
+
+/// Metrics/registry mutexes hold plain data — a panic mid-update
+/// cannot break an invariant worth halting the listener for, so locks
+/// shrug off poisoning instead of cascading it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Shared state of one front end: engine handles, the session
+/// registry, metrics, and the drain flag.
+struct HttpState {
+    classify: Option<Client>,
+    stream: Option<StreamClient>,
+    sessions: Mutex<HashMap<u64, StreamSession>>,
+    metrics: Mutex<HttpMetrics>,
+    draining: AtomicBool,
+    next_id: AtomicU64,
+}
+
+/// (status, content-type, body) — what a route handler produces.
+type Resp = (u16, &'static str, String);
+
+/// A listening front end. Binding with port 0 picks an ephemeral port
+/// — [`HttpServer::addr`] is the bound address to dial.
+pub struct HttpServer {
+    addr: SocketAddr,
+    state: Arc<HttpState>,
+    accept: thread::JoinHandle<()>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving. `classify`/`stream` are the engine
+    /// handles routes dispatch to; pass `None` to leave a family of
+    /// routes answering 503 (e.g. a pure streaming deployment).
+    pub fn bind(
+        addr: &str,
+        classify: Option<Client>,
+        stream: Option<StreamClient>,
+        cfg: HttpConfig,
+    ) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(HttpState {
+            classify,
+            stream,
+            sessions: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(HttpMetrics::default()),
+            draining: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let state = Arc::clone(&state);
+            let conns = Arc::clone(&conns);
+            thread::Builder::new()
+                .name("minimalist-http-accept".to_string())
+                .spawn(move || accept_loop(listener, state, conns, cfg))
+                .expect("spawning http accept thread")
+        };
+        Ok(HttpServer { addr: local, state, accept, conns })
+    }
+
+    /// The bound address (resolves the port when bound with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live sessions currently parked in the registry.
+    pub fn live_sessions(&self) -> usize {
+        lock(&self.state.sessions).len()
+    }
+
+    /// Graceful drain: stop accepting, let every connection finish the
+    /// request it is serving (in-drain responses are marked
+    /// `Connection: close`; idle connections notice within one
+    /// keep-alive tick), join all threads, close the listener, and
+    /// return the metrics snapshot. Call this **before** shutting down
+    /// the engines behind it, so in-flight requests complete.
+    pub fn shutdown(self) -> HttpMetrics {
+        self.state.draining.store(true, Ordering::SeqCst);
+        // the accept thread blocks in accept(): nudge it awake so it
+        // observes the flag (the no-op connection is dropped unserved)
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept.join();
+        let handles: Vec<_> = lock(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        lock(&self.state.metrics).clone()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<HttpState>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    cfg: HttpConfig,
+) {
+    for res in listener.incoming() {
+        if state.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = res else { continue };
+        lock(&state.metrics).connections += 1;
+        let st = Arc::clone(&state);
+        let c = cfg.clone();
+        let spawned = thread::Builder::new()
+            .name("minimalist-http-conn".to_string())
+            .spawn(move || handle_connection(stream, st, c));
+        match spawned {
+            Ok(h) => {
+                let mut guard = lock(&conns);
+                // reap finished threads so a long-lived listener does
+                // not accumulate one parked handle per past connection
+                guard.retain(|h| !h.is_finished());
+                guard.push(h);
+            }
+            Err(e) => eprintln!("minimalist-http: spawn failed: {e}"),
+        }
+    }
+    // dropping the listener here closes it — post-drain dials are
+    // refused at the socket level
+}
+
+fn handle_connection(stream: TcpStream, state: Arc<HttpState>, cfg: HttpConfig) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.keepalive));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match read_request(&mut reader, &cfg.limits) {
+            Ok(req) => {
+                let t0 = Instant::now();
+                // contain handler panics: answer 500 and keep listening
+                // rather than letting one request kill the connection
+                // thread silently
+                let (status, ctype, body) =
+                    catch_unwind(AssertUnwindSafe(|| respond(&state, &req)))
+                        .unwrap_or_else(|_| {
+                            (
+                                500,
+                                JSON,
+                                error_body("internal", "handler panicked"),
+                            )
+                        });
+                let close = !req.keep_alive()
+                    || state.draining.load(Ordering::SeqCst);
+                {
+                    let mut m = lock(&state.metrics);
+                    *m.by_status.entry(status).or_insert(0) += 1;
+                    if (200..300).contains(&status) {
+                        m.recorder.record(t0.elapsed());
+                    }
+                }
+                let sent = write_response(
+                    &mut writer,
+                    status,
+                    ctype,
+                    body.as_bytes(),
+                    close,
+                );
+                if sent.is_err() || close {
+                    return;
+                }
+            }
+            Err(ReadError::Idle) => {
+                if state.draining.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(ReadError::Eof) | Err(ReadError::Io(_)) => return,
+            Err(ReadError::Bad { status, msg }) => {
+                {
+                    let mut m = lock(&state.metrics);
+                    m.protocol_errors += 1;
+                    *m.by_status.entry(status).or_insert(0) += 1;
+                }
+                // a protocol violation leaves the stream position
+                // undefined — answer and close
+                let _ = write_response(
+                    &mut writer,
+                    status,
+                    JSON,
+                    error_body("protocol", &msg).as_bytes(),
+                    true,
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Route one parsed request. Total: every `(method, path)` lands on a
+/// handler, a 405 (known path, wrong method), or a 404.
+fn respond(state: &HttpState, req: &HttpRequest) -> Resp {
+    let segs = req.path_segments();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => {
+            let text =
+                lock(&state.metrics).render(lock(&state.sessions).len());
+            (200, TEXT, text)
+        }
+        ("POST", ["v1", "classify"]) => classify(state, req),
+        ("POST", ["v1", "session"]) => open_session(state),
+        ("POST", ["v1", "session", id, "frames"]) => {
+            push_frames(state, id, req)
+        }
+        ("GET", ["v1", "session", id, "logits"]) => session_logits(state, id),
+        ("DELETE", ["v1", "session", id]) => close_session(state, id),
+        (
+            _,
+            ["healthz"]
+            | ["metrics"]
+            | ["v1", "classify"]
+            | ["v1", "session"]
+            | ["v1", "session", _]
+            | ["v1", "session", _, "frames"]
+            | ["v1", "session", _, "logits"],
+        ) => (
+            405,
+            JSON,
+            error_body(
+                "method_not_allowed",
+                &format!("{} is not valid here", req.method),
+            ),
+        ),
+        _ => (
+            404,
+            JSON,
+            error_body("not_found", &format!("no route for {}", req.target)),
+        ),
+    }
+}
+
+fn healthz(state: &HttpState) -> Resp {
+    let status = if state.draining.load(Ordering::SeqCst) {
+        "draining"
+    } else {
+        "ok"
+    };
+    let body = Json::obj(vec![
+        ("status", status.into()),
+        ("live_sessions", lock(&state.sessions).len().into()),
+    ]);
+    (200, JSON, body.to_string())
+}
+
+/// Record the failed op and build its response.
+fn serve_failure(state: &HttpState, e: &ServeError) -> Resp {
+    lock(&state.metrics).recorder.record_error(e);
+    let (status, kind) = serve_status(e);
+    (status, JSON, error_body(kind, &e.to_string()))
+}
+
+fn unavailable(what: &str) -> Resp {
+    (
+        503,
+        JSON,
+        error_body("unavailable", &format!("no {what} engine configured")),
+    )
+}
+
+fn parse_json_body(req: &HttpRequest) -> Result<Json, Resp> {
+    let text = std::str::from_utf8(&req.body).map_err(|_| {
+        (400, JSON, error_body("bad_request", "body is not valid UTF-8"))
+    })?;
+    Json::parse(text).map_err(|e| {
+        (400, JSON, error_body("bad_request", &format!("invalid JSON: {e}")))
+    })
+}
+
+/// A required non-empty numeric array field, as f32.
+fn f32_field(body: &Json, key: &str) -> Result<Vec<f32>, Resp> {
+    let arr = body.get(key).and_then(Json::as_arr).ok_or_else(|| {
+        (
+            400,
+            JSON,
+            error_body(
+                "bad_request",
+                &format!("'{key}' must be an array of numbers"),
+            ),
+        )
+    })?;
+    if arr.is_empty() {
+        return Err((
+            400,
+            JSON,
+            error_body("bad_request", &format!("'{key}' must be non-empty")),
+        ));
+    }
+    arr.iter()
+        .map(|v| v.as_f64().map(|x| x as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| {
+            (
+                400,
+                JSON,
+                error_body(
+                    "bad_request",
+                    &format!("'{key}' must contain only numbers"),
+                ),
+            )
+        })
+}
+
+fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn classify(state: &HttpState, req: &HttpRequest) -> Resp {
+    let Some(client) = &state.classify else {
+        return unavailable("one-shot");
+    };
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(r) => return r,
+    };
+    let seq = match f32_field(&body, "sequence") {
+        Ok(s) => s,
+        Err(r) => return r,
+    };
+    let id = body
+        .get("id")
+        .and_then(Json::as_f64)
+        .map(|x| x as u64)
+        .unwrap_or_else(|| state.next_id.fetch_add(1, Ordering::Relaxed));
+    let resp = client.classify(id, seq);
+    match resp.result {
+        Ok(label) => {
+            let out = Json::obj(vec![
+                ("id", (id as f64).into()),
+                ("label", label.into()),
+                ("latency_us", (resp.latency.as_micros() as f64).into()),
+            ]);
+            (200, JSON, out.to_string())
+        }
+        Err(e) => serve_failure(state, &e),
+    }
+}
+
+fn open_session(state: &HttpState) -> Resp {
+    let Some(stream) = &state.stream else {
+        return unavailable("streaming");
+    };
+    match stream.open() {
+        Ok(sess) => {
+            let id = sess.id;
+            lock(&state.sessions).insert(id, sess);
+            let body = Json::obj(vec![("session", (id as f64).into())]);
+            (201, JSON, body.to_string())
+        }
+        Err(e) => serve_failure(state, &e),
+    }
+}
+
+/// Resolve a path id to a registered session handle (cloned out of the
+/// registry so the lock is not held across the engine roundtrip).
+fn session_handle(
+    state: &HttpState,
+    id_str: &str,
+) -> Result<(u64, StreamSession), Resp> {
+    let id: u64 = id_str.parse().map_err(|_| {
+        (
+            400,
+            JSON,
+            error_body(
+                "bad_request",
+                &format!("session id '{id_str}' is not an integer"),
+            ),
+        )
+    })?;
+    match lock(&state.sessions).get(&id) {
+        Some(s) => Ok((id, s.clone())),
+        None => Err((
+            404,
+            JSON,
+            error_body("unknown_session", &format!("no session {id}")),
+        )),
+    }
+}
+
+/// A `Lost` op means the engine no longer knows the session (engine
+/// restart, or shutdown behind the front end): evict the stale handle
+/// so later requests get a clean 404 instead of piling 503s.
+fn evict_if_lost(state: &HttpState, id: u64, e: &ServeError) {
+    if *e == ServeError::Lost {
+        lock(&state.sessions).remove(&id);
+    }
+}
+
+fn push_frames(state: &HttpState, id_str: &str, req: &HttpRequest) -> Resp {
+    let (id, sess) = match session_handle(state, id_str) {
+        Ok(s) => s,
+        Err(r) => return r,
+    };
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(r) => return r,
+    };
+    let values = match f32_field(&body, "values") {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    match sess.push_frames(values) {
+        Ok(frames) => (
+            200,
+            JSON,
+            Json::obj(vec![("frames", frames.into())]).to_string(),
+        ),
+        Err(e) => {
+            evict_if_lost(state, id, &e);
+            serve_failure(state, &e)
+        }
+    }
+}
+
+fn session_logits(state: &HttpState, id_str: &str) -> Resp {
+    let (id, sess) = match session_handle(state, id_str) {
+        Ok(s) => s,
+        Err(r) => return r,
+    };
+    match sess.logits() {
+        Ok(logits) => {
+            let out = Json::obj(vec![
+                ("argmax", argmax(&logits).into()),
+                ("logits", f32s_to_json(&logits)),
+            ]);
+            (200, JSON, out.to_string())
+        }
+        Err(e) => {
+            evict_if_lost(state, id, &e);
+            serve_failure(state, &e)
+        }
+    }
+}
+
+fn close_session(state: &HttpState, id_str: &str) -> Resp {
+    let id: u64 = match id_str.parse() {
+        Ok(id) => id,
+        Err(_) => {
+            return (
+                400,
+                JSON,
+                error_body(
+                    "bad_request",
+                    &format!("session id '{id_str}' is not an integer"),
+                ),
+            )
+        }
+    };
+    // removed from the registry unconditionally: whatever close()
+    // returns, this id no longer names a live session here
+    let Some(sess) = lock(&state.sessions).remove(&id) else {
+        return (
+            404,
+            JSON,
+            error_body("unknown_session", &format!("no session {id}")),
+        );
+    };
+    match sess.close() {
+        Ok(label) => (
+            200,
+            JSON,
+            Json::obj(vec![("label", label.into())]).to_string(),
+        ),
+        Err(e) => serve_failure(state, &e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_errors_map_per_the_spec() {
+        assert_eq!(serve_status(&ServeError::Busy), (429, "busy"));
+        assert_eq!(serve_status(&ServeError::Lost), (503, "lost"));
+        assert_eq!(
+            serve_status(&ServeError::BackendPanicked("x".into())).0,
+            503
+        );
+    }
+
+    #[test]
+    fn error_bodies_are_valid_json() {
+        let j = Json::parse(&error_body("busy", "all slots leased")).unwrap();
+        assert_eq!(j.req_str("error").unwrap(), "busy");
+        assert_eq!(j.req_str("message").unwrap(), "all slots leased");
+    }
+
+    #[test]
+    fn metrics_render_exposes_every_family() {
+        let mut m = HttpMetrics {
+            connections: 3,
+            protocol_errors: 1,
+            ..Default::default()
+        };
+        *m.by_status.entry(200).or_insert(0) += 4;
+        *m.by_status.entry(429).or_insert(0) += 2;
+        m.recorder.record(Duration::from_micros(120));
+        m.recorder.record_error(&ServeError::Busy);
+        let text = m.render(5);
+        assert!(text.contains("minimalist_http_connections_total 3"), "{text}");
+        assert!(text.contains("minimalist_http_requests_total 6"), "{text}");
+        assert!(
+            text.contains("minimalist_http_protocol_errors_total 1"),
+            "{text}"
+        );
+        assert!(text.contains("minimalist_http_sessions_live 5"), "{text}");
+        assert!(
+            text.contains("minimalist_http_responses_total{status=\"429\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("minimalist_serve_errors_total{kind=\"busy\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("request_latency_us{quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(m.summary().contains("requests=6"));
+    }
+}

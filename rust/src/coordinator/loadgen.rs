@@ -1,0 +1,350 @@
+//! Closed-loop wire load generator for the HTTP front end
+//! ([`crate::coordinator::http`]): N concurrent keep-alive
+//! connections, each driving frame-paced streaming sessions end to end
+//! — open, push frames in chunks, poll the running logits once
+//! mid-sequence, close for the label — strictly in series per
+//! connection (the response ack is the pacer, so offered load adapts
+//! to what the server sustains instead of overrunning it).
+//!
+//! `Busy` rejections (429) are the admission control working as
+//! specified (docs/adr/003): they are counted and retried after a
+//! short backoff, not treated as failures. What *is* a failure:
+//! unexpected statuses or malformed responses (`protocol_errors` —
+//! the CI smoke gate asserts zero) and connect/IO breakage
+//! (`transport_errors`, retried once per session by reconnecting).
+//!
+//! Used three ways: `minimalist loadgen` (CLI), the `http_sweep` axis
+//! of [`crate::bench_suite`] (wire vs in-process), and the e2e test in
+//! tests/http_api.rs.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyRecorder;
+use crate::util::http::HttpClient;
+use crate::util::json::Json;
+
+/// Load shape. `connections × sessions_per_conn` completed sessions is
+/// the run target; every session pushes `frames` frames of
+/// `frame_width` values in chunks of `frames_per_push`.
+#[derive(Debug, Clone)]
+pub struct LoadGenOpts {
+    pub connections: usize,
+    pub sessions_per_conn: usize,
+    pub frames: usize,
+    pub frames_per_push: usize,
+    /// Values per frame — the serving network's input width.
+    pub frame_width: usize,
+    /// Poll `GET .../logits` once per session at the halfway point.
+    pub poll_logits: bool,
+}
+
+impl Default for LoadGenOpts {
+    /// The full run: hundreds of concurrent connections — the
+    /// "sessions/s under load" measurement.
+    fn default() -> Self {
+        LoadGenOpts {
+            connections: 200,
+            sessions_per_conn: 8,
+            frames: 64,
+            frames_per_push: 8,
+            frame_width: 1,
+            poll_logits: true,
+        }
+    }
+}
+
+impl LoadGenOpts {
+    /// CI smoke scale (`loadgen --quick`).
+    pub fn quick() -> LoadGenOpts {
+        LoadGenOpts {
+            connections: 8,
+            sessions_per_conn: 4,
+            frames: 16,
+            frames_per_push: 4,
+            ..LoadGenOpts::default()
+        }
+    }
+}
+
+/// Aggregated outcome of a run (per-connection reports merged).
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub sessions_completed: u64,
+    pub frames_pushed: u64,
+    /// 429s observed (admission control, retried — not failures).
+    pub busy_rejected: u64,
+    /// Unexpected status or malformed response — the smoke-gate zero.
+    pub protocol_errors: u64,
+    /// Connect/IO failures (reconnected once per session).
+    pub transport_errors: u64,
+    pub wall: Duration,
+    /// Per-push wire latency (the frame-chunk roundtrip).
+    pub push: LatencyRecorder,
+    /// Whole-session latency (open → close).
+    pub session: LatencyRecorder,
+}
+
+impl LoadReport {
+    fn merge(&mut self, other: &LoadReport) {
+        self.sessions_completed += other.sessions_completed;
+        self.frames_pushed += other.frames_pushed;
+        self.busy_rejected += other.busy_rejected;
+        self.protocol_errors += other.protocol_errors;
+        self.transport_errors += other.transport_errors;
+        self.push.merge(&other.push);
+        self.session.merge(&other.session);
+    }
+
+    pub fn sessions_per_s(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.sessions_completed as f64 / s
+        }
+    }
+
+    pub fn frames_per_s(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.frames_pushed as f64 / s
+        }
+    }
+
+    /// The machine-readable artifact (`loadgen --out`): schema 4, the
+    /// same quantities as the `http_sweep` rows of the bench suite.
+    pub fn to_json(&self, target: &str, opts: &LoadGenOpts) -> Json {
+        let pcts = self.push.percentiles(&[50.0, 95.0, 99.0]);
+        Json::obj(vec![
+            ("bench", "loadgen".into()),
+            ("schema", 4usize.into()),
+            ("status", "measured".into()),
+            ("target", target.into()),
+            ("connections", opts.connections.into()),
+            ("sessions_per_conn", opts.sessions_per_conn.into()),
+            ("frames_per_session", opts.frames.into()),
+            ("frames_per_push", opts.frames_per_push.into()),
+            ("sessions_completed", (self.sessions_completed as f64).into()),
+            ("frames_pushed", (self.frames_pushed as f64).into()),
+            ("busy_rejected", (self.busy_rejected as f64).into()),
+            ("protocol_errors", (self.protocol_errors as f64).into()),
+            ("transport_errors", (self.transport_errors as f64).into()),
+            ("wall_s", self.wall.as_secs_f64().into()),
+            ("sessions_per_s", self.sessions_per_s().into()),
+            ("frames_per_s", self.frames_per_s().into()),
+            ("push_p50_us", (pcts[0].as_micros() as f64).into()),
+            ("push_p95_us", (pcts[1].as_micros() as f64).into()),
+            ("push_p99_us", (pcts[2].as_micros() as f64).into()),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        let pcts = self.push.percentiles(&[50.0, 95.0, 99.0]);
+        format!(
+            "sessions={} ({:.1}/s) frames={} ({:.0}/s) busy={} \
+             protocol_err={} transport_err={} push p50={:?} p95={:?} p99={:?}",
+            self.sessions_completed,
+            self.sessions_per_s(),
+            self.frames_pushed,
+            self.frames_per_s(),
+            self.busy_rejected,
+            self.protocol_errors,
+            self.transport_errors,
+            pcts[0],
+            pcts[1],
+            pcts[2],
+        )
+    }
+}
+
+enum Outcome {
+    Done,
+    Busy,
+    /// Response violated the spec — counted, session abandoned, the
+    /// connection itself stays in sync (the full response was read).
+    Protocol,
+    /// The connection broke — reconnect and move on.
+    Transport,
+}
+
+/// Run the full load against `target` (`host:port`); blocks until
+/// every connection finishes its sessions (or exhausts its retry
+/// budget against a saturated server).
+pub fn run(target: &str, opts: &LoadGenOpts) -> LoadReport {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..opts.connections.max(1))
+        .map(|c| {
+            let target = target.to_string();
+            let opts = opts.clone();
+            thread::Builder::new()
+                .name(format!("minimalist-loadgen-{c}"))
+                .spawn(move || conn_loop(&target, &opts, c))
+                .expect("spawning loadgen connection thread")
+        })
+        .collect();
+    let mut total = LoadReport::default();
+    for h in handles {
+        if let Ok(rep) = h.join() {
+            total.merge(&rep);
+        } else {
+            total.protocol_errors += 1;
+        }
+    }
+    total.wall = t0.elapsed();
+    total
+}
+
+fn conn_loop(target: &str, opts: &LoadGenOpts, salt: usize) -> LoadReport {
+    let mut rep = LoadReport::default();
+    let Ok(mut client) = HttpClient::connect(target) else {
+        rep.transport_errors += 1;
+        return rep;
+    };
+    // a saturated server answers 429 — retry with backoff, but bounded
+    // so a misconfigured target cannot hang the run forever
+    let budget = opts.sessions_per_conn * 50;
+    let mut attempts = 0usize;
+    while rep.sessions_completed < opts.sessions_per_conn as u64
+        && attempts < budget
+    {
+        attempts += 1;
+        match drive_session(&mut client, opts, &mut rep, salt + attempts) {
+            Outcome::Done => {}
+            Outcome::Busy => {
+                rep.busy_rejected += 1;
+                thread::sleep(Duration::from_millis(1));
+            }
+            Outcome::Protocol => {}
+            Outcome::Transport => {
+                rep.transport_errors += 1;
+                match HttpClient::connect(target) {
+                    Ok(c) => client = c,
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+    rep
+}
+
+/// One full session on one connection. Frame values are synthesized
+/// deterministically from `salt` so distinct sessions exercise
+/// distinct sequences.
+fn drive_session(
+    client: &mut HttpClient,
+    opts: &LoadGenOpts,
+    rep: &mut LoadReport,
+    salt: usize,
+) -> Outcome {
+    let t_open = Instant::now();
+    let Ok(resp) = client.request("POST", "/v1/session", None) else {
+        return Outcome::Transport;
+    };
+    if resp.status == 429 {
+        return Outcome::Busy;
+    }
+    if resp.status != 201 {
+        rep.protocol_errors += 1;
+        return Outcome::Protocol;
+    }
+    let Some(id) = resp
+        .json()
+        .ok()
+        .and_then(|j| j.req_f64("session").ok())
+        .map(|x| x as u64)
+    else {
+        rep.protocol_errors += 1;
+        return Outcome::Protocol;
+    };
+    let frames_path = format!("/v1/session/{id}/frames");
+    let mut pushed = 0usize;
+    let mut polled = false;
+    while pushed < opts.frames {
+        let n = opts.frames_per_push.min(opts.frames - pushed);
+        let values: Vec<Json> = (0..n * opts.frame_width)
+            .map(|i| {
+                Json::Num(((salt * 31 + pushed + i) % 17) as f64 / 16.0)
+            })
+            .collect();
+        let body = Json::obj(vec![("values", Json::Arr(values))]);
+        let t = Instant::now();
+        let Ok(resp) = client.request("POST", &frames_path, Some(&body))
+        else {
+            return Outcome::Transport;
+        };
+        if resp.status != 200 {
+            rep.protocol_errors += 1;
+            return Outcome::Protocol;
+        }
+        rep.push.record(t.elapsed());
+        rep.frames_pushed += n as u64;
+        pushed += n;
+        if opts.poll_logits && !polled && pushed * 2 >= opts.frames {
+            let path = format!("/v1/session/{id}/logits");
+            let Ok(resp) = client.request("GET", &path, None) else {
+                return Outcome::Transport;
+            };
+            if resp.status != 200 {
+                rep.protocol_errors += 1;
+                return Outcome::Protocol;
+            }
+            polled = true;
+        }
+    }
+    let path = format!("/v1/session/{id}");
+    let Ok(resp) = client.request("DELETE", &path, None) else {
+        return Outcome::Transport;
+    };
+    if resp.status != 200 || resp.json().and_then(|j| j.req_f64("label")).is_err()
+    {
+        rep.protocol_errors += 1;
+        return Outcome::Protocol;
+    }
+    rep.sessions_completed += 1;
+    rep.session.record(t_open.elapsed());
+    Outcome::Done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_merges_and_rates() {
+        let mut a = LoadReport {
+            sessions_completed: 4,
+            frames_pushed: 64,
+            busy_rejected: 1,
+            ..Default::default()
+        };
+        let b = LoadReport {
+            sessions_completed: 6,
+            frames_pushed: 96,
+            protocol_errors: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        a.wall = Duration::from_secs(2);
+        assert_eq!(a.sessions_completed, 10);
+        assert_eq!(a.frames_pushed, 160);
+        assert_eq!(a.busy_rejected, 1);
+        assert_eq!(a.protocol_errors, 2);
+        assert_eq!(a.sessions_per_s(), 5.0);
+        assert_eq!(a.frames_per_s(), 80.0);
+        let j = a.to_json("127.0.0.1:0", &LoadGenOpts::quick());
+        assert_eq!(j.req_f64("schema").unwrap() as u64, 4);
+        assert_eq!(j.req_f64("sessions_completed").unwrap(), 10.0);
+        assert_eq!(j.req_f64("protocol_errors").unwrap(), 2.0);
+        assert!(a.summary().contains("sessions=10"));
+    }
+
+    #[test]
+    fn quick_opts_are_smoke_scale() {
+        let q = LoadGenOpts::quick();
+        assert!(q.connections <= 16 && q.frames <= 32);
+        assert!(LoadGenOpts::default().connections >= 100);
+    }
+}

@@ -1,34 +1,71 @@
 //! The L3 coordinator: serving infrastructure around the mixed-signal
-//! cores and the PJRT reference model.
+//! cores and the PJRT reference model — from the network socket all
+//! the way down to an engine slot.
 //!
-//! * [`engine`] — network-on-cores: the trained model mapped onto
-//!   switched-capacitor cores with the event fabric in between
-//! * [`backends`] — pluggable classification backends (golden /
-//!   mixed-signal / PJRT) plus per-worker factories for sharding, and
-//!   the streaming-session implementations over the golden nets and the
-//!   engine's slot pool
-//! * [`batcher`] — dynamic batching policy for one-shot requests, and
-//!   the per-session frame assembly ([`batcher::SessionQueue`]) of the
-//!   streaming path
-//! * [`server`] — the two serving modes: [`server::Server`], a sharded
-//!   batch engine (a leader thread batches requests and feeds a work
-//!   queue consumed by N worker threads, each owning one backend
+//! ## The full request path
+//!
+//! ```text
+//!   TCP socket                      [`http`]   accept + connection threads
+//!     → HTTP/1.1 parse        [`crate::util::http`]   bounded subset, JSON bodies
+//!       → route               [`http`]   /v1/classify, /v1/session/…
+//!         → leader thread     [`server`]   batches (one-shot) / routes by
+//!                                          session affinity (streaming)
+//!           → worker thread   [`server`]   owns one backend instance,
+//!                                          constructed on-thread
+//!             → engine slot   [`engine`]   lockstep step over the
+//!                                          switched-capacitor cores
+//! ```
+//!
+//! A one-shot `POST /v1/classify` becomes a [`batcher::Request`] on the
+//! [`server::Server`] leader's queue; the leader batches by the
+//! [`batcher::BatchPolicy`] and a worker classifies the batch on its
+//! backend. A streaming session (`POST /v1/session`, then `frames`/
+//! `logits`/`DELETE` by id) leases a resident slot in one worker's
+//! backend for its whole lifetime — worker affinity, docs/adr/003 —
+//! and the HTTP layer parks the [`server::StreamSession`] handle in a
+//! registry so any connection can address it by id. Admission is
+//! reject-not-queue at both layers: slot exhaustion surfaces as
+//! [`server::ServeError::Busy`] in-process and 429 on the wire.
+//!
+//! ## Modules
+//!
+//! * [`http`] — the wire front end: listener, connection threads,
+//!   routing, `/healthz` + `/metrics`, graceful drain (docs/adr/004;
+//!   wire contract in docs/http-api.md)
+//! * [`loadgen`] — closed-loop wire load generator (the `minimalist
+//!   loadgen` CLI and the bench suite's `http_sweep` axis)
+//! * [`server`] — the two in-process serving modes: [`server::Server`],
+//!   a sharded batch engine (a leader thread batches requests and feeds
+//!   a work queue consumed by N worker threads, each owning one backend
 //!   instance — constructed on-thread; PJRT handles are not `Send`),
 //!   and [`server::StreamServer`], streaming stateful sessions with
 //!   worker affinity (each session's slot lives in one worker's
 //!   backend; see docs/adr/003)
+//! * [`batcher`] — dynamic batching policy for one-shot requests, and
+//!   the per-session frame assembly ([`batcher::SessionQueue`]) of the
+//!   streaming path
+//! * [`backends`] — pluggable classification backends (golden /
+//!   mixed-signal / PJRT) plus per-worker factories for sharding, and
+//!   the streaming-session implementations over the golden nets and the
+//!   engine's slot pool
+//! * [`engine`] — network-on-cores: the trained model mapped onto
+//!   switched-capacitor cores with the event fabric in between
 //! * [`metrics`] — latency/throughput accounting (per-worker recorders,
-//!   merged into the aggregate at shutdown; per-variant error counts)
+//!   merged into the aggregate at shutdown; per-variant error counts),
+//!   shared by the in-process servers and the HTTP layer
 
 pub mod backends;
 pub mod batcher;
 pub mod engine;
+pub mod http;
+pub mod loadgen;
 pub mod metrics;
 pub mod server;
 
 pub use backends::{GoldenBackend, MixedSignalBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, Batcher, Request, SessionQueue};
 pub use engine::MixedSignalEngine;
+pub use http::{HttpConfig, HttpMetrics, HttpServer};
 pub use metrics::LatencyRecorder;
 pub use server::{
     Backend, Client, Response, ServeError, Server, SessionBackend,

@@ -580,6 +580,13 @@ impl StreamClient {
 /// One live streaming session. Dropping the handle without
 /// [`StreamSession::close`] leaks the slot until shutdown — close is
 /// what returns it to the pool.
+///
+/// Clones address the **same** server-side session (the id is the
+/// identity — the HTTP front end keeps one handle in its registry and
+/// clones it per request). [`StreamSession::close`] consumes one
+/// handle and retires the session itself: ops on surviving clones fail
+/// with [`ServeError::Lost`] from then on.
+#[derive(Clone)]
 pub struct StreamSession {
     tx: mpsc::Sender<StreamMsg>,
     /// Server-assigned session id (echoed in [`SessionResponse::Opened`]).

@@ -28,11 +28,14 @@
 //! ([`mapping::Plan`]) over a fixed [`config::CoreGeometry`]. Serving,
 //! on top: [`coordinator`] executes plans on simulated cores
 //! ([`coordinator::MixedSignalEngine`]) and serves them — batched
-//! one-shot requests ([`coordinator::Server`]) and streaming stateful
-//! sessions ([`coordinator::StreamServer`]); [`runtime`] runs the AOT
-//! artifacts through PJRT (feature-gated); [`dataset`], [`io`],
-//! [`util`], [`bench_suite`], and [`config`] supply data, containers,
-//! and knobs throughout.
+//! one-shot requests ([`coordinator::Server`]), streaming stateful
+//! sessions ([`coordinator::StreamServer`]), and both over the wire
+//! through a dependency-free HTTP/1.1 front end
+//! ([`coordinator::HttpServer`]; wire contract in docs/http-api.md,
+//! design in docs/adr/004, load generator in [`coordinator::loadgen`]);
+//! [`runtime`] runs the AOT artifacts through PJRT (feature-gated);
+//! [`dataset`], [`io`], [`util`], [`bench_suite`], and [`config`]
+//! supply data, containers, and knobs throughout.
 //!
 //! ## The two parity invariants
 //!
@@ -51,7 +54,8 @@
 //!    docs/adr/001 (tests/batch_parity.rs, tests/stream_parity.rs).
 //!
 //! Architecture decision records live in `docs/adr/` (slot-RNG seeding,
-//! lockstep batching, the streaming slot-lease design).
+//! lockstep batching, the streaming slot-lease design, the hand-rolled
+//! HTTP front end); the wire protocol reference is `docs/http-api.md`.
 
 pub mod bench_suite;
 pub mod config;

@@ -4,6 +4,10 @@
 //!   info                      system + config summary
 //!   serve                     batched serving loop over synthMNIST load
 //!   serve --streaming         streaming sessions over frame-paced load
+//!   serve --http              wire front end (docs/http-api.md):
+//!                             one-shot + streaming over HTTP/1.1
+//!   loadgen                   closed-loop load against serve --http
+//!                             (--quick for CI smoke scale)
 //!   plan                      print the layer→core mapping plan
 //!   bench                     recorded perf baseline → BENCH_pr4.json
 //!                             (--check gates on regressions vs --baseline)
@@ -20,8 +24,9 @@ use minimalist::config::{
     CircuitConfig, CoreGeometry, MappingConfig, NetworkConfig, ServeConfig,
 };
 use minimalist::coordinator::{
-    BatchPolicy, GoldenBackend, LatencyRecorder, MixedSignalBackend,
-    MixedSignalEngine, ServeError, Server, StreamServer, StreamSession,
+    BatchPolicy, GoldenBackend, HttpConfig, HttpServer, LatencyRecorder,
+    MixedSignalBackend, MixedSignalEngine, ServeError, Server, StreamServer,
+    StreamSession,
 };
 use minimalist::dataset::glyphs;
 use minimalist::energy;
@@ -34,13 +39,15 @@ fn main() -> Result<()> {
     match args.subcommand() {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("plan") => cmd_plan(&args),
         Some("bench") => cmd_bench(&args),
         Some("energy") => cmd_energy(&args),
         Some("eval") => cmd_eval(&args),
         _ => {
             eprintln!(
-                "usage: minimalist <info|serve|plan|bench|energy|eval> [--options]\n\
+                "usage: minimalist <info|serve|loadgen|plan|bench|energy|eval> \
+                 [--options]\n\
                  (Fig 3C / Fig 4 generators live in examples/: \
                  adc_characterization, trace_compare)"
             );
@@ -110,7 +117,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", defaults.max_batch)?,
         max_wait_ms: args.get_u64("max-wait-ms", defaults.max_wait_ms)?,
         sessions: args.get_usize("sessions", defaults.sessions)?.max(1),
+        http_port: args.get_u64("port", defaults.http_port as u64)? as u16,
+        http_max_body_bytes: args.get_usize(
+            "max-body-bytes",
+            defaults.http_max_body_bytes,
+        )?,
+        http_keepalive_ms: args
+            .get_u64("keepalive-ms", defaults.http_keepalive_ms)?,
     };
+    if args.flag("http") {
+        return cmd_serve_http(args, weights, &serve, &backend);
+    }
     if args.flag("streaming") {
         return cmd_serve_streaming(args, weights, &serve, &backend, n_req, img);
     }
@@ -341,6 +358,140 @@ fn cmd_serve_streaming(
         correct as f64 / n_req as f64,
         failed,
         busy_rejected
+    );
+    Ok(())
+}
+
+/// `minimalist serve --http`: both serving modes behind the wire front
+/// end (protocol in docs/http-api.md), serving until `--for-ms`
+/// elapses (0, the default, serves until killed). `--port 0` (default)
+/// binds an ephemeral port; `--port-file p` writes the bound port for
+/// scripted callers — how the CI smoke job finds the server.
+fn cmd_serve_http(
+    args: &Args,
+    weights: NetworkWeights,
+    serve: &ServeConfig,
+    backend: &str,
+) -> Result<()> {
+    let policy = BatchPolicy::from(serve);
+    let (server, stream) = match backend {
+        "golden" => (
+            Server::spawn_sharded(
+                GoldenBackend::factory(weights.clone()),
+                policy,
+                serve.workers,
+            ),
+            StreamServer::spawn(
+                GoldenBackend::streaming_factory(weights, serve.sessions),
+                serve.workers,
+                serve.sessions,
+            ),
+        ),
+        "satsim" => {
+            let mapping = mapping_from_args(args)?;
+            let planned = Plan::build(&weights.dims, &mapping)?;
+            let (_, one_shot) = MixedSignalBackend::factory_from_plan(
+                weights.clone(),
+                CircuitConfig::default(),
+                planned.clone(),
+            )?;
+            let (_, streaming) =
+                MixedSignalBackend::streaming_factory_from_plan(
+                    weights,
+                    CircuitConfig::default(),
+                    planned,
+                    serve.sessions,
+                )?;
+            (
+                Server::spawn_sharded(
+                    one_shot,
+                    policy.bucketed(),
+                    serve.workers,
+                ),
+                StreamServer::spawn(streaming, serve.workers, serve.sessions),
+            )
+        }
+        other => anyhow::bail!("unknown backend '{other}' (golden|satsim)"),
+    };
+    let http = HttpServer::bind(
+        &format!("{}:{}", args.get_or("bind", "127.0.0.1"), serve.http_port),
+        Some(server.client()),
+        Some(stream.client()),
+        HttpConfig::from(serve),
+    )?;
+    let addr = http.addr();
+    println!(
+        "http front end on {addr}: backend={backend}, {} one-shot \
+         worker(s), {}×{} session slot(s)",
+        server.n_workers(),
+        stream.n_workers(),
+        serve.sessions
+    );
+    if let Some(path) = args.opt("port-file") {
+        std::fs::write(path, format!("{}\n", addr.port()))?;
+    }
+    let for_ms = args.get_u64("for-ms", 0)?;
+    if for_ms == 0 {
+        println!("serving until killed (--for-ms N bounds the run)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_millis(for_ms));
+    // drain order matters: front end first, so in-flight requests
+    // complete against live engines instead of surfacing as 503s
+    println!("http {}", http.shutdown().summary());
+    println!("one-shot {}", server.shutdown().summary());
+    println!("streaming {}", stream.shutdown().summary());
+    Ok(())
+}
+
+/// `minimalist loadgen --target host:port`: closed-loop wire load
+/// against a running `serve --http`. Exits non-zero when zero sessions
+/// complete or any protocol error is observed — the CI smoke gate's
+/// assertion. `--out p` writes the schema-4 JSON report.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use minimalist::coordinator::loadgen::{self, LoadGenOpts};
+    let base = if args.flag("quick") {
+        LoadGenOpts::quick()
+    } else {
+        LoadGenOpts::default()
+    };
+    let opts = LoadGenOpts {
+        connections: args.get_usize("connections", base.connections)?.max(1),
+        sessions_per_conn: args
+            .get_usize("sessions-per-conn", base.sessions_per_conn)?
+            .max(1),
+        frames: args.get_usize("frames", base.frames)?.max(1),
+        frames_per_push: args
+            .get_usize("frames-per-push", base.frames_per_push)?
+            .max(1),
+        frame_width: args.get_usize("frame-width", base.frame_width)?.max(1),
+        poll_logits: !args.flag("no-poll"),
+    };
+    let target = args.get_or("target", "127.0.0.1:8080").to_string();
+    println!(
+        "loadgen → {target}: {} connection(s) × {} session(s), {} frame(s) \
+         in chunks of {}",
+        opts.connections,
+        opts.sessions_per_conn,
+        opts.frames,
+        opts.frames_per_push
+    );
+    let report = loadgen::run(&target, &opts);
+    println!("{}", report.summary());
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, format!("{}\n", report.to_json(&target, &opts)))?;
+        println!("wrote {out}");
+    }
+    anyhow::ensure!(
+        report.sessions_completed > 0,
+        "no sessions completed against {target}"
+    );
+    anyhow::ensure!(
+        report.protocol_errors == 0,
+        "{} protocol error(s) observed",
+        report.protocol_errors
     );
     Ok(())
 }

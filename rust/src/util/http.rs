@@ -1,0 +1,525 @@
+//! A strictly-bounded HTTP/1.1 subset (hyper/axum are not in the
+//! offline vendored crate set — see docs/adr/004): request-line +
+//! headers + `Content-Length` bodies, keep-alive, nothing else. The
+//! full wire contract lives in docs/http-api.md; this module is the
+//! byte-level half (parse a request, write a response), shared by the
+//! serving front end ([`crate::coordinator::http`]), the load
+//! generator, and the conformance tests.
+//!
+//! Every input dimension is capped ([`Limits`]) **before** the bytes
+//! are buffered, so a hostile peer cannot make the server allocate
+//! unboundedly: the request head (request line + headers) is capped at
+//! [`Limits::max_head_bytes`] total, header count at
+//! [`Limits::max_headers`], and the declared body at
+//! [`Limits::max_body_bytes`]. Anything outside the subset is refused
+//! with the specific status the spec assigns (`411` for a missing
+//! Content-Length on POST, `501` for Transfer-Encoding, `505` for
+//! unknown versions, `431` for an oversized head, `413` for an
+//! oversized body, `400` for everything malformed) — carried on
+//! [`ReadError::Bad`] so the connection loop can answer and close
+//! without interpreting the failure itself.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// Hard caps on what [`read_request`] will buffer. Defaults are
+/// generous for the JSON payloads of docs/http-api.md and tiny by
+/// attack standards.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Request line + all header lines together (bytes).
+    pub max_head_bytes: usize,
+    /// Number of header lines.
+    pub max_headers: usize,
+    /// Declared `Content-Length` (bytes).
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_head_bytes: 8 * 1024,
+            max_headers: 64,
+            max_body_bytes: 1024 * 1024,
+        }
+    }
+}
+
+/// One parsed request. Header names are lower-cased at parse time;
+/// values keep their case with surrounding whitespace trimmed.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Request target as sent (path + optional `?query`).
+    pub target: String,
+    /// `HTTP/1.1` or `HTTP/1.0` — anything else is refused with 505.
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Keep-alive per the HTTP/1.x defaults: 1.1 stays open unless the
+    /// client says `Connection: close`; 1.0 closes unless it says
+    /// `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        if self.version == "HTTP/1.0" {
+            conn.eq_ignore_ascii_case("keep-alive")
+        } else {
+            !conn.eq_ignore_ascii_case("close")
+        }
+    }
+
+    /// Path split on `/` with the query string and empty segments
+    /// dropped — what the router matches on.
+    pub fn path_segments(&self) -> Vec<&str> {
+        self.target
+            .split('?')
+            .next()
+            .unwrap_or("")
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+/// Why [`read_request`] returned no request.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Protocol violation: answer with `status` and close.
+    Bad { status: u16, msg: String },
+    /// Clean close before the first byte of a request — the keep-alive
+    /// end of a connection, not an error.
+    Eof,
+    /// The read timed out with no request bytes consumed: an idle
+    /// keep-alive connection. The caller decides whether to keep
+    /// waiting (poll its drain flag and loop) or give up.
+    Idle,
+    /// Transport failure (including a timeout mid-request) — nothing
+    /// sensible can be answered; just close.
+    Io(std::io::Error),
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> ReadError {
+    ReadError::Bad { status, msg: msg.into() }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    // unix sockets report SO_RCVTIMEO expiry as WouldBlock, windows as
+    // TimedOut — treat both as the timeout they are
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one `\n`-terminated line into `buf` (CR/LF stripped), buffering
+/// at most `cap` bytes. `consumed_any` distinguishes an idle timeout
+/// (no request started) from a stall mid-request.
+fn read_line_bounded(
+    r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    cap: usize,
+    consumed_any: &mut bool,
+) -> Result<(), ReadError> {
+    loop {
+        let available = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) && !*consumed_any && buf.is_empty() => {
+                return Err(ReadError::Idle)
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        };
+        if available.is_empty() {
+            // EOF: clean only between requests
+            if buf.is_empty() && !*consumed_any {
+                return Err(ReadError::Eof);
+            }
+            return Err(bad(400, "connection closed mid-request"));
+        }
+        *consumed_any = true;
+        match available.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if buf.len() + i > cap {
+                    return Err(bad(431, "request head too large"));
+                }
+                buf.extend_from_slice(&available[..i]);
+                r.consume(i + 1);
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                return Ok(());
+            }
+            None => {
+                let n = available.len();
+                if buf.len() + n > cap {
+                    return Err(bad(431, "request head too large"));
+                }
+                buf.extend_from_slice(available);
+                r.consume(n);
+            }
+        }
+    }
+}
+
+/// Parse one request off the stream, enforcing `limits` as the bytes
+/// arrive. Returns [`ReadError::Eof`] on a clean keep-alive close and
+/// [`ReadError::Idle`] on a first-byte read timeout; every protocol
+/// violation carries the status to answer with ([`ReadError::Bad`]).
+pub fn read_request(
+    r: &mut impl BufRead,
+    limits: &Limits,
+) -> Result<HttpRequest, ReadError> {
+    let mut consumed = false;
+    let mut head_budget = limits.max_head_bytes;
+    let mut line = Vec::new();
+    read_line_bounded(r, &mut line, head_budget, &mut consumed)?;
+    head_budget = head_budget.saturating_sub(line.len() + 2);
+    let text = std::str::from_utf8(&line)
+        .map_err(|_| bad(400, "request line is not valid UTF-8"))?;
+    let mut parts = text.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None)
+                if !m.is_empty() && !t.is_empty() && !v.is_empty() =>
+            {
+                (m, t, v)
+            }
+            _ => return Err(bad(400, "malformed request line")),
+        };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(bad(400, "malformed method"));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(bad(505, format!("unsupported version '{version}'")));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let mut hline = Vec::new();
+        read_line_bounded(r, &mut hline, head_budget, &mut consumed)?;
+        if hline.is_empty() {
+            break;
+        }
+        if headers.len() == limits.max_headers {
+            return Err(bad(431, "too many headers"));
+        }
+        head_budget = head_budget.saturating_sub(hline.len() + 2);
+        let htext = std::str::from_utf8(&hline)
+            .map_err(|_| bad(400, "header is not valid UTF-8"))?;
+        let Some((name, value)) = htext.split_once(':') else {
+            return Err(bad(400, "malformed header line"));
+        };
+        headers
+            .push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = HttpRequest {
+        method: method.to_string(),
+        target: target.to_string(),
+        version: version.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(bad(501, "transfer-encoding is not supported"));
+    }
+    let body = match req.header("content-length") {
+        Some(cl) => {
+            let n: usize = cl
+                .parse()
+                .map_err(|_| bad(400, format!("bad Content-Length '{cl}'")))?;
+            if n > limits.max_body_bytes {
+                return Err(bad(
+                    413,
+                    format!(
+                        "body of {n} bytes exceeds the {} byte limit",
+                        limits.max_body_bytes
+                    ),
+                ));
+            }
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    bad(400, "connection closed mid-body")
+                } else {
+                    ReadError::Io(e)
+                }
+            })?;
+            body
+        }
+        None => {
+            // methods that carry request bodies must declare them —
+            // there is no chunked fallback in this subset
+            if req.method == "POST" || req.method == "PUT" {
+                return Err(bad(411, "Content-Length required"));
+            }
+            Vec::new()
+        }
+    };
+    Ok(HttpRequest { body, ..req })
+}
+
+/// Reason phrase for every status the spec (docs/http-api.md) emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write one response: status line, `Content-Type`/`Content-Length`/
+/// `Connection` (the three headers the subset defines), and the body.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    close: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\n\
+         content-length: {}\r\nconnection: {}\r\n\r\n",
+        status_reason(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" }
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Client half — for the load generator, benches, and tests
+// ---------------------------------------------------------------------------
+
+/// A parsed response on the client side.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body text (lossy — diagnostics only).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    /// Body parsed as JSON.
+    pub fn json(&self) -> anyhow::Result<Json> {
+        let text = std::str::from_utf8(&self.body)?;
+        Json::parse(text).map_err(|e| anyhow::anyhow!("response body: {e}"))
+    }
+}
+
+/// Parse one response off a stream: status line, headers, then exactly
+/// `Content-Length` body bytes (0 when absent — the server half always
+/// declares it).
+pub fn read_response(r: &mut impl BufRead) -> anyhow::Result<HttpResponse> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    if line.is_empty() {
+        anyhow::bail!("connection closed before the status line");
+    }
+    let status: u16 = line
+        .trim_end()
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line '{line}'"))?;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h)?;
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers
+                .push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("bad Content-Length in response"))?
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(HttpResponse { status, headers, body })
+}
+
+/// One keep-alive client connection speaking the same subset: JSON in,
+/// JSON out, requests strictly in series (the closed-loop shape the
+/// load generator wants).
+pub struct HttpClient {
+    reader: std::io::BufReader<std::net::TcpStream>,
+    writer: std::net::TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> std::io::Result<HttpClient> {
+        let stream = std::net::TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(HttpClient {
+            reader: std::io::BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// One blocking request/response roundtrip. POST/PUT always declare
+    /// a `Content-Length` (0 when `body` is `None`) — the server's 411
+    /// rule; other methods only when a body is given.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> anyhow::Result<HttpResponse> {
+        let payload = body.map(|j| j.to_string()).unwrap_or_default();
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: minimalist\r\n");
+        if body.is_some() || method == "POST" || method == "PUT" {
+            head.push_str(&format!(
+                "content-type: application/json\r\ncontent-length: {}\r\n",
+                payload.len()
+            ));
+        }
+        head.push_str("\r\n");
+        self.writer.write_all(head.as_bytes())?;
+        self.writer.write_all(payload.as_bytes())?;
+        self.writer.flush()?;
+        read_response(&mut self.reader)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<HttpRequest, ReadError> {
+        read_request(&mut Cursor::new(raw.as_bytes()), &Limits::default())
+    }
+
+    fn bad_status(r: Result<HttpRequest, ReadError>) -> u16 {
+        match r {
+            Err(ReadError::Bad { status, .. }) => status,
+            other => panic!("expected Bad, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let req = parse(
+            "POST /v1/classify?x=1 HTTP/1.1\r\nHost: h\r\n\
+             Content-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path_segments(), vec!["v1", "classify"]);
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(req.header("host"), Some("h"));
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn keep_alive_defaults_per_version() {
+        let close11 = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!close11.unwrap().keep_alive());
+        assert!(!parse("GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive());
+        let ka10 = parse("GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n");
+        assert!(ka10.unwrap().keep_alive());
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_sequence() {
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut c = Cursor::new(raw.as_bytes());
+        let l = Limits::default();
+        assert_eq!(read_request(&mut c, &l).unwrap().target, "/a");
+        assert_eq!(read_request(&mut c, &l).unwrap().target, "/b");
+        assert!(matches!(read_request(&mut c, &l), Err(ReadError::Eof)));
+    }
+
+    #[test]
+    fn refusals_carry_the_documented_status() {
+        assert_eq!(bad_status(parse("WHAT?\r\n\r\n")), 400);
+        assert_eq!(bad_status(parse("get / HTTP/1.1\r\n\r\n")), 400);
+        assert_eq!(bad_status(parse("GET / HTTP/2.0\r\n\r\n")), 505);
+        assert_eq!(bad_status(parse("POST /x HTTP/1.1\r\n\r\n")), 411);
+        let chunked = "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(bad_status(parse(chunked)), 501);
+        let nocl = "POST /x HTTP/1.1\r\nContent-Length: zero\r\n\r\n";
+        assert_eq!(bad_status(parse(nocl)), 400);
+        let big = "POST /x HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n";
+        assert_eq!(bad_status(parse(big)), 413);
+        let huge_header =
+            format!("GET / HTTP/1.1\r\nx-pad: {}\r\n\r\n", "a".repeat(9000));
+        assert_eq!(bad_status(parse(&huge_header)), 431);
+        assert_eq!(bad_status(parse("GET / HTTP/1.1\r\nnocolon\r\n\r\n")), 400);
+        // truncations: mid-head and mid-body
+        assert_eq!(bad_status(parse("GET / HTTP/1.1\r\nHost: h")), 400);
+        let cut = "POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        assert_eq!(bad_status(parse(cut)), 400);
+    }
+
+    #[test]
+    fn header_count_limit_enforced() {
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..65 {
+            raw.push_str(&format!("x-{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        assert_eq!(bad_status(parse(&raw)), 431);
+    }
+
+    #[test]
+    fn response_roundtrips_through_the_client_parser() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "application/json", b"{\"a\":1}", false)
+            .unwrap();
+        let resp = read_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("connection"), Some("keep-alive"));
+        assert_eq!(resp.json().unwrap().req_f64("a").unwrap(), 1.0);
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "application/json", b"{}", true)
+            .unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("connection: close"));
+    }
+}

@@ -1,0 +1,551 @@
+//! Wire-level conformance and parity for the HTTP front end (PR 6
+//! tentpole), against the contract in docs/http-api.md.
+//!
+//! Two families of guarantees:
+//!
+//! * **Parity** — a request served over the wire must equal the same
+//!   call made in-process, bit for bit: one-shot classification labels,
+//!   and streaming running logits (f32 survives the JSON roundtrip
+//!   exactly because numbers are printed shortest-roundtrip f64).
+//! * **Robustness** — a malformed peer can never take the listener
+//!   down. Every refusal status the parser defines (400, 411, 413,
+//!   431, 501, 505) is provoked over a raw socket and followed by a
+//!   fresh well-formed request that must still succeed.
+//!
+//! Every status code documented in docs/http-api.md has a conformance
+//! test here: 200, 201, 400, 404, 405, 411, 413, 429, 431, 501, 503,
+//! 505 (500 is the defensive panic-containment path, exercised only in
+//! prose — no handler panics on purpose).
+
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use minimalist::coordinator::loadgen::{self, LoadGenOpts};
+use minimalist::coordinator::{
+    BatchPolicy, GoldenBackend, HttpConfig, HttpServer, Server, StreamServer,
+};
+use minimalist::nn::{argmax, synthetic_network, GoldenNetwork};
+use minimalist::util::http::{read_response, HttpClient, HttpResponse};
+use minimalist::util::json::Json;
+
+const DIMS: [usize; 3] = [1, 16, 10];
+
+/// Short keep-alive so idle/drain paths resolve quickly under test.
+fn test_config() -> HttpConfig {
+    HttpConfig {
+        keepalive: Duration::from_millis(200),
+        ..HttpConfig::default()
+    }
+}
+
+/// The full serving stack on an ephemeral port: golden one-shot engine,
+/// golden streaming engine, HTTP front end over both.
+struct Stack {
+    http: HttpServer,
+    server: Server,
+    stream: StreamServer,
+}
+
+fn spawn_stack(workers: usize, sessions: usize) -> Stack {
+    let nw = synthetic_network(&DIMS, 9);
+    let server = Server::spawn_sharded(
+        GoldenBackend::factory(nw.clone()),
+        BatchPolicy::new(8, Duration::from_millis(1)),
+        workers,
+    );
+    let stream = StreamServer::spawn(
+        GoldenBackend::streaming_factory(nw, sessions),
+        workers,
+        sessions,
+    );
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        Some(server.client()),
+        Some(stream.client()),
+        test_config(),
+    )
+    .expect("ephemeral-port bind");
+    Stack { http, server, stream }
+}
+
+impl Stack {
+    fn addr(&self) -> String {
+        self.http.addr().to_string()
+    }
+
+    /// Front end first, then the engines — the documented drain order.
+    fn teardown(self) {
+        self.http.shutdown();
+        self.server.shutdown();
+        self.stream.shutdown();
+    }
+}
+
+/// Deterministic test sequence (d_in = 1: one value per frame).
+fn seq(len: usize, salt: usize) -> Vec<f32> {
+    (0..len)
+        .map(|t| (((t + 2) * (salt + 3)) % 7) as f32 / 6.0)
+        .collect()
+}
+
+fn f32s_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn json_f32s(j: &Json, key: &str) -> Vec<f32> {
+    j.req(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// Fire raw bytes at the server and read the single response — the
+/// malformed-input path, below the well-formed [`HttpClient`].
+fn raw(addr: &str, bytes: &[u8]) -> HttpResponse {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(bytes).unwrap();
+    let mut r = BufReader::new(s);
+    read_response(&mut r).unwrap()
+}
+
+#[test]
+fn wire_classify_matches_in_process_and_reference() {
+    let stack = spawn_stack(2, 2);
+    let mut c = HttpClient::connect(&stack.addr()).unwrap();
+    let mut reference = GoldenNetwork::new(synthetic_network(&DIMS, 9));
+    for salt in 0..4usize {
+        let s = seq(24, salt);
+        let body = Json::obj(vec![
+            ("id", ((salt + 100) as f64).into()),
+            ("sequence", f32s_json(&s)),
+        ]);
+        let resp = c.request("POST", "/v1/classify", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        let j = resp.json().unwrap();
+        assert_eq!(j.req_f64("id").unwrap() as usize, salt + 100);
+        assert!(j.req_f64("latency_us").unwrap() >= 0.0);
+        let wire_label = j.req_f64("label").unwrap() as usize;
+        // the same engine called in-process must agree exactly...
+        let inproc = stack.server.client().classify(9000 + salt as u64, s.clone());
+        assert_eq!(wire_label, inproc.result.unwrap());
+        // ...and so must the golden reference network
+        assert_eq!(wire_label, reference.classify(&s));
+    }
+    stack.teardown();
+}
+
+#[test]
+fn wire_streaming_matches_one_shot_bitwise() {
+    let stack = spawn_stack(1, 2);
+    let mut c = HttpClient::connect(&stack.addr()).unwrap();
+    let s = seq(23, 3);
+    let r = c.request("POST", "/v1/session", None).unwrap();
+    assert_eq!(r.status, 201, "{}", r.text());
+    let sid = r.json().unwrap().req_f64("session").unwrap() as u64;
+    let mut reference = GoldenNetwork::new(synthetic_network(&DIMS, 9));
+    let mut pushed = 0usize;
+    for chunk in [3usize, 5, 8, 7] {
+        let body =
+            Json::obj(vec![("values", f32s_json(&s[pushed..pushed + chunk]))]);
+        let pr = c
+            .request("POST", &format!("/v1/session/{sid}/frames"), Some(&body))
+            .unwrap();
+        assert_eq!(pr.status, 200, "{}", pr.text());
+        assert_eq!(pr.json().unwrap().req_f64("frames").unwrap() as usize, chunk);
+        pushed += chunk;
+        // running logits over the prefix must be bit-identical to a
+        // one-shot classification of the same frames — the JSON number
+        // roundtrip (f32 → shortest f64 text → f32) is exact
+        let lr = c
+            .request("GET", &format!("/v1/session/{sid}/logits"), None)
+            .unwrap();
+        assert_eq!(lr.status, 200, "{}", lr.text());
+        let lj = lr.json().unwrap();
+        reference.classify(&s[..pushed]);
+        assert_eq!(
+            json_f32s(&lj, "logits"),
+            reference.logits(),
+            "prefix of {pushed} frames diverged over the wire"
+        );
+        assert_eq!(
+            lj.req_f64("argmax").unwrap() as usize,
+            argmax(&reference.logits())
+        );
+    }
+    assert_eq!(pushed, s.len());
+    let dr = c.request("DELETE", &format!("/v1/session/{sid}"), None).unwrap();
+    assert_eq!(dr.status, 200, "{}", dr.text());
+    assert_eq!(
+        dr.json().unwrap().req_f64("label").unwrap() as usize,
+        reference.classify(&s)
+    );
+    // the id is retired: every further op on it is a 404
+    let gone = c
+        .request("GET", &format!("/v1/session/{sid}/logits"), None)
+        .unwrap();
+    assert_eq!(gone.status, 404, "{}", gone.text());
+    stack.teardown();
+}
+
+#[test]
+fn healthz_and_metrics_report_live_state() {
+    let stack = spawn_stack(1, 2);
+    let mut c = HttpClient::connect(&stack.addr()).unwrap();
+    let h = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 200);
+    let hj = h.json().unwrap();
+    assert_eq!(hj.req_str("status").unwrap(), "ok");
+    assert_eq!(hj.req_f64("live_sessions").unwrap(), 0.0);
+
+    let sid = c
+        .request("POST", "/v1/session", None)
+        .unwrap()
+        .json()
+        .unwrap()
+        .req_f64("session")
+        .unwrap() as u64;
+    let hj = c.request("GET", "/healthz", None).unwrap().json().unwrap();
+    assert_eq!(hj.req_f64("live_sessions").unwrap(), 1.0);
+
+    let m = c.request("GET", "/metrics", None).unwrap();
+    assert_eq!(m.status, 200);
+    assert!(m.header("content-type").unwrap().starts_with("text/plain"));
+    let text = m.text();
+    for family in [
+        "minimalist_http_connections_total",
+        "minimalist_http_requests_total",
+        "minimalist_http_protocol_errors_total 0",
+        "minimalist_http_sessions_live 1",
+        "minimalist_http_responses_total{status=\"200\"}",
+        "minimalist_http_responses_total{status=\"201\"} 1",
+        "minimalist_http_request_latency_us{quantile=\"0.5\"}",
+        "minimalist_http_request_latency_us_count",
+        "minimalist_serve_errors_total{kind=\"busy\"} 0",
+        "minimalist_serve_errors_total{kind=\"lost\"} 0",
+        "minimalist_serve_errors_total{kind=\"panicked\"} 0",
+    ] {
+        assert!(text.contains(family), "missing '{family}' in:\n{text}");
+    }
+    let dr = c.request("DELETE", &format!("/v1/session/{sid}"), None).unwrap();
+    assert_eq!(dr.status, 200);
+    stack.teardown();
+}
+
+#[test]
+fn unknown_routes_and_wrong_methods() {
+    let stack = spawn_stack(1, 1);
+    let mut c = HttpClient::connect(&stack.addr()).unwrap();
+    let r = c.request("GET", "/no/such/route", None).unwrap();
+    assert_eq!(r.status, 404);
+    assert_eq!(r.json().unwrap().req_str("error").unwrap(), "not_found");
+    // wrong method on every known path: 405, not 404
+    for (method, path) in [
+        ("GET", "/v1/classify"),
+        ("PUT", "/v1/classify"),
+        ("POST", "/healthz"),
+        ("POST", "/metrics"),
+        ("DELETE", "/v1/session"),
+        ("GET", "/v1/session/1"),
+        ("PUT", "/v1/session/1/frames"),
+        ("POST", "/v1/session/1/logits"),
+    ] {
+        let r = c.request(method, path, None).unwrap();
+        assert_eq!(r.status, 405, "{method} {path}: {}", r.text());
+        assert_eq!(
+            r.json().unwrap().req_str("error").unwrap(),
+            "method_not_allowed"
+        );
+    }
+    // non-integer session ids are 400, unknown numeric ids 404
+    for (method, path) in [
+        ("GET", "/v1/session/abc/logits"),
+        ("DELETE", "/v1/session/abc"),
+    ] {
+        assert_eq!(c.request(method, path, None).unwrap().status, 400);
+    }
+    let body = Json::obj(vec![("values", vec![0.5f64].into())]);
+    for (method, path, b) in [
+        ("POST", "/v1/session/424242/frames", Some(&body)),
+        ("GET", "/v1/session/424242/logits", None),
+        ("DELETE", "/v1/session/424242", None),
+    ] {
+        let r = c.request(method, path, b).unwrap();
+        assert_eq!(r.status, 404, "{method} {path}: {}", r.text());
+        assert_eq!(
+            r.json().unwrap().req_str("error").unwrap(),
+            "unknown_session"
+        );
+    }
+    stack.teardown();
+}
+
+#[test]
+fn malformed_requests_are_refused_and_the_listener_survives() {
+    let stack = spawn_stack(1, 1);
+    let addr = stack.addr();
+    let mut cases: Vec<(Vec<u8>, u16)> = vec![
+        // garbage request line
+        (b"GARBAGE\r\n\r\n".to_vec(), 400),
+        // unsupported HTTP version
+        (b"GET /healthz HTTP/2.0\r\nhost: h\r\n\r\n".to_vec(), 505),
+        // POST without Content-Length
+        (b"POST /v1/classify HTTP/1.1\r\nhost: h\r\n\r\n".to_vec(), 411),
+        // unparseable Content-Length
+        (
+            b"POST /v1/classify HTTP/1.1\r\ncontent-length: abc\r\n\r\n"
+                .to_vec(),
+            400,
+        ),
+        // declared body over the limit
+        (
+            b"POST /v1/classify HTTP/1.1\r\ncontent-length: 999999999\r\n\r\n"
+                .to_vec(),
+            413,
+        ),
+        // chunked encoding is outside the subset
+        (
+            b"POST /v1/classify HTTP/1.1\r\ntransfer-encoding: chunked\r\n\
+              content-length: 4\r\n\r\nabcd"
+                .to_vec(),
+            501,
+        ),
+    ];
+    // a single oversized header line
+    let mut big = b"GET /healthz HTTP/1.1\r\nx-big: ".to_vec();
+    big.extend(vec![b'a'; 20_000]);
+    big.extend_from_slice(b"\r\n\r\n");
+    cases.push((big, 431));
+    // too many headers
+    let mut many = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    for i in 0..80 {
+        many.extend_from_slice(format!("x-h{i}: v\r\n").as_bytes());
+    }
+    many.extend_from_slice(b"\r\n");
+    cases.push((many, 431));
+
+    for (bytes, want) in cases {
+        let resp = raw(&addr, &bytes);
+        assert_eq!(resp.status, want, "{}", resp.text());
+        // protocol violations always close the connection...
+        assert_eq!(resp.header("connection"), Some("close"));
+        assert_eq!(resp.json().unwrap().req_str("error").unwrap(), "protocol");
+        // ...and never take the listener down: a fresh well-formed
+        // request right after must succeed
+        let mut c = HttpClient::connect(&addr).unwrap();
+        assert_eq!(c.request("GET", "/healthz", None).unwrap().status, 200);
+    }
+    let metrics = stack.http.shutdown();
+    assert_eq!(metrics.protocol_errors, 8);
+    stack.server.shutdown();
+    stack.stream.shutdown();
+}
+
+#[test]
+fn early_disconnect_mid_body_leaves_the_listener_alive() {
+    let stack = spawn_stack(1, 1);
+    let addr = stack.addr();
+    {
+        let mut s = TcpStream::connect(addr.as_str()).unwrap();
+        s.write_all(
+            b"POST /v1/classify HTTP/1.1\r\ncontent-length: 100\r\n\r\n{\"seq",
+        )
+        .unwrap();
+        // dropped here: the peer vanishes with 94 bytes still owed
+    }
+    let mut c = HttpClient::connect(&addr).unwrap();
+    assert_eq!(c.request("GET", "/healthz", None).unwrap().status, 200);
+    stack.teardown();
+}
+
+#[test]
+fn invalid_bodies_are_400_without_killing_the_connection() {
+    let stack = spawn_stack(1, 1);
+    let mut c = HttpClient::connect(&stack.addr()).unwrap();
+    // valid JSON, wrong shape
+    for body in [
+        Json::obj(vec![]),
+        Json::obj(vec![("sequence", Json::Arr(vec![]))]),
+        Json::obj(vec![("sequence", "nope".into())]),
+        Json::obj(vec![("sequence", Json::Arr(vec!["x".into()]))]),
+    ] {
+        let r = c.request("POST", "/v1/classify", Some(&body)).unwrap();
+        assert_eq!(r.status, 400, "{body}: {}", r.text());
+        assert_eq!(r.json().unwrap().req_str("error").unwrap(), "bad_request");
+    }
+    // invalid JSON text, and bytes that are not UTF-8 at all
+    let raw_cases: [&[u8]; 2] = [
+        b"POST /v1/classify HTTP/1.1\r\ncontent-length: 7\r\n\r\n{not js",
+        b"POST /v1/classify HTTP/1.1\r\ncontent-length: 4\r\n\r\n\xff\xfe\x00\x01",
+    ];
+    for bytes in raw_cases {
+        let resp = raw(&stack.addr(), bytes);
+        assert_eq!(resp.status, 400, "{}", resp.text());
+        assert_eq!(resp.json().unwrap().req_str("error").unwrap(), "bad_request");
+    }
+    // handler-level 400s are not protocol errors: the keep-alive
+    // connection survived all of them
+    assert_eq!(c.request("GET", "/healthz", None).unwrap().status, 200);
+    stack.teardown();
+}
+
+#[test]
+fn slot_exhaustion_maps_to_429_and_recovers() {
+    let stack = spawn_stack(1, 1); // capacity: exactly one session
+    let mut c = HttpClient::connect(&stack.addr()).unwrap();
+    let r = c.request("POST", "/v1/session", None).unwrap();
+    assert_eq!(r.status, 201, "{}", r.text());
+    let sid = r.json().unwrap().req_f64("session").unwrap() as u64;
+    // admission control: the second open is rejected, not queued
+    let busy = c.request("POST", "/v1/session", None).unwrap();
+    assert_eq!(busy.status, 429, "{}", busy.text());
+    assert_eq!(busy.json().unwrap().req_str("error").unwrap(), "busy");
+    // closing frees the slot and the next open succeeds
+    let dr = c.request("DELETE", &format!("/v1/session/{sid}"), None).unwrap();
+    assert_eq!(dr.status, 200);
+    let again = c.request("POST", "/v1/session", None).unwrap();
+    assert_eq!(again.status, 201, "{}", again.text());
+    let sid2 = again.json().unwrap().req_f64("session").unwrap() as u64;
+    assert_eq!(
+        c.request("DELETE", &format!("/v1/session/{sid2}"), None)
+            .unwrap()
+            .status,
+        200
+    );
+    stack.teardown();
+}
+
+#[test]
+fn engine_loss_maps_to_503_and_evicts_the_session() {
+    // built by hand (not spawn_stack) so the engines can be shut down
+    // while the front end stays up — the "serving side went away" case
+    let nw = synthetic_network(&DIMS, 9);
+    let server = Server::spawn_sharded(
+        GoldenBackend::factory(nw.clone()),
+        BatchPolicy::new(8, Duration::from_millis(1)),
+        1,
+    );
+    let stream =
+        StreamServer::spawn(GoldenBackend::streaming_factory(nw, 1), 1, 1);
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        Some(server.client()),
+        Some(stream.client()),
+        test_config(),
+    )
+    .unwrap();
+    let addr = http.addr().to_string();
+    let mut c = HttpClient::connect(&addr).unwrap();
+    let r = c.request("POST", "/v1/session", None).unwrap();
+    assert_eq!(r.status, 201, "{}", r.text());
+    let sid = r.json().unwrap().req_f64("session").unwrap() as u64;
+
+    server.shutdown();
+    stream.shutdown();
+
+    let body = Json::obj(vec![("values", vec![0.5f64].into())]);
+    let pr = c
+        .request("POST", &format!("/v1/session/{sid}/frames"), Some(&body))
+        .unwrap();
+    assert_eq!(pr.status, 503, "{}", pr.text());
+    assert_eq!(pr.json().unwrap().req_str("error").unwrap(), "lost");
+    // the stale handle was evicted: the id now 404s instead of 503ing
+    let gone = c
+        .request("GET", &format!("/v1/session/{sid}/logits"), None)
+        .unwrap();
+    assert_eq!(gone.status, 404, "{}", gone.text());
+    // one-shot classification over a dead engine is 503 too
+    let cb = Json::obj(vec![("sequence", vec![0.5f64].into())]);
+    let cr = c.request("POST", "/v1/classify", Some(&cb)).unwrap();
+    assert_eq!(cr.status, 503, "{}", cr.text());
+    http.shutdown();
+}
+
+#[test]
+fn connection_semantics_follow_the_http_defaults() {
+    let stack = spawn_stack(1, 1);
+    let addr = stack.addr();
+    // HTTP/1.1 + `Connection: close`: answered, then hung up
+    {
+        let s = TcpStream::connect(addr.as_str()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        w.write_all(b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n")
+            .unwrap();
+        let mut r = BufReader::new(s);
+        let resp = read_response(&mut r).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("connection"), Some("close"));
+        // EOF follows (a timeout would error, failing the unwrap_or)
+        assert_eq!(r.read(&mut [0u8; 1]).unwrap_or(1), 0);
+    }
+    // HTTP/1.0 with no connection header: closed after one response
+    {
+        let s = TcpStream::connect(addr.as_str()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        w.write_all(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        let mut r = BufReader::new(s);
+        let resp = read_response(&mut r).unwrap();
+        assert_eq!(resp.header("connection"), Some("close"));
+        assert_eq!(r.read(&mut [0u8; 1]).unwrap_or(1), 0);
+    }
+    // HTTP/1.1 default: keep-alive — two pipelined requests, one socket
+    {
+        let s = TcpStream::connect(addr.as_str()).unwrap();
+        let mut w = s.try_clone().unwrap();
+        w.write_all(
+            b"GET /healthz HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n",
+        )
+        .unwrap();
+        let mut r = BufReader::new(s);
+        let first = read_response(&mut r).unwrap();
+        assert_eq!(first.header("connection"), Some("keep-alive"));
+        assert_eq!(read_response(&mut r).unwrap().status, 200);
+    }
+    stack.teardown();
+}
+
+#[test]
+fn shutdown_drains_and_then_refuses_connections() {
+    let stack = spawn_stack(1, 1);
+    let addr = stack.addr();
+    let mut c = HttpClient::connect(&addr).unwrap();
+    assert_eq!(c.request("GET", "/healthz", None).unwrap().status, 200);
+    let metrics = stack.http.shutdown();
+    assert!(metrics.requests() >= 1);
+    assert_eq!(metrics.protocol_errors, 0);
+    // the listener is gone: new dials are refused at the socket level
+    // (or, losing a race with the kernel backlog, die on first use)
+    match HttpClient::connect(&addr) {
+        Err(_) => {}
+        Ok(mut c2) => assert!(c2.request("GET", "/healthz", None).is_err()),
+    }
+    stack.server.shutdown();
+    stack.stream.shutdown();
+}
+
+#[test]
+fn loadgen_completes_sessions_cleanly_end_to_end() {
+    let stack = spawn_stack(2, 2); // capacity 4 = the loadgen connections
+    let opts = LoadGenOpts {
+        connections: 4,
+        sessions_per_conn: 2,
+        frames: 8,
+        frames_per_push: 4,
+        frame_width: 1,
+        poll_logits: true,
+    };
+    let report = loadgen::run(&stack.addr(), &opts);
+    assert_eq!(report.sessions_completed, 8, "{}", report.summary());
+    assert_eq!(report.frames_pushed, 64, "{}", report.summary());
+    assert_eq!(report.protocol_errors, 0, "{}", report.summary());
+    assert_eq!(report.transport_errors, 0, "{}", report.summary());
+    let m = stack.http.shutdown();
+    assert_eq!(m.protocol_errors, 0);
+    stack.server.shutdown();
+    stack.stream.shutdown();
+}
