@@ -28,6 +28,10 @@
 //!   wire through the HTTP/1.1 front end via the load generator. The
 //!   delta between the two rows is the measured cost of the wire:
 //!   HTTP parse, JSON encode/decode, and the connection threads.
+//! * **delta_sweep** (schema 5) — the delta-sparsity trade (ADR-005):
+//!   lockstep batch throughput, measured skip ratio, and label
+//!   agreement against the exact `delta = 0` engine as the threshold
+//!   grows, on a glyph workload.
 //!
 //! The JSON schema is versioned (`schema`); CI regenerates the file per
 //! commit, gates on regressions against the committed baseline
@@ -187,6 +191,90 @@ fn batch_sweep(dims: &[usize], geometry: CoreGeometry, opts: &BenchOpts) -> Json
             "geometry",
             format!("{}x{}", geometry.rows, geometry.cols).into(),
         ),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Delta-sparsity sweep (schema 5): throughput, skip ratio, and label
+/// agreement of the lockstep batch path as the delta threshold grows
+/// (ADR-005), on a glyph workload whose flat image regions are what the
+/// fast path exists to skip. The `delta = 0` row is the exact engine —
+/// its labels are the agreement reference and its rate the speedup
+/// denominator; CI asserts the nonzero-threshold rows actually skip.
+fn delta_sweep(opts: &BenchOpts) -> Json {
+    let dims = [1usize, 32, 10];
+    let geometry = CoreGeometry { rows: 32, cols: 32 };
+    let nw = synthetic_network(&dims, 7);
+    let b = 8usize;
+    let img = if opts.quick { 8 } else { 16 };
+    let t_len = img * img;
+    let samples = glyphs::make_split(b, img, 3);
+    let seqs: Vec<&[f32]> = samples.iter().map(|s| s.pixels.as_slice()).collect();
+    // frame-major copies for the step_batch timing loop: frames[t] holds
+    // pixel t of every sequence, so the bench closure allocates nothing
+    let frames: Vec<Vec<f32>> = (0..t_len)
+        .map(|t| samples.iter().map(|s| s.pixels[t]).collect())
+        .collect();
+    let thresholds: &[f64] = if opts.quick {
+        &[0.0, 0.05, 0.2]
+    } else {
+        &[0.0, 0.02, 0.05, 0.1, 0.2]
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_rate = 0.0f64;
+    let mut base_labels: Vec<usize> = Vec::new();
+    for &delta in thresholds {
+        let mut engine = MixedSignalEngine::new(
+            nw.clone(),
+            CircuitConfig { delta, ..CircuitConfig::default() },
+            geometry,
+        )
+        .expect("sweep network must map");
+        // accuracy side: labels of the full workload, and the skip
+        // counters it accumulated
+        let labels = engine.classify_batch(&seqs);
+        let stats = engine.delta_stats();
+        if delta == 0.0 {
+            base_labels = labels.clone();
+        }
+        let agreement = labels
+            .iter()
+            .zip(base_labels.iter())
+            .filter(|(a, c)| a == c)
+            .count() as f64
+            / labels.len().max(1) as f64;
+        // speed side: lockstep step_batch over the same frames
+        engine.reset_batch(b);
+        let mut t = 0u32;
+        let r = bench(&format!("delta-{delta}"), opts.budget(), || {
+            engine.step_batch(t, &frames[t as usize % t_len]);
+            t = t.wrapping_add(1);
+        });
+        let seq_steps_per_s = r.throughput(b as f64);
+        if delta == 0.0 {
+            base_rate = seq_steps_per_s;
+        }
+        rows.push(Json::obj(vec![
+            ("delta", delta.into()),
+            ("seq_steps_per_s", seq_steps_per_s.into()),
+            ("step_us_p50", (r.median_ns / 1e3).into()),
+            (
+                "speedup_vs_delta0",
+                (seq_steps_per_s / base_rate.max(1e-12)).into(),
+            ),
+            ("skip_ratio", stats.skip_ratio().into()),
+            ("label_agreement", agreement.into()),
+        ]));
+    }
+    Json::obj(vec![
+        ("backend", "satsim".into()),
+        ("dims", dims.to_vec().into()),
+        (
+            "geometry",
+            format!("{}x{}", geometry.rows, geometry.cols).into(),
+        ),
+        ("batch", b.into()),
+        ("img", img.into()),
         ("rows", Json::Arr(rows)),
     ])
 }
@@ -541,14 +629,15 @@ pub fn run(opts: &BenchOpts) -> Json {
     ]);
     Json::obj(vec![
         ("bench", "pr4".into()),
-        // schema 4: adds serving.http_sweep (the same streaming load
-        // over the wire vs in-process — the measured HTTP overhead);
-        // schema 3 added serving.streaming_sweep
-        ("schema", 4usize.into()),
+        // schema 5: adds delta_sweep (delta-sparsity threshold ×
+        // throughput/skip-ratio/label-agreement, ADR-005); schema 4
+        // added serving.http_sweep, schema 3 serving.streaming_sweep
+        ("schema", 5usize.into()),
         ("status", "measured".into()),
         ("quick", opts.quick.into()),
         ("engine", engine),
         ("batch_sweep", sweep),
+        ("delta_sweep", delta_sweep(opts)),
         ("serving", serving),
     ])
 }
@@ -607,7 +696,10 @@ fn check_metric(
 /// steps/s per matching label, and lockstep batch-sweep seq-steps/s per
 /// matching batch size when both documents carry a sweep (a schema-1
 /// `BENCH_pr3.json` baseline has none — only the engine entries
-/// compare). A placeholder baseline (`status` ≠ `"measured"`, the
+/// compare). Every compared entry runs at `delta = 0` — the schema-5
+/// `delta_sweep` axis is recorded but never gated on, so the regression
+/// gate stays armed and meaningful across the schema bump (nonzero-delta
+/// rates measure a different, lossy computation). A placeholder baseline (`status` ≠ `"measured"`, the
 /// committed state until the first CI run lands numbers) produces a
 /// note and an empty comparison, so the gate passes vacuously until a
 /// measured baseline is committed.
@@ -768,7 +860,7 @@ mod tests {
         let opts = BenchOpts { quick: true };
         let doc = run(&opts);
         assert_eq!(doc.req_str("status").unwrap(), "measured");
-        assert_eq!(doc.req_f64("schema").unwrap() as u64, 4);
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 5);
         let engine = doc.req("engine").unwrap().as_arr().unwrap();
         assert_eq!(engine.len(), 2);
         for e in engine {
@@ -788,6 +880,28 @@ mod tests {
         for r in rows {
             assert!(r.req_f64("seq_steps_per_s").unwrap() > 0.0);
             assert!(r.req_f64("speedup_vs_b1").unwrap() > 0.0);
+        }
+        // the delta sweep anchors on an exact delta-0 row (no skips,
+        // perfect agreement) and its nonzero thresholds must actually
+        // skip work on the glyph workload — the CI assertion that the
+        // fast path engages outside its own unit tests
+        let ds = doc.req("delta_sweep").unwrap();
+        let drows = ds.req("rows").unwrap().as_arr().unwrap();
+        assert!(drows.len() >= 3);
+        assert_eq!(drows[0].req_f64("delta").unwrap(), 0.0);
+        assert_eq!(drows[0].req_f64("skip_ratio").unwrap(), 0.0);
+        assert_eq!(drows[0].req_f64("label_agreement").unwrap(), 1.0);
+        for r in drows {
+            assert!(r.req_f64("seq_steps_per_s").unwrap() > 0.0);
+            assert!(r.req_f64("speedup_vs_delta0").unwrap() > 0.0);
+            let agreement = r.req_f64("label_agreement").unwrap();
+            assert!((0.0..=1.0).contains(&agreement));
+            if r.req_f64("delta").unwrap() > 0.0 {
+                assert!(
+                    r.req_f64("skip_ratio").unwrap() > 0.0,
+                    "nonzero threshold must skip some components: {r}"
+                );
+            }
         }
         let serving = doc.req("serving").unwrap();
         let ws = serving.req("worker_sweep").unwrap();

@@ -58,6 +58,12 @@ pub struct CircuitConfig {
     /// Disable every non-ideality (mismatch, noise, injection, parasitics)
     /// — the configuration parity tests run against the golden model.
     pub ideal: bool,
+    /// Delta-sparsity threshold (EdgeDRNN-style accumulating delta):
+    /// an input component only drives charge-share work when it moved
+    /// more than `delta` since the last value it *fired* with. `0.0`
+    /// (the default) disables the delta machinery entirely and runs the
+    /// exact pre-delta code path — see [`delta_fires`] and ADR-005.
+    pub delta: f64,
 }
 
 impl Default for CircuitConfig {
@@ -80,8 +86,23 @@ impl Default for CircuitConfig {
             c_line: 2e-15,
             seed: 0xC0FFEE,
             ideal: false,
+            delta: 0.0,
         }
     }
+}
+
+/// The accumulating-delta fire rule (EdgeDRNN, PAPERS.md): a component
+/// fires when it moved more than `delta` away from the value it last
+/// fired with — NOT from the previous step's value — so quantization
+/// error stays bounded by `delta` instead of drifting across a run.
+///
+/// Written as a negated `<=` so a NaN `x_last` (the "never fired yet"
+/// sentinel used by the satsim cores and the golden model) compares
+/// false and therefore *fires*, which seeds the tracker on the first
+/// step of every slot.
+#[inline]
+pub fn delta_fires(x: f64, x_last: f64, delta: f64) -> bool {
+    !((x - x_last).abs() <= delta)
 }
 
 impl CircuitConfig {
@@ -126,6 +147,7 @@ impl CircuitConfig {
             ("c_line", self.c_line.into()),
             ("seed", (self.seed as f64).into()),
             ("ideal", self.ideal.into()),
+            ("delta", self.delta.into()),
         ])
     }
 
@@ -147,6 +169,7 @@ impl CircuitConfig {
             c_line: f("c_line", d.c_line),
             seed: f("seed", d.seed as f64) as u64,
             ideal: j.get("ideal").and_then(Json::as_bool).unwrap_or(d.ideal),
+            delta: f("delta", d.delta),
         })
     }
 }
@@ -383,9 +406,28 @@ mod tests {
         let mut c = CircuitConfig::default();
         c.sigma_c = 0.025;
         c.seed = 42;
+        c.delta = 0.05;
         let j = c.to_json();
         let back = CircuitConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
+        // older config files without the delta key load as delta=0
+        let old = CircuitConfig::default().to_json();
+        assert_eq!(CircuitConfig::from_json(&old).unwrap().delta, 0.0);
+    }
+
+    #[test]
+    fn delta_fire_rule() {
+        // moves within the threshold are quiescent, boundary inclusive
+        assert!(!delta_fires(0.5, 0.5, 0.0));
+        assert!(!delta_fires(0.52, 0.5, 0.02));
+        assert!(!delta_fires(0.48, 0.5, 0.02));
+        // anything beyond fires, in either direction
+        assert!(delta_fires(0.53, 0.5, 0.02));
+        assert!(delta_fires(-0.1, 0.1, 0.15));
+        // the NaN "never fired" sentinel always fires
+        assert!(delta_fires(0.0, f64::NAN, 1.0));
+        // at delta=0 any nonzero move fires
+        assert!(delta_fires(1.0, 1.0 + f64::EPSILON, 0.0));
     }
 
     #[test]

@@ -271,6 +271,12 @@ impl Backend for MixedSignalBackend {
             None
         }
     }
+
+    /// The engine's cumulative delta-sparsity counters (ADR-005) — all
+    /// zeros unless the circuit was configured with `delta > 0`.
+    fn delta_stats(&self) -> Option<crate::satsim::DeltaCounters> {
+        Some(self.engine.delta_stats())
+    }
 }
 
 /// The streaming interface over the engine's slot pool: each live
@@ -402,6 +408,10 @@ mod tests {
         let mut b = MixedSignalBackend::new(engine);
         let labels = b.classify_batch(&[vec![0.5f32; 16]]);
         assert_eq!(labels.len(), 1);
+        // delta machinery is off at the default threshold: the backend
+        // reports counters (it has an engine), but they stay zero
+        let d = b.delta_stats().unwrap();
+        assert_eq!(d.components_fired + d.components_skipped, 0);
     }
 
     #[test]

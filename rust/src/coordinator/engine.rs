@@ -43,7 +43,7 @@ use crate::nn::mingru::{argmax, READOUT_STEPS};
 use crate::nn::weights::NetworkWeights;
 use crate::quant::codesign::{map_layer_with, volts_to_logical, LayerCircuit};
 use crate::router::fabric::Fabric;
-use crate::satsim::{ColumnConfig, Core, CoreStep};
+use crate::satsim::{ColumnConfig, Core, CoreStep, DeltaCounters};
 
 /// Per-sequence observables of one layer (logical units — directly
 /// comparable to the golden model and to the python traces).
@@ -820,6 +820,23 @@ impl MixedSignalEngine {
         };
         (events, mean)
     }
+
+    /// Cumulative delta-sparsity skip counters aggregated across every
+    /// core (ADR-005): components fired vs skipped under the
+    /// accumulating-delta rule, and whole column charge-shares skipped
+    /// vs executed. All zeros unless the engine runs with
+    /// `circuit.delta > 0` — the default path never touches the delta
+    /// machinery. Like [`MixedSignalEngine::energy`], the counters are
+    /// lifetime-cumulative (sequence resets do not clear them), which
+    /// is what the serving layer's shutdown merge and `/metrics`
+    /// exposure rely on.
+    pub fn delta_stats(&self) -> DeltaCounters {
+        let mut d = DeltaCounters::default();
+        for c in &self.cores {
+            d.merge(&c.delta_counters());
+        }
+        d
+    }
 }
 
 /// Append one core's observables to the layer output buffers (free
@@ -899,6 +916,43 @@ mod tests {
         // 12 caps → granularity ~1/24 of the state range per step;
         // accumulated differences stay small for short sequences
         assert!(worst < 0.25, "worst |Δh| = {worst}");
+    }
+
+    #[test]
+    fn delta_engine_skips_and_tracks_delta_golden() {
+        // Hidden-layer frames are binary events, so any threshold in
+        // (0,1) skips every component that did not toggle — the ideal
+        // delta engine must still track the golden model running the
+        // same accumulating-delta rule, within swap granularity.
+        let weights = synthetic_network(&[1, 12, 10], 11);
+        let delta = 0.05;
+        let circuit = CircuitConfig { delta, ..CircuitConfig::ideal() };
+        let mut e = MixedSignalEngine::new(
+            weights.clone(),
+            circuit,
+            CoreGeometry { rows: 16, cols: 16 },
+        )
+        .unwrap();
+        let mut g = GoldenNetwork::with_delta(weights, delta);
+        e.reset();
+        g.reset();
+        let mut worst: f32 = 0.0;
+        for t in 0..40 {
+            let x = [((t * 13) % 17) as f32 / 16.0];
+            let mut traces = Vec::new();
+            e.step(t as u32, &x, Some(&mut traces));
+            g.step(&x, None);
+            for (hs, hg) in traces[0].h.last().unwrap().iter()
+                .zip(g.states[0].h.iter())
+            {
+                worst = worst.max((hs - hg).abs());
+            }
+        }
+        assert!(worst < 0.25, "worst |Δh| = {worst}");
+        let d = e.delta_stats();
+        assert!(d.components_fired > 0);
+        assert!(d.components_skipped > 0, "binary frames must skip");
+        assert!(d.skip_ratio() > 0.0 && d.skip_ratio() < 1.0);
     }
 
     #[test]

@@ -155,6 +155,16 @@ impl HttpMetrics {
                 "minimalist_serve_errors_total{{kind=\"{kind}\"}} {n}\n"
             ));
         }
+        // delta-sparsity skip accounting (ADR-005) — folded into the
+        // recorder from the engine workers; zeros unless a delta
+        // backend ran behind this front end
+        for (name, n) in [
+            ("components_fired", self.recorder.delta.components_fired),
+            ("components_skipped", self.recorder.delta.components_skipped),
+            ("shares_skipped", self.recorder.delta.shares_skipped),
+        ] {
+            s.push_str(&format!("minimalist_delta_{name}_total {n}\n"));
+        }
         s
     }
 
@@ -693,6 +703,9 @@ mod tests {
         *m.by_status.entry(429).or_insert(0) += 2;
         m.recorder.record(Duration::from_micros(120));
         m.recorder.record_error(&ServeError::Busy);
+        m.recorder.delta.components_fired = 11;
+        m.recorder.delta.components_skipped = 9;
+        m.recorder.delta.shares_skipped = 2;
         let text = m.render(5);
         assert!(text.contains("minimalist_http_connections_total 3"), "{text}");
         assert!(text.contains("minimalist_http_requests_total 6"), "{text}");
@@ -711,6 +724,18 @@ mod tests {
         );
         assert!(
             text.contains("request_latency_us{quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("minimalist_delta_components_fired_total 11"),
+            "{text}"
+        );
+        assert!(
+            text.contains("minimalist_delta_components_skipped_total 9"),
+            "{text}"
+        );
+        assert!(
+            text.contains("minimalist_delta_shares_skipped_total 2"),
             "{text}"
         );
         assert!(m.summary().contains("requests=6"));

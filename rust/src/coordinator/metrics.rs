@@ -4,6 +4,7 @@
 use std::time::{Duration, Instant};
 
 use crate::coordinator::server::ServeError;
+use crate::satsim::DeltaCounters;
 
 #[derive(Debug, Clone)]
 pub struct LatencyRecorder {
@@ -26,6 +27,13 @@ pub struct LatencyRecorder {
     pub errors_busy: u64,
     /// [`ServeError::BackendPanicked`] failures (batch poisoned).
     pub errors_panicked: u64,
+    /// Delta-sparsity skip counters of the backend(s) this recorder
+    /// covers (ADR-005). Workers fold their engine's
+    /// `MixedSignalEngine::delta_stats` in when their loop exits, and
+    /// [`LatencyRecorder::merge`] aggregates across workers at
+    /// shutdown — the same lifecycle as the latency samples. All zeros
+    /// for non-delta backends.
+    pub delta: DeltaCounters,
 }
 
 impl Default for LatencyRecorder {
@@ -45,6 +53,7 @@ impl LatencyRecorder {
             errors_lost: 0,
             errors_busy: 0,
             errors_panicked: 0,
+            delta: DeltaCounters::default(),
         }
     }
 
@@ -139,6 +148,7 @@ impl LatencyRecorder {
         self.errors_lost += other.errors_lost;
         self.errors_busy += other.errors_busy;
         self.errors_panicked += other.errors_panicked;
+        self.delta.merge(&other.delta);
         self.started = self.started.min(other.started);
         self.last_sample = self.last_sample.max(other.last_sample);
     }
@@ -162,6 +172,15 @@ impl LatencyRecorder {
             s.push_str(&format!(
                 " [lost={} busy={} panicked={}]",
                 self.errors_lost, self.errors_busy, self.errors_panicked
+            ));
+        }
+        if self.delta.components_fired + self.delta.components_skipped > 0 {
+            // delta-sparsity accounting, only when a delta backend ran
+            s.push_str(&format!(
+                " delta[fired={} skipped={} ratio={:.3}]",
+                self.delta.components_fired,
+                self.delta.components_skipped,
+                self.delta.skip_ratio()
             ));
         }
         s
@@ -262,5 +281,26 @@ mod tests {
         assert_eq!(a.errors, 5);
         // an error-free recorder prints no breakdown
         assert!(!LatencyRecorder::new().summary().contains("lost="));
+    }
+
+    #[test]
+    fn delta_counters_merge_and_print() {
+        // skip counters ride the same merge path as latency samples
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        b.delta.components_fired = 30;
+        b.delta.components_skipped = 70;
+        b.delta.shares_skipped = 5;
+        let mut c = LatencyRecorder::new();
+        c.delta.components_fired = 10;
+        a.merge(&b);
+        a.merge(&c);
+        assert_eq!(a.delta.components_fired, 40);
+        assert_eq!(a.delta.components_skipped, 70);
+        assert_eq!(a.delta.shares_skipped, 5);
+        let s = a.summary();
+        assert!(s.contains("delta[fired=40 skipped=70"), "{s}");
+        // recorders that never saw a delta backend stay silent
+        assert!(!LatencyRecorder::new().summary().contains("delta["));
     }
 }

@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request, SessionQueue};
 use crate::coordinator::metrics::LatencyRecorder;
+use crate::satsim::DeltaCounters;
 
 /// A sequence classifier backend. Not required to be `Send`: the PJRT
 /// executable wraps non-Send XLA handles, so backends are *constructed
@@ -69,6 +70,15 @@ pub trait Backend {
     /// (golden with provisioned session nets, mixed-signal with a
     /// provisioned engine slot pool) return themselves.
     fn streaming(&mut self) -> Option<&mut dyn SessionBackend> {
+        None
+    }
+
+    /// Delta-sparsity skip counters accumulated by this backend's
+    /// engine (ADR-005), if it has any. `None` (the default) means the
+    /// backend has no delta machinery; the worker loops fold a `Some`
+    /// into their [`LatencyRecorder`] when they exit, so the shutdown
+    /// merge reports fleet-wide skip ratios alongside the latencies.
+    fn delta_stats(&self) -> Option<DeltaCounters> {
         None
     }
 }
@@ -479,6 +489,9 @@ fn worker_loop(
                 }
             }
         }
+    }
+    if let Some(d) = backend.delta_stats() {
+        metrics.delta.merge(&d);
     }
     metrics
 }
@@ -956,6 +969,9 @@ fn stream_worker_loop(
             metrics.record(enqueued.elapsed());
             let _ = rtx.send(SessionResponse::Pushed { frames: n });
         }
+    }
+    if let Some(d) = backend.delta_stats() {
+        metrics.delta.merge(&d);
     }
     metrics
 }

@@ -71,6 +71,16 @@ fn mapping_from_args(args: &Args) -> Result<MappingConfig> {
     })
 }
 
+/// Circuit knobs shared by the satsim serving/energy commands. `--delta`
+/// sets the delta-sparsity threshold (ADR-005): components whose input
+/// has drifted by at most this much since they last fired skip their
+/// charge-share sampling work. 0 (the default) disables the machinery
+/// and serves the exact legacy path.
+fn circuit_from_args(args: &Args) -> Result<CircuitConfig> {
+    let delta = args.get_f64("delta", 0.0)?.max(0.0);
+    Ok(CircuitConfig { delta, ..CircuitConfig::default() })
+}
+
 fn load_or_synthetic(args: &Args) -> Result<NetworkWeights> {
     match args.opt("weights") {
         Some(path) => NetworkWeights::load(path),
@@ -143,7 +153,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let planned = Plan::build(&weights.dims, &mapping)?;
             let (plan, factory) = MixedSignalBackend::factory_from_plan(
                 weights,
-                CircuitConfig::default(),
+                circuit_from_args(args)?,
                 planned,
             )?;
             let (used, total) = plan.occupancy_at(serve.max_batch);
@@ -250,7 +260,7 @@ fn cmd_serve_streaming(
             let planned = Plan::build(&weights.dims, &mapping)?;
             let (plan, factory) = MixedSignalBackend::streaming_factory_from_plan(
                 weights,
-                CircuitConfig::default(),
+                circuit_from_args(args)?,
                 planned,
                 serve.sessions,
             )?;
@@ -390,15 +400,16 @@ fn cmd_serve_http(
         "satsim" => {
             let mapping = mapping_from_args(args)?;
             let planned = Plan::build(&weights.dims, &mapping)?;
+            let circuit = circuit_from_args(args)?;
             let (_, one_shot) = MixedSignalBackend::factory_from_plan(
                 weights.clone(),
-                CircuitConfig::default(),
+                circuit.clone(),
                 planned.clone(),
             )?;
             let (_, streaming) =
                 MixedSignalBackend::streaming_factory_from_plan(
                     weights,
-                    CircuitConfig::default(),
+                    circuit,
                     planned,
                     serve.sessions,
                 )?;
@@ -579,7 +590,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {
-    let circuit = CircuitConfig::default();
+    let circuit = circuit_from_args(args)?;
     let bound = energy::worst_case_step_bound(&circuit, 64, 64);
     println!(
         "worst-case bound per 64×64 core: {:.2} pJ/step; 4 cores: {:.1} pJ \
@@ -608,6 +619,18 @@ fn cmd_energy(args: &Args) -> Result<()> {
         m.switch_toggles,
         m.adc_conversions
     );
+    let d = engine.delta_stats();
+    if d.components_fired + d.components_skipped > 0 {
+        println!(
+            "delta sparsity: fired={} skipped={} skip_ratio={:.3} \
+             (shares {} done / {} skipped)",
+            d.components_fired,
+            d.components_skipped,
+            d.skip_ratio(),
+            d.shares_done,
+            d.shares_skipped
+        );
+    }
     Ok(())
 }
 

@@ -137,10 +137,31 @@ pub struct GoldenNetwork {
     scratch_h: Vec<f32>,
     scratch_z: Vec<f32>,
     scratch_x: Vec<f32>,
+    /// Delta-sparsity threshold mirroring `CircuitConfig::delta`
+    /// (ADR-005): 0.0 = exact evaluation, the default.
+    delta: f64,
+    /// Per-layer last-*fired* input values (accumulating-delta
+    /// trackers), NaN-seeded like the satsim cores' so the first step
+    /// fires everything. Only maintained at `delta > 0`.
+    x_last: Vec<Vec<f32>>,
+    scratch_xeff: Vec<f32>,
+    /// Cumulative delta accounting, comparable 1:1 with the engine's
+    /// `DeltaCounters` components on an unreplicated single-layer plan
+    /// (tests/properties.rs pins the skip decisions identical).
+    pub delta_fired: u64,
+    pub delta_skipped: u64,
 }
 
 impl GoldenNetwork {
     pub fn new(weights: NetworkWeights) -> GoldenNetwork {
+        GoldenNetwork::with_delta(weights, 0.0)
+    }
+
+    /// A golden network applying the accumulating-delta rule at
+    /// threshold `delta` before every layer — the software counterpart
+    /// of the engine's `CircuitConfig::delta` fast path, so
+    /// engine-vs-golden parity can run at `delta > 0` too.
+    pub fn with_delta(weights: NetworkWeights, delta: f64) -> GoldenNetwork {
         let wh_eff: Vec<Vec<f32>> =
             weights.layers.iter().map(|l| l.wh_eff()).collect();
         let wz_eff: Vec<Vec<f32>> =
@@ -152,6 +173,9 @@ impl GoldenNetwork {
             .collect();
         let max_h = weights.dims.iter().copied().max().unwrap_or(1);
         let head = *weights.dims.last().unwrap();
+        let x_last = (0..weights.n_layers())
+            .map(|l| vec![f32::NAN; weights.dims[l]])
+            .collect();
         GoldenNetwork {
             wh_eff,
             wz_eff,
@@ -162,6 +186,11 @@ impl GoldenNetwork {
             scratch_h: vec![0.0; max_h],
             scratch_z: vec![0.0; max_h],
             scratch_x: vec![0.0; max_h],
+            delta,
+            x_last,
+            scratch_xeff: vec![0.0; max_h],
+            delta_fired: 0,
+            delta_skipped: 0,
             weights,
         }
     }
@@ -175,6 +204,9 @@ impl GoldenNetwork {
         }
         self.ring_pos = 0;
         self.steps_seen = 0;
+        for xl in self.x_last.iter_mut() {
+            xl.fill(f32::NAN);
+        }
     }
 
     /// One time step; `x` is the network input (dims[0] values).
@@ -186,12 +218,37 @@ impl GoldenNetwork {
         self.scratch_x[..x.len()].copy_from_slice(x);
         let mut x_len = x.len();
         for l in 0..n_layers {
+            // delta-sparsity mask (ADR-005): each layer input component
+            // fires only when it moved past the threshold since the
+            // value it last fired with; quiescent components hold that
+            // last-fired value — the same accumulating-delta rule the
+            // engine's cores apply per slot
+            let x_in: &[f32] = if self.delta > 0.0 {
+                let x_last = &mut self.x_last[l];
+                for i in 0..x_len {
+                    let xi = self.scratch_x[i];
+                    if crate::config::delta_fires(
+                        xi as f64,
+                        x_last[i] as f64,
+                        self.delta,
+                    ) {
+                        x_last[i] = xi;
+                        self.delta_fired += 1;
+                    } else {
+                        self.delta_skipped += 1;
+                    }
+                    self.scratch_xeff[i] = x_last[i];
+                }
+                &self.scratch_xeff[..x_len]
+            } else {
+                &self.scratch_x[..x_len]
+            };
             let lw = &self.weights.layers[l];
             let trace = layer_step(
                 lw,
                 &self.wh_eff[l],
                 &self.wz_eff[l],
-                &self.scratch_x[..x_len],
+                x_in,
                 &mut self.states[l],
                 &mut self.scratch_h[..lw.n_out],
                 &mut self.scratch_z[..lw.n_out],
@@ -377,5 +434,49 @@ mod tests {
         net.step(&[1.0, 1.0], None);
         net.reset();
         assert!(net.states[0].h.iter().all(|&h| h == 0.0));
+    }
+
+    #[test]
+    fn delta_zero_is_exact_and_nonzero_delta_skips() {
+        let nw = synthetic_network(&[1, 16, 10], 7);
+        let mut exact = GoldenNetwork::new(nw.clone());
+        let mut zero = GoldenNetwork::with_delta(nw.clone(), 0.0);
+        let mut sparse = GoldenNetwork::with_delta(nw, 0.2);
+        let seq: Vec<f32> = (0..64).map(|t| (t % 5) as f32 / 4.0).collect();
+        let a = exact.classify(&seq);
+        assert_eq!(zero.classify(&seq), a);
+        assert_eq!(zero.logits(), exact.logits());
+        assert_eq!(
+            zero.delta_fired + zero.delta_skipped,
+            0,
+            "delta=0 must bypass the tracker entirely"
+        );
+        let _ = sparse.classify(&seq);
+        assert!(sparse.delta_skipped > 0, "binary hidden frames must skip");
+        assert!(sparse.delta_fired > 0);
+    }
+
+    #[test]
+    fn accumulating_delta_fires_on_drift_not_step_size() {
+        // A slow ramp whose per-step move is under the threshold still
+        // fires once the *accumulated* move since the last fire exceeds
+        // it — the EdgeDRNN rule that bounds quantization drift. An
+        // instantaneous-delta rule would never fire after the first
+        // step here.
+        let nw = synthetic_network(&[1, 8], 3);
+        let mut net = GoldenNetwork::with_delta(nw, 0.25);
+        for x in [0.0f32, 0.1, 0.2, 0.3] {
+            net.step(&[x], None);
+        }
+        // layer 0 input: fires at x=0.0 (NaN seed) and x=0.3 (drift
+        // 0.3 > 0.25); 0.1 and 0.2 stay quiescent
+        let layer0_fired = 2;
+        assert!(
+            net.delta_fired >= layer0_fired,
+            "fired {} < {layer0_fired}",
+            net.delta_fired
+        );
+        // per-component accounting covers both layers each step
+        assert_eq!(net.delta_fired + net.delta_skipped, 4 * (1 + 8));
     }
 }

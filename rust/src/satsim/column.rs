@@ -69,6 +69,10 @@ struct ColumnSlot {
     v_line_htilde: f64,
     v_line_z: f64,
     v_line_h: f64,
+    /// Last share results (for the delta-sparsity whole-share skip —
+    /// see [`Column::skip_share`]).
+    last_vh: f64,
+    last_vz: f64,
 }
 
 impl ColumnSlot {
@@ -82,6 +86,8 @@ impl ColumnSlot {
             v_line_htilde: v_0,
             v_line_z: v_0,
             v_line_h: v_0,
+            last_vh: v_0,
+            last_vz: v_0,
         }
     }
 
@@ -97,6 +103,8 @@ impl ColumnSlot {
         self.v_line_htilde = v_0;
         self.v_line_z = v_0;
         self.v_line_h = v_0;
+        self.last_vh = v_0;
+        self.last_vz = v_0;
     }
 }
 
@@ -115,6 +123,13 @@ pub struct Column {
     v_line_htilde: f64,
     v_line_z: f64,
     v_line_h: f64,
+    /// Last share results of the bound slot — the values
+    /// [`Column::skip_share`] replays when the whole input frame is
+    /// quiescent under the delta threshold. Valid once the slot has
+    /// executed one real share (the cores' NaN-seeded delta trackers
+    /// guarantee the first step of every slot always fires).
+    last_vh: f64,
+    last_vz: f64,
     /// Scratch index buffers (allocation-free hot path).
     idx_free: Vec<usize>,
     idx_h: Vec<usize>,
@@ -160,6 +175,8 @@ impl Column {
             v_line_htilde: cfg.v_0,
             v_line_z: cfg.v_0,
             v_line_h: cfg.v_0,
+            last_vh: cfg.v_0,
+            last_vz: cfg.v_0,
             idx_free: Vec::with_capacity(n),
             idx_h: half,
             idx_z,
@@ -220,6 +237,8 @@ impl Column {
         std::mem::swap(&mut self.v_line_htilde, &mut st.v_line_htilde);
         std::mem::swap(&mut self.v_line_z, &mut st.v_line_z);
         std::mem::swap(&mut self.v_line_h, &mut st.v_line_h);
+        std::mem::swap(&mut self.last_vh, &mut st.last_vh);
+        std::mem::swap(&mut self.last_vz, &mut st.last_vz);
     }
 
     /// Current hidden-state voltage (capacitance-weighted over the h
@@ -250,6 +269,8 @@ impl Column {
             self.v_line_htilde = cfg.v_0;
             self.v_line_z = cfg.v_0;
             self.v_line_h = cfg.v_0;
+            self.last_vh = cfg.v_0;
+            self.last_vz = cfg.v_0;
             for s in self.h_sel.iter_mut() {
                 *s = false;
             }
@@ -271,6 +292,8 @@ impl Column {
         self.v_line_htilde = cfg.v_0;
         self.v_line_z = cfg.v_0;
         self.v_line_h = cfg.v_0;
+        self.last_vh = cfg.v_0;
+        self.last_vz = cfg.v_0;
         for s in self.h_sel.iter_mut() {
             *s = false;
         }
@@ -367,6 +390,100 @@ impl Column {
         );
         self.v_line_z = v_z;
         (v_htilde, v_z)
+    }
+
+    /// [`Column::phase_share`] with a per-component delta-sparsity fire
+    /// mask (ADR-005): component `i` samples onto the rails only when
+    /// `fired[i]`; quiescent components keep their caps at the rail
+    /// voltage of the last value they fired with (`x[i]` is the core's
+    /// *effective* held input, so the cap voltage is simply rewritten —
+    /// no switching, no charge draw, which is exactly the energy the
+    /// delta network saves in hardware). The P2 charge share then runs
+    /// unchanged over the full cap sets — identical summation order and
+    /// identical noise draws — so with every component fired this is
+    /// bit-identical to [`Column::phase_share`], meter included.
+    pub fn phase_share_masked(
+        &mut self,
+        x: &[f64],
+        fired: &[bool],
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> (f64, f64) {
+        let n = self.rows();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(fired.len(), n);
+
+        // ---- P1: sample fired components only ----------------------------
+        self.idx_free.clear();
+        for i in 0..n {
+            let free = 2 * i + (!self.h_sel[i]) as usize;
+            let vh = Self::drive(cfg, x[i], self.cfg_col.w_h[i]);
+            let vz = Self::drive(cfg, x[i], self.cfg_col.w_z[i]);
+            if fired[i] {
+                self.pair_bank.sample_deferred(free, vh, meter);
+                self.z_bank.sample_deferred(i, vz, meter);
+            } else {
+                // already charged to this rail from the last fire — the
+                // switches never toggle, so nothing is metered
+                self.pair_bank.v[free] = vh;
+                self.z_bank.v[i] = vz;
+            }
+            self.idx_free.push(free);
+        }
+
+        // ---- P2: charge share, exactly as in phase_share -----------------
+        let v_htilde = self.pair_bank.share_with(
+            &self.idx_free,
+            Some((cfg.c_line, self.v_line_htilde)),
+            self.agg_sigma_pair,
+            self.agg_shift_pair,
+            cfg,
+            rng,
+            meter,
+        );
+        self.v_line_htilde = v_htilde;
+        let v_z = self.z_bank.share_with(
+            &self.idx_z,
+            Some((cfg.c_line, self.v_line_z)),
+            self.agg_sigma_z,
+            self.agg_shift_z,
+            cfg,
+            rng,
+            meter,
+        );
+        self.v_line_z = v_z;
+        self.last_vh = v_htilde;
+        self.last_vz = v_z;
+        (v_htilde, v_z)
+    }
+
+    /// Whole-share skip for a fully quiescent input frame (ADR-005):
+    /// every component of this core's slice is under the delta
+    /// threshold, so the share is not executed at all — the column
+    /// replays its cached (h̃, z) result from the last executed share.
+    /// The free-cap list is still rebuilt (the h/h̃ roles swapped last
+    /// P4) and, in non-ideal configs, the two share noise draws are
+    /// still burned so the downstream ADC and comparator draws land on
+    /// the same RNG stream positions as an executed share — a skip
+    /// perturbs only the share it skipped, never the rest of the step,
+    /// which is what keeps sequential/batched/streamed outputs in
+    /// lockstep at `delta > 0`. The caps themselves are not written:
+    /// the engine's finish phase applies the combined share result via
+    /// [`Column::override_share`] before [`Column::phase_update`] runs.
+    pub fn skip_share(&mut self, cfg: &CircuitConfig, rng: &mut Rng) -> (f64, f64) {
+        let n = self.rows();
+        self.idx_free.clear();
+        for i in 0..n {
+            self.idx_free.push(2 * i + (!self.h_sel[i]) as usize);
+        }
+        if !cfg.ideal {
+            // the h̃ and z shares of an executed phase_share draw one
+            // normal each — keep the stream aligned
+            rng.normal_fast();
+            rng.normal_fast();
+        }
+        (self.last_vh, self.last_vz)
     }
 
     /// Model the inter-tile column-line short of a row-split layer:
@@ -704,6 +821,85 @@ mod tests {
             col.bind_slot(s);
             assert!((col.v_h() - cfg.v_0).abs() < 1e-12, "slot {s} not reset");
         }
+    }
+
+    #[test]
+    fn masked_share_with_all_fired_is_bit_identical() {
+        // With every component firing, the delta-masked share must be
+        // indistinguishable from the unmasked one — values, rng stream
+        // and energy meter alike (the delta=0 ≡ delta→0⁺ anchor).
+        let n = 10;
+        let (mut a, cfg, mut rng_a) = mk_col(n, 3, 1, false);
+        let (mut b, _, mut rng_b) = mk_col(n, 3, 1, false);
+        let (mut ma, mut mb) = (EnergyMeter::new(), EnergyMeter::new());
+        let fired = vec![true; n];
+        for t in 0..20 {
+            let x: Vec<f64> =
+                (0..n).map(|i| ((t + i) % 3 == 0) as u8 as f64).collect();
+            let (vha, vza) = a.phase_share(&x, &cfg, &mut rng_a, &mut ma);
+            a.override_share(vha, vza);
+            let sa = a.phase_update(vha, vza, &cfg, &mut rng_a, &mut ma);
+            let (vhb, vzb) =
+                b.phase_share_masked(&x, &fired, &cfg, &mut rng_b, &mut mb);
+            b.override_share(vhb, vzb);
+            let sb = b.phase_update(vhb, vzb, &cfg, &mut rng_b, &mut mb);
+            assert_eq!((vha, vza), (vhb, vzb), "share diverged at step {t}");
+            assert_eq!(sa, sb, "step diverged at step {t}");
+        }
+        assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn skip_share_replays_cache_and_burns_share_draws() {
+        let n = 8;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 1, false);
+        let mut meter = EnergyMeter::new();
+        let x = vec![1.0; n];
+        // one executed masked share validates the cache
+        let fired = vec![true; n];
+        let (vh0, vz0) =
+            col.phase_share_masked(&x, &fired, &cfg, &mut rng, &mut meter);
+        col.override_share(vh0, vz0);
+        col.phase_update(vh0, vz0, &cfg, &mut rng, &mut meter);
+        let mut twin = col.clone();
+        let mut rng_twin = rng.clone();
+        let mut meter_twin = meter.clone();
+        // quiescent frame: executed (mask all-false) vs skipped share
+        let quiet = vec![false; n];
+        let _ = col.phase_share_masked(&x, &quiet, &cfg, &mut rng, &mut meter);
+        let (vh, vz) = twin.skip_share(&cfg, &mut rng_twin);
+        // the skip replays the last executed share's settled values
+        assert_eq!((vh, vz), (vh0, vz0));
+        // and burns exactly the two draws an executed share consumes,
+        // so the downstream P3/P4 draws stay stream-aligned
+        assert_eq!(
+            rng.normal_fast().to_bits(),
+            rng_twin.normal_fast().to_bits(),
+            "rng streams misaligned after skip_share"
+        );
+        // the quiescent masked share metered only the share itself (no
+        // P1 sampling events); the skip metered nothing at all
+        assert!(meter.switch_toggles > meter_twin.switch_toggles);
+        // idx_free was rebuilt, so the finish phases run normally
+        twin.override_share(vh, vz);
+        twin.phase_update(vh, vz, &cfg, &mut rng_twin, &mut meter_twin);
+    }
+
+    #[test]
+    fn skip_share_draws_nothing_when_ideal() {
+        let n = 6;
+        let (mut col, cfg, mut rng) = mk_col(n, 3, 1, true);
+        let mut meter = EnergyMeter::new();
+        let fired = vec![true; n];
+        let x = vec![1.0; n];
+        let (vh, vz) =
+            col.phase_share_masked(&x, &fired, &cfg, &mut rng, &mut meter);
+        col.override_share(vh, vz);
+        col.phase_update(vh, vz, &cfg, &mut rng, &mut meter);
+        let mut probe = rng.clone();
+        col.skip_share(&cfg, &mut rng);
+        // the ideal path has no share noise, so nothing may be burned
+        assert_eq!(rng.normal_fast().to_bits(), probe.normal_fast().to_bits());
     }
 
     #[test]

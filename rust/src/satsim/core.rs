@@ -8,10 +8,54 @@
 //! multiple cores, which are connected through an event-based routing
 //! fabric").
 
-use crate::config::{CircuitConfig, CoreGeometry};
+use crate::config::{delta_fires, CircuitConfig, CoreGeometry};
 use crate::energy::EnergyMeter;
 use crate::satsim::column::{Column, ColumnConfig, ColumnStep};
 use crate::util::rng::Rng;
+
+/// Cumulative delta-sparsity skip accounting of one core (ADR-005) —
+/// the observable behind the engine's skip-ratio metrics. Like the
+/// [`EnergyMeter`], counters accumulate across the core's lifetime and
+/// are *not* cleared by sequence resets, so serving-side merges see
+/// monotone totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaCounters {
+    /// Input components that moved past the threshold and drove a fresh
+    /// rail sample (counted once per core step; every component of
+    /// every step counts when `delta == 0` semantics apply — but the
+    /// delta machinery only runs at `delta > 0`, so both counters stay
+    /// 0 on the default path).
+    pub components_fired: u64,
+    /// Input components held under the threshold — their P1 sampling
+    /// work (cap charge + switch toggles) was elided.
+    pub components_skipped: u64,
+    /// Whole column charge-shares replayed from cache because the
+    /// core's entire input slice was quiescent.
+    pub shares_skipped: u64,
+    /// Column charge-shares actually executed on the delta path.
+    pub shares_done: u64,
+}
+
+impl DeltaCounters {
+    /// Fold another core's (or worker's) counters into this one.
+    pub fn merge(&mut self, other: &DeltaCounters) {
+        self.components_fired += other.components_fired;
+        self.components_skipped += other.components_skipped;
+        self.shares_skipped += other.shares_skipped;
+        self.shares_done += other.shares_done;
+    }
+
+    /// Fraction of input components whose sampling work was skipped
+    /// (0.0 when nothing has been stepped through the delta path).
+    pub fn skip_ratio(&self) -> f64 {
+        let total = self.components_fired + self.components_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.components_skipped as f64 / total as f64
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Core {
@@ -43,6 +87,17 @@ pub struct Core {
     /// Scratch partial-share buffer filled by `step_partial` — owned by
     /// the core so the steady-state step makes no heap allocation.
     partials: Vec<(f64, f64)>,
+    /// Per-slot last-*fired* input values (EdgeDRNN accumulating-delta
+    /// trackers, ADR-005). NaN-seeded: the first step of a slot always
+    /// fires every component. Only consulted when `cfg.delta > 0`;
+    /// sized with the slots at `set_slots` (a batch boundary), never in
+    /// the steady-state step.
+    x_last: Vec<Vec<f64>>,
+    /// Scratch fire mask / effective-input buffers of the delta path.
+    fired: Vec<bool>,
+    x_eff: Vec<f64>,
+    /// Cumulative skip accounting (delta path only).
+    delta: DeltaCounters,
 }
 
 /// Per-step observables for every column (Fig 4 traces; readout states).
@@ -92,6 +147,10 @@ impl Core {
             out_events: vec![false; n_cols],
             col_rngs: vec![Vec::with_capacity(n_cols)],
             partials: Vec::with_capacity(n_cols),
+            x_last: vec![vec![f64::NAN; active_rows]],
+            fired: Vec::with_capacity(active_rows),
+            x_eff: Vec::with_capacity(active_rows),
+            delta: DeltaCounters::default(),
         }
     }
 
@@ -118,6 +177,9 @@ impl Core {
         self.slot_rngs.resize_with(n, || rng0.clone());
         self.col_rngs.clear();
         self.col_rngs.resize_with(n, || Vec::with_capacity(n_cols));
+        let rows = self.active_rows;
+        self.x_last.clear();
+        self.x_last.resize_with(n, || vec![f64::NAN; rows]);
     }
 
     /// Reset all column states (every slot) to V_0 (sequence boundary)
@@ -133,6 +195,9 @@ impl Core {
         }
         for cr in self.col_rngs.iter_mut() {
             cr.clear();
+        }
+        for xl in self.x_last.iter_mut() {
+            xl.fill(f64::NAN);
         }
     }
 
@@ -150,6 +215,7 @@ impl Core {
         }
         self.slot_rngs[slot] = self.rng0.clone();
         self.col_rngs[slot].clear();
+        self.x_last[slot].fill(f64::NAN);
     }
 
     /// One time step over the full array on batch slot 0. `x` has
@@ -207,6 +273,9 @@ impl Core {
         cfg: &CircuitConfig,
     ) -> &[(f64, f64)] {
         assert_eq!(x.len(), self.active_rows);
+        if cfg.delta > 0.0 {
+            return self.step_partial_slot_delta(slot, x, cfg);
+        }
         self.col_rngs[slot].clear();
         self.partials.clear();
         for (j, col) in self.columns.iter_mut().enumerate() {
@@ -217,6 +286,68 @@ impl Core {
             self.col_rngs[slot].push(col_rng);
         }
         &self.partials
+    }
+
+    /// Delta-sparsity variant of [`Core::step_partial_slot`] (ADR-005),
+    /// taken only at `cfg.delta > 0` — the default path above is the
+    /// exact pre-delta code. Per component, the accumulating-delta rule
+    /// ([`delta_fires`]) decides against the slot's last *fired* value;
+    /// quiescent components skip their P1 sampling work, and a fully
+    /// quiescent frame skips every column's charge share outright,
+    /// replaying the cached share results ([`Column::skip_share`]).
+    /// Fired components update the tracker; the share sees the held
+    /// last-fired value for quiescent ones, so error stays bounded by
+    /// the threshold instead of accumulating.
+    fn step_partial_slot_delta(
+        &mut self,
+        slot: usize,
+        x: &[f64],
+        cfg: &CircuitConfig,
+    ) -> &[(f64, f64)] {
+        let x_last = &mut self.x_last[slot];
+        self.fired.clear();
+        self.x_eff.clear();
+        let mut n_fired: u64 = 0;
+        for (i, &xi) in x.iter().enumerate() {
+            let fire = delta_fires(xi, x_last[i], cfg.delta);
+            if fire {
+                x_last[i] = xi;
+                n_fired += 1;
+            }
+            self.fired.push(fire);
+            self.x_eff.push(x_last[i]);
+        }
+        self.delta.components_fired += n_fired;
+        self.delta.components_skipped += x.len() as u64 - n_fired;
+        let quiescent = n_fired == 0;
+        self.col_rngs[slot].clear();
+        self.partials.clear();
+        for (j, col) in self.columns.iter_mut().enumerate() {
+            col.bind_slot(slot);
+            let mut col_rng = self.slot_rngs[slot].fork(j as u64);
+            let share = if quiescent {
+                self.delta.shares_skipped += 1;
+                col.skip_share(cfg, &mut col_rng)
+            } else {
+                self.delta.shares_done += 1;
+                col.phase_share_masked(
+                    &self.x_eff,
+                    &self.fired,
+                    cfg,
+                    &mut col_rng,
+                    &mut self.meter,
+                )
+            };
+            self.partials.push(share);
+            self.col_rngs[slot].push(col_rng);
+        }
+        &self.partials
+    }
+
+    /// Cumulative delta-sparsity skip counters of this core (all slots;
+    /// zeros unless the core has stepped with `cfg.delta > 0`).
+    pub fn delta_counters(&self) -> DeltaCounters {
+        self.delta
     }
 
     /// Second half of a time step on the owner tile: short every
@@ -505,6 +636,74 @@ mod tests {
             c.bind_slot(1);
         }
         assert_eq!(used.state_voltages(), v1_before);
+    }
+
+    #[test]
+    fn delta_path_with_tiny_threshold_matches_default_bitwise() {
+        // Every component moves every step (alternating frame), so the
+        // masked sampling fires everywhere, the whole-share skip never
+        // engages, and the delta path must reproduce the default path
+        // bit-for-bit — outputs, noise stream, and energy meter.
+        let cfg0 = CircuitConfig::default(); // noisy: exercises rng order
+        let cfgd = CircuitConfig { delta: 1e-9, ..Default::default() };
+        let (mut a, _) = mk_core(12, 6);
+        let (mut b, _) = mk_core(12, 6);
+        let (mut sa, mut sb) = (CoreStep::default(), CoreStep::default());
+        for t in 0..25 {
+            let x: Vec<f64> = (0..12).map(|i| ((t + i) % 2) as f64).collect();
+            a.step(&x, &cfg0, &mut sa);
+            b.step(&x, &cfgd, &mut sb);
+            for (p, q) in sa.steps.iter().zip(sb.steps.iter()) {
+                assert_eq!(p, q, "diverged at step {t}");
+            }
+        }
+        assert_eq!(a.meter, b.meter);
+        let d = b.delta_counters();
+        assert_eq!(d.components_skipped, 0);
+        assert_eq!(d.components_fired, 25 * 12);
+        assert_eq!(d.shares_skipped, 0);
+        assert_eq!(a.delta_counters(), DeltaCounters::default());
+    }
+
+    #[test]
+    fn delta_path_goes_quiescent_on_repeated_inputs() {
+        let cfg = CircuitConfig { delta: 0.25, ..Default::default() };
+        let (mut core, _) = mk_core(8, 4);
+        let mut out = CoreStep::default();
+        let x = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        core.step(&x, &cfg, &mut out);
+        let d1 = core.delta_counters();
+        // the NaN-seeded tracker fires everything on the first step
+        assert_eq!(d1.components_fired, 8);
+        assert_eq!(d1.components_skipped, 0);
+        assert_eq!(d1.shares_done, 4);
+        assert_eq!(d1.shares_skipped, 0);
+        for _ in 0..5 {
+            core.step(&x, &cfg, &mut out);
+            assert_eq!(out.steps.len(), 4, "skipped steps must still output");
+        }
+        let d = core.delta_counters();
+        assert_eq!(d.components_fired, 8);
+        assert_eq!(d.components_skipped, 5 * 8);
+        assert_eq!(d.shares_skipped, 5 * 4);
+        assert!(d.skip_ratio() > 0.8, "skip ratio {}", d.skip_ratio());
+        // the elided sampling + shares show up as energy savings vs a
+        // twin core running the default path on the same inputs (the
+        // gate-switch energy of every skipped sample alone guarantees a
+        // strict gap, far above any noise-induced difference)
+        let (mut twin, _) = mk_core(8, 4);
+        let cfg0 = CircuitConfig::default();
+        for _ in 0..6 {
+            twin.step(&x, &cfg0, &mut out);
+        }
+        assert!(
+            core.meter.total_j() < twin.meter.total_j(),
+            "delta path must dissipate less on a quiescent stream"
+        );
+        // a slot reset reseeds the tracker — the next step fires again
+        core.reset_slot(0, &cfg);
+        core.step(&x, &cfg, &mut out);
+        assert_eq!(core.delta_counters().components_fired, 16);
     }
 
     #[test]

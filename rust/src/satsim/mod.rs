@@ -20,7 +20,7 @@ pub mod caps;
 pub mod column;
 pub mod core;
 
-pub use self::core::{Core, CoreStep};
+pub use self::core::{Core, CoreStep, DeltaCounters};
 pub use adc::{Comparator, SarAdc, ADC_BITS, ADC_CODES, OFFSET_NEUTRAL};
 pub use caps::CapBank;
 pub use column::{Column, ColumnConfig, ColumnStep};

@@ -168,6 +168,144 @@ fn engine_streamed_slots_match_batch_and_sequential() {
 }
 
 #[test]
+fn delta_tiny_threshold_is_bit_identical_when_every_component_fires() {
+    // PR 7: with a threshold far below the input quantization, every
+    // component drifts past delta on every frame of an alternating
+    // workload, so the masked share runs all-fired — which must be
+    // bit-identical to the legacy path, for unsplit and row-split
+    // placements alike. Single-layer nets keep the frames (which we
+    // control) as the only layer input.
+    for (dims, geometry, ctx) in [
+        (
+            vec![8usize, 10],
+            CoreGeometry { rows: 8, cols: 16 },
+            "unsplit",
+        ),
+        (
+            vec![40usize, 8],
+            CoreGeometry { rows: 32, cols: 32 },
+            "row-split",
+        ),
+    ] {
+        let nw = synthetic_network(&dims, 13);
+        let mut exact =
+            MixedSignalEngine::new(nw.clone(), CircuitConfig::default(), geometry)
+                .unwrap();
+        let mut delta = MixedSignalEngine::new(
+            nw,
+            CircuitConfig { delta: 1e-9, ..CircuitConfig::default() },
+            geometry,
+        )
+        .unwrap();
+        if ctx == "row-split" {
+            assert!(exact.plan.layers[0].is_row_split());
+        }
+        let d_in = dims[0];
+        // frame t flips every component: |Δx| = 1 ≫ 1e-9 each step
+        let seqs: Vec<Vec<f32>> = (0..3)
+            .map(|s| {
+                (0..20 * d_in)
+                    .map(|k| (((k / d_in) + (k % d_in) + s) % 2) as f32)
+                    .collect()
+            })
+            .collect();
+        for s in &seqs {
+            let want = exact.classify(s);
+            assert_eq!(delta.classify(s), want, "{ctx}: labels diverged");
+            assert_eq!(
+                delta.logits(),
+                exact.logits(),
+                "{ctx}: delta=1e-9 logits are not bit-identical to the \
+                 default path"
+            );
+        }
+        let stats = delta.delta_stats();
+        assert_eq!(
+            stats.components_skipped, 0,
+            "{ctx}: an always-moving workload must never skip"
+        );
+        assert!(stats.components_fired > 0);
+    }
+}
+
+#[test]
+fn delta_zero_config_is_the_default_path_bitwise() {
+    // the gate itself: an explicit delta = 0.0 circuit must serve the
+    // exact legacy computation — here proven across paths, comparing
+    // default-config sequential logits against zero-delta lockstep
+    // batch logits per slot, for unsplit and row-split placements
+    for (dims, geometry, ctx) in [
+        (
+            vec![1usize, 16, 10],
+            CoreGeometry { rows: 16, cols: 16 },
+            "delta=0 unsplit",
+        ),
+        (
+            vec![40usize, 8],
+            CoreGeometry { rows: 32, cols: 32 },
+            "delta=0 row-split",
+        ),
+    ] {
+        let nw = synthetic_network(&dims, 19);
+        let mut default_seq =
+            MixedSignalEngine::new(nw.clone(), CircuitConfig::default(), geometry)
+                .unwrap();
+        let mut zero_bat = MixedSignalEngine::new(
+            nw,
+            CircuitConfig { delta: 0.0, ..CircuitConfig::default() },
+            geometry,
+        )
+        .unwrap();
+        let seqs = make_seqs(3, 10, dims[0], 5);
+        assert_bitwise_parity(&mut default_seq, &mut zero_bat, &seqs, ctx);
+        let stats = zero_bat.delta_stats();
+        assert_eq!(
+            stats.components_fired + stats.components_skipped,
+            0,
+            "{ctx}: delta = 0 must not engage the tracking machinery"
+        );
+    }
+}
+
+#[test]
+fn delta_path_parity_holds_across_serving_paths() {
+    // nonzero threshold: the skipping computation itself must be
+    // deterministic and identical through sequential classify, the
+    // lockstep batch path, and the streamed slot-lease path — each
+    // slot tracks its own x_last, so the three traversals replay the
+    // same skip decisions and the same draws
+    let nw = synthetic_network(&[1, 20, 10], 29);
+    let circuit = CircuitConfig { delta: 0.05, ..CircuitConfig::default() };
+    let mut seq_engine =
+        MixedSignalEngine::new(nw, circuit, CoreGeometry { rows: 32, cols: 32 })
+            .unwrap();
+    let mut bat_engine = seq_engine.replicate().unwrap();
+    let mut stream_engine = seq_engine.replicate().unwrap();
+    let seqs = make_seqs(3, 18, 1, 4);
+    assert_bitwise_parity(&mut seq_engine, &mut bat_engine, &seqs, "delta=0.05");
+    stream_engine.provision_sessions(3);
+    let slots: Vec<usize> =
+        (0..3).map(|_| stream_engine.lease_slot().unwrap()).collect();
+    for t in 0..18 {
+        let frames: Vec<f32> = seqs.iter().map(|s| s[t]).collect();
+        stream_engine.step_slots(&slots, &frames);
+    }
+    for (i, s) in seqs.iter().enumerate() {
+        seq_engine.classify(s);
+        assert_eq!(
+            stream_engine.logits_slot(slots[i]),
+            seq_engine.logits(),
+            "streamed slot {i} diverged from sequential on the delta path"
+        );
+    }
+    // the parity only means something if the threshold engaged
+    assert!(
+        seq_engine.delta_stats().components_skipped > 0,
+        "delta = 0.05 never skipped on this workload"
+    );
+}
+
+#[test]
 fn golden_backend_batch_matches_sequential() {
     let nw = synthetic_network(&[1, 12, 10], 9);
     let mut a = GoldenBackend::new(GoldenNetwork::new(nw.clone()));

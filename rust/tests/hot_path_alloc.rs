@@ -131,4 +131,34 @@ fn engine_step_is_allocation_free_after_warmup() {
     assert!(split.plan.layers[0].is_row_split());
     assert_zero_alloc_steps(&mut split, 100, "row-split");
     assert_zero_alloc_batch_steps(&mut split, 100, 4, "row-split");
+
+    // delta-sparsity engines (ADR-005): the per-slot x_last tracker and
+    // the fired/x_eff scratch must respect the invariant too. The
+    // constant steady-state input sends every component quiescent after
+    // its first step, so the counted window runs the whole-column skip
+    // path — the fast path itself must also be allocation-free.
+    let nw = synthetic_network(&[1, 32, 10], 11);
+    let mut delta_unsplit = MixedSignalEngine::new(
+        nw,
+        CircuitConfig { delta: 0.25, ..CircuitConfig::default() },
+        CoreGeometry { rows: 64, cols: 64 },
+    )
+    .unwrap();
+    assert_zero_alloc_steps(&mut delta_unsplit, 1, "delta/unsplit");
+    assert_zero_alloc_batch_steps(&mut delta_unsplit, 1, 8, "delta/unsplit");
+    assert!(
+        delta_unsplit.delta_stats().components_skipped > 0,
+        "the constant workload must have exercised the skip path"
+    );
+
+    let nw = synthetic_network(&[100, 8], 3);
+    let mut delta_split = MixedSignalEngine::new(
+        nw,
+        CircuitConfig { delta: 0.25, ..CircuitConfig::default() },
+        CoreGeometry { rows: 64, cols: 64 },
+    )
+    .unwrap();
+    assert!(delta_split.plan.layers[0].is_row_split());
+    assert_zero_alloc_steps(&mut delta_split, 100, "delta/row-split");
+    assert_zero_alloc_batch_steps(&mut delta_split, 100, 4, "delta/row-split");
 }

@@ -160,6 +160,51 @@ fn empty_and_degenerate_inputs() {
 }
 
 #[test]
+fn delta_skip_decisions_match_golden() {
+    // The engine's per-component fire/skip decisions (ADR-005) must be
+    // exactly the golden model's: same accumulating rule, same
+    // threshold, same counting — checked on replication-free
+    // single-layer placements, where the engine's layer input is the
+    // raw frame we control.
+    check::property("delta skip decisions, golden vs engine", 20, |rng| {
+        let d = 2 + rng.below(10) as usize;
+        let c = 2 + rng.below(8) as usize;
+        let delta = rng.uniform_in(0.02, 0.5);
+        let nw = synthetic_network(&[d, c], rng.next_u64());
+        let mut engine = MixedSignalEngine::new(
+            nw.clone(),
+            CircuitConfig { delta, ..CircuitConfig::default() },
+            CoreGeometry { rows: d, cols: 16 },
+        )
+        .unwrap();
+        prop_assert!(
+            engine.n_cores() == 1,
+            "replication-free placement expected"
+        );
+        let mut golden = GoldenNetwork::with_delta(nw, delta);
+        for t in 0..24u32 {
+            // coarsely quantized frames make exact repeats (skips) and
+            // sub-threshold drifts both common
+            let x: Vec<f32> =
+                (0..d).map(|_| rng.below(5) as f32 / 4.0).collect();
+            engine.step(t, &x, None);
+            golden.step(&x, None);
+            let stats = engine.delta_stats();
+            prop_assert!(
+                stats.components_fired == golden.delta_fired
+                    && stats.components_skipped == golden.delta_skipped,
+                "step {t}: engine fired/skipped {}/{} vs golden {}/{}",
+                stats.components_fired,
+                stats.components_skipped,
+                golden.delta_fired,
+                golden.delta_skipped
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn golden_and_engine_agree_on_most_classifications_ideal() {
     // statistical agreement over random networks and inputs
     let mut agree = 0;
