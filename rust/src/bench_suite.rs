@@ -59,6 +59,7 @@ use crate::util::json::Json;
 /// scale (CI); the default sizes measure long enough to be quotable.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BenchOpts {
+    /// Smoke-test scale: shrink every budget to CI size.
     pub quick: bool,
 }
 
@@ -661,6 +662,7 @@ pub struct CheckOutcome {
 }
 
 impl CheckOutcome {
+    /// Whether the gate passes: no hard regressions.
     pub fn passed(&self) -> bool {
         self.hard_regressions.is_empty()
     }

@@ -1,0 +1,100 @@
+//! `repolint` — run the repo's static invariant checks (ADR-006).
+//!
+//! Walks the repository tree (Rust sources under `rust/` and
+//! `examples/`, Markdown under `docs/` plus `README.md`), runs every
+//! lint pass, prints violations as `file:line: [rule] message
+//! (see doc)`, and exits non-zero if any fired. CI runs this as the
+//! blocking `lint` job.
+//!
+//! Usage: `cargo run --release --bin repolint [-- --root <repo-root>]`
+//!
+//! Without `--root` the repo root is discovered from the crate's own
+//! manifest directory (the parent of `rust/`), falling back to an
+//! upward walk from the current directory looking for `rust/src` and
+//! `docs` side by side.
+
+use std::env;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use minimalist::lint::LintTree;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().collect();
+    let root = match parse_root(&args) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("repolint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let tree = match LintTree::load(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("repolint: failed to read tree at {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let violations = tree.run_all();
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!(
+            "repolint: clean ({} files scanned under {})",
+            tree.len(),
+            root.display()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!("repolint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Resolve the repo root from `--root`, the compile-time manifest
+/// location, or an upward walk.
+fn parse_root(args: &[String]) -> Result<PathBuf, String> {
+    let mut it = args.iter().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let p = it.next().ok_or("--root needs a path")?;
+                let p = PathBuf::from(p);
+                if looks_like_root(&p) {
+                    return Ok(p);
+                }
+                return Err(format!(
+                    "{} does not look like the repo root (no rust/src)",
+                    p.display()
+                ));
+            }
+            "--help" | "-h" => {
+                return Err("usage: repolint [--root <repo-root>]".to_string());
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    // The manifest dir is `<root>/rust` at build time; it still
+    // resolves when the binary runs from a target/ subdirectory.
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    if let Some(parent) = manifest.parent() {
+        if looks_like_root(parent) {
+            return Ok(parent.to_path_buf());
+        }
+    }
+    let mut cur = env::current_dir().map_err(|e| e.to_string())?;
+    loop {
+        if looks_like_root(&cur) {
+            return Ok(cur);
+        }
+        if !cur.pop() {
+            return Err("could not locate the repo root (pass --root)".to_string());
+        }
+    }
+}
+
+/// A repo root has `rust/src` (and normally `docs/`) under it.
+fn looks_like_root(p: &Path) -> bool {
+    p.join("rust/src").is_dir()
+}

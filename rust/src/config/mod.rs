@@ -131,6 +131,7 @@ impl CircuitConfig {
         }
     }
 
+    /// Serialize into the config JSON schema.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("v_dd", self.v_dd.into()),
@@ -151,6 +152,7 @@ impl CircuitConfig {
         ])
     }
 
+    /// Parse from the config JSON schema.
     pub fn from_json(j: &Json) -> Result<CircuitConfig> {
         let d = CircuitConfig::default();
         let f = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
@@ -182,14 +184,17 @@ pub struct NetworkConfig {
 }
 
 impl NetworkConfig {
+    /// The network configuration evaluated in the paper.
     pub fn paper() -> NetworkConfig {
         NetworkConfig { dims: vec![1, 64, 64, 64, 64, 10] }
     }
 
+    /// Number of weight layers.
     pub fn n_layers(&self) -> usize {
         self.dims.len() - 1
     }
 
+    /// `(n_in, n_out)` of layer `l`.
     pub fn layer_shape(&self, l: usize) -> (usize, usize) {
         (self.dims[l], self.dims[l + 1])
     }
@@ -212,10 +217,12 @@ impl Default for CoreGeometry {
 }
 
 impl CoreGeometry {
+    /// Serialize into the config JSON schema.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![("rows", self.rows.into()), ("cols", self.cols.into())])
     }
 
+    /// Parse from the config JSON schema.
     pub fn from_json(j: &Json) -> Result<CoreGeometry> {
         let d = CoreGeometry::default();
         Ok(CoreGeometry {
@@ -256,6 +263,7 @@ impl MappingConfig {
         MappingConfig { geometry, ..Default::default() }
     }
 
+    /// Serialize into the config JSON schema.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("geometry", self.geometry.to_json()),
@@ -264,6 +272,7 @@ impl MappingConfig {
         ])
     }
 
+    /// Parse from the config JSON schema.
     pub fn from_json(j: &Json) -> Result<MappingConfig> {
         let d = MappingConfig::default();
         Ok(MappingConfig {
@@ -332,6 +341,7 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Serialize into the config JSON schema.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("workers", self.workers.into()),
@@ -344,6 +354,7 @@ impl ServeConfig {
         ])
     }
 
+    /// Parse from the config JSON schema.
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
         let d = ServeConfig::default();
         let workers = json_usize(j, "workers", d.workers).max(1);

@@ -24,6 +24,7 @@ use crate::nn::mingru::{argmax, GoldenNetwork};
 use crate::nn::weights::NetworkWeights;
 use crate::runtime::Executable;
 
+/// Serving backend over the bit-exact golden float model.
 pub struct GoldenBackend {
     net: GoldenNetwork,
     /// Streaming sessions: one resident network per slot (empty unless
@@ -34,6 +35,7 @@ pub struct GoldenBackend {
 }
 
 impl GoldenBackend {
+    /// A one-shot (batch) backend over `net`, with no streaming slots.
     pub fn new(net: GoldenNetwork) -> GoldenBackend {
         GoldenBackend {
             net,
@@ -141,11 +143,13 @@ impl SessionBackend for GoldenBackend {
     }
 }
 
+/// Serving backend over the switched-capacitor engine.
 pub struct MixedSignalBackend {
     engine: MixedSignalEngine,
 }
 
 impl MixedSignalBackend {
+    /// Wrap `engine` as a serving backend.
     pub fn new(engine: MixedSignalEngine) -> MixedSignalBackend {
         MixedSignalBackend { engine }
     }
@@ -162,6 +166,7 @@ impl MixedSignalBackend {
         MixedSignalBackend { engine }
     }
 
+    /// The wrapped engine (read access for stats and diagnostics).
     pub fn engine(&self) -> &MixedSignalEngine {
         &self.engine
     }
@@ -325,13 +330,18 @@ impl SessionBackend for MixedSignalBackend {
 /// requests fail with `ServeError::BackendPanicked`, the worker lives.
 pub struct PjrtBackend {
     exe: Executable,
+    /// Sequence length the executable was compiled for.
     pub seq_len: usize,
+    /// Batch size the executable was compiled for.
     pub batch: usize,
+    /// Input width per frame.
     pub d_in: usize,
+    /// Output class count.
     pub n_classes: usize,
 }
 
 impl PjrtBackend {
+    /// Wrap a compiled executable with its fixed I/O shape.
     pub fn new(
         exe: Executable,
         seq_len: usize,

@@ -30,7 +30,9 @@ pub struct Request {
     /// Client-chosen id, echoed in the response. **Not** unique: two
     /// clients (or one careless client) may reuse an id concurrently.
     pub id: u64,
+    /// Frame-major input values.
     pub sequence: Vec<f32>,
+    /// When the request entered the queue (latency accounting).
     pub enqueued: Instant,
     /// Server-assigned routing key: the leader stamps each submission
     /// with a monotonic ticket and pairs drained requests back to their
@@ -40,6 +42,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// A request carrying `sequence`, enqueued now.
     pub fn new(id: u64, sequence: Vec<f32>) -> Request {
         Request { id, sequence, enqueued: Instant::now(), ticket: 0 }
     }
@@ -48,7 +51,9 @@ impl Request {
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are pending.
     pub max_batch: usize,
+    /// Dispatch a partial batch after this long.
     pub max_wait: Duration,
     /// When set, a drained batch only ever contains sequences of one
     /// length (FIFO within the length bucket, oldest bucket first).
@@ -96,12 +101,14 @@ impl From<&crate::config::ServeConfig> for BatchPolicy {
 /// Accumulates requests and decides when a batch is ready.
 #[derive(Debug)]
 pub struct Batcher {
+    /// The dispatch policy in force.
     pub policy: BatchPolicy,
     queue: Vec<Request>,
     oldest: Option<Instant>,
 }
 
 impl Batcher {
+    /// An empty batcher with `policy`.
     pub fn new(policy: BatchPolicy) -> Batcher {
         // max_batch = 0 would make ready() true and drain() empty forever
         // — a busy-loop for any dispatch loop driving this. Clamp here so
@@ -110,6 +117,7 @@ impl Batcher {
         Batcher { policy, queue: Vec::new(), oldest: None }
     }
 
+    /// Enqueue a request.
     pub fn push(&mut self, req: Request) {
         if self.queue.is_empty() {
             self.oldest = Some(req.enqueued);
@@ -117,10 +125,12 @@ impl Batcher {
         self.queue.push(req);
     }
 
+    /// Pending request count.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether no requests are pending.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -225,6 +235,7 @@ impl SessionQueue {
         SessionQueue { frame_width, sessions: BTreeMap::new() }
     }
 
+    /// Values per complete frame (the network's input width).
     pub fn frame_width(&self) -> usize {
         self.frame_width
     }
@@ -238,6 +249,7 @@ impl SessionQueue {
         debug_assert!(prev.is_none(), "session {session} opened twice");
     }
 
+    /// Whether `session` has an assembly queue.
     pub fn contains(&self, session: u64) -> bool {
         self.sessions.contains_key(&session)
     }

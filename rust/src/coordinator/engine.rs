@@ -49,9 +49,13 @@ use crate::satsim::{ColumnConfig, Core, CoreStep, DeltaCounters};
 /// comparable to the golden model and to the python traces).
 #[derive(Debug, Clone, Default)]
 pub struct LayerTraceSeq {
+    /// Gate values per step.
     pub z: Vec<Vec<f32>>,
+    /// Candidate states per step.
     pub htilde: Vec<Vec<f32>>,
+    /// Hidden states per step.
     pub h: Vec<Vec<f32>>,
+    /// Readout/event outputs per step.
     pub y: Vec<Vec<f32>>,
 }
 
@@ -63,11 +67,14 @@ pub struct LayerTraceSeq {
 /// analog state. `step` advances slot 0; `step_batch` advances every
 /// slot of a uniform-shape batch through a single plan traversal.
 pub struct MixedSignalEngine {
+    /// The trained network this engine executes.
     pub weights: NetworkWeights,
+    /// Circuit/noise configuration shared by every core.
     pub circuit: CircuitConfig,
     /// The layer→core placement this engine executes (also the source
     /// of truth for the core geometry).
     pub plan: Plan,
+    /// Physical cores, in plan order.
     pub cores: Vec<Core>,
     /// Codesign diagnostics per layer.
     pub layer_circuits: Vec<LayerCircuit>,
@@ -224,6 +231,7 @@ impl MixedSignalEngine {
         )
     }
 
+    /// Number of physical cores in the plan.
     pub fn n_cores(&self) -> usize {
         self.cores.len()
     }
@@ -378,6 +386,22 @@ impl MixedSignalEngine {
         self.steps_seen[slot] = 0;
     }
 
+    /// Append layer `l`'s observables (gate codes, pre-activations,
+    /// states, events) to the diagnostic trace buffers. Tracing is the
+    /// cold path — it clones per-layer copies on every step and is
+    /// deliberately outside the zero-alloc steady-state contract (and
+    /// outside repolint's hot-path manifest).
+    fn append_traces(&self, l: usize, ts: &mut Vec<LayerTraceSeq>) {
+        if ts.len() <= l {
+            ts.resize_with(l + 1, LayerTraceSeq::default);
+        }
+        ts[l].z.push(self.z_vals.clone());
+        ts[l].htilde.push(self.ht_vals.clone());
+        ts[l].h.push(self.h_states.clone());
+        ts[l].y
+            .push(self.events.iter().map(|&b| b as u8 as f32).collect());
+    }
+
     /// One network time step on slot 0 (the sequential path). `x` =
     /// dims[0] input values (analog pixel for the paper workload). If
     /// `traces` is Some, logical-unit observables are appended per layer.
@@ -411,6 +435,7 @@ impl MixedSignalEngine {
                     let (x_rep, x_buf) = (&mut self.x_reps[0], &self.x_bufs[0]);
                     x_rep.clear();
                     for _ in 0..r {
+                        // lint: allow(alloc, extend of a cleared scratch buffer sized for the widest layer at build)
                         x_rep.extend_from_slice(&x_buf[..x_len]);
                     }
                 }
@@ -443,6 +468,7 @@ impl MixedSignalEngine {
                     let owner = lp.owner_tile(ct).core;
                     let width = lp.owner_tile(ct).n_cols();
                     self.accs[0].clear();
+                    // lint: allow(alloc, resize of a retained-capacity accumulator; width never exceeds the widest tile)
                     self.accs[0].resize(width, (0.0, 0.0));
                     for rt in 0..lp.row_tiles {
                         let tile = lp.tile(rt, ct);
@@ -482,14 +508,7 @@ impl MixedSignalEngine {
                 }
             }
             if let Some(ts) = traces.as_deref_mut() {
-                if ts.len() <= l {
-                    ts.resize_with(l + 1, LayerTraceSeq::default);
-                }
-                ts[l].z.push(self.z_vals.clone());
-                ts[l].htilde.push(self.ht_vals.clone());
-                ts[l].h.push(self.h_states.clone());
-                ts[l].y
-                    .push(self.events.iter().map(|&b| b as u8 as f32).collect());
+                self.append_traces(l, ts);
             }
             if l == n_layers - 1 {
                 // head readout: analog states into the ring
@@ -604,6 +623,7 @@ impl MixedSignalEngine {
                             (&mut self.x_reps[s], &self.x_bufs[s]);
                         x_rep.clear();
                         for _ in 0..r {
+                            // lint: allow(alloc, extend of a cleared scratch buffer sized for the widest layer at build)
                             x_rep.extend_from_slice(&x_buf[..x_len]);
                         }
                     }
@@ -643,6 +663,7 @@ impl MixedSignalEngine {
                     let width = lp.owner_tile(ct).n_cols();
                     for &s in slots {
                         self.accs[s].clear();
+                        // lint: allow(alloc, resize of a retained-capacity accumulator; width never exceeds the widest tile)
                         self.accs[s].resize(width, (0.0, 0.0));
                     }
                     for rt in 0..lp.row_tiles {
@@ -853,11 +874,11 @@ fn push_outputs(
     ht_vals: &mut Vec<f32>,
 ) {
     for s in &out.steps {
-        events.push(s.y);
-        h_states.push(volts_to_logical(s.v_h, wh_scale, cfg) as f32);
+        events.push(s.y); // lint: allow(alloc, push into a cleared per-layer buffer that reuses its capacity)
+        h_states.push(volts_to_logical(s.v_h, wh_scale, cfg) as f32); // lint: allow(alloc, push into a cleared per-layer buffer that reuses its capacity)
         if want_traces {
-            z_vals.push(s.z.value());
-            ht_vals.push(volts_to_logical(s.v_htilde, wh_scale, cfg) as f32);
+            z_vals.push(s.z.value()); // lint: allow(alloc, tracing is the diagnostic cold path)
+            ht_vals.push(volts_to_logical(s.v_htilde, wh_scale, cfg) as f32); // lint: allow(alloc, tracing is the diagnostic cold path)
         }
     }
 }

@@ -62,7 +62,9 @@ const TEXT: &str = "text/plain; charset=utf-8";
 /// `shutdown` within one tick).
 #[derive(Debug, Clone)]
 pub struct HttpConfig {
+    /// Protocol limits (head/header/body bounds).
     pub limits: Limits,
+    /// Idle-poll tick for keep-alive connections.
     pub keepalive: Duration,
 }
 
@@ -157,13 +159,24 @@ impl HttpMetrics {
         }
         // delta-sparsity skip accounting (ADR-005) — folded into the
         // recorder from the engine workers; zeros unless a delta
-        // backend ran behind this front end
-        for (name, n) in [
-            ("components_fired", self.recorder.delta.components_fired),
-            ("components_skipped", self.recorder.delta.components_skipped),
-            ("shares_skipped", self.recorder.delta.shares_skipped),
+        // backend ran behind this front end. Family names are spelled
+        // out in full so repolint's `exhaustive-metrics` rule can
+        // check each one against docs/http-api.md.
+        for (family, n) in [
+            (
+                "minimalist_delta_components_fired_total",
+                self.recorder.delta.components_fired,
+            ),
+            (
+                "minimalist_delta_components_skipped_total",
+                self.recorder.delta.components_skipped,
+            ),
+            (
+                "minimalist_delta_shares_skipped_total",
+                self.recorder.delta.shares_skipped,
+            ),
         ] {
-            s.push_str(&format!("minimalist_delta_{name}_total {n}\n"));
+            s.push_str(&format!("{family} {n}\n"));
         }
         s
     }
@@ -180,17 +193,29 @@ impl HttpMetrics {
     }
 }
 
-/// Status code + error kind for a failed serving op — the admission
-/// mapping of the spec (docs/http-api.md): reject-not-queue `Busy` is
-/// the client's backpressure signal (429, retry after closing
-/// something); `Lost`/`BackendPanicked` mean the serving side is gone
-/// or poisoned (503).
-pub fn serve_status(e: &ServeError) -> (u16, &'static str) {
+/// The canonical [`ServeError`]→HTTP-status mapping — the single
+/// site the wire spec (docs/http-api.md), the request router, the
+/// conformance tests, and repolint's `exhaustive-status` rule all
+/// agree on: reject-not-queue `Busy` is the client's backpressure
+/// signal (429, retry after closing something); `Lost`/
+/// `BackendPanicked` mean the serving side is gone or poisoned (503).
+pub fn status_for(e: &ServeError) -> u16 {
     match e {
-        ServeError::Busy => (429, "busy"),
-        ServeError::Lost => (503, "lost"),
-        ServeError::BackendPanicked(_) => (503, "backend_panicked"),
+        ServeError::Busy => 429,
+        ServeError::Lost => 503,
+        ServeError::BackendPanicked(_) => 503,
     }
+}
+
+/// Status code + error kind for a failed serving op; the code is
+/// [`status_for`], the kind is the `error` field of the JSON body.
+pub fn serve_status(e: &ServeError) -> (u16, &'static str) {
+    let kind = match e {
+        ServeError::Busy => "busy",
+        ServeError::Lost => "lost",
+        ServeError::BackendPanicked(_) => "backend_panicked",
+    };
+    (status_for(e), kind)
 }
 
 /// `{"error": kind, "message": msg}` — the error body shape every
@@ -257,6 +282,7 @@ impl HttpServer {
             thread::Builder::new()
                 .name("minimalist-http-accept".to_string())
                 .spawn(move || accept_loop(listener, state, conns, cfg))
+                // lint: allow(panic, construction-time spawn failure: the listener has not served anything yet)
                 .expect("spawning http accept thread")
         };
         Ok(HttpServer { addr: local, state, accept, conns })

@@ -29,9 +29,13 @@ use crate::util::json::Json;
 /// `frame_width` values in chunks of `frames_per_push`.
 #[derive(Debug, Clone)]
 pub struct LoadGenOpts {
+    /// Concurrent keep-alive connections.
     pub connections: usize,
+    /// Sessions each connection drives, in series.
     pub sessions_per_conn: usize,
+    /// Frames pushed per session.
     pub frames: usize,
+    /// Frames per push request (chunk size).
     pub frames_per_push: usize,
     /// Values per frame — the serving network's input width.
     pub frame_width: usize,
@@ -70,7 +74,9 @@ impl LoadGenOpts {
 /// Aggregated outcome of a run (per-connection reports merged).
 #[derive(Debug, Clone, Default)]
 pub struct LoadReport {
+    /// Sessions driven open→close successfully.
     pub sessions_completed: u64,
+    /// Complete frames accepted by the server.
     pub frames_pushed: u64,
     /// 429s observed (admission control, retried — not failures).
     pub busy_rejected: u64,
@@ -78,6 +84,7 @@ pub struct LoadReport {
     pub protocol_errors: u64,
     /// Connect/IO failures (reconnected once per session).
     pub transport_errors: u64,
+    /// Wall-clock duration of the whole run.
     pub wall: Duration,
     /// Per-push wire latency (the frame-chunk roundtrip).
     pub push: LatencyRecorder,
@@ -96,6 +103,7 @@ impl LoadReport {
         self.session.merge(&other.session);
     }
 
+    /// Completed sessions per wall-clock second.
     pub fn sessions_per_s(&self) -> f64 {
         let s = self.wall.as_secs_f64();
         if s == 0.0 {
@@ -105,6 +113,7 @@ impl LoadReport {
         }
     }
 
+    /// Pushed frames per wall-clock second.
     pub fn frames_per_s(&self) -> f64 {
         let s = self.wall.as_secs_f64();
         if s == 0.0 {
@@ -141,6 +150,7 @@ impl LoadReport {
         ])
     }
 
+    /// One-line human summary of the run.
     pub fn summary(&self) -> String {
         let pcts = self.push.percentiles(&[50.0, 95.0, 99.0]);
         format!(
@@ -182,6 +192,7 @@ pub fn run(target: &str, opts: &LoadGenOpts) -> LoadReport {
             thread::Builder::new()
                 .name(format!("minimalist-loadgen-{c}"))
                 .spawn(move || conn_loop(&target, &opts, c))
+                // lint: allow(panic, load generator is a CLI driver: failing to spawn its own connections is fatal by design)
                 .expect("spawning loadgen connection thread")
         })
         .collect();

@@ -7,6 +7,7 @@ use crate::coordinator::server::ServeError;
 use crate::satsim::DeltaCounters;
 
 #[derive(Debug, Clone)]
+/// Latency/throughput accumulator for one worker (mergeable).
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
     started: Instant,
@@ -15,6 +16,7 @@ pub struct LatencyRecorder {
     /// its rate decay toward zero, and a merged aggregate must not
     /// count a late-joining worker's dead time).
     last_sample: Option<Instant>,
+    /// Successfully served requests.
     pub items: u64,
     /// Requests that failed (backend panic, worker lost, session slots
     /// exhausted) — latency is not recorded for these, only the count.
@@ -43,6 +45,7 @@ impl Default for LatencyRecorder {
 }
 
 impl LatencyRecorder {
+    /// An empty recorder; the throughput window starts now.
     pub fn new() -> LatencyRecorder {
         LatencyRecorder {
             samples_us: Vec::new(),
@@ -57,6 +60,7 @@ impl LatencyRecorder {
         }
     }
 
+    /// Record one served request's latency.
     pub fn record(&mut self, latency: Duration) {
         self.samples_us.push(latency.as_micros() as u64);
         self.items += 1;
@@ -112,6 +116,7 @@ impl LatencyRecorder {
         Duration::from_micros(sorted[idx.min(sorted.len() - 1)])
     }
 
+    /// Mean recorded latency.
     pub fn mean(&self) -> Duration {
         if self.samples_us.is_empty() {
             return Duration::ZERO;
@@ -153,6 +158,7 @@ impl LatencyRecorder {
         self.last_sample = self.last_sample.max(other.last_sample);
     }
 
+    /// One-line human summary (count, rate, percentiles).
     pub fn summary(&self) -> String {
         // one sort for all three percentiles
         let pcts = self.percentiles(&[50.0, 95.0, 99.0]);

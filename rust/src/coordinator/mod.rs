@@ -65,7 +65,7 @@ pub mod server;
 pub use backends::{GoldenBackend, MixedSignalBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, Batcher, Request, SessionQueue};
 pub use engine::MixedSignalEngine;
-pub use http::{HttpConfig, HttpMetrics, HttpServer};
+pub use http::{status_for, HttpConfig, HttpMetrics, HttpServer};
 pub use metrics::LatencyRecorder;
 pub use server::{
     Backend, Client, Response, ServeError, Server, SessionBackend,

@@ -52,6 +52,7 @@ use crate::satsim::DeltaCounters;
 /// on their worker thread* via the factory passed to
 /// [`Server::spawn_with`] / [`Server::spawn_sharded`].
 pub trait Backend {
+    /// Short backend label for logs and summaries.
     fn name(&self) -> &str;
     /// Classify a batch of sequences. The default serving contract is
     /// **ragged** — sequences may differ in length: the golden backend
@@ -149,8 +150,11 @@ impl std::error::Error for ServeError {}
 /// Response to one request.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Mirrors the request id.
     pub id: u64,
+    /// The served label, or why serving failed.
     pub result: Result<usize, ServeError>,
+    /// Queue + service time for this request.
     pub latency: Duration,
 }
 
@@ -160,6 +164,7 @@ impl Response {
     pub fn label(&self) -> usize {
         match &self.result {
             Ok(l) => *l,
+            // lint: allow(panic, documented contract: drivers calling label opt into panicking on a serve error)
             Err(e) => panic!("request {} failed: {e}", self.id),
         }
     }
@@ -274,16 +279,19 @@ impl Server {
                 thread::Builder::new()
                     .name(format!("minimalist-worker-{w}"))
                     .spawn(move || worker_loop(factory, job_rx))
+                    // lint: allow(panic, construction-time spawn failure: no server exists yet to degrade)
                     .expect("spawning worker thread")
             })
             .collect();
         let leader = thread::Builder::new()
             .name("minimalist-leader".to_string())
             .spawn(move || leader_loop(rx, job_tx, policy))
+            // lint: allow(panic, construction-time spawn failure: no server exists yet to degrade)
             .expect("spawning leader thread");
         Server { tx, leader, workers }
     }
 
+    /// A cloneable submit handle to this server.
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone() }
     }
@@ -406,6 +414,7 @@ fn leader_loop(
                 .map(|req| {
                     let rtx = waiters
                         .remove(&req.ticket)
+                        // lint: allow(panic, leader-local invariant: submit inserts the waiter before enqueueing the ticket)
                         .expect("waiter registered at submit");
                     (req, rtx)
                 })
@@ -451,6 +460,7 @@ fn worker_loop(
         // Hold the lock only while receiving — classification runs
         // unlocked so the other workers can keep pulling jobs.
         let job = {
+            // lint: allow(panic, a poisoned job queue means a sibling worker died mid-recv; this worker cannot continue either)
             let rx = job_rx.lock().expect("job queue poisoned");
             rx.recv()
         };
@@ -697,6 +707,7 @@ impl StreamServer {
                     .spawn(move || {
                         stream_worker_loop(Box::new(move || (*f)()), jrx, leader_tx)
                     })
+                    // lint: allow(panic, construction-time spawn failure: no server exists yet to degrade)
                     .expect("spawning stream worker thread")
             })
             .collect();
@@ -704,14 +715,17 @@ impl StreamServer {
         let leader = thread::Builder::new()
             .name("minimalist-stream-leader".to_string())
             .spawn(move || stream_leader_loop(rx, worker_txs, capacity))
+            // lint: allow(panic, construction-time spawn failure: no server exists yet to degrade)
             .expect("spawning stream leader thread");
         StreamServer { tx, leader, workers }
     }
 
+    /// A cloneable handle for opening sessions on this server.
     pub fn client(&self) -> StreamClient {
         StreamClient { tx: self.tx.clone() }
     }
 
+    /// Number of worker threads (= backend instances).
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
@@ -894,6 +908,7 @@ fn stream_worker_loop(
         }
         return metrics;
     }
+    // lint: allow(panic, streaming support was verified at loop entry before any session was admitted)
     let width = backend.streaming().expect("checked above").frame_width().max(1);
     let mut queue = SessionQueue::new(width);
     // pushes acked after the tick flush that consumed their frames
@@ -907,6 +922,7 @@ fn stream_worker_loop(
         }
         for job in batch {
             let SessionJob { session, req, rtx, enqueued } = job;
+            // lint: allow(panic, streaming support was verified at loop entry before any session was admitted)
             let sb = backend.streaming().expect("checked above");
             match req {
                 SessionRequest::Open => match sb.open_session() {
@@ -963,6 +979,7 @@ fn stream_worker_loop(
         }
         // the lockstep tick: every session that queued frames in this
         // round advances together through one traversal per time step
+        // lint: allow(panic, streaming support was verified at loop entry before any session was admitted)
         let sb = backend.streaming().expect("checked above");
         flush_session_ticks(sb, &mut queue, &mut slots, &mut frames);
         for (rtx, enqueued, n) in pending_acks.drain(..) {

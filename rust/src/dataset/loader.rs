@@ -14,6 +14,7 @@ pub struct TestSplit {
     pub y: Vec<usize>,
 }
 
+/// Load a sequence test split from a tensorfile on disk.
 pub fn load_test_split(path: &str) -> Result<TestSplit> {
     let tf = TensorFile::load(path)?;
     let xt = tf.req("x")?;

@@ -20,6 +20,7 @@
 use crate::config::CircuitConfig;
 
 #[derive(Debug, Clone, Default, PartialEq)]
+/// Switching-activity counter priced into joules.
 pub struct EnergyMeter {
     /// Dissipated energy from capacitor (dis)charging events (J).
     pub cap_energy_j: f64,
@@ -27,14 +28,18 @@ pub struct EnergyMeter {
     pub gate_energy_j: f64,
     /// Event counts.
     pub cap_events: u64,
+    /// Capacitor/segment switch toggles.
     pub switch_toggles: u64,
+    /// Clocked comparator decisions.
     pub comparator_decisions: u64,
+    /// Full SAR conversions.
     pub adc_conversions: u64,
     /// Time steps accounted (for per-step reporting).
     pub steps: u64,
 }
 
 impl EnergyMeter {
+    /// A zeroed meter.
     pub fn new() -> EnergyMeter {
         EnergyMeter::default()
     }
@@ -61,23 +66,28 @@ impl EnergyMeter {
     }
 
     #[inline]
+    /// Count one comparator decision.
     pub fn comparator(&mut self) {
         self.comparator_decisions += 1;
     }
 
     #[inline]
+    /// Count one full ADC conversion.
     pub fn adc_conversion(&mut self) {
         self.adc_conversions += 1;
     }
 
+    /// Mark one network step complete.
     pub fn step_done(&mut self) {
         self.steps += 1;
     }
 
+    /// Total energy so far, in joules.
     pub fn total_j(&self) -> f64 {
         self.cap_energy_j + self.gate_energy_j
     }
 
+    /// Mean energy per completed step, in joules.
     pub fn per_step_j(&self) -> f64 {
         if self.steps == 0 {
             0.0
@@ -86,6 +96,7 @@ impl EnergyMeter {
         }
     }
 
+    /// Fold another meter's counts into this one.
     pub fn merge(&mut self, other: &EnergyMeter) {
         self.cap_energy_j += other.cap_energy_j;
         self.gate_energy_j += other.gate_energy_j;

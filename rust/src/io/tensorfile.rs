@@ -10,43 +10,57 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+/// File magic of the MTF container format.
 pub const MAGIC: &[u8; 4] = b"MTF1";
 
 /// One tensor: shape + flat data in one of the supported dtypes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// The payload, in one of the supported dtypes.
     pub data: TensorData,
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Typed payload of a tensor.
 pub enum TensorData {
+    /// 32-bit floats.
     F32(Vec<f32>),
+    /// 32-bit signed integers.
     I32(Vec<i32>),
+    /// Bytes.
     U8(Vec<u8>),
+    /// 64-bit signed integers.
     I64(Vec<i64>),
+    /// 64-bit floats.
     F64(Vec<f64>),
 }
 
 impl Tensor {
+    /// An f32 tensor.
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: TensorData::F32(data) }
     }
 
+    /// An i32 tensor.
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: TensorData::I32(data) }
     }
 
+    /// A rank-0 f32 tensor.
     pub fn scalar_f32(x: f32) -> Tensor {
         Tensor::f32(vec![1], vec![x])
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -62,6 +76,7 @@ impl Tensor {
         }
     }
 
+    /// The data as i32s (integer dtypes only).
     pub fn as_i32(&self) -> Result<Vec<i32>> {
         Ok(match &self.data {
             TensorData::I32(v) => v.clone(),
@@ -71,6 +86,7 @@ impl Tensor {
         })
     }
 
+    /// The value of a one-element tensor, as f32.
     pub fn scalar(&self) -> Result<f32> {
         let v = self.as_f32();
         if v.len() != 1 {
@@ -99,10 +115,12 @@ pub struct TensorFile {
 }
 
 impl TensorFile {
+    /// An empty container.
     pub fn new() -> TensorFile {
         TensorFile::default()
     }
 
+    /// Add or replace tensor `name`.
     pub fn insert(&mut self, name: &str, t: Tensor) {
         if let Some(&i) = self.index.get(name) {
             self.items[i].1 = t;
@@ -112,21 +130,25 @@ impl TensorFile {
         }
     }
 
+    /// Look up tensor `name`.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.index.get(name).map(|&i| &self.items[i].1)
     }
 
+    /// Look up tensor `name`, erroring if absent.
     pub fn req(&self, name: &str) -> Result<&Tensor> {
         self.get(name)
             .with_context(|| format!("tensor '{name}' missing from MTF file"))
     }
 
+    /// Iterate the stored tensor names.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.items.iter().map(|(n, _)| n.as_str())
     }
 
     // -- serialization -----------------------------------------------------
 
+    /// Serialize the container to MTF bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
@@ -167,6 +189,7 @@ impl TensorFile {
         out
     }
 
+    /// Parse an MTF byte buffer.
     pub fn from_bytes(buf: &[u8]) -> Result<TensorFile> {
         if buf.len() < 8 || &buf[..4] != MAGIC {
             bail!("not an MTF file (bad magic)");
@@ -228,6 +251,7 @@ impl TensorFile {
         Ok(tf)
     }
 
+    /// Write the container to `path`.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::fs::File::create(path.as_ref()).with_context(|| {
             format!("creating {}", path.as_ref().display())
@@ -236,6 +260,7 @@ impl TensorFile {
         Ok(())
     }
 
+    /// Read a container from `path`.
     pub fn load(path: impl AsRef<Path>) -> Result<TensorFile> {
         let buf = std::fs::read(path.as_ref()).with_context(|| {
             format!("reading {}", path.as_ref().display())

@@ -56,6 +56,10 @@
 //! Architecture decision records live in `docs/adr/` (slot-RNG seeding,
 //! lockstep batching, the streaming slot-lease design, the hand-rolled
 //! HTTP front end); the wire protocol reference is `docs/http-api.md`.
+//! The contracts no compiler checks — zero-alloc hot paths, RNG
+//! draw-burn pairing, enum↔status↔docs lock step, panic hygiene — are
+//! enforced statically by [`lint`] through the `repolint` binary
+//! (docs/adr/006).
 
 pub mod bench_suite;
 pub mod config;
@@ -63,6 +67,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod energy;
 pub mod io;
+pub mod lint;
 pub mod mapping;
 pub mod nn;
 pub mod quant;

@@ -1,0 +1,231 @@
+//! `alloc-discipline`: no allocation-capable calls in steady-state
+//! hot-path functions.
+//!
+//! PR 3 made the per-step satsim path allocation-free and pinned it
+//! with a counting-allocator test (`rust/tests/hot_path_alloc.rs`).
+//! That test is dynamic — it only sees the paths a particular config
+//! exercises. This pass mirrors the invariant statically: every
+//! function named in [`HOT_FNS`] is scanned for tokens that can reach
+//! the allocator, and each hit must carry a
+//! `// lint: allow(alloc, reason)` annotation (same line, or on the
+//! comment line directly above). The manifest itself is part of the
+//! contract: in strict mode a listed file or function that no longer
+//! exists is a violation, so renames cannot silently drop coverage.
+
+use super::scan::allow_sites;
+use super::{LintTree, Violation};
+
+/// Rule identifier.
+pub const RULE: &str = "alloc-discipline";
+/// Governing document.
+pub const DOC: &str = "docs/adr/006-repolint-static-invariants.md";
+
+/// The hot-path manifest: file suffix → steady-state functions that
+/// must not allocate. Keep in sync with `rust/tests/hot_path_alloc.rs`.
+pub const HOT_FNS: &[(&str, &[&str])] = &[
+    (
+        "satsim/column.rs",
+        &[
+            "step",
+            "phase_share",
+            "phase_share_masked",
+            "skip_share",
+            "override_share",
+            "phase_update",
+            "bind_slot",
+            "swap_slot",
+            "v_h",
+            "rebuild_idx_h",
+            "drive",
+        ],
+    ),
+    (
+        "satsim/core.rs",
+        &[
+            "step",
+            "step_slot",
+            "step_partial",
+            "step_partial_slot",
+            "step_partial_slot_delta",
+            "delta_counters",
+            "step_finish",
+            "step_finish_slot",
+            "finish_partial_only",
+            "finish_partial_only_slot",
+            "last_events",
+        ],
+    ),
+    (
+        "satsim/caps.rs",
+        &[
+            "sample",
+            "sample_deferred",
+            "aggregate_sample_sigma",
+            "aggregate_injection_shift",
+            "charge",
+            "share",
+            "share_with",
+            "weighted_mean",
+        ],
+    ),
+    ("satsim/adc.rs", &["decide", "convert", "ideal_code"]),
+    ("router/event.rs", &["delta_encode", "delta_apply"]),
+    ("router/fabric.rs", &["as_f64", "as_f32", "route"]),
+    (
+        "coordinator/engine.rs",
+        &["step", "step_batch", "step_slots", "step_slots_inner", "push_outputs"],
+    ),
+];
+
+/// Tokens that can reach the global allocator. Matched against the
+/// code buffer (so string/comment occurrences never fire). `.unwrap`
+/// -style exact suffixes are not needed here: every token is either a
+/// full path or ends in `(`/`!` so prefixes cannot alias.
+const ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "format!",
+    "Vec::new",
+    "Vec::with_capacity",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "Rc::new",
+    "Arc::new",
+    "HashMap::new",
+    "BTreeMap::new",
+    "VecDeque::new",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".clone(",
+    ".collect(",
+    ".push(",
+    ".push_str(",
+    ".insert(",
+    ".extend(",
+    ".extend_from_slice(",
+    ".resize(",
+    ".resize_with(",
+    ".reserve(",
+    ".append(",
+];
+
+/// Run the pass over `tree`.
+pub fn check(tree: &LintTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (suffix, fns) in HOT_FNS {
+        let Some(file) = tree.by_suffix(suffix) else {
+            if tree.strict {
+                out.push(Violation {
+                    file: (*suffix).to_string(),
+                    line: 1,
+                    rule: RULE,
+                    msg: format!("hot-path manifest file `{suffix}` not found in tree"),
+                    doc: DOC,
+                });
+            }
+            continue;
+        };
+        let allows = allow_sites(file);
+        for name in *fns {
+            let spans = file.find_fns(name);
+            if spans.is_empty() {
+                if tree.strict {
+                    out.push(Violation {
+                        file: file.rel.clone(),
+                        line: 1,
+                        rule: RULE,
+                        msg: format!(
+                            "hot-path fn `{name}` listed in the manifest was not found \
+                             (renamed? update lint/alloc.rs)"
+                        ),
+                        doc: DOC,
+                    });
+                }
+                continue;
+            }
+            for span in spans {
+                for i in span.sig_line..=span.close {
+                    let line = &file.code[i];
+                    for tok in ALLOC_TOKENS {
+                        if !line.contains(tok) {
+                            continue;
+                        }
+                        let allowed = allows
+                            .iter()
+                            .any(|a| a.kind == "alloc" && a.line == i);
+                        if !allowed {
+                            out.push(Violation {
+                                file: file.rel.clone(),
+                                line: i + 1,
+                                rule: RULE,
+                                msg: format!(
+                                    "allocation-capable call `{tok}` in hot-path fn \
+                                     `{name}` without `lint: allow(alloc, ...)`"
+                                ),
+                                doc: DOC,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unannotated_push_in_hot_fn_fires() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/router/event.rs",
+            "pub fn delta_encode(out: &mut Vec<u8>) {\n    out.push(1);\n}\n",
+        )]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE);
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].msg.contains(".push("));
+    }
+
+    #[test]
+    fn annotated_push_is_clean() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/router/event.rs",
+            "pub fn delta_encode(out: &mut Vec<u8>) {\n    out.push(1); // lint: allow(alloc, caller-owned buffer)\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn alloc_token_in_string_or_comment_does_not_fire() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/router/event.rs",
+            "pub fn delta_encode() {\n    // we used to out.push(1) here\n    let _s = \"x.clone()\";\n}\npub fn delta_apply() {}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn non_manifest_fn_may_allocate() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/router/event.rs",
+            "pub fn cold_setup() -> Vec<u8> {\n    let mut v = Vec::new();\n    v.push(1);\n    v\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn strict_mode_reports_missing_manifest_fn() {
+        let mut tree = LintTree::from_memory(&[(
+            "rust/src/router/event.rs",
+            "pub fn delta_encode_v2() {}\n",
+        )]);
+        tree.strict = true;
+        let v = check(&tree);
+        assert!(v.iter().any(|v| v.msg.contains("`delta_encode`")));
+    }
+}

@@ -1,0 +1,443 @@
+//! Exhaustiveness contracts: enum ↔ mapping ↔ docs surfaces that must
+//! stay in lock step.
+//!
+//! The wire spec (docs/http-api.md, ADR-004) promises a 1:1 mapping
+//! from `ServeError` variants to HTTP statuses and documents every
+//! metric the `/metrics` endpoint emits; the bench suite promises its
+//! JSON schema version is explained in prose; the ADR index promises a
+//! row per record. All four are cross-file invariants a compiler never
+//! sees. The sub-rules here parse the authoritative site of each fact
+//! and diff it against its mirrors:
+//!
+//! * `exhaustive-status` — every `ServeError` variant (declared in
+//!   `coordinator/server.rs`) appears in the canonical `status_for`
+//!   mapping in `coordinator/http.rs` *and* in `docs/http-api.md`.
+//! * `exhaustive-metrics` — every `minimalist_*` family name emitted
+//!   by `coordinator/http.rs` / `coordinator/metrics.rs` appears in
+//!   `docs/http-api.md`; names assembled by interpolation (a literal
+//!   ending in `_`) are rejected outright so extraction stays sound.
+//! * `exhaustive-schema` — the `("schema", N)` version stamped by
+//!   `bench_suite.rs` is mentioned as `schema N` in README.md or docs.
+//! * `exhaustive-adr` — every `docs/adr/NNN-*.md` file has a row in
+//!   `docs/adr/README.md`.
+//!
+//! In non-strict (fixture) trees each sub-rule runs only when its
+//! input files are present.
+
+use super::scan::SourceFile;
+use super::{LintTree, Violation};
+
+/// Governing document for the serving-surface sub-rules.
+pub const DOC_HTTP: &str = "docs/http-api.md";
+/// Governing document for the schema/ADR bookkeeping sub-rules.
+pub const DOC_ADR: &str = "docs/adr/006-repolint-static-invariants.md";
+
+/// Run all exhaustiveness sub-rules over `tree`.
+pub fn check(tree: &LintTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_status(tree, &mut out);
+    check_metrics(tree, &mut out);
+    check_schema(tree, &mut out);
+    check_adr_index(tree, &mut out);
+    out
+}
+
+/// `exhaustive-status`: ServeError ↔ status_for ↔ docs.
+fn check_status(tree: &LintTree, out: &mut Vec<Violation>) {
+    let Some(server) = tree.by_suffix("coordinator/server.rs") else {
+        return;
+    };
+    let variants = enum_variants(server, "ServeError");
+    if variants.is_empty() {
+        if tree.strict {
+            out.push(Violation {
+                file: server.rel.clone(),
+                line: 1,
+                rule: "exhaustive-status",
+                msg: "could not locate `enum ServeError` (moved? update lint/exhaustive.rs)"
+                    .to_string(),
+                doc: DOC_HTTP,
+            });
+        }
+        return;
+    }
+    // The canonical mapping: `fn status_for` in coordinator/http.rs.
+    if let Some(http) = tree.by_suffix("coordinator/http.rs") {
+        let spans = http.find_fns("status_for");
+        if let Some(span) = spans.first() {
+            let body: String = http.code[span.sig_line..=span.close].join("\n");
+            for (line, v) in &variants {
+                if !body.contains(&format!("ServeError::{v}")) {
+                    out.push(Violation {
+                        file: server.rel.clone(),
+                        line: line + 1,
+                        rule: "exhaustive-status",
+                        msg: format!(
+                            "ServeError::{v} has no arm in the canonical `status_for` \
+                             mapping in coordinator/http.rs"
+                        ),
+                        doc: DOC_HTTP,
+                    });
+                }
+            }
+        } else {
+            out.push(Violation {
+                file: http.rel.clone(),
+                line: 1,
+                rule: "exhaustive-status",
+                msg: "canonical `fn status_for(&ServeError)` not found in \
+                      coordinator/http.rs"
+                    .to_string(),
+                doc: DOC_HTTP,
+            });
+        }
+    } else if tree.strict {
+        out.push(Violation {
+            file: "rust/src/coordinator/http.rs".to_string(),
+            line: 1,
+            rule: "exhaustive-status",
+            msg: "coordinator/http.rs not found in tree".to_string(),
+            doc: DOC_HTTP,
+        });
+    }
+    // The documented mapping: every variant named in the spec.
+    if let Some(docs) = tree.by_suffix("docs/http-api.md") {
+        for (line, v) in &variants {
+            if !docs.contains(v) {
+                out.push(Violation {
+                    file: server.rel.clone(),
+                    line: line + 1,
+                    rule: "exhaustive-status",
+                    msg: format!("ServeError::{v} is not documented in docs/http-api.md"),
+                    doc: DOC_HTTP,
+                });
+            }
+        }
+    } else if tree.strict {
+        out.push(Violation {
+            file: DOC_HTTP.to_string(),
+            line: 1,
+            rule: "exhaustive-status",
+            msg: "docs/http-api.md not found in tree".to_string(),
+            doc: DOC_HTTP,
+        });
+    }
+}
+
+/// Parse the variant names of `enum <name>` from non-test code lines.
+/// Returns `(0-based line, variant)` pairs.
+fn enum_variants(f: &SourceFile, name: &str) -> Vec<(usize, String)> {
+    let needle = format!("enum {name}");
+    let mut out = Vec::new();
+    let Some(start) = f
+        .code
+        .iter()
+        .enumerate()
+        .position(|(i, l)| !f.in_test[i] && l.contains(&needle))
+    else {
+        return out;
+    };
+    let mut depth: i32 = 0;
+    let mut opened = false;
+    for i in start..f.code.len() {
+        let entered = depth;
+        for ch in f.code[i].chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        // A variant is a line that *starts* at depth 1 inside the
+        // enum body (skipping the declaration line itself).
+        if i > start && entered == 1 && depth >= 1 {
+            let t = f.code[i].trim();
+            let ident: String = t
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if ident.chars().next().is_some_and(|c| c.is_uppercase()) {
+                out.push((i, ident));
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// `exhaustive-metrics`: emitted metric families ↔ docs.
+fn check_metrics(tree: &LintTree, out: &mut Vec<Violation>) {
+    let docs = tree.by_suffix("docs/http-api.md");
+    let mut names: Vec<(String, usize, String)> = Vec::new(); // (file, line, name)
+    for suffix in ["coordinator/http.rs", "coordinator/metrics.rs"] {
+        let Some(f) = tree.by_suffix(suffix) else { continue };
+        for (i, s) in f.strings.iter().enumerate() {
+            if f.in_test[i] {
+                continue;
+            }
+            let mut from = 0;
+            while let Some(pos) = s[from..].find("minimalist_") {
+                let at = from + pos;
+                let name: String = s[at..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+                    .collect();
+                from = at + name.len().max(1);
+                if name.ends_with('_') {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        rule: "exhaustive-metrics",
+                        msg: format!(
+                            "metric family `{name}…` is assembled by interpolation — \
+                             emit full literal names so they can be checked against docs"
+                        ),
+                        doc: DOC_HTTP,
+                    });
+                    continue;
+                }
+                if !names.iter().any(|(_, _, n)| n == &name) {
+                    names.push((f.rel.clone(), i, name));
+                }
+            }
+        }
+    }
+    let Some(docs) = docs else {
+        if tree.strict && !names.is_empty() {
+            out.push(Violation {
+                file: DOC_HTTP.to_string(),
+                line: 1,
+                rule: "exhaustive-metrics",
+                msg: "docs/http-api.md not found in tree".to_string(),
+                doc: DOC_HTTP,
+            });
+        }
+        return;
+    };
+    for (file, line, name) in names {
+        if !docs.contains(&name) {
+            out.push(Violation {
+                file,
+                line: line + 1,
+                rule: "exhaustive-metrics",
+                msg: format!("metric `{name}` is emitted but not documented in docs/http-api.md"),
+                doc: DOC_HTTP,
+            });
+        }
+    }
+}
+
+/// Rebuild a line as code with string-literal contents restored (but
+/// comments still blanked) — for matching mixed patterns like
+/// `("schema", 5`.
+fn code_with_strings(f: &SourceFile, i: usize) -> String {
+    f.code[i]
+        .chars()
+        .zip(f.strings[i].chars())
+        .map(|(c, s)| if s != ' ' { s } else { c })
+        .collect()
+}
+
+/// `exhaustive-schema`: bench schema version ↔ prose mention.
+fn check_schema(tree: &LintTree, out: &mut Vec<Violation>) {
+    let Some(bench) = tree.by_suffix("bench_suite.rs") else { return };
+    for i in 0..bench.code.len() {
+        if bench.in_test[i] {
+            continue;
+        }
+        let l = code_with_strings(bench, i);
+        let Some(pos) = l.find("(\"schema\",") else { continue };
+        let digits: String = l[pos + "(\"schema\",".len()..]
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if digits.is_empty() {
+            continue;
+        }
+        let mention = format!("schema {digits}");
+        let mentioned = tree.files.iter().any(|f| {
+            (f.rel == "README.md" || f.rel.starts_with("docs/")) && f.contains(&mention)
+        });
+        if !mentioned {
+            out.push(Violation {
+                file: bench.rel.clone(),
+                line: i + 1,
+                rule: "exhaustive-schema",
+                msg: format!(
+                    "bench schema bumped to {digits} but no `schema {digits}` mention \
+                     in README.md or docs/"
+                ),
+                doc: DOC_ADR,
+            });
+        }
+    }
+}
+
+/// `exhaustive-adr`: every ADR file has an index row.
+fn check_adr_index(tree: &LintTree, out: &mut Vec<Violation>) {
+    let adrs: Vec<&SourceFile> = tree
+        .files
+        .iter()
+        .filter(|f| {
+            f.rel.starts_with("docs/adr/")
+                && f.rel.ends_with(".md")
+                && f.rel
+                    .rsplit('/')
+                    .next()
+                    .is_some_and(|n| n.chars().next().is_some_and(|c| c.is_ascii_digit()))
+        })
+        .collect();
+    if adrs.is_empty() {
+        return;
+    }
+    let Some(index) = tree.files.iter().find(|f| f.rel == "docs/adr/README.md") else {
+        if tree.strict {
+            out.push(Violation {
+                file: "docs/adr/README.md".to_string(),
+                line: 1,
+                rule: "exhaustive-adr",
+                msg: "ADR files exist but docs/adr/README.md index is missing".to_string(),
+                doc: DOC_ADR,
+            });
+        }
+        return;
+    };
+    for adr in adrs {
+        let name = adr.rel.rsplit('/').next().unwrap_or(&adr.rel);
+        if !index.contains(name) {
+            out.push(Violation {
+                file: adr.rel.clone(),
+                line: 1,
+                rule: "exhaustive-adr",
+                msg: format!("ADR `{name}` has no row in the docs/adr/README.md index"),
+                doc: DOC_ADR,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SERVER_FIXTURE: &str = "\
+/// Why a request failed.
+pub enum ServeError {
+    /// Slots exhausted.
+    Busy,
+    /// Server went away.
+    Lost,
+    /// New in this fixture.
+    Gone,
+}
+";
+
+    #[test]
+    fn missing_status_arm_fires() {
+        let http = "\
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Busy => 429,
+        ServeError::Lost => 503,
+        ServeError::Gone => 410,
+    }
+}
+";
+        let docs = "Errors: Busy (429), Lost (503).\n";
+        let tree = LintTree::from_memory(&[
+            ("rust/src/coordinator/server.rs", SERVER_FIXTURE),
+            ("rust/src/coordinator/http.rs", http),
+            ("docs/http-api.md", docs),
+        ]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+        assert_eq!(v[0].rule, "exhaustive-status");
+        assert!(v[0].msg.contains("Gone"));
+        assert!(v[0].msg.contains("documented"));
+    }
+
+    #[test]
+    fn complete_surfaces_are_clean() {
+        let http = "\
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Busy => 429,
+        ServeError::Lost => 503,
+        ServeError::Gone => 410,
+    }
+}
+";
+        let docs = "Errors: Busy (429), Lost (503), Gone (410).\n";
+        let tree = LintTree::from_memory(&[
+            ("rust/src/coordinator/server.rs", SERVER_FIXTURE),
+            ("rust/src/coordinator/http.rs", http),
+            ("docs/http-api.md", docs),
+        ]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn undocumented_metric_fires() {
+        let http = "\
+fn render() -> String {
+    String::from(\"minimalist_bogus_total 1\\n\")
+}
+";
+        let tree = LintTree::from_memory(&[
+            ("rust/src/coordinator/http.rs", http),
+            ("docs/http-api.md", "no metrics here\n"),
+        ]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "exhaustive-metrics");
+        assert!(v[0].msg.contains("minimalist_bogus_total"));
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn interpolated_metric_name_fires() {
+        let http = "\
+fn render(name: &str) -> String {
+    format!(\"minimalist_delta_{name}_total 1\")
+}
+";
+        let tree = LintTree::from_memory(&[
+            ("rust/src/coordinator/http.rs", http),
+            ("docs/http-api.md", "minimalist_delta_\n"),
+        ]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("interpolation"));
+    }
+
+    #[test]
+    fn schema_without_mention_fires() {
+        let bench = "fn report() { let _ = (\"schema\", 9usize); }\n";
+        let tree = LintTree::from_memory(&[
+            ("rust/src/bench_suite.rs", bench),
+            ("README.md", "mentions schema 8 only\n"),
+        ]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "exhaustive-schema");
+        assert!(v[0].msg.contains('9'));
+    }
+
+    #[test]
+    fn adr_without_index_row_fires() {
+        let tree = LintTree::from_memory(&[
+            ("docs/adr/007-new-thing.md", "# ADR 7\n"),
+            ("docs/adr/README.md", "| 006 | old | (006-old.md) |\n"),
+        ]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "exhaustive-adr");
+        assert!(v[0].msg.contains("007-new-thing.md"));
+    }
+}

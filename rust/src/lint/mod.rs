@@ -1,0 +1,220 @@
+//! `repolint`: a dependency-free static invariant checker for this
+//! repository (ADR-006).
+//!
+//! The simulator's correctness story rests on contracts no compiler
+//! checks: steady-state hot paths must not allocate (PR 3's
+//! counting-allocator test, mirrored statically here), skip paths must
+//! burn exactly the RNG draws their full-path twins consume (ADR-005),
+//! the wire protocol's error/metric/doc surfaces must stay in lock
+//! step (ADR-004), and request-serving threads must not panic. Each
+//! contract is a self-contained pass over a [`scan::SourceFile`] tree:
+//!
+//! | rule id             | guards                                           |
+//! |---------------------|--------------------------------------------------|
+//! | `alloc-discipline`  | no allocation-capable calls in hot-path fns      |
+//! | `rng-discipline`    | fast/skip path pairs declare equal RNG draws     |
+//! | `exhaustive-status` | `ServeError` ↔ `status_for` ↔ docs/http-api.md   |
+//! | `exhaustive-metrics`| every `minimalist_*` metric is documented        |
+//! | `exhaustive-schema` | bench schema bumps are mentioned in docs         |
+//! | `exhaustive-adr`    | every ADR file has an index row                  |
+//! | `panic-hygiene`     | no unannotated panic paths in the serving stack  |
+//! | `unsafe-safety`     | every `unsafe` carries a `// SAFETY:` comment    |
+//!
+//! Escape hatches are explicit source annotations with mandatory
+//! reasons: `// lint: allow(alloc, <reason>)`,
+//! `// lint: allow(panic, <reason>)`, and
+//! `// lint: rng-draws(<n>, <group>)`. The `repolint` binary walks the
+//! real tree; tests drive the same passes over in-memory fixtures via
+//! [`LintTree::from_memory`].
+
+pub mod alloc;
+pub mod exhaustive;
+pub mod panic;
+pub mod rng;
+pub mod scan;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use scan::SourceFile;
+
+/// One rule violation, printed as
+/// `file:line: [rule] message (see doc)`.
+pub struct Violation {
+    /// Repo-relative path of the offending file.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule identifier (e.g. `alloc-discipline`).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+    /// The governing document (ADR or spec) to read.
+    pub doc: &'static str,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} (see {})",
+            self.file, self.line, self.rule, self.msg, self.doc
+        )
+    }
+}
+
+/// A scanned file tree the rule passes run over.
+pub struct LintTree {
+    /// All scanned files (Rust sources and Markdown docs).
+    pub files: Vec<SourceFile>,
+    /// Strict mode: manifest files and functions listed by a rule
+    /// must exist in the tree (true for the real repo, false for
+    /// in-memory fixtures that carry only the files under test).
+    pub strict: bool,
+}
+
+/// Directories (relative to the repo root) scanned for Rust sources.
+const RUST_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Directories / files scanned for Markdown.
+const DOC_DIRS: &[&str] = &["docs"];
+
+impl LintTree {
+    /// Load the real tree rooted at `root` (the repo root, i.e. the
+    /// directory containing `rust/` and `docs/`).
+    pub fn load(root: &Path) -> io::Result<LintTree> {
+        let mut files = Vec::new();
+        for dir in RUST_DIRS {
+            let d = root.join(dir);
+            if d.is_dir() {
+                walk(&d, root, "rs", &mut files)?;
+            }
+        }
+        for dir in DOC_DIRS {
+            let d = root.join(dir);
+            if d.is_dir() {
+                walk(&d, root, "md", &mut files)?;
+            }
+        }
+        let readme = root.join("README.md");
+        if readme.is_file() {
+            let text = fs::read_to_string(&readme)?;
+            files.push(SourceFile::text("README.md", &text));
+        }
+        files.sort_by(|a, b| a.rel.cmp(&b.rel));
+        Ok(LintTree { files, strict: true })
+    }
+
+    /// Build a tree from `(relative path, contents)` pairs — the
+    /// fixture entry point used by the linter's own tests. Fixture
+    /// trees are non-strict: rule manifests skip files and functions
+    /// the fixture does not carry.
+    pub fn from_memory(entries: &[(&str, &str)]) -> LintTree {
+        let files = entries
+            .iter()
+            .map(|(rel, text)| {
+                if rel.ends_with(".rs") {
+                    SourceFile::rust(rel, text)
+                } else {
+                    SourceFile::text(rel, text)
+                }
+            })
+            .collect();
+        LintTree { files, strict: false }
+    }
+
+    /// Look a file up by repo-relative path suffix (e.g.
+    /// `satsim/column.rs` matches `rust/src/satsim/column.rs`).
+    pub fn by_suffix(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| {
+            f.rel == suffix
+                || (f.rel.ends_with(suffix)
+                    && f.rel[..f.rel.len() - suffix.len()].ends_with('/'))
+        })
+    }
+
+    /// Number of files in the tree.
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Whether the tree is empty.
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    /// Run every rule pass and return the violations sorted by file
+    /// and line.
+    pub fn run_all(&self) -> Vec<Violation> {
+        let mut v = Vec::new();
+        v.extend(alloc::check(self));
+        v.extend(rng::check(self));
+        v.extend(exhaustive::check(self));
+        v.extend(panic::check(self));
+        v.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+        v
+    }
+}
+
+/// Recursively collect files with `ext` under `dir` into `out`,
+/// storing paths relative to `root`.
+fn walk(dir: &Path, root: &Path, ext: &str, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            // `target/` never lives under the scanned dirs, but guard
+            // anyway so a stray build dir cannot poison the scan.
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            walk(&path, root, ext, out)?;
+        } else if path.extension().is_some_and(|e| e == ext) {
+            let text = fs::read_to_string(&path)?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(if ext == "rs" {
+                SourceFile::rust(&rel, &text)
+            } else {
+                SourceFile::text(&rel, &text)
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_suffix_requires_a_path_boundary() {
+        let t = LintTree::from_memory(&[
+            ("rust/src/satsim/column.rs", "fn a() {}\n"),
+            ("rust/src/satsim/mycolumn.rs", "fn b() {}\n"),
+        ]);
+        let hit = t.by_suffix("satsim/column.rs").expect("should resolve");
+        assert_eq!(hit.rel, "rust/src/satsim/column.rs");
+        assert!(t.by_suffix("tsim/column.rs").is_none());
+    }
+
+    #[test]
+    fn violation_display_has_file_line_rule_and_doc() {
+        let v = Violation {
+            file: "rust/src/x.rs".into(),
+            line: 7,
+            rule: "alloc-discipline",
+            msg: "allocation-capable call `.push(`".into(),
+            doc: "docs/adr/006-repolint-static-invariants.md",
+        };
+        let s = v.to_string();
+        assert!(s.starts_with("rust/src/x.rs:7: [alloc-discipline]"));
+        assert!(s.contains("docs/adr/006"));
+    }
+}

@@ -1,0 +1,227 @@
+//! `panic-hygiene` and `unsafe-safety`: no unannotated panic paths in
+//! the serving stack, no undocumented `unsafe`.
+//!
+//! PR 3 made worker panics a per-batch, contained event
+//! (`ServeError::BackendPanicked`) — but that isolation only covers
+//! the classify call. A stray `unwrap` in the listener, the response
+//! router, or the load generator takes down the whole thread and with
+//! it every connection it owns. `panic-hygiene` therefore forbids
+//! panic-capable tokens (`.unwrap()`, `.expect(`, `panic!`,
+//! `unreachable!`, `todo!`, `unimplemented!`, direct indexing is left
+//! to review) in the non-test regions of `coordinator/http.rs`,
+//! `coordinator/server.rs`, and `coordinator/loadgen.rs` unless the
+//! site carries `// lint: allow(panic, reason)`.
+//!
+//! `unsafe-safety` applies tree-wide: any line whose *code* contains
+//! the `unsafe` keyword must have a `SAFETY:` comment on the same line
+//! or within the three lines above — the comment-discipline clippy
+//! enforces via `undocumented_unsafe_blocks`, extended to `unsafe fn`
+//! and `unsafe impl`, and enforced even where clippy does not run.
+
+use super::scan::allow_sites;
+use super::{LintTree, Violation};
+
+/// Rule identifier for the panic pass.
+pub const RULE_PANIC: &str = "panic-hygiene";
+/// Rule identifier for the unsafe pass.
+pub const RULE_UNSAFE: &str = "unsafe-safety";
+/// Governing document.
+pub const DOC: &str = "docs/adr/006-repolint-static-invariants.md";
+
+/// Files whose non-test code must not panic without an annotation.
+pub const SERVING_FILES: &[&str] = &[
+    "coordinator/http.rs",
+    "coordinator/server.rs",
+    "coordinator/loadgen.rs",
+];
+
+/// Panic-capable tokens. `.unwrap()` is matched with its closing
+/// paren so `unwrap_or`/`unwrap_or_else`/`unwrap_or_default` do not
+/// alias; the macros match with `!` so identifiers do not.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Run both passes over `tree`.
+pub fn check(tree: &LintTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_panics(tree, &mut out);
+    check_unsafe(tree, &mut out);
+    out
+}
+
+/// `panic-hygiene` over the serving files.
+fn check_panics(tree: &LintTree, out: &mut Vec<Violation>) {
+    for suffix in SERVING_FILES {
+        let Some(file) = tree.by_suffix(suffix) else {
+            if tree.strict {
+                out.push(Violation {
+                    file: (*suffix).to_string(),
+                    line: 1,
+                    rule: RULE_PANIC,
+                    msg: format!("serving-path manifest file `{suffix}` not found in tree"),
+                    doc: DOC,
+                });
+            }
+            continue;
+        };
+        let allows = allow_sites(file);
+        for (i, line) in file.code.iter().enumerate() {
+            if file.in_test[i] {
+                continue;
+            }
+            for tok in PANIC_TOKENS {
+                if !line.contains(tok) {
+                    continue;
+                }
+                let allowed = allows.iter().any(|a| a.kind == "panic" && a.line == i);
+                if !allowed {
+                    out.push(Violation {
+                        file: file.rel.clone(),
+                        line: i + 1,
+                        rule: RULE_PANIC,
+                        msg: format!(
+                            "panic-capable `{tok}` in a request-serving path without \
+                             `lint: allow(panic, ...)`"
+                        ),
+                        doc: DOC,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// `unsafe-safety` over every Rust file (tests and benches included —
+/// an undocumented `unsafe` is no better for living in a test).
+fn check_unsafe(tree: &LintTree, out: &mut Vec<Violation>) {
+    for file in tree.files.iter().filter(|f| f.is_rust()) {
+        for (i, line) in file.code.iter().enumerate() {
+            if !has_word(line, "unsafe") {
+                continue;
+            }
+            let documented = (i.saturating_sub(3)..=i)
+                .any(|j| file.comment[j].contains("SAFETY:"));
+            if !documented {
+                out.push(Violation {
+                    file: file.rel.clone(),
+                    line: i + 1,
+                    rule: RULE_UNSAFE,
+                    msg: "`unsafe` without a `// SAFETY:` comment on the same line or \
+                          the 3 lines above"
+                        .to_string(),
+                    doc: DOC,
+                });
+            }
+        }
+    }
+}
+
+/// Whole-word search (identifier boundaries on both sides).
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(word) {
+        let at = from + pos;
+        from = at + word.len();
+        let ok_before = at == 0 || {
+            let c = bytes[at - 1] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        let after = at + word.len();
+        let ok_after = after >= bytes.len() || {
+            let c = bytes[after] as char;
+            !c.is_alphanumeric() && c != '_'
+        };
+        if ok_before && ok_after {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unannotated_expect_in_serving_path_fires() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/coordinator/http.rs",
+            "fn accept() {\n    thread::spawn(f).join().expect(\"accept thread\");\n}\n",
+        )]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_PANIC);
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].msg.contains(".expect("));
+    }
+
+    #[test]
+    fn annotated_expect_is_clean() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/coordinator/http.rs",
+            "fn accept() {\n    // lint: allow(panic, startup-only spawn)\n    thread::spawn(f).join().expect(\"accept thread\");\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_else_does_not_alias_unwrap() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/coordinator/http.rs",
+            "fn lock() {\n    m.lock().unwrap_or_else(|p| p.into_inner());\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn panic_tokens_outside_serving_files_are_fine() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/satsim/caps.rs",
+            "fn idx(&self, i: usize) -> f64 {\n    self.c.get(i).copied().unwrap()\n}\n",
+        )]);
+        // `.unwrap()` needs the closing paren; `.unwrap()` here:
+        let tree2 = LintTree::from_memory(&[(
+            "rust/src/satsim/caps.rs",
+            "fn idx(&self) {\n    self.c.first().unwrap();\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+        assert!(check(&tree2).is_empty());
+    }
+
+    #[test]
+    fn undocumented_unsafe_fires_anywhere() {
+        let tree = LintTree::from_memory(&[(
+            "rust/tests/alloc_guard.rs",
+            "unsafe impl GlobalAlloc for Counting {\n}\n",
+        )]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_UNSAFE);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn safety_comment_above_unsafe_is_clean() {
+        let tree = LintTree::from_memory(&[(
+            "rust/tests/alloc_guard.rs",
+            "// SAFETY: delegates verbatim to the system allocator.\nunsafe impl GlobalAlloc for Counting {\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn test_region_panics_are_ignored() {
+        let tree = LintTree::from_memory(&[(
+            "rust/src/coordinator/http.rs",
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); panic!(\"boom\"); }\n}\n",
+        )]);
+        assert!(check(&tree).is_empty());
+    }
+}

@@ -1,0 +1,232 @@
+//! `rng-discipline`: fast-path/skip-path pairs must declare equal
+//! RNG draw counts.
+//!
+//! ADR-005's delta fast path is only bit-compatible with the legacy
+//! path because a skipped charge-share still *burns* the RNG draws the
+//! full share would have consumed — one forgotten burn silently
+//! desynchronizes every downstream noise sample, and no compiler can
+//! see it. This pass makes the draw budget explicit: every function in
+//! [`RNG_GROUPS`] must carry a `// lint: rng-draws(N, group)`
+//! annotation directly above its signature, and all members of a group
+//! must declare the same `N`. Removing either annotation of a pair, or
+//! letting the counts drift apart, is a violation. Annotations on
+//! functions the manifest does not know about are flagged too, so the
+//! manifest and the source cannot diverge silently.
+
+use super::scan::{rng_site_for_fn, rng_sites};
+use super::{LintTree, Violation};
+
+/// Rule identifier.
+pub const RULE: &str = "rng-discipline";
+/// Governing document.
+pub const DOC: &str = "docs/adr/005-delta-sparsity.md";
+
+/// Draw-pairing manifest: group name → the functions (file suffix,
+/// fn name) whose annotated draw counts must agree. The counts
+/// themselves live in the source annotations, not here — the manifest
+/// only says *which* functions form a pairing.
+pub const RNG_GROUPS: &[(&str, &[(&str, &str)])] = &[
+    (
+        "column-share",
+        &[
+            ("satsim/column.rs", "phase_share"),
+            ("satsim/column.rs", "phase_share_masked"),
+            ("satsim/column.rs", "skip_share"),
+        ],
+    ),
+    (
+        "core-share",
+        &[
+            ("satsim/core.rs", "step_partial_slot"),
+            ("satsim/core.rs", "step_partial_slot_delta"),
+        ],
+    ),
+];
+
+/// Run the pass over `tree`.
+pub fn check(tree: &LintTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // (file rel, annotation line) pairs claimed by a manifest fn —
+    // anything left over afterwards is a stray annotation.
+    let mut claimed: Vec<(String, usize)> = Vec::new();
+
+    for (group, members) in RNG_GROUPS {
+        // Reference draw count: the first annotated member present.
+        let mut reference: Option<(u32, String)> = None;
+        for (suffix, name) in *members {
+            let Some(file) = tree.by_suffix(suffix) else {
+                if tree.strict {
+                    out.push(Violation {
+                        file: (*suffix).to_string(),
+                        line: 1,
+                        rule: RULE,
+                        msg: format!("rng manifest file `{suffix}` not found in tree"),
+                        doc: DOC,
+                    });
+                }
+                continue;
+            };
+            let sites = rng_sites(file);
+            let spans = file.find_fns(name);
+            let Some(span) = spans.first() else {
+                if tree.strict {
+                    out.push(Violation {
+                        file: file.rel.clone(),
+                        line: 1,
+                        rule: RULE,
+                        msg: format!(
+                            "rng manifest fn `{name}` not found \
+                             (renamed? update lint/rng.rs)"
+                        ),
+                        doc: DOC,
+                    });
+                }
+                continue;
+            };
+            let Some(site) = rng_site_for_fn(file, &sites, span.sig_line) else {
+                out.push(Violation {
+                    file: file.rel.clone(),
+                    line: span.sig_line + 1,
+                    rule: RULE,
+                    msg: format!(
+                        "fn `{name}` is in rng group `{group}` but has no \
+                         `lint: rng-draws(N, {group})` annotation"
+                    ),
+                    doc: DOC,
+                });
+                continue;
+            };
+            claimed.push((file.rel.clone(), site.line));
+            if site.group != *group {
+                out.push(Violation {
+                    file: file.rel.clone(),
+                    line: site.line + 1,
+                    rule: RULE,
+                    msg: format!(
+                        "fn `{name}` declares rng group `{}` but the manifest \
+                         places it in `{group}`",
+                        site.group
+                    ),
+                    doc: DOC,
+                });
+                continue;
+            }
+            match &reference {
+                None => reference = Some((site.draws, (*name).to_string())),
+                Some((ref_draws, ref_name)) => {
+                    if site.draws != *ref_draws {
+                        out.push(Violation {
+                            file: file.rel.clone(),
+                            line: site.line + 1,
+                            rule: RULE,
+                            msg: format!(
+                                "fn `{name}` declares {} rng draw(s) but group \
+                                 `{group}` peer `{ref_name}` declares {ref_draws} — \
+                                 skip paths must burn the draws their full-path \
+                                 twins consume",
+                                site.draws
+                            ),
+                            doc: DOC,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Stray annotations: rng-draws on fns the manifest does not pair.
+    for file in tree.files.iter().filter(|f| f.is_rust()) {
+        for site in rng_sites(file) {
+            if !claimed.iter().any(|(rel, l)| rel == &file.rel && *l == site.line) {
+                out.push(Violation {
+                    file: file.rel.clone(),
+                    line: site.line + 1,
+                    rule: RULE,
+                    msg: format!(
+                        "stray `rng-draws` annotation (group `{}`) on a fn the \
+                         manifest does not pair — add it to lint/rng.rs or drop it",
+                        site.group
+                    ),
+                    doc: DOC,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAIRED_OK: &str = "\
+// lint: rng-draws(2, column-share)
+pub fn phase_share(&mut self) {}
+// lint: rng-draws(2, column-share)
+pub fn phase_share_masked(&mut self) {}
+// lint: rng-draws(2, column-share)
+pub fn skip_share(&mut self) {}
+";
+
+    #[test]
+    fn matching_counts_are_clean() {
+        let tree = LintTree::from_memory(&[("rust/src/satsim/column.rs", PAIRED_OK)]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn count_mismatch_fires_once() {
+        let src = "\
+// lint: rng-draws(2, column-share)
+pub fn phase_share(&mut self) {}
+// lint: rng-draws(1, column-share)
+pub fn skip_share(&mut self) {}
+";
+        let tree = LintTree::from_memory(&[("rust/src/satsim/column.rs", src)]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE);
+        assert_eq!(v[0].line, 3);
+        assert!(v[0].msg.contains("skip_share"));
+    }
+
+    #[test]
+    fn removed_annotation_fires() {
+        let src = "\
+// lint: rng-draws(2, column-share)
+pub fn phase_share(&mut self) {}
+pub fn skip_share(&mut self) {}
+";
+        let tree = LintTree::from_memory(&[("rust/src/satsim/column.rs", src)]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("no `lint: rng-draws"));
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn stray_annotation_fires() {
+        let src = "\
+// lint: rng-draws(3, mystery)
+pub fn helper() {}
+";
+        let tree = LintTree::from_memory(&[("rust/src/satsim/noise.rs", src)]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("stray"));
+    }
+
+    #[test]
+    fn wrong_group_name_fires() {
+        let src = "\
+// lint: rng-draws(2, column-share)
+pub fn phase_share(&mut self) {}
+// lint: rng-draws(2, other-group)
+pub fn skip_share(&mut self) {}
+";
+        let tree = LintTree::from_memory(&[("rust/src/satsim/column.rs", src)]);
+        let v = check(&tree);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("other-group"));
+    }
+}

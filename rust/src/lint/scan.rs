@@ -1,0 +1,589 @@
+//! Lightweight Rust source scanner for `repolint`.
+//!
+//! This is deliberately *not* a parser. The rule passes in the sibling
+//! modules only need to know, for every line of a source file, which
+//! bytes are code, which are comment text, and which are string-literal
+//! contents — plus where functions start and end and where the trailing
+//! `#[cfg(test)]` module begins. A character-level state machine over
+//! the raw text gives us exactly that with zero dependencies (see
+//! ADR-006 for why we scan tokens instead of pulling in `syn`).
+//!
+//! For each input line the scanner produces three parallel buffers of
+//! identical length:
+//!
+//! * `code`    — the line with comment text and string/char-literal
+//!   *contents* blanked to spaces (delimiters are kept, so `"x"`
+//!   becomes `" "`). All structural matching runs on this buffer.
+//! * `comment` — only the comment text, everything else blanked.
+//!   Annotation parsing (`// lint: ...`, `// SAFETY:`) runs here.
+//! * `strings` — only string-literal contents, everything else
+//!   blanked. Metric-name extraction runs here.
+
+/// Scanner state that survives across line boundaries.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Mode {
+    /// Plain code.
+    Code,
+    /// Inside `/* ... */`, tracking nesting depth.
+    BlockComment(u32),
+    /// Inside a `"..."` string literal.
+    Str,
+    /// Inside a raw string literal `r##"..."##` with the given number
+    /// of `#` marks.
+    RawStr(u32),
+}
+
+/// One scanned source or text file.
+///
+/// Markdown and other non-Rust files are stored with `raw` only (the
+/// derived buffers simply mirror the raw text so text rules can share
+/// the same lookup helpers).
+pub struct SourceFile {
+    /// Path relative to the repo root, with forward slashes
+    /// (e.g. `rust/src/satsim/column.rs`).
+    pub rel: String,
+    /// Raw lines as read from disk.
+    pub raw: Vec<String>,
+    /// Per-line code buffer (comments and literal contents blanked).
+    pub code: Vec<String>,
+    /// Per-line comment-text buffer.
+    pub comment: Vec<String>,
+    /// Per-line string-literal-contents buffer.
+    pub strings: Vec<String>,
+    /// `true` for lines inside a `#[cfg(test)]` module.
+    pub in_test: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Scan `text` as Rust source.
+    pub fn rust(rel: &str, text: &str) -> SourceFile {
+        let raw: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let mut code = Vec::with_capacity(raw.len());
+        let mut comment = Vec::with_capacity(raw.len());
+        let mut strings = Vec::with_capacity(raw.len());
+        let mut mode = Mode::Code;
+        for line in &raw {
+            let (c, m, s, next) = scan_line(line, mode);
+            code.push(c);
+            comment.push(m);
+            strings.push(s);
+            mode = next;
+        }
+        let in_test = mark_test_regions(&code);
+        SourceFile { rel: rel.to_string(), raw, code, comment, strings, in_test }
+    }
+
+    /// Wrap `text` as a plain text (non-Rust) file: every derived
+    /// buffer aliases the raw line so the same helpers apply.
+    pub fn text(rel: &str, text: &str) -> SourceFile {
+        let raw: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let n = raw.len();
+        SourceFile {
+            rel: rel.to_string(),
+            code: raw.clone(),
+            comment: vec![String::new(); n],
+            strings: raw.clone(),
+            raw,
+            in_test: vec![false; n],
+        }
+    }
+
+    /// Whether this file is Rust source (by extension).
+    pub fn is_rust(&self) -> bool {
+        self.rel.ends_with(".rs")
+    }
+
+    /// Whether any buffer of any line contains `needle` (raw search —
+    /// used for text files and docs cross-references).
+    pub fn contains(&self, needle: &str) -> bool {
+        self.raw.iter().any(|l| l.contains(needle))
+    }
+
+    /// Find all functions named `name` (exact token match) defined
+    /// outside test regions, returning their spans.
+    pub fn find_fns(&self, name: &str) -> Vec<FnSpan> {
+        let mut out = Vec::new();
+        for (i, line) in self.code.iter().enumerate() {
+            if self.in_test[i] {
+                continue;
+            }
+            if let Some(col) = find_fn_token(line, name) {
+                let (open, close) = match self.body_span(i, col) {
+                    Some(span) => span,
+                    None => continue,
+                };
+                out.push(FnSpan { name: name.to_string(), sig_line: i, open, close });
+            }
+        }
+        out
+    }
+
+    /// Given the signature line of a fn, locate the `{`..`}` span of
+    /// its body. Returns 0-based line indices `(open, close)`.
+    fn body_span(&self, sig_line: usize, sig_col: usize) -> Option<(usize, usize)> {
+        let mut depth: i32 = 0;
+        let mut open_line = None;
+        for i in sig_line..self.code.len() {
+            let start = if i == sig_line { sig_col } else { 0 };
+            for ch in self.code[i][start.min(self.code[i].len())..].chars() {
+                match ch {
+                    '{' => {
+                        if open_line.is_none() {
+                            open_line = Some(i);
+                        }
+                        depth += 1;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 && open_line.is_some() {
+                            return Some((open_line.unwrap(), i));
+                        }
+                    }
+                    // A signature that ends in `;` before any `{` is a
+                    // trait method declaration — no body.
+                    ';' if open_line.is_none() => return None,
+                    _ => {}
+                }
+            }
+        }
+        None
+    }
+}
+
+/// The location of one function definition.
+pub struct FnSpan {
+    /// Function name as matched.
+    pub name: String,
+    /// 0-based line of the `fn` keyword.
+    pub sig_line: usize,
+    /// 0-based line of the opening `{`.
+    pub open: usize,
+    /// 0-based line of the matching `}`.
+    pub close: usize,
+}
+
+/// Find `fn <name>(` (or `fn <name><`) as a whole token in a code
+/// line; returns the byte offset of the `fn` keyword.
+fn find_fn_token(line: &str, name: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find("fn ") {
+        let at = from + pos;
+        from = at + 3;
+        // `fn` must be its own word: start of line or preceded by a
+        // non-identifier character.
+        if at > 0 {
+            let prev = bytes[at - 1] as char;
+            if prev.is_alphanumeric() || prev == '_' {
+                continue;
+            }
+        }
+        let rest = line[at + 3..].trim_start();
+        if let Some(after) = rest.strip_prefix(name) {
+            match after.chars().next() {
+                Some('(') | Some('<') => return Some(at),
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Mark lines belonging to `#[cfg(test)]` modules. The repo convention
+/// is a single trailing `mod tests`, but this tracks braces so it also
+/// handles a mid-file test module. If brace tracking fails (unbalanced
+/// input), everything from the attribute to EOF is conservatively
+/// marked as test.
+fn mark_test_regions(code: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if !code[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Walk forward to the opening brace of the annotated item.
+        let mut depth: i32 = 0;
+        let mut opened = false;
+        let mut end = code.len() - 1;
+        for (j, line) in code.iter().enumerate().skip(i) {
+            for ch in line.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                    }
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                end = j;
+                break;
+            }
+        }
+        for flag in in_test.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+/// Scan one line, splitting it into code / comment / string buffers
+/// and returning the carry-over state for the next line.
+fn scan_line(line: &str, start: Mode) -> (String, String, String, Mode) {
+    let n = line.len();
+    let mut code = String::with_capacity(n);
+    let mut comment = String::with_capacity(n);
+    let mut strings = String::with_capacity(n);
+    let mut mode = start;
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    // Push one char to `which` and a space to the other two buffers.
+    macro_rules! emit {
+        (code $c:expr) => {{ code.push($c); comment.push(' '); strings.push(' '); }};
+        (comment $c:expr) => {{ code.push(' '); comment.push($c); strings.push(' '); }};
+        (strings $c:expr) => {{ code.push(' '); comment.push(' '); strings.push($c); }};
+    }
+    while i < chars.len() {
+        let c = chars[i];
+        match mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    // Line comment: rest of the line is comment text.
+                    for &cc in &chars[i..] {
+                        emit!(comment cc);
+                    }
+                    i = chars.len();
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    emit!(comment '/');
+                    emit!(comment '*');
+                    i += 2;
+                    mode = Mode::BlockComment(1);
+                } else if c == 'r'
+                    && matches!(chars.get(i + 1), Some(&'"') | Some(&'#'))
+                    && is_raw_string_start(&chars, i)
+                {
+                    // Raw string r"..." or r#"..."# (also br"...").
+                    let mut hashes = 0;
+                    emit!(code 'r');
+                    i += 1;
+                    while chars.get(i) == Some(&'#') {
+                        emit!(code '#');
+                        hashes += 1;
+                        i += 1;
+                    }
+                    // The opening quote.
+                    emit!(code '"');
+                    i += 1;
+                    mode = Mode::RawStr(hashes);
+                } else if c == '"' {
+                    emit!(code '"');
+                    i += 1;
+                    mode = Mode::Str;
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // '\n' style: skip to closing quote.
+                        emit!(code '\'');
+                        i += 2;
+                        emit!(strings '\\');
+                        while i < chars.len() && chars[i] != '\'' {
+                            emit!(strings chars[i]);
+                            i += 1;
+                        }
+                        if i < chars.len() {
+                            emit!(code '\'');
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        // 'a' style char literal.
+                        emit!(code '\'');
+                        emit!(strings chars[i + 1]);
+                        emit!(code '\'');
+                        i += 3;
+                    } else {
+                        // Lifetime: plain code.
+                        emit!(code '\'');
+                        i += 1;
+                    }
+                } else {
+                    emit!(code c);
+                    i += 1;
+                }
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    emit!(comment '*');
+                    emit!(comment '/');
+                    i += 2;
+                    mode = if depth > 1 { Mode::BlockComment(depth - 1) } else { Mode::Code };
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    emit!(comment '/');
+                    emit!(comment '*');
+                    i += 2;
+                    mode = Mode::BlockComment(depth + 1);
+                } else {
+                    emit!(comment c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    emit!(strings '\\');
+                    if i + 1 < chars.len() {
+                        emit!(strings chars[i + 1]);
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    emit!(code '"');
+                    i += 1;
+                    mode = Mode::Code;
+                } else {
+                    emit!(strings c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && raw_string_closes(&chars, i, hashes) {
+                    emit!(code '"');
+                    i += 1;
+                    for _ in 0..hashes {
+                        emit!(code '#');
+                        i += 1;
+                    }
+                    mode = Mode::Code;
+                } else {
+                    emit!(strings c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // A normal string or char literal never spans lines in this
+    // codebase; block comments and raw strings do.
+    let carry = match mode {
+        Mode::Str => Mode::Code,
+        m => m,
+    };
+    (code, comment, strings, carry)
+}
+
+/// Whether the `r` at `chars[at]` starts a raw string (as opposed to
+/// being the tail of an identifier like `var"`, which is not valid
+/// Rust anyway, or `r` in `for`).
+fn is_raw_string_start(chars: &[char], at: usize) -> bool {
+    if at > 0 {
+        let prev = chars[at - 1];
+        if prev.is_alphanumeric() || prev == '_' {
+            return false;
+        }
+    }
+    // `r` must be followed by zero or more `#` then `"`.
+    let mut j = at + 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Whether the `"` at `chars[at]` closes a raw string with `hashes`
+/// trailing `#` marks.
+fn raw_string_closes(chars: &[char], at: usize, hashes: u32) -> bool {
+    for k in 0..hashes as usize {
+        if chars.get(at + 1 + k) != Some(&'#') {
+            return false;
+        }
+    }
+    true
+}
+
+/// A `// lint: allow(kind, reason)` annotation parsed from a comment.
+pub struct AllowSite {
+    /// 0-based line the allow applies to (the annotated code line).
+    pub line: usize,
+    /// `alloc` or `panic`.
+    pub kind: String,
+}
+
+/// Collect `// lint: allow(...)` annotations and resolve which code
+/// line each one governs: an annotation sharing a line with code
+/// covers that line; a standalone annotation covers the next line that
+/// contains code.
+pub fn allow_sites(f: &SourceFile) -> Vec<AllowSite> {
+    let mut out = Vec::new();
+    for i in 0..f.comment.len() {
+        let Some(kind) = parse_allow(&f.comment[i]) else { continue };
+        let line = if f.code[i].trim().is_empty() {
+            // Standalone: attach to the next code-bearing line.
+            match (i + 1..f.code.len()).find(|&j| !f.code[j].trim().is_empty()) {
+                Some(j) => j,
+                None => i,
+            }
+        } else {
+            i
+        };
+        out.push(AllowSite { line, kind });
+    }
+    out
+}
+
+/// Parse `lint: allow(kind, reason)` out of one comment line. The
+/// reason is mandatory — an allow without one does not count.
+fn parse_allow(comment: &str) -> Option<String> {
+    let at = comment.find("lint: allow(")?;
+    let inner = &comment[at + "lint: allow(".len()..];
+    let close = inner.find(')')?;
+    let body = &inner[..close];
+    let mut parts = body.splitn(2, ',');
+    let kind = parts.next()?.trim();
+    let reason = parts.next()?.trim();
+    if kind.is_empty() || reason.is_empty() {
+        return None;
+    }
+    Some(kind.to_string())
+}
+
+/// A `// lint: rng-draws(N, group)` annotation.
+pub struct RngSite {
+    /// 0-based line of the annotation comment.
+    pub line: usize,
+    /// Declared number of RNG draws.
+    pub draws: u32,
+    /// Pairing group name.
+    pub group: String,
+}
+
+/// Collect all `rng-draws` annotations in a file.
+pub fn rng_sites(f: &SourceFile) -> Vec<RngSite> {
+    let mut out = Vec::new();
+    for (i, c) in f.comment.iter().enumerate() {
+        let Some(at) = c.find("lint: rng-draws(") else { continue };
+        let inner = &c[at + "lint: rng-draws(".len()..];
+        let Some(close) = inner.find(')') else { continue };
+        let body = &inner[..close];
+        let mut parts = body.splitn(2, ',');
+        let draws = parts.next().and_then(|n| n.trim().parse::<u32>().ok());
+        let group = parts.next().map(|g| g.trim().to_string());
+        if let (Some(draws), Some(group)) = (draws, group) {
+            if !group.is_empty() {
+                out.push(RngSite { line: i, draws, group });
+            }
+        }
+    }
+    out
+}
+
+/// Find the `rng-draws` annotation attached to the fn whose signature
+/// is at `sig_line`: the annotation must sit on the signature line or
+/// in the contiguous run of comment/attribute/blank lines directly
+/// above it.
+pub fn rng_site_for_fn<'a>(f: &SourceFile, sites: &'a [RngSite], sig_line: usize) -> Option<&'a RngSite> {
+    let mut top = sig_line;
+    while top > 0 {
+        let above = top - 1;
+        let code = f.code[above].trim();
+        let is_attr = code.starts_with("#[");
+        let is_blankish = code.is_empty();
+        if is_attr || is_blankish {
+            top = above;
+        } else {
+            break;
+        }
+    }
+    sites.iter().find(|s| s.line >= top && s.line <= sig_line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_separated() {
+        let f = SourceFile::rust(
+            "t.rs",
+            "let x = \"a.push(1)\"; // c.push(2)\nlet y = 1; /* block\n still */ let z = 2;\n",
+        );
+        assert!(!f.code[0].contains("a.push"));
+        assert!(f.strings[0].contains("a.push(1)"));
+        assert!(f.comment[0].contains("c.push(2)"));
+        assert!(f.comment[1].contains("block"));
+        assert!(f.comment[2].contains("still"));
+        assert!(f.code[2].contains("let z = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked_from_code() {
+        let f = SourceFile::rust("t.rs", "let s = r#\"v.push(9) \"quoted\" \"#; s.len();");
+        assert!(!f.code[0].contains("v.push"));
+        assert!(f.strings[0].contains("v.push(9)"));
+        assert!(f.code[0].contains("s.len();"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = SourceFile::rust("t.rs", "fn get<'a>(&'a self) -> &'a str { \"x\" }");
+        assert!(f.code[0].contains("fn get<'a>"));
+        assert!(f.strings[0].contains('x'));
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_string() {
+        let f = SourceFile::rust("t.rs", "if c == '\"' { v.push(c); }");
+        assert!(f.code[0].contains("v.push(c)"));
+    }
+
+    #[test]
+    fn test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = SourceFile::rust("t.rs", src);
+        assert_eq!(f.in_test, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn fn_finder_matches_exact_token() {
+        let src = "fn step_slot() {}\nfn step(x: u8) {\n    let y = x;\n}\n";
+        let f = SourceFile::rust("t.rs", src);
+        let fns = f.find_fns("step");
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].sig_line, 1);
+        assert_eq!(fns[0].close, 3);
+    }
+
+    #[test]
+    fn allow_requires_a_reason() {
+        let f = SourceFile::rust(
+            "t.rs",
+            "v.push(1); // lint: allow(alloc, cold path)\nw.push(2); // lint: allow(alloc)\n",
+        );
+        let sites = allow_sites(&f);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].line, 0);
+        assert_eq!(sites[0].kind, "alloc");
+    }
+
+    #[test]
+    fn standalone_allow_attaches_to_next_code_line() {
+        let f = SourceFile::rust(
+            "t.rs",
+            "// lint: allow(panic, startup only)\n\nthread::spawn(x).expect(\"boom\");\n",
+        );
+        let sites = allow_sites(&f);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].line, 2);
+    }
+
+    #[test]
+    fn rng_annotation_binds_through_attributes() {
+        let src = "// lint: rng-draws(2, share)\n#[inline]\npub fn phase_share() {}\n";
+        let f = SourceFile::rust("t.rs", src);
+        let sites = rng_sites(&f);
+        assert_eq!(sites.len(), 1);
+        let hit = rng_site_for_fn(&f, &sites, 2).expect("annotation should bind");
+        assert_eq!(hit.draws, 2);
+        assert_eq!(hit.group, "share");
+    }
+}

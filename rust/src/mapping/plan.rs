@@ -22,10 +22,12 @@ pub struct TilePlan {
 }
 
 impl TilePlan {
+    /// Rows spanned on this core.
     pub fn n_rows(&self) -> usize {
         self.rows.1 - self.rows.0
     }
 
+    /// Columns spanned on this core.
     pub fn n_cols(&self) -> usize {
         self.cols.1 - self.cols.0
     }
@@ -34,13 +36,18 @@ impl TilePlan {
 /// Placement of one layer onto row_tiles × col_tiles cores.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerPlan {
+    /// Index of the layer this plan places.
     pub layer: usize,
+    /// Logical input width.
     pub n_in: usize,
+    /// Logical output width.
     pub n_out: usize,
     /// Row replication factor of a narrow layer (1 for row-split layers;
     /// replication and row splitting are mutually exclusive).
     pub replication: usize,
+    /// Core tiles along the input (row) axis.
     pub row_tiles: usize,
+    /// Core tiles along the output (column) axis.
     pub col_tiles: usize,
     /// Column-tile major, row tile inner: `tiles[ct * row_tiles + rt]`.
     /// For `row_tiles == 1` this is the plain left-to-right column
@@ -49,6 +56,7 @@ pub struct LayerPlan {
 }
 
 impl LayerPlan {
+    /// Whether the layer's inputs span multiple row tiles.
     pub fn is_row_split(&self) -> bool {
         self.row_tiles > 1
     }
@@ -75,8 +83,11 @@ impl LayerPlan {
 /// sketch and keeps the clock phases of different layers independent).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Plan {
+    /// Per-core physical geometry.
     pub geometry: CoreGeometry,
+    /// One placement per network layer.
     pub layers: Vec<LayerPlan>,
+    /// Total cores consumed by the plan.
     pub n_cores: usize,
 }
 

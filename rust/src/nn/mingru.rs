@@ -15,10 +15,12 @@ pub const READOUT_STEPS: usize = 8;
 /// Per-layer recurrent state.
 #[derive(Debug, Clone)]
 pub struct LayerState {
+    /// Hidden state, length n_out.
     pub h: Vec<f32>,
 }
 
 impl LayerState {
+    /// All-zero state of width `n`.
     pub fn zeros(n: usize) -> LayerState {
         LayerState { h: vec![0.0; n] }
     }
@@ -27,9 +29,13 @@ impl LayerState {
 /// Observables of one layer step (the Fig 4 trace quantities, logical).
 #[derive(Debug, Clone)]
 pub struct LayerTrace {
+    /// Gate values.
     pub z: Vec<f32>,
+    /// Candidate states.
     pub htilde: Vec<f32>,
+    /// Updated hidden states.
     pub h: Vec<f32>,
+    /// Readout/event outputs.
     pub y: Vec<f32>,
 }
 
@@ -125,9 +131,11 @@ pub fn layer_step(
 
 /// Full-network streaming evaluator (hardware-exact, logical units).
 pub struct GoldenNetwork {
+    /// The trained network being evaluated.
     pub weights: NetworkWeights,
     wh_eff: Vec<Vec<f32>>,
     wz_eff: Vec<Vec<f32>>,
+    /// Per-layer recurrent state.
     pub states: Vec<LayerState>,
     /// readout accumulator: last READOUT_STEPS analog states of the head
     readout_ring: Vec<Vec<f32>>,
@@ -149,10 +157,12 @@ pub struct GoldenNetwork {
     /// `DeltaCounters` components on an unreplicated single-layer plan
     /// (tests/properties.rs pins the skip decisions identical).
     pub delta_fired: u64,
+    /// Components held under the delta threshold (see `delta_fired`).
     pub delta_skipped: u64,
 }
 
 impl GoldenNetwork {
+    /// An evaluator over `weights`, state zeroed.
     pub fn new(weights: NetworkWeights) -> GoldenNetwork {
         GoldenNetwork::with_delta(weights, 0.0)
     }
@@ -195,6 +205,7 @@ impl GoldenNetwork {
         }
     }
 
+    /// Zero all recurrent state and the readout ring.
     pub fn reset(&mut self) {
         for s in self.states.iter_mut() {
             s.h.fill(0.0);
@@ -298,6 +309,7 @@ impl GoldenNetwork {
     }
 }
 
+/// Index of the maximum element (first on ties).
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()

@@ -13,13 +13,17 @@ use crate::io::tensorfile::TensorFile;
 /// model and the codesign mapping consume.
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
+    /// Logical input width.
     pub n_in: usize,
+    /// Logical output width.
     pub n_out: usize,
     /// 2-bit code planes, row-major [n_in, n_out], values 0..3.
     pub wh_codes: Vec<i32>,
+    /// Gate 2-bit code plane, row-major [n_in, n_out].
     pub wz_codes: Vec<i32>,
     /// Per-tensor weight scales (effective weight = (code−1.5)·scale).
     pub wh_scale: f32,
+    /// Gate weight scale.
     pub wz_scale: f32,
     /// 6-bit-quantized biases in logical units (code·scale), length n_out.
     /// bh = comparator threshold θ (hidden layers) / digital readout bias.
@@ -30,6 +34,7 @@ pub struct LayerWeights {
     pub alpha: f32,
     /// Unquantized fp biases (diagnostics / re-export).
     pub bh_raw: Vec<f32>,
+    /// Unquantized fp gate biases (diagnostics / re-export).
     pub bz_raw: Vec<f32>,
 }
 
@@ -42,6 +47,7 @@ impl LayerWeights {
             .collect()
     }
 
+    /// Effective fp gate weights (row-major [n_in, n_out]).
     pub fn wz_eff(&self) -> Vec<f32> {
         self.wz_codes
             .iter()
@@ -53,22 +59,29 @@ impl LayerWeights {
 /// A full trained network.
 #[derive(Debug, Clone)]
 pub struct NetworkWeights {
+    /// Layer widths, input first.
     pub dims: Vec<usize>,
+    /// Training variant tag (e.g. `hw`).
     pub variant: String,
+    /// Scale applied to the readout logits.
     pub logit_scale: f32,
+    /// Per-layer quantized weights.
     pub layers: Vec<LayerWeights>,
 }
 
 impl NetworkWeights {
+    /// Number of weight layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
 
+    /// Load weights from a tensorfile at `path`.
     pub fn load(path: &str) -> Result<NetworkWeights> {
         let tf = TensorFile::load(path)?;
         Self::from_tensorfile(&tf)
     }
 
+    /// Decode weights from a parsed tensorfile.
     pub fn from_tensorfile(tf: &TensorFile) -> Result<NetworkWeights> {
         let dims: Vec<usize> = tf
             .req("meta.dims")?

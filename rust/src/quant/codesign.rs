@@ -32,6 +32,7 @@ use crate::satsim::column::ColumnConfig;
 /// engine slices each column into the row ranges of its plan tiles.
 #[derive(Debug, Clone)]
 pub struct LayerCircuit {
+    /// Full logical columns (replication applied).
     pub columns: Vec<ColumnConfig>,
     /// Row replication factor: a layer with n_in ≪ core rows is mapped
     /// with each logical input repeated r times across physical rows.
@@ -43,10 +44,12 @@ pub struct LayerCircuit {
     pub replication: usize,
     /// Diagnostics: desired vs realized ADC slope (codes/V).
     pub slope_desired: f64,
+    /// The slope realized by the segment-switch setting.
     pub slope_realized: f64,
 }
 
 impl LayerCircuit {
+    /// Relative error of realized vs desired slope.
     pub fn slope_rel_error(&self) -> f64 {
         (self.slope_realized - self.slope_desired).abs() / self.slope_desired
     }

@@ -16,6 +16,7 @@ pub mod codesign;
 pub struct W2(pub u8);
 
 impl W2 {
+    /// A 2-bit weight from code 0..3.
     pub fn new(code: u8) -> W2 {
         assert!(code < 4, "W2 code out of range: {code}");
         W2(code)
@@ -44,15 +45,18 @@ pub fn weight_scale(w: &[f32]) -> f32 {
 pub struct B6(pub i8);
 
 impl B6 {
+    /// A 6-bit bias from a signed code.
     pub fn new(code: i32) -> B6 {
         assert!((-32..=31).contains(&code), "B6 code out of range: {code}");
         B6(code as i8)
     }
 
+    /// Quantize `b_over_scale` to the nearest 6-bit code.
     pub fn from_scaled(b_over_scale: f32) -> B6 {
         B6(b_over_scale.round().clamp(-32.0, 31.0) as i8)
     }
 
+    /// The dequantized value.
     pub fn value(self) -> f32 {
         self.0 as f32
     }
@@ -70,6 +74,7 @@ pub fn bias_scale(b: &[f32]) -> f32 {
 pub struct Z6(pub u8);
 
 impl Z6 {
+    /// A 6-bit gate code (0..63).
     pub fn new(code: u8) -> Z6 {
         assert!(code < 64, "Z6 code out of range: {code}");
         Z6(code)

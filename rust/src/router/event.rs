@@ -30,6 +30,7 @@ pub fn delta_encode(
     debug_assert_eq!(prev.len(), curr.len());
     for (unit, (&p, &c)) in prev.iter().zip(curr.iter()).enumerate() {
         if p != c {
+            // lint: allow(alloc, push into the caller's event buffer; the fabric pre-reserves worst-case capacity)
             out.push(Event { t, layer, unit: unit as u16, on: c });
         }
     }

@@ -12,16 +12,19 @@ pub struct PortState {
 }
 
 impl PortState {
+    /// An all-false frame of `width`.
     pub fn new(width: usize) -> PortState {
         PortState { frame: vec![false; width] }
     }
 
+    /// Copy the frame into `out` as 0.0/1.0.
     pub fn as_f64(&self, out: &mut [f64]) {
         for (o, &b) in out.iter_mut().zip(self.frame.iter()) {
             *o = b as u8 as f64;
         }
     }
 
+    /// Copy the frame into `out` as 0.0/1.0.
     pub fn as_f32(&self, out: &mut [f32]) {
         for (o, &b) in out.iter_mut().zip(self.frame.iter()) {
             *o = b as u8 as f32;
@@ -41,6 +44,7 @@ pub struct Fabric {
     events: Vec<Event>,
     /// Statistics.
     pub events_routed: u64,
+    /// Frames delivered since construction.
     pub frames_routed: u64,
 }
 
@@ -60,6 +64,7 @@ impl Fabric {
         }
     }
 
+    /// Return every port to the all-false start state.
     pub fn reset(&mut self) {
         for p in self.ports.iter_mut() {
             p.frame.fill(false);

@@ -23,6 +23,7 @@ mod imp {
     /// A compiled XLA executable plus its I/O description.
     pub struct Executable {
         exe: xla::PjRtLoadedExecutable,
+        /// Model name the executable was loaded under.
         pub name: String,
     }
 
@@ -32,12 +33,14 @@ mod imp {
     }
 
     impl Runtime {
+        /// A runtime on the host CPU platform.
         pub fn cpu() -> Result<Runtime> {
             let client = xla::PjRtClient::cpu()
                 .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
             Ok(Runtime { client })
         }
 
+        /// Name of the PJRT platform in use.
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -117,6 +120,7 @@ mod imp {
     /// are bound to the thread that created them — backends must be
     /// constructed on their worker thread either way.
     pub struct Executable {
+        /// Model name the executable was loaded under.
         pub name: String,
         _not_send: PhantomData<*const ()>,
     }
@@ -127,20 +131,24 @@ mod imp {
     }
 
     impl Runtime {
+        /// The stub runtime (PJRT feature disabled).
         pub fn cpu() -> Result<Runtime> {
             bail!(UNAVAILABLE)
         }
 
+        /// Name of the (stub) platform.
         pub fn platform(&self) -> String {
             "stub (no pjrt feature)".to_string()
         }
 
+        /// Unavailable in the stub build — always errors.
         pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
             bail!(UNAVAILABLE)
         }
     }
 
     impl Executable {
+        /// Unavailable in the stub build — always errors.
         pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
             bail!(UNAVAILABLE)
         }

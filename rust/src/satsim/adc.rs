@@ -24,10 +24,12 @@ use crate::util::rng::Rng;
 /// noise (per decision).
 #[derive(Debug, Clone)]
 pub struct Comparator {
+    /// Input-referred offset voltage.
     pub offset_v: f64,
 }
 
 impl Comparator {
+    /// Draw a comparator with mismatch-sampled offset.
     pub fn new(cfg: &CircuitConfig, rng: &mut Rng) -> Comparator {
         let offset_v = if cfg.ideal {
             0.0
@@ -65,15 +67,19 @@ pub struct SarAdc {
     /// mismatch) plus one terminating unit cap → total ≈ 64 units.
     dac_c: [f64; 6],
     c_term: f64,
+    /// The decision comparator.
     pub comparator: Comparator,
 }
 
+/// SAR resolution in bits.
 pub const ADC_BITS: u32 = 6;
+/// Number of output codes (2^bits).
 pub const ADC_CODES: u32 = 64;
 /// Neutral offset code: input = V_0 maps to mid-scale (hardsig(0)=0.5).
 pub const OFFSET_NEUTRAL: u8 = 32;
 
 impl SarAdc {
+    /// Draw an ADC instance with mismatch-sampled DAC caps.
     pub fn new(cfg: &CircuitConfig, rng: &mut Rng) -> SarAdc {
         let sigma = if cfg.ideal { 0.0 } else { cfg.sigma_c };
         let mut dac_c = [0.0; 6];

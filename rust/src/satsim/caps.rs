@@ -14,7 +14,9 @@ use crate::util::rng::Rng;
 /// per-capacitor top-plate voltages.
 #[derive(Debug, Clone)]
 pub struct CapBank {
+    /// Per-capacitor capacitances (farads).
     pub c: Vec<f64>,
+    /// Per-capacitor top-plate voltages.
     pub v: Vec<f64>,
     /// Cached per-cap kT/C sampling noise σ (capacitances are fixed at
     /// construction, so the sqrt is hoisted out of the hot loop).
@@ -49,10 +51,12 @@ impl CapBank {
         }
     }
 
+    /// Number of capacitors.
     pub fn len(&self) -> usize {
         self.c.len()
     }
 
+    /// Whether the bank is empty.
     pub fn is_empty(&self) -> bool {
         self.c.is_empty()
     }

@@ -41,9 +41,13 @@ pub struct ColumnConfig {
 /// Observables of one column step — the Fig 4 trace quantities.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ColumnStep {
+    /// Converted gate code.
     pub z: Z6,
+    /// Candidate-state voltage after the share.
     pub v_htilde: f64,
+    /// Updated state voltage.
     pub v_h: f64,
+    /// Comparator event output.
     pub y: bool,
 }
 
@@ -109,7 +113,9 @@ impl ColumnSlot {
 }
 
 #[derive(Debug, Clone)]
+/// One physical output column of a core.
 pub struct Column {
+    /// Static per-column configuration (weights, thresholds).
     pub cfg_col: ColumnConfig,
     /// 2N caps: pair i = indices (2i, 2i+1).
     pair_bank: CapBank,
@@ -118,6 +124,7 @@ pub struct Column {
     h_sel: Vec<bool>,
     /// N z sampling caps.
     z_bank: CapBank,
+    /// The column's gate ADC.
     pub adc: SarAdc,
     /// Column line parasitics (track their held voltage between steps).
     v_line_htilde: f64,
@@ -151,6 +158,7 @@ pub struct Column {
 }
 
 impl Column {
+    /// Build a column, drawing its mismatch from `rng`.
     pub fn new(cfg_col: ColumnConfig, cfg: &CircuitConfig, rng: &mut Rng) -> Column {
         let n = cfg_col.w_h.len();
         assert_eq!(n, cfg_col.w_z.len());
@@ -189,6 +197,7 @@ impl Column {
         }
     }
 
+    /// Physical rows (replication included).
     pub fn rows(&self) -> usize {
         self.h_sel.len()
     }
@@ -309,6 +318,7 @@ impl Column {
     fn rebuild_idx_h(&mut self) {
         self.idx_h.clear();
         for i in 0..self.h_sel.len() {
+            // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
             self.idx_h.push(2 * i + self.h_sel[i] as usize);
         }
     }
@@ -338,6 +348,7 @@ impl Column {
     /// when this column is one row tile of a split layer. The step is
     /// completed by [`Column::phase_update`] (after an optional
     /// [`Column::override_share`] with the inter-tile combined values).
+    // lint: rng-draws(2, column-share)
     pub fn phase_share(
         &mut self,
         x: &[f64],
@@ -365,6 +376,7 @@ impl Column {
                 Self::drive(cfg, x[i], self.cfg_col.w_z[i]),
                 meter,
             );
+            // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
             self.idx_free.push(free);
         }
 
@@ -402,6 +414,7 @@ impl Column {
     /// unchanged over the full cap sets — identical summation order and
     /// identical noise draws — so with every component fired this is
     /// bit-identical to [`Column::phase_share`], meter included.
+    // lint: rng-draws(2, column-share)
     pub fn phase_share_masked(
         &mut self,
         x: &[f64],
@@ -429,6 +442,7 @@ impl Column {
                 self.pair_bank.v[free] = vh;
                 self.z_bank.v[i] = vz;
             }
+            // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
             self.idx_free.push(free);
         }
 
@@ -471,10 +485,12 @@ impl Column {
     /// lockstep at `delta > 0`. The caps themselves are not written:
     /// the engine's finish phase applies the combined share result via
     /// [`Column::override_share`] before [`Column::phase_update`] runs.
+    // lint: rng-draws(2, column-share)
     pub fn skip_share(&mut self, cfg: &CircuitConfig, rng: &mut Rng) -> (f64, f64) {
         let n = self.rows();
         self.idx_free.clear();
         for i in 0..n {
+            // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
             self.idx_free.push(2 * i + (!self.h_sel[i]) as usize);
         }
         if !cfg.ideal {

@@ -58,13 +58,17 @@ impl DeltaCounters {
 }
 
 #[derive(Debug, Clone)]
+/// One physical switched-capacitor core.
 pub struct Core {
+    /// Physical row/column capacity.
     pub geometry: CoreGeometry,
     /// Rows actually connected (≤ geometry.rows). Unused rows' caps are
     /// disconnected via their segment switches — the same mechanism the
     /// ADC slope control uses — so they do not load the charge share.
     pub active_rows: usize,
+    /// Output columns, left to right.
     pub columns: Vec<Column>,
+    /// Switching-energy accounting for this core.
     pub meter: EnergyMeter,
     /// Per-slot master noise streams: slot `s` drives sequence `s` of a
     /// lockstep batch. Every slot starts as a clone of `rng0`, so each
@@ -107,6 +111,7 @@ pub struct CoreStep {
 }
 
 impl CoreStep {
+    /// The per-column comparator events of this step.
     pub fn events(&self) -> impl Iterator<Item = bool> + '_ {
         self.steps.iter().map(|s| s.y)
     }
@@ -154,6 +159,7 @@ impl Core {
         }
     }
 
+    /// Number of instantiated columns.
     pub fn n_cols(&self) -> usize {
         self.columns.len()
     }
@@ -266,6 +272,7 @@ impl Core {
     /// matching `step_finish_slot`; the shared `partials` scratch is
     /// overwritten by the next call, whatever its slot — consume it
     /// before issuing another partial.
+    // lint: rng-draws(2, core-share)
     pub fn step_partial_slot(
         &mut self,
         slot: usize,
@@ -282,8 +289,8 @@ impl Core {
             col.bind_slot(slot);
             let mut col_rng = self.slot_rngs[slot].fork(j as u64);
             self.partials
-                .push(col.phase_share(x, cfg, &mut col_rng, &mut self.meter));
-            self.col_rngs[slot].push(col_rng);
+                .push(col.phase_share(x, cfg, &mut col_rng, &mut self.meter)); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all columns)
+            self.col_rngs[slot].push(col_rng); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all columns)
         }
         &self.partials
     }
@@ -298,6 +305,7 @@ impl Core {
     /// Fired components update the tracker; the share sees the held
     /// last-fired value for quiescent ones, so error stays bounded by
     /// the threshold instead of accumulating.
+    // lint: rng-draws(2, core-share)
     fn step_partial_slot_delta(
         &mut self,
         slot: usize,
@@ -314,8 +322,8 @@ impl Core {
                 x_last[i] = xi;
                 n_fired += 1;
             }
-            self.fired.push(fire);
-            self.x_eff.push(x_last[i]);
+            self.fired.push(fire); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
+            self.x_eff.push(x_last[i]); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
         }
         self.delta.components_fired += n_fired;
         self.delta.components_skipped += x.len() as u64 - n_fired;
@@ -338,8 +346,8 @@ impl Core {
                     &mut self.meter,
                 )
             };
-            self.partials.push(share);
-            self.col_rngs[slot].push(col_rng);
+            self.partials.push(share); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all columns)
+            self.col_rngs[slot].push(col_rng); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all columns)
         }
         &self.partials
     }
@@ -392,7 +400,7 @@ impl Core {
                 &mut self.meter,
             );
             self.out_events[j] = s.y;
-            out.steps.push(s);
+            out.steps.push(s); // lint: allow(alloc, push into the caller's cleared per-step buffer which reuses its capacity)
         }
         self.col_rngs[slot].clear();
         self.meter.step_done();

@@ -6,20 +6,29 @@
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
+/// Robust timing summary of one benchmark.
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Iterations measured.
     pub iters: u64,
+    /// Median per-iteration time (ns).
     pub median_ns: f64,
+    /// Median absolute deviation (ns).
     pub mad_ns: f64,
+    /// Fastest iteration (ns).
     pub min_ns: f64,
+    /// Mean per-iteration time (ns).
     pub mean_ns: f64,
 }
 
 impl BenchResult {
+    /// Median per-iteration time as a `Duration`.
     pub fn per_iter(&self) -> Duration {
         Duration::from_nanos(self.median_ns as u64)
     }
 
+    /// Items per second at the median time.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns * 1e-9)
     }
@@ -106,6 +115,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -113,11 +123,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Render to stdout with aligned columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

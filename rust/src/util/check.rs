@@ -15,6 +15,7 @@
 
 use crate::util::rng::Rng;
 
+/// Outcome of one property evaluation (`Err` carries the failure).
 pub type PropResult = Result<(), String>;
 
 /// Assert inside a property; produces a message the runner reports.

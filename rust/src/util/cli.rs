@@ -5,7 +5,9 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default)]
+/// Parsed `--key[=value]` command-line arguments.
 pub struct Args {
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -37,22 +39,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether boolean flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// Parse `--name` as usize, or `default`.
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.opt(name) {
             None => Ok(default),
@@ -62,6 +69,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as u64, or `default`.
     pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.opt(name) {
             None => Ok(default),
@@ -71,6 +79,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as f64, or `default`.
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(name) {
             None => Ok(default),

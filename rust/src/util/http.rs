@@ -50,12 +50,15 @@ impl Default for Limits {
 /// values keep their case with surrounding whitespace trimmed.
 #[derive(Debug)]
 pub struct HttpRequest {
+    /// Uppercase request method.
     pub method: String,
     /// Request target as sent (path + optional `?query`).
     pub target: String,
     /// `HTTP/1.1` or `HTTP/1.0` — anything else is refused with 505.
     pub version: String,
+    /// Header name/value pairs, in arrival order.
     pub headers: Vec<(String, String)>,
+    /// Raw request body.
     pub body: Vec<u8>,
 }
 
@@ -317,12 +320,16 @@ pub fn write_response(
 /// A parsed response on the client side.
 #[derive(Debug)]
 pub struct HttpResponse {
+    /// Response status code.
     pub status: u16,
+    /// Header name/value pairs.
     pub headers: Vec<(String, String)>,
+    /// Raw response body.
     pub body: Vec<u8>,
 }
 
 impl HttpResponse {
+    /// First header value matching `name` (case-insensitive).
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers
             .iter()
@@ -391,6 +398,7 @@ pub struct HttpClient {
 }
 
 impl HttpClient {
+    /// Open a client connection to `addr`.
     pub fn connect(addr: &str) -> std::io::Result<HttpClient> {
         let stream = std::net::TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);

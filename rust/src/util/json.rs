@@ -9,17 +9,26 @@ use std::fmt;
 /// deterministic — handy for golden-file tests.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug)]
+/// Parse failure with byte position.
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -34,6 +43,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // -- accessors ---------------------------------------------------------
 
+    /// Object field `key`, if this is an object.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -41,6 +51,7 @@ impl Json {
         }
     }
 
+    /// Array element `i`, if this is an array.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -48,6 +59,7 @@ impl Json {
         }
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,10 +67,12 @@ impl Json {
         }
     }
 
+    /// The number as i64, if integral.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -66,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -73,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -86,12 +102,14 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json field '{key}'"))
     }
 
+    /// Required numeric field `key`, erroring if absent.
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.req(key)?
             .as_f64()
             .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
     }
 
+    /// Required string field `key`, erroring if absent.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.req(key)?
             .as_str()
@@ -100,10 +118,12 @@ impl Json {
 
     // -- construction ------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Insert or replace field `key` (self must be an object).
     pub fn set(&mut self, key: &str, val: Json) {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val);
@@ -112,6 +132,7 @@ impl Json {
 
     // -- parsing -----------------------------------------------------------
 
+    /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();

@@ -42,6 +42,7 @@ impl Rng {
     }
 
     #[inline]
+    /// The next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]

@@ -23,7 +23,8 @@ use std::time::Duration;
 
 use minimalist::coordinator::loadgen::{self, LoadGenOpts};
 use minimalist::coordinator::{
-    BatchPolicy, GoldenBackend, HttpConfig, HttpServer, Server, StreamServer,
+    status_for, BatchPolicy, GoldenBackend, HttpConfig, HttpServer, ServeError,
+    Server, StreamServer,
 };
 use minimalist::nn::{argmax, synthetic_network, GoldenNetwork};
 use minimalist::util::http::{read_response, HttpClient, HttpResponse};
@@ -399,9 +400,10 @@ fn slot_exhaustion_maps_to_429_and_recovers() {
     let r = c.request("POST", "/v1/session", None).unwrap();
     assert_eq!(r.status, 201, "{}", r.text());
     let sid = r.json().unwrap().req_f64("session").unwrap() as u64;
-    // admission control: the second open is rejected, not queued
+    // admission control: the second open is rejected, not queued —
+    // with the status the canonical mapping assigns to Busy (429)
     let busy = c.request("POST", "/v1/session", None).unwrap();
-    assert_eq!(busy.status, 429, "{}", busy.text());
+    assert_eq!(busy.status, status_for(&ServeError::Busy), "{}", busy.text());
     assert_eq!(busy.json().unwrap().req_str("error").unwrap(), "busy");
     // closing frees the slot and the next open succeeds
     let dr = c.request("DELETE", &format!("/v1/session/{sid}"), None).unwrap();
@@ -450,7 +452,7 @@ fn engine_loss_maps_to_503_and_evicts_the_session() {
     let pr = c
         .request("POST", &format!("/v1/session/{sid}/frames"), Some(&body))
         .unwrap();
-    assert_eq!(pr.status, 503, "{}", pr.text());
+    assert_eq!(pr.status, status_for(&ServeError::Lost), "{}", pr.text());
     assert_eq!(pr.json().unwrap().req_str("error").unwrap(), "lost");
     // the stale handle was evicted: the id now 404s instead of 503ing
     let gone = c
@@ -460,7 +462,7 @@ fn engine_loss_maps_to_503_and_evicts_the_session() {
     // one-shot classification over a dead engine is 503 too
     let cb = Json::obj(vec![("sequence", vec![0.5f64].into())]);
     let cr = c.request("POST", "/v1/classify", Some(&cb)).unwrap();
-    assert_eq!(cr.status, 503, "{}", cr.text());
+    assert_eq!(cr.status, status_for(&ServeError::Lost), "{}", cr.text());
     http.shutdown();
 }
 

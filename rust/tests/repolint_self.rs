@@ -1,0 +1,280 @@
+//! Self-test of the repolint passes (ADR-006).
+//!
+//! Two obligations, both load-bearing: every rule must be **clean over
+//! the real repository tree** (this is the same scan the blocking CI
+//! `lint` job runs via the `repolint` binary), and every rule must
+//! **fire on an embedded bad fixture** — exactly once, with a
+//! `file:line: [rule-id]` prefixed message — so a refactor that
+//! silently neuters a pass fails here instead of letting violations
+//! through unreported.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use minimalist::lint::LintTree;
+
+/// The repo root: the parent of the `rust/` crate directory.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("the rust/ crate dir sits inside the repo root")
+        .to_path_buf()
+}
+
+/// Run all passes over an in-memory fixture tree, returning rendered
+/// violation strings.
+fn run(entries: &[(&str, &str)]) -> Vec<String> {
+    LintTree::from_memory(entries)
+        .run_all()
+        .iter()
+        .map(|v| v.to_string())
+        .collect()
+}
+
+/// Assert the fixture produces exactly one violation, anchored at
+/// `file:line:` and tagged with `[rule]`.
+fn fire_once(entries: &[(&str, &str)], rule: &str, at: &str) -> String {
+    let v = run(entries);
+    assert_eq!(
+        v.len(),
+        1,
+        "expected exactly one [{rule}] violation, got {}: {v:#?}",
+        v.len()
+    );
+    assert!(
+        v[0].starts_with(at),
+        "violation should be anchored at `{at}`: {}",
+        v[0]
+    );
+    assert!(
+        v[0].contains(&format!("[{rule}]")),
+        "violation should carry rule id [{rule}]: {}",
+        v[0]
+    );
+    v[0].clone()
+}
+
+// ---------------------------------------------------------------- real tree
+
+#[test]
+fn real_tree_is_clean() {
+    let tree = LintTree::load(&repo_root()).expect("scanning the repo tree");
+    assert!(
+        tree.len() > 40,
+        "suspiciously few files scanned ({}) — did the walker lose a dir?",
+        tree.len()
+    );
+    let v = tree.run_all();
+    assert!(
+        v.is_empty(),
+        "repolint violations in the real tree:\n{}",
+        v.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+/// The acceptance-critical direction of `rng-discipline`: stripping a
+/// real `rng-draws` annotation from the real `satsim/column.rs` must
+/// make the pass fire. This guards the ADR-005 draw-burn pairing —
+/// `skip_share` must keep declaring the draws `phase_share` consumes.
+#[test]
+fn removing_a_real_rng_annotation_fires() {
+    let path = repo_root().join("rust/src/satsim/column.rs");
+    let src = fs::read_to_string(&path).expect("reading satsim/column.rs");
+    let marker = "// lint: rng-draws(2, column-share)";
+    assert!(
+        src.matches(marker).count() >= 3,
+        "expected the three column-share annotations in satsim/column.rs"
+    );
+    // Strip only the LAST annotation (the one above `skip_share`) so
+    // the group still has a reference count to diff against.
+    let last = src.rfind(marker).unwrap();
+    let stripped = format!("{}{}", &src[..last], &src[last + marker.len()..]);
+    let tree =
+        LintTree::from_memory(&[("rust/src/satsim/column.rs", stripped.as_str())]);
+    let v = tree.run_all();
+    let rendered: Vec<String> = v.iter().map(|v| v.to_string()).collect();
+    assert_eq!(v.len(), 1, "{rendered:#?}");
+    assert_eq!(v[0].rule, "rng-discipline");
+    assert!(
+        v[0].msg.contains("skip_share"),
+        "should name the de-annotated fn: {}",
+        v[0]
+    );
+}
+
+// ------------------------------------------------------------ bad fixtures
+
+#[test]
+fn alloc_discipline_fires_on_unannotated_push() {
+    let msg = fire_once(
+        &[(
+            "rust/src/router/event.rs",
+            "pub fn delta_encode(out: &mut Vec<u8>) {\n    out.push(1);\n}\n",
+        )],
+        "alloc-discipline",
+        "rust/src/router/event.rs:2:",
+    );
+    assert!(msg.contains(".push("), "should name the token: {msg}");
+}
+
+#[test]
+fn alloc_discipline_honors_a_reasoned_allow() {
+    let clean = run(&[(
+        "rust/src/router/event.rs",
+        "pub fn delta_encode(out: &mut Vec<u8>) {\n    \
+         out.push(1); // lint: allow(alloc, caller-owned buffer)\n}\n",
+    )]);
+    assert!(clean.is_empty(), "reasoned allow should exempt: {clean:#?}");
+    // An allow without a reason does not parse and does not exempt.
+    let v = run(&[(
+        "rust/src/router/event.rs",
+        "pub fn delta_encode(out: &mut Vec<u8>) {\n    \
+         out.push(1); // lint: allow(alloc)\n}\n",
+    )]);
+    assert_eq!(v.len(), 1, "reasonless allow must not exempt: {v:#?}");
+}
+
+#[test]
+fn rng_discipline_fires_on_count_mismatch() {
+    let msg = fire_once(
+        &[(
+            "rust/src/satsim/column.rs",
+            "// lint: rng-draws(2, column-share)\n\
+             pub fn phase_share(&mut self) {}\n\
+             // lint: rng-draws(1, column-share)\n\
+             pub fn skip_share(&mut self) {}\n",
+        )],
+        "rng-discipline",
+        "rust/src/satsim/column.rs:3:",
+    );
+    assert!(msg.contains("skip_share") && msg.contains("phase_share"), "{msg}");
+}
+
+#[test]
+fn rng_discipline_fires_when_either_annotation_is_removed() {
+    // skip path de-annotated
+    fire_once(
+        &[(
+            "rust/src/satsim/column.rs",
+            "// lint: rng-draws(2, column-share)\n\
+             pub fn phase_share(&mut self) {}\n\
+             pub fn skip_share(&mut self) {}\n",
+        )],
+        "rng-discipline",
+        "rust/src/satsim/column.rs:3:",
+    );
+    // full path de-annotated
+    fire_once(
+        &[(
+            "rust/src/satsim/column.rs",
+            "pub fn phase_share(&mut self) {}\n\
+             // lint: rng-draws(2, column-share)\n\
+             pub fn skip_share(&mut self) {}\n",
+        )],
+        "rng-discipline",
+        "rust/src/satsim/column.rs:1:",
+    );
+}
+
+#[test]
+fn exhaustive_status_fires_on_missing_arm() {
+    let server = "\
+pub enum ServeError {
+    Busy,
+    Lost,
+    Gone,
+}
+";
+    let http = "\
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Busy => 429,
+        ServeError::Lost => 503,
+    }
+}
+";
+    // Docs mention every variant, so only the missing arm fires.
+    let docs = "Busy (429), Lost (503), Gone (410).\n";
+    let msg = fire_once(
+        &[
+            ("rust/src/coordinator/server.rs", server),
+            ("rust/src/coordinator/http.rs", http),
+            ("docs/http-api.md", docs),
+        ],
+        "exhaustive-status",
+        "rust/src/coordinator/server.rs:4:",
+    );
+    assert!(msg.contains("ServeError::Gone") && msg.contains("status_for"), "{msg}");
+}
+
+#[test]
+fn exhaustive_metrics_fires_on_undocumented_family() {
+    let msg = fire_once(
+        &[
+            (
+                "rust/src/coordinator/http.rs",
+                "fn render() -> String {\n    \
+                 String::from(\"minimalist_bogus_total 1\\n\")\n}\n",
+            ),
+            ("docs/http-api.md", "no metrics documented here\n"),
+        ],
+        "exhaustive-metrics",
+        "rust/src/coordinator/http.rs:2:",
+    );
+    assert!(msg.contains("minimalist_bogus_total"), "{msg}");
+}
+
+#[test]
+fn exhaustive_schema_fires_on_unmentioned_bump() {
+    let msg = fire_once(
+        &[
+            (
+                "rust/src/bench_suite.rs",
+                "fn report() { let _ = (\"schema\", 9usize); }\n",
+            ),
+            ("README.md", "mentions schema 8 only\n"),
+        ],
+        "exhaustive-schema",
+        "rust/src/bench_suite.rs:1:",
+    );
+    assert!(msg.contains("schema 9"), "{msg}");
+}
+
+#[test]
+fn exhaustive_adr_fires_on_missing_index_row() {
+    let msg = fire_once(
+        &[
+            ("docs/adr/007-new-thing.md", "# ADR 7\n"),
+            ("docs/adr/README.md", "| [006](006-old.md) | old | Accepted |\n"),
+        ],
+        "exhaustive-adr",
+        "docs/adr/007-new-thing.md:1:",
+    );
+    assert!(msg.contains("007-new-thing.md"), "{msg}");
+}
+
+#[test]
+fn panic_hygiene_fires_on_unannotated_unwrap() {
+    let msg = fire_once(
+        &[(
+            "rust/src/coordinator/loadgen.rs",
+            "pub fn drive(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+        )],
+        "panic-hygiene",
+        "rust/src/coordinator/loadgen.rs:2:",
+    );
+    assert!(msg.contains(".unwrap()"), "{msg}");
+}
+
+#[test]
+fn unsafe_safety_fires_on_uncommented_unsafe() {
+    let msg = fire_once(
+        &[(
+            "rust/src/util/raw.rs",
+            "pub unsafe fn poke(p: *mut u8) {\n    *p = 0;\n}\n",
+        )],
+        "unsafe-safety",
+        "rust/src/util/raw.rs:1:",
+    );
+    assert!(msg.contains("SAFETY"), "{msg}");
+}
