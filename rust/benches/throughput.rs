@@ -11,7 +11,7 @@
 //!
 //! After the human-readable tables, the machine-readable suite
 //! ([`minimalist::bench_suite`]) runs — engine steps/s, the lockstep
-//! batch-size sweep, serving sweeps — and writes `BENCH_pr4.json`, the
+//! batch-size sweep, serving sweeps — and writes `BENCH_baseline.json`, the
 //! same file `minimalist bench` produces, so CI and local runs record
 //! comparable baselines. Pass `-- --quick` for smoke scale.
 
@@ -194,7 +194,7 @@ fn main() {
          combination on the owner tile)."
     );
 
-    // ---- machine-readable baseline (BENCH_pr4.json) -------------------
+    // ---- machine-readable baseline (BENCH_baseline.json) --------------
     let quick = std::env::args().any(|a| a == "--quick");
     println!(
         "\nrecording machine-readable baseline ({}) ...",
@@ -206,8 +206,9 @@ fn main() {
     minimalist::bench_suite::print_engine_summary(&doc);
     // cargo runs bench binaries with cwd = the package dir (rust/), so
     // anchor on the manifest to refresh the committed root-level file
-    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr4.json");
+    let out_path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json");
     minimalist::bench_suite::write(out_path, &doc)
-        .expect("writing BENCH_pr4.json");
+        .expect("writing BENCH_baseline.json");
     println!("wrote {out_path}");
 }

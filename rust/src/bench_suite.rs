@@ -1,4 +1,4 @@
-//! The recorded performance baseline (`BENCH_pr4.json`): a
+//! The recorded performance baseline (`BENCH_baseline.json`): a
 //! machine-readable benchmark of the satsim serving path, runnable via
 //! `minimalist bench` (CI) or `cargo bench --bench throughput` (which
 //! appends this suite after its human-readable tables).
@@ -32,6 +32,13 @@
 //!   lockstep batch throughput, measured skip ratio, and label
 //!   agreement against the exact `delta = 0` engine as the threshold
 //!   grows, on a glyph workload.
+//! * **parallel_sweep** (schema 6) — the threaded plan traversal
+//!   (ADR-007): lockstep sequence-steps/s on a row-split mapping as
+//!   slot count and intra-engine thread count grow, with the speedup
+//!   of each thread count against the 1-thread (serial) row at the
+//!   same slot count. The traversal is bit-identical at every thread
+//!   count (`tests/parallel_parity.rs`), so this axis measures pure
+//!   scheduling overhead vs fan-out win.
 //!
 //! The JSON schema is versioned (`schema`); CI regenerates the file per
 //! commit, gates on regressions against the committed baseline
@@ -280,6 +287,76 @@ fn delta_sweep(opts: &BenchOpts) -> Json {
     ])
 }
 
+/// Threaded-traversal sweep (schema 6): lockstep batch throughput of
+/// one engine as the intra-engine thread count grows (ADR-007), on a
+/// mapping whose layers row- and column-split into enough independent
+/// tiles to fan out. Every row is the same bit-exact computation —
+/// `tests/parallel_parity.rs` pins that — so `speedup_vs_1thread` is a
+/// pure measurement of the scoped pool's scheduling cost against its
+/// fan-out win, per slot count. CI gates each (slots, threads) cell
+/// against the committed baseline like any other throughput row.
+fn parallel_sweep(opts: &BenchOpts) -> Json {
+    let dims = [40usize, 48, 10];
+    let geometry = CoreGeometry { rows: 32, cols: 32 };
+    let d_in = dims[0];
+    let mut engine = MixedSignalEngine::new(
+        synthetic_network(&dims, 11),
+        CircuitConfig::default(),
+        geometry,
+    )
+    .expect("sweep network must map");
+    let row_split_layers =
+        engine.plan.layers.iter().filter(|l| l.is_row_split()).count();
+    assert!(row_split_layers > 0, "sweep mapping must row-split");
+    let n_cores = engine.n_cores();
+    let slot_counts: &[usize] = if opts.quick { &[4] } else { &[4, 16] };
+    let mut rows: Vec<Json> = Vec::new();
+    for &b in slot_counts {
+        let xs: Vec<f32> =
+            (0..b * d_in).map(|i| ((i * 5) % 7) as f32 / 6.0).collect();
+        let mut base = 0.0f64;
+        for &threads in &[1usize, 2, 4] {
+            engine.set_engine_threads(threads);
+            engine.reset_batch(b);
+            let mut t = 0u32;
+            let r = bench(
+                &format!("parallel-b{b}-t{threads}"),
+                opts.budget(),
+                || {
+                    engine.step_batch(t, &xs);
+                    t = t.wrapping_add(1);
+                },
+            );
+            let seq_steps_per_s = r.throughput(b as f64);
+            if threads == 1 {
+                base = seq_steps_per_s;
+            }
+            rows.push(Json::obj(vec![
+                ("slots", b.into()),
+                ("threads", threads.into()),
+                ("seq_steps_per_s", seq_steps_per_s.into()),
+                ("step_us_p50", (r.median_ns / 1e3).into()),
+                (
+                    "speedup_vs_1thread",
+                    (seq_steps_per_s / base.max(1e-12)).into(),
+                ),
+            ]));
+        }
+    }
+    engine.set_engine_threads(1);
+    Json::obj(vec![
+        ("backend", "satsim".into()),
+        ("dims", dims.to_vec().into()),
+        (
+            "geometry",
+            format!("{}x{}", geometry.rows, geometry.cols).into(),
+        ),
+        ("cores", n_cores.into()),
+        ("row_split_layers", row_split_layers.into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Drive `n_req` glyph sequences through a server; returns
 /// (seq/s, p50, p95, p99, errors).
 fn drive(
@@ -415,6 +492,7 @@ fn streaming_sweep(opts: &BenchOpts) -> Json {
             CircuitConfig::default(),
             plan,
             n,
+            1,
         )
         .expect("sweep network must map");
         let server = StreamServer::spawn(factory, 1, n);
@@ -599,7 +677,7 @@ fn http_sweep(nw: &NetworkWeights, opts: &BenchOpts) -> Json {
     ])
 }
 
-/// Run the full suite and return the `BENCH_pr4.json` document.
+/// Run the full suite and return the `BENCH_baseline.json` document.
 pub fn run(opts: &BenchOpts) -> Json {
     let paper_dims = [1usize, 64, 64, 64, 64, 10];
     let engine = Json::Arr(vec![
@@ -629,16 +707,19 @@ pub fn run(opts: &BenchOpts) -> Json {
         ("http_sweep", http_sweep(&nw, opts)),
     ]);
     Json::obj(vec![
-        ("bench", "pr4".into()),
-        // schema 5: adds delta_sweep (delta-sparsity threshold ×
-        // throughput/skip-ratio/label-agreement, ADR-005); schema 4
-        // added serving.http_sweep, schema 3 serving.streaming_sweep
-        ("schema", 5usize.into()),
+        ("bench", "baseline".into()),
+        // schema 6: adds parallel_sweep (slot count × intra-engine
+        // thread count, ADR-007); schema 5 added delta_sweep
+        // (delta-sparsity threshold × throughput/skip-ratio/label-
+        // agreement, ADR-005), schema 4 serving.http_sweep, schema 3
+        // serving.streaming_sweep
+        ("schema", 6usize.into()),
         ("status", "measured".into()),
         ("quick", opts.quick.into()),
         ("engine", engine),
         ("batch_sweep", sweep),
         ("delta_sweep", delta_sweep(opts)),
+        ("parallel_sweep", parallel_sweep(opts)),
         ("serving", serving),
     ])
 }
@@ -695,16 +776,20 @@ fn check_metric(
 }
 
 /// Compare a fresh suite document against a committed baseline: engine
-/// steps/s per matching label, and lockstep batch-sweep seq-steps/s per
-/// matching batch size when both documents carry a sweep (a schema-1
-/// `BENCH_pr3.json` baseline has none — only the engine entries
-/// compare). Every compared entry runs at `delta = 0` — the schema-5
-/// `delta_sweep` axis is recorded but never gated on, so the regression
-/// gate stays armed and meaningful across the schema bump (nonzero-delta
-/// rates measure a different, lossy computation). A placeholder baseline (`status` ≠ `"measured"`, the
-/// committed state until the first CI run lands numbers) produces a
-/// note and an empty comparison, so the gate passes vacuously until a
-/// measured baseline is committed.
+/// steps/s per matching label, lockstep batch-sweep seq-steps/s per
+/// matching batch size, and parallel-sweep seq-steps/s per matching
+/// (slots, threads) cell — each axis compared only when both documents
+/// carry it (an old-schema baseline without a sweep skips that sweep;
+/// only the shared axes compare). Every compared entry runs at
+/// `delta = 0` — the schema-5 `delta_sweep` axis is recorded but never
+/// gated on, so the regression gate stays armed and meaningful across
+/// the schema bump (nonzero-delta rates measure a different, lossy
+/// computation). The schema-6 `parallel_sweep` rows *are* gated: a
+/// thread-count cell that loses its speedup is a real scheduling
+/// regression, not a different computation. A placeholder baseline
+/// (`status` ≠ `"measured"`, the committed state until the first CI
+/// run lands numbers) produces a note and an empty comparison, so the
+/// gate passes vacuously until a measured baseline is committed.
 pub fn check_against(
     current: &Json,
     baseline: &Json,
@@ -809,6 +894,46 @@ pub fn check_against(
             warn_frac,
         );
     }
+    let parallel_rows = |doc: &Json| -> Vec<(u64, u64, f64)> {
+        doc.get("parallel_sweep")
+            .and_then(|s| s.get("rows"))
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .filter_map(|r| {
+                        Some((
+                            r.get("slots")?.as_f64()? as u64,
+                            r.get("threads")?.as_f64()? as u64,
+                            r.get("seq_steps_per_s")?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let cur_parallel = parallel_rows(current);
+    for (slots, threads, b) in parallel_rows(baseline) {
+        let Some(&(_, _, c)) = cur_parallel
+            .iter()
+            .find(|(s, t, _)| *s == slots && *t == threads)
+        else {
+            out.notes.push(format!(
+                "parallel-sweep slots={slots} threads={threads} missing \
+                 from the current run"
+            ));
+            continue;
+        };
+        check_metric(
+            &mut out,
+            &format!(
+                "parallel-sweep slots={slots} threads={threads} seq-steps/s"
+            ),
+            c,
+            b,
+            fail_frac,
+            warn_frac,
+        );
+    }
     out
 }
 
@@ -849,6 +974,21 @@ pub fn print_engine_summary(doc: &Json) {
             );
         }
     }
+    if let Some(rows) = doc
+        .get("parallel_sweep")
+        .and_then(|s| s.get("rows"))
+        .and_then(Json::as_arr)
+    {
+        for r in rows {
+            println!(
+                "  parallel B={:<3} T={:<2} {:>12.0} seq-steps/s  ({:.2}x vs 1 thread)",
+                r.get("slots").and_then(Json::as_f64).unwrap_or(0.0),
+                r.get("threads").and_then(Json::as_f64).unwrap_or(0.0),
+                r.get("seq_steps_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+                r.get("speedup_vs_1thread").and_then(Json::as_f64).unwrap_or(0.0),
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -862,7 +1002,7 @@ mod tests {
         let opts = BenchOpts { quick: true };
         let doc = run(&opts);
         assert_eq!(doc.req_str("status").unwrap(), "measured");
-        assert_eq!(doc.req_f64("schema").unwrap() as u64, 5);
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 6);
         let engine = doc.req("engine").unwrap().as_arr().unwrap();
         assert_eq!(engine.len(), 2);
         for e in engine {
@@ -905,6 +1045,30 @@ mod tests {
                 );
             }
         }
+        // the parallel sweep covers every thread count on a genuinely
+        // row-split mapping, with a 1-thread anchor per slot count and
+        // real rates everywhere; speedups stay sane (the *magnitude* is
+        // runner-dependent — CI gates it against the committed
+        // baseline, not against an absolute floor that would flake on
+        // a one-core container)
+        let ps = doc.req("parallel_sweep").unwrap();
+        assert!(ps.req_f64("row_split_layers").unwrap() > 0.0);
+        let prows = ps.req("rows").unwrap().as_arr().unwrap();
+        assert_eq!(prows.len() % 3, 0, "three thread counts per slot count");
+        for chunk in prows.chunks(3) {
+            let threads: Vec<u64> = chunk
+                .iter()
+                .map(|r| r.req_f64("threads").unwrap() as u64)
+                .collect();
+            assert_eq!(threads, vec![1, 2, 4]);
+            let slots = chunk[0].req_f64("slots").unwrap();
+            for r in chunk {
+                assert_eq!(r.req_f64("slots").unwrap(), slots);
+                assert!(r.req_f64("seq_steps_per_s").unwrap() > 0.0);
+                assert!(r.req_f64("speedup_vs_1thread").unwrap() > 0.0);
+            }
+            assert_eq!(chunk[0].req_f64("speedup_vs_1thread").unwrap(), 1.0);
+        }
         let serving = doc.req("serving").unwrap();
         let ws = serving.req("worker_sweep").unwrap();
         assert_eq!(ws.req("rows").unwrap().as_arr().unwrap().len(), 3);
@@ -944,7 +1108,7 @@ mod tests {
         // and the document round-trips through the JSON module
         let text = format!("{doc}");
         let back = Json::parse(&text).unwrap();
-        assert_eq!(back.req_str("bench").unwrap(), "pr4");
+        assert_eq!(back.req_str("bench").unwrap(), "baseline");
     }
 
     fn doc_with(engine_steps: f64, sweep_b4: f64) -> Json {
@@ -995,8 +1159,58 @@ mod tests {
     }
 
     #[test]
+    fn check_compares_parallel_sweep_thread_cells() {
+        // the schema-6 thread-axis rows are gated per (slots, threads)
+        // cell: a regression in one cell fails, a missing cell notes
+        let with_parallel = |rate: f64| -> Json {
+            let mut doc = doc_with(1000.0, 4000.0);
+            doc.set(
+                "parallel_sweep",
+                Json::obj(vec![(
+                    "rows",
+                    Json::Arr(vec![
+                        Json::obj(vec![
+                            ("slots", 4usize.into()),
+                            ("threads", 1usize.into()),
+                            ("seq_steps_per_s", 5000.0.into()),
+                        ]),
+                        Json::obj(vec![
+                            ("slots", 4usize.into()),
+                            ("threads", 4usize.into()),
+                            ("seq_steps_per_s", rate.into()),
+                        ]),
+                    ]),
+                )]),
+            );
+            doc
+        };
+        let baseline = with_parallel(12_000.0);
+        assert!(check_against(&with_parallel(11_500.0), &baseline, 0.25, 0.10)
+            .passed());
+        // the 4-thread cell losing its speedup is a hard regression
+        let bad = check_against(&with_parallel(5000.0), &baseline, 0.25, 0.10);
+        assert!(!bad.passed());
+        assert!(
+            bad.hard_regressions[0].contains("threads=4"),
+            "{:?}",
+            bad.hard_regressions
+        );
+        // a baseline without the axis (schema ≤ 5) skips it cleanly
+        let old = doc_with(1000.0, 4000.0);
+        assert!(check_against(&with_parallel(1.0), &old, 0.25, 0.10).passed());
+        // a cell missing from the current run notes, not panics
+        let sparse = check_against(&doc_with(1000.0, 4000.0), &baseline, 0.25, 0.10);
+        assert!(sparse.passed());
+        assert!(
+            sparse.notes.iter().any(|n| n.contains("parallel-sweep")),
+            "{:?}",
+            sparse.notes
+        );
+    }
+
+    #[test]
     fn check_passes_vacuously_on_placeholder_baseline() {
-        // the committed BENCH_pr3.json placeholder must not arm the gate
+        // a committed placeholder baseline must not arm the gate
         let placeholder = Json::obj(vec![
             ("status", "pending-first-ci-run".into()),
             ("engine", Json::Arr(vec![])),

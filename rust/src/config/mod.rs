@@ -324,6 +324,11 @@ pub struct ServeConfig {
     /// idle connection notices a shutdown within one tick, so this
     /// bounds the graceful-drain time too.
     pub http_keepalive_ms: u64,
+    /// Intra-engine traversal lanes (`serve --engine-threads`): each
+    /// worker's engine steps independent cores of one plan traversal on
+    /// this many threads (ADR-007). Results are bit-identical at every
+    /// value — purely a throughput knob. 1 = the serial path.
+    pub engine_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -336,6 +341,7 @@ impl Default for ServeConfig {
             http_port: 0,
             http_max_body_bytes: 1024 * 1024,
             http_keepalive_ms: 2000,
+            engine_threads: 1,
         }
     }
 }
@@ -351,6 +357,7 @@ impl ServeConfig {
             ("http_port", (self.http_port as usize).into()),
             ("http_max_body_bytes", self.http_max_body_bytes.into()),
             ("http_keepalive_ms", (self.http_keepalive_ms as f64).into()),
+            ("engine_threads", self.engine_threads.into()),
         ])
     }
 
@@ -380,6 +387,8 @@ impl ServeConfig {
                 .and_then(Json::as_f64)
                 .map(|x| (x as u64).max(10))
                 .unwrap_or(d.http_keepalive_ms),
+            engine_threads: json_usize(j, "engine_threads", d.engine_threads)
+                .max(1),
         })
     }
 }
@@ -470,6 +479,7 @@ mod tests {
         assert!(s.workers >= 1);
         assert!(s.max_batch >= 1);
         assert!(s.sessions >= 1);
+        assert_eq!(s.engine_threads, 1, "threading must be opt-in");
     }
 
     #[test]
@@ -482,6 +492,7 @@ mod tests {
             http_port: 8080,
             http_max_body_bytes: 64 * 1024,
             http_keepalive_ms: 500,
+            engine_threads: 4,
         };
         let back = ServeConfig::from_json(&s.to_json()).unwrap();
         assert_eq!(s, back);
@@ -493,6 +504,7 @@ mod tests {
             ("sessions", 0usize.into()),
             ("http_max_body_bytes", 3usize.into()),
             ("http_keepalive_ms", 1usize.into()),
+            ("engine_threads", 0usize.into()),
         ]);
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.workers, 1);
@@ -500,6 +512,7 @@ mod tests {
         assert_eq!(c.sessions, 1);
         assert_eq!(c.http_max_body_bytes, 1024);
         assert_eq!(c.http_keepalive_ms, 10);
+        assert_eq!(c.engine_threads, 1);
         // missing HTTP keys fall back to defaults (older config files)
         let old = Json::obj(vec![("workers", 2usize.into())]);
         let c = ServeConfig::from_json(&old).unwrap();

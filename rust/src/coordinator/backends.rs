@@ -184,18 +184,23 @@ impl MixedSignalBackend {
         geometry: CoreGeometry,
     ) -> Result<(Plan, impl Fn() -> Box<dyn Backend> + Send + Sync + 'static)> {
         let plan = Plan::build(&weights.dims, &MappingConfig::with_geometry(geometry))?;
-        Self::factory_from_plan(weights, circuit, plan)
+        Self::factory_from_plan(weights, circuit, plan, 1)
     }
 
     /// Like [`MixedSignalBackend::factory`], but for an explicit plan —
     /// callers with non-default planner knobs (core budgets, replication
-    /// caps) serve exactly the placement they planned.
+    /// caps) serve exactly the placement they planned. `engine_threads`
+    /// sets each worker engine's intra-plan traversal lanes
+    /// ([`MixedSignalEngine::set_engine_threads`], ADR-007): results are
+    /// bit-identical at every value, so it is purely a throughput knob.
     pub fn factory_from_plan(
         weights: NetworkWeights,
         circuit: CircuitConfig,
         plan: Plan,
+        engine_threads: usize,
     ) -> Result<(Plan, impl Fn() -> Box<dyn Backend> + Send + Sync + 'static)> {
-        let template = MixedSignalEngine::from_plan(weights, circuit, plan)?;
+        let mut template = MixedSignalEngine::from_plan(weights, circuit, plan)?;
+        template.set_engine_threads(engine_threads);
         let plan = template.plan.clone();
         Ok((plan, move || {
             let engine = template
@@ -215,8 +220,10 @@ impl MixedSignalBackend {
         circuit: CircuitConfig,
         plan: Plan,
         sessions: usize,
+        engine_threads: usize,
     ) -> Result<(Plan, impl Fn() -> Box<dyn Backend> + Send + Sync + 'static)> {
-        let template = MixedSignalEngine::from_plan(weights, circuit, plan)?;
+        let mut template = MixedSignalEngine::from_plan(weights, circuit, plan)?;
+        template.set_engine_threads(engine_threads);
         let plan = template.plan.clone();
         Ok((plan, move || {
             let engine = template
@@ -551,6 +558,7 @@ mod tests {
             CircuitConfig::default(),
             plan,
             3,
+            2,
         )
         .unwrap();
         let mut b = mf();

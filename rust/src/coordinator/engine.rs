@@ -44,6 +44,34 @@ use crate::nn::weights::NetworkWeights;
 use crate::quant::codesign::{map_layer_with, volts_to_logical, LayerCircuit};
 use crate::router::fabric::Fabric;
 use crate::satsim::{ColumnConfig, Core, CoreStep, DeltaCounters};
+use crate::util::pool::ScopedPool;
+
+/// Lifetime-erased `*mut T` the threaded traversal hands to pool tasks.
+/// Tasks index **disjoint** elements (one core / one staging buffer per
+/// tile), so no two tasks materialize overlapping `&mut` — the wrapper
+/// only exists because a raw pointer is not `Send`/`Sync` by itself.
+struct SendPtrMut<T>(*mut T);
+
+// SAFETY: tasks created by `ScopedPool::run` only dereference disjoint
+// indices (each tile owns its core and staging slot), and the pool
+// joins before the pointee's borrow ends in the caller.
+unsafe impl<T> Send for SendPtrMut<T> {}
+// SAFETY: as above — shared access to the wrapper never creates
+// overlapping mutable references to the pointee.
+unsafe impl<T> Sync for SendPtrMut<T> {}
+
+impl<T> SendPtrMut<T> {
+    /// Pointer to element `i` of the wrapped base pointer.
+    ///
+    /// # Safety
+    /// `i` must be in bounds of the allocation the base pointer was
+    /// taken from, and no other live reference may overlap element `i`.
+    // SAFETY: caller upholds the `# Safety` contract above.
+    unsafe fn at(&self, i: usize) -> *mut T {
+        // SAFETY: bounds and aliasing are the caller's contract above.
+        unsafe { self.0.add(i) }
+    }
+}
 
 /// Per-sequence observables of one layer (logical units — directly
 /// comparable to the golden model and to the python traces).
@@ -120,6 +148,19 @@ pub struct MixedSignalEngine {
     leased: Vec<bool>,
     /// reusable per-core observable buffer
     core_out: CoreStep,
+    /// lanes of the threaded plan traversal (≥ 1; 1 = the serial path)
+    engine_threads: usize,
+    /// fork-join pool behind the threaded traversal (ADR-007); `Some`
+    /// exactly when `engine_threads > 1`
+    pool: Option<ScopedPool>,
+    /// per-core `CoreStep` scratch of the threaded unsplit fan-out
+    /// (tasks may not share the serial path's single `core_out`)
+    core_outs: Vec<CoreStep>,
+    /// per-core `(event, h)` output staging of the threaded unsplit
+    /// fan-out, spliced into the per-slot buffers in core order
+    tile_out: Vec<Vec<(bool, f32)>>,
+    /// per-core partial-share staging of the threaded row-split fan-out
+    tile_partials: Vec<Vec<(f64, f64)>>,
 }
 
 impl MixedSignalEngine {
@@ -207,6 +248,11 @@ impl MixedSignalEngine {
             free_slots: Vec::new(),
             leased: vec![false],
             core_out: CoreStep::default(),
+            engine_threads: 1,
+            pool: None,
+            core_outs: Vec::new(),
+            tile_out: Vec::new(),
+            tile_partials: Vec::new(),
             weights,
             circuit,
             plan,
@@ -224,11 +270,59 @@ impl MixedSignalEngine {
     /// plan — each serving worker owns one (a physical core bank holds
     /// one sequence's state, so engines are never shared).
     pub fn replicate(&self) -> Result<MixedSignalEngine> {
-        MixedSignalEngine::from_plan(
+        let mut e = MixedSignalEngine::from_plan(
             self.weights.clone(),
             self.circuit.clone(),
             self.plan.clone(),
-        )
+        )?;
+        e.set_engine_threads(self.engine_threads);
+        Ok(e)
+    }
+
+    /// Lanes the lockstep traversal (`step_batch` / `step_slots`) runs
+    /// on. 1 is the serial path; above 1 the independent cores of each
+    /// layer fan out across a resident [`ScopedPool`] (ADR-007).
+    pub fn engine_threads(&self) -> usize {
+        self.engine_threads
+    }
+
+    /// Set the traversal lane count (clamped to ≥ 1) and (re)provision
+    /// the pool plus its staging scratch. An engine boundary like
+    /// `reset_batch`, never part of the steady-state step — results are
+    /// bit-identical at every thread count (tests/parallel_parity.rs),
+    /// so this is purely a throughput knob.
+    pub fn set_engine_threads(&mut self, threads: usize) {
+        let t = threads.max(1);
+        if t != self.engine_threads {
+            self.engine_threads = t;
+            self.pool = if t > 1 { Some(ScopedPool::new(t)) } else { None };
+        }
+        self.provision_pool_scratch();
+    }
+
+    /// Size the threaded traversal's per-core staging buffers for the
+    /// current batch. Runs at thread/batch boundaries so the threaded
+    /// step itself stays allocation-free (tests/hot_path_alloc.rs).
+    fn provision_pool_scratch(&mut self) {
+        if self.pool.is_none() {
+            self.core_outs.clear();
+            self.tile_out.clear();
+            self.tile_partials.clear();
+            return;
+        }
+        let n = self.cores.len();
+        let slot_cap = self.batch * self.plan.geometry.cols;
+        self.core_outs.resize_with(n, CoreStep::default);
+        self.tile_out.resize_with(n, Vec::new);
+        self.tile_partials.resize_with(n, Vec::new);
+        for v in self.tile_out.iter_mut() {
+            v.clear();
+            v.reserve(slot_cap);
+        }
+        for v in self.tile_partials.iter_mut() {
+            v.clear();
+            v.reserve(slot_cap);
+        }
     }
 
     /// Number of physical cores in the plan.
@@ -305,6 +399,7 @@ impl MixedSignalEngine {
             self.slot_ids.clear();
             self.slot_ids.extend(0..b);
             self.batch = b;
+            self.provision_pool_scratch();
         }
         // batch mode: no leasable slots until provision_sessions
         self.free_slots.clear();
@@ -580,6 +675,10 @@ impl MixedSignalEngine {
     /// arithmetic — but the per-slot clock keeps streamed event traces
     /// coherent with their session's own time axis.
     fn step_slots_inner(&mut self, slots: &[usize], xs: &[f32], t_all: Option<u32>) {
+        if self.pool.is_some() {
+            // engine_threads > 1: the bit-identical fan-out twin below
+            return self.step_slots_threaded(slots, xs, t_all);
+        }
         let d_in = self.weights.dims[0];
         assert_eq!(
             xs.len(),
@@ -688,6 +787,256 @@ impl MixedSignalEngine {
                         if rt != 0 {
                             for &s in slots {
                                 self.cores[tile.core].finish_partial_only_slot(s);
+                            }
+                        }
+                    }
+                    for &s in slots {
+                        for a in self.accs[s].iter_mut() {
+                            a.0 /= n_in_total;
+                            a.1 /= n_in_total;
+                        }
+                        self.cores[owner].step_finish_slot(
+                            s,
+                            &self.accs[s],
+                            &self.circuit,
+                            &mut self.core_out,
+                        );
+                        push_outputs(
+                            &self.core_out,
+                            wh_scale,
+                            &self.circuit,
+                            false,
+                            &mut self.events_b[s],
+                            &mut self.h_states_b[s],
+                            &mut self.z_vals,
+                            &mut self.ht_vals,
+                        );
+                    }
+                }
+            }
+            if l == n_layers - 1 {
+                for &s in slots {
+                    self.rings[s][self.ring_pos[s]]
+                        .copy_from_slice(&self.h_states_b[s]);
+                    self.ring_pos[s] = (self.ring_pos[s] + 1) % READOUT_STEPS;
+                }
+            } else {
+                for &s in slots {
+                    let t = t_all.unwrap_or(self.steps_seen[s] as u32);
+                    self.fabrics[s].route(l, t, &self.events_b[s]);
+                    let port = &self.fabrics[s].ports[l];
+                    for (dst, &bit) in
+                        self.x_bufs[s].iter_mut().zip(port.frame.iter())
+                    {
+                        *dst = bit as u8 as f64;
+                    }
+                }
+                x_len = self.weights.layers[l].n_out;
+            }
+        }
+        for &s in slots {
+            self.steps_seen[s] += 1;
+        }
+    }
+
+    /// The fan-out twin of `step_slots_inner`, taken when
+    /// `engine_threads > 1` (ADR-007). Independent cores of each layer
+    /// run as pool tasks — one task per tile, each owning its core and
+    /// a per-core staging buffer — and the main thread joins for
+    /// everything order-sensitive: the weighted row-split combine, the
+    /// owner-tile finish, output splicing, event routing, and the
+    /// readout ring. Per-core call sequences (and therefore RNG streams
+    /// and meters) are exactly those of the serial path, and the main
+    /// thread replays the serial float-accumulation and output order,
+    /// so results are bit-identical at every thread count
+    /// (tests/parallel_parity.rs). `DeltaCounters`/energy stay per-core
+    /// and merge in core-index order at read time — deterministic
+    /// regardless of task scheduling. Steady-state allocation stays
+    /// zero: staging is provisioned by `provision_pool_scratch` and the
+    /// pool's `run` is allocation-free (tests/hot_path_alloc.rs).
+    fn step_slots_threaded(&mut self, slots: &[usize], xs: &[f32], t_all: Option<u32>) {
+        let d_in = self.weights.dims[0];
+        assert_eq!(
+            xs.len(),
+            slots.len() * d_in,
+            "step wants one frame of {d_in} values per listed slot"
+        );
+        for &s in slots {
+            assert!(
+                s < self.batch,
+                "slot {s} out of range ({} provisioned)",
+                self.batch
+            );
+        }
+        debug_assert!(
+            slots
+                .iter()
+                .enumerate()
+                .all(|(i, s)| !slots[..i].contains(s)),
+            "duplicate slot in one lockstep step"
+        );
+        let n_layers = self.weights.n_layers();
+        for (k, &s) in slots.iter().enumerate() {
+            let frame = &xs[k * d_in..(k + 1) * d_in];
+            for (dst, &v) in self.x_bufs[s].iter_mut().zip(frame.iter()) {
+                *dst = v as f64;
+            }
+        }
+        let mut x_len = d_in;
+        for l in 0..n_layers {
+            let wh_scale = self.weights.layers[l].wh_scale;
+            for &s in slots {
+                self.events_b[s].clear();
+                self.h_states_b[s].clear();
+            }
+            if self.plan.layers[l].row_tiles == 1 {
+                let r = self.plan.layers[l].replication;
+                if r > 1 {
+                    for &s in slots {
+                        let (x_rep, x_buf) =
+                            (&mut self.x_reps[s], &self.x_bufs[s]);
+                        x_rep.clear();
+                        for _ in 0..r {
+                            // lint: allow(alloc, extend of a cleared scratch buffer sized for the widest layer at build)
+                            x_rep.extend_from_slice(&x_buf[..x_len]);
+                        }
+                    }
+                }
+                let (c0, c1) = self.plan.core_range(l);
+                let n_tiles = c1 - c0;
+                for k in 0..n_tiles {
+                    let width = self.plan.layers[l].tiles[k].n_cols();
+                    let stage = &mut self.tile_out[c0 + k];
+                    stage.clear();
+                    // lint: allow(alloc, resize of a retained-capacity staging buffer provisioned at reset_batch)
+                    stage.resize(slots.len() * width, (false, 0.0));
+                }
+                let cores_base = SendPtrMut(self.cores.as_mut_ptr());
+                let outs_base = SendPtrMut(self.core_outs.as_mut_ptr());
+                let stage_base = SendPtrMut(self.tile_out.as_mut_ptr());
+                let lp = &self.plan.layers[l];
+                let circuit = &self.circuit;
+                let x_bufs = &self.x_bufs;
+                let x_reps = &self.x_reps;
+                let pool =
+                    self.pool.as_ref().expect("threaded step without a pool");
+                pool.run(n_tiles, &|k| {
+                    let width = lp.tiles[k].n_cols();
+                    // SAFETY: task k solely owns core `c0 + k` and its
+                    // staging/scratch slots for this fan-out (one task
+                    // per tile), and `run` joins before the borrows
+                    // behind these pointers end.
+                    let core = unsafe { &mut *cores_base.at(c0 + k) };
+                    let out = unsafe { &mut *outs_base.at(c0 + k) };
+                    let stage = unsafe { &mut *stage_base.at(c0 + k) };
+                    for (pos, &s) in slots.iter().enumerate() {
+                        let x_phys: &[f64] = if r > 1 {
+                            &x_reps[s]
+                        } else {
+                            &x_bufs[s][..x_len]
+                        };
+                        core.step_slot(s, x_phys, circuit, out);
+                        debug_assert_eq!(out.steps.len(), width);
+                        for (dst, st) in stage
+                            [pos * width..(pos + 1) * width]
+                            .iter_mut()
+                            .zip(out.steps.iter())
+                        {
+                            *dst = (
+                                st.y,
+                                volts_to_logical(st.v_h, wh_scale, circuit)
+                                    as f32,
+                            );
+                        }
+                    }
+                });
+                // splice the staged outputs in core order — exactly the
+                // push order of the serial path
+                for k in 0..n_tiles {
+                    let width = lp.tiles[k].n_cols();
+                    for (pos, &s) in slots.iter().enumerate() {
+                        let stage = &self.tile_out[c0 + k];
+                        for &(y, h) in
+                            &stage[pos * width..(pos + 1) * width]
+                        {
+                            self.events_b[s].push(y); // lint: allow(alloc, push into a cleared per-layer buffer that reuses its capacity)
+                            self.h_states_b[s].push(h); // lint: allow(alloc, push into a cleared per-layer buffer that reuses its capacity)
+                        }
+                    }
+                }
+            } else {
+                // row-split layer: every tile's partial half-step is an
+                // independent task (tiles are core-disjoint by plan
+                // validation); the weighted combine and the owner-tile
+                // finish stay on the main thread, in serial order
+                let lp = &self.plan.layers[l];
+                let n_in_total = lp.n_in as f64;
+                let n_tiles = lp.row_tiles * lp.col_tiles;
+                for m in 0..n_tiles {
+                    let (rt, ct) = (m % lp.row_tiles, m / lp.row_tiles);
+                    let tile = lp.tile(rt, ct);
+                    let width = lp.owner_tile(ct).n_cols();
+                    let stage = &mut self.tile_partials[tile.core];
+                    stage.clear();
+                    // lint: allow(alloc, resize of a retained-capacity staging buffer provisioned at reset_batch)
+                    stage.resize(slots.len() * width, (0.0, 0.0));
+                }
+                let cores_base = SendPtrMut(self.cores.as_mut_ptr());
+                let parts_base = SendPtrMut(self.tile_partials.as_mut_ptr());
+                let circuit = &self.circuit;
+                let x_bufs = &self.x_bufs;
+                let pool =
+                    self.pool.as_ref().expect("threaded step without a pool");
+                pool.run(n_tiles, &|m| {
+                    let (rt, ct) = (m % lp.row_tiles, m / lp.row_tiles);
+                    let tile = lp.tile(rt, ct);
+                    let width = lp.owner_tile(ct).n_cols();
+                    // SAFETY: every tile is its own core (plan
+                    // validation), so task m solely owns core
+                    // `tile.core` and its staging slot; `run` joins
+                    // before the borrows behind these pointers end.
+                    let core = unsafe { &mut *cores_base.at(tile.core) };
+                    let stage = unsafe { &mut *parts_base.at(tile.core) };
+                    let (r0, r1) = tile.rows;
+                    for (pos, &s) in slots.iter().enumerate() {
+                        let partials = core.step_partial_slot(
+                            s,
+                            &x_bufs[s][r0..r1],
+                            circuit,
+                        );
+                        debug_assert_eq!(partials.len(), width);
+                        stage[pos * width..(pos + 1) * width]
+                            .copy_from_slice(partials);
+                    }
+                    if rt != 0 {
+                        // non-owner tiles close their half-step in-task:
+                        // the same per-core call sequence as serial
+                        for &s in slots {
+                            core.finish_partial_only_slot(s);
+                        }
+                    }
+                });
+                // weighted combine + owner finish, replaying the serial
+                // accumulation order (rt ascending per slot)
+                for ct in 0..lp.col_tiles {
+                    let owner = lp.owner_tile(ct).core;
+                    let width = lp.owner_tile(ct).n_cols();
+                    for &s in slots {
+                        self.accs[s].clear();
+                        // lint: allow(alloc, resize of a retained-capacity accumulator; width never exceeds the widest tile)
+                        self.accs[s].resize(width, (0.0, 0.0));
+                    }
+                    for rt in 0..lp.row_tiles {
+                        let tile = lp.tile(rt, ct);
+                        let (r0, r1) = tile.rows;
+                        let weight = (r1 - r0) as f64;
+                        for (pos, &s) in slots.iter().enumerate() {
+                            let stage = &self.tile_partials[tile.core];
+                            for (a, p) in self.accs[s].iter_mut().zip(
+                                stage[pos * width..(pos + 1) * width].iter(),
+                            ) {
+                                a.0 += weight * p.0;
+                                a.1 += weight * p.1;
                             }
                         }
                     }

@@ -60,6 +60,11 @@ pub const HOT_FNS: &[(&str, &[&str])] = &[
         &[
             "sample",
             "sample_deferred",
+            "sample_deferred_lane",
+            "sample_deferred_lane_masked",
+            "sample_deferred_lane_contig",
+            "sample_deferred_lane_contig_masked",
+            "lane_sum",
             "aggregate_sample_sigma",
             "aggregate_injection_shift",
             "charge",
@@ -73,8 +78,19 @@ pub const HOT_FNS: &[(&str, &[&str])] = &[
     ("router/fabric.rs", &["as_f64", "as_f32", "route"]),
     (
         "coordinator/engine.rs",
-        &["step", "step_batch", "step_slots", "step_slots_inner", "push_outputs"],
+        &[
+            "step",
+            "step_batch",
+            "step_slots",
+            "step_slots_inner",
+            "step_slots_threaded",
+            "push_outputs",
+        ],
     ),
+    // the scoped pool's dispatch path runs inside the engine's
+    // zero-alloc step (ADR-007); construction (`new`) is cold and may
+    // allocate, the per-step entry points may not
+    ("util/pool.rs", &["run", "drain"]),
 ];
 
 /// Tokens that can reach the global allocator. Matched against the

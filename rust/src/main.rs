@@ -9,7 +9,7 @@
 //!   loadgen                   closed-loop load against serve --http
 //!                             (--quick for CI smoke scale)
 //!   plan                      print the layer→core mapping plan
-//!   bench                     recorded perf baseline → BENCH_pr4.json
+//!   bench                     recorded perf baseline → BENCH_baseline.json
 //!                             (--check gates on regressions vs --baseline)
 //!   adc                       ADC transfer characterization (Fig 3C)
 //!   trace                     software vs mixed-signal traces (Fig 4)
@@ -134,6 +134,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?,
         http_keepalive_ms: args
             .get_u64("keepalive-ms", defaults.http_keepalive_ms)?,
+        engine_threads: args
+            .get_usize("engine-threads", defaults.engine_threads)?
+            .max(1),
     };
     if args.flag("http") {
         return cmd_serve_http(args, weights, &serve, &backend);
@@ -155,6 +158,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 weights,
                 circuit_from_args(args)?,
                 planned,
+                serve.engine_threads,
             )?;
             let (used, total) = plan.occupancy_at(serve.max_batch);
             println!(
@@ -263,6 +267,7 @@ fn cmd_serve_streaming(
                 circuit_from_args(args)?,
                 planned,
                 serve.sessions,
+                serve.engine_threads,
             )?;
             let (used, total) = plan.occupancy_at(serve.sessions);
             println!(
@@ -405,6 +410,7 @@ fn cmd_serve_http(
                 weights.clone(),
                 circuit.clone(),
                 planned.clone(),
+                serve.engine_threads,
             )?;
             let (_, streaming) =
                 MixedSignalBackend::streaming_factory_from_plan(
@@ -412,6 +418,7 @@ fn cmd_serve_http(
                     circuit,
                     planned,
                     serve.sessions,
+                    serve.engine_threads,
                 )?;
             (
                 Server::spawn_sharded(
@@ -535,8 +542,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
 }
 
 /// Run the recorded perf suite and write the machine-readable baseline:
-///   minimalist bench [--quick] [--out BENCH_pr4.json]
-///                    [--check] [--baseline BENCH_pr3.json]
+///   minimalist bench [--quick] [--out BENCH_baseline.json]
+///                    [--check] [--baseline BENCH_baseline.json]
 /// `--quick` shrinks budgets/request counts to CI smoke-test scale.
 /// `--check` compares the fresh run against the committed baseline and
 /// exits non-zero on a hard (>25%) throughput regression; smaller
@@ -544,7 +551,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     use minimalist::bench_suite;
     let opts = bench_suite::BenchOpts { quick: args.flag("quick") };
-    let out = args.get_or("out", "BENCH_pr4.json");
+    let out = args.get_or("out", "BENCH_baseline.json");
     eprintln!(
         "running bench suite ({}) ...",
         if opts.quick { "quick" } else { "full" }
@@ -554,7 +561,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     bench_suite::write(out, &doc)?;
     println!("wrote {out}");
     if args.flag("check") {
-        let baseline_path = args.get_or("baseline", "BENCH_pr3.json");
+        let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
         let text = std::fs::read_to_string(baseline_path).map_err(|e| {
             anyhow::anyhow!("reading baseline {baseline_path}: {e}")
         })?;

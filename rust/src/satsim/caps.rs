@@ -10,6 +10,20 @@ use crate::config::CircuitConfig;
 use crate::energy::EnergyMeter;
 use crate::util::rng::Rng;
 
+/// Explicit lane width of the vectorized hot-loop reductions (ADR-007).
+/// Energy sums accumulate into `LANES` independent partial accumulators
+/// over fixed-stride chunks, then collapse through [`lane_sum`]'s fixed
+/// pairwise tree — the reassociation that lets the compiler keep the
+/// loop in vector registers while the result stays deterministic (the
+/// same value on every run and every thread count).
+pub const LANES: usize = 8;
+
+/// Deterministic pairwise collapse of the `LANES` partial accumulators.
+#[inline]
+fn lane_sum(e: &[f64; LANES]) -> f64 {
+    ((e[0] + e[4]) + (e[1] + e[5])) + ((e[2] + e[6]) + (e[3] + e[7]))
+}
+
 /// A bank of capacitors with individual (mismatched) capacitances and
 /// per-capacitor top-plate voltages.
 #[derive(Debug, Clone)]
@@ -98,6 +112,155 @@ impl CapBank {
         self.v[i] = v_rail;
     }
 
+    /// Lane variant of [`CapBank::sample_deferred`] over the gathered
+    /// cap set `idx` (cap `idx[k]` charges to `rails[k]`): a fixed-stride
+    /// chunked loop with no per-element branches — the charge-event
+    /// energies accumulate into [`LANES`] partial sums and the meter is
+    /// updated once, hoisted out of the loop. Replaces N calls of the
+    /// scalar helper in the column P1 phase (ADR-007).
+    pub fn sample_deferred_lane(
+        &mut self,
+        idx: &[usize],
+        rails: &[f64],
+        meter: &mut EnergyMeter,
+    ) {
+        let n = idx.len();
+        debug_assert_eq!(rails.len(), n);
+        let mut e = [0.0f64; LANES];
+        let chunks = n / LANES;
+        for ch in 0..chunks {
+            for l in 0..LANES {
+                let k = ch * LANES + l;
+                let i = idx[k];
+                let dv = rails[k] - self.v[i];
+                e[l] += 0.5 * self.c[i] * dv * dv;
+                self.v[i] = rails[k];
+            }
+        }
+        for k in chunks * LANES..n {
+            let i = idx[k];
+            let dv = rails[k] - self.v[i];
+            e[0] += 0.5 * self.c[i] * dv * dv;
+            self.v[i] = rails[k];
+        }
+        meter.cap_energy_j += lane_sum(&e);
+        meter.cap_events += n as u64;
+        meter.toggles_cached(2 * n as u64, self.gate_e);
+    }
+
+    /// [`CapBank::sample_deferred_lane`] with a per-element fire mask
+    /// (the delta-sparsity P1, ADR-005/ADR-007): every cap's voltage is
+    /// written unconditionally — a quiescent cap already holds the rail
+    /// of the value it last fired with, so rewriting it is the identity
+    /// — while the metered charge/toggle work is *selected* by the mask
+    /// (`if fired {e} else {0.0}`, a cmov/blend, never a branch). With
+    /// every element fired this is bit-identical to the unmasked lane,
+    /// meter included.
+    pub fn sample_deferred_lane_masked(
+        &mut self,
+        idx: &[usize],
+        rails: &[f64],
+        fired: &[bool],
+        meter: &mut EnergyMeter,
+    ) {
+        let n = idx.len();
+        debug_assert_eq!(rails.len(), n);
+        debug_assert_eq!(fired.len(), n);
+        let mut e = [0.0f64; LANES];
+        let mut n_fired = 0u64;
+        let chunks = n / LANES;
+        for ch in 0..chunks {
+            for l in 0..LANES {
+                let k = ch * LANES + l;
+                let i = idx[k];
+                let dv = rails[k] - self.v[i];
+                let ek = 0.5 * self.c[i] * dv * dv;
+                e[l] += if fired[k] { ek } else { 0.0 };
+                n_fired += fired[k] as u64;
+                self.v[i] = rails[k];
+            }
+        }
+        for k in chunks * LANES..n {
+            let i = idx[k];
+            let dv = rails[k] - self.v[i];
+            let ek = 0.5 * self.c[i] * dv * dv;
+            e[0] += if fired[k] { ek } else { 0.0 };
+            n_fired += fired[k] as u64;
+            self.v[i] = rails[k];
+        }
+        meter.cap_energy_j += lane_sum(&e);
+        meter.cap_events += n_fired;
+        meter.toggles_cached(2 * n_fired, self.gate_e);
+    }
+
+    /// Contiguous-prefix sibling of [`CapBank::sample_deferred_lane`]:
+    /// caps `0..rails.len()` charge to `rails` with unit stride (no
+    /// gather) — the z-bank layout, where cap `i` belongs to row `i`.
+    pub fn sample_deferred_lane_contig(
+        &mut self,
+        rails: &[f64],
+        meter: &mut EnergyMeter,
+    ) {
+        let n = rails.len();
+        debug_assert!(n <= self.v.len());
+        let mut e = [0.0f64; LANES];
+        let chunks = n / LANES;
+        for ch in 0..chunks {
+            for l in 0..LANES {
+                let k = ch * LANES + l;
+                let dv = rails[k] - self.v[k];
+                e[l] += 0.5 * self.c[k] * dv * dv;
+                self.v[k] = rails[k];
+            }
+        }
+        for k in chunks * LANES..n {
+            let dv = rails[k] - self.v[k];
+            e[0] += 0.5 * self.c[k] * dv * dv;
+            self.v[k] = rails[k];
+        }
+        meter.cap_energy_j += lane_sum(&e);
+        meter.cap_events += n as u64;
+        meter.toggles_cached(2 * n as u64, self.gate_e);
+    }
+
+    /// Masked contiguous lane — see
+    /// [`CapBank::sample_deferred_lane_masked`] for the select-not-branch
+    /// mask semantics. Bit-identical to the unmasked contiguous lane
+    /// when every element is fired.
+    pub fn sample_deferred_lane_contig_masked(
+        &mut self,
+        rails: &[f64],
+        fired: &[bool],
+        meter: &mut EnergyMeter,
+    ) {
+        let n = rails.len();
+        debug_assert!(n <= self.v.len());
+        debug_assert_eq!(fired.len(), n);
+        let mut e = [0.0f64; LANES];
+        let mut n_fired = 0u64;
+        let chunks = n / LANES;
+        for ch in 0..chunks {
+            for l in 0..LANES {
+                let k = ch * LANES + l;
+                let dv = rails[k] - self.v[k];
+                let ek = 0.5 * self.c[k] * dv * dv;
+                e[l] += if fired[k] { ek } else { 0.0 };
+                n_fired += fired[k] as u64;
+                self.v[k] = rails[k];
+            }
+        }
+        for k in chunks * LANES..n {
+            let dv = rails[k] - self.v[k];
+            let ek = 0.5 * self.c[k] * dv * dv;
+            e[0] += if fired[k] { ek } else { 0.0 };
+            n_fired += fired[k] as u64;
+            self.v[k] = rails[k];
+        }
+        meter.cap_energy_j += lane_sum(&e);
+        meter.cap_events += n_fired;
+        meter.toggles_cached(2 * n_fired, self.gate_e);
+    }
+
     /// σ of the capacitance-weighted mean of fresh per-cap sampling
     /// noise over `idx`: sqrt(Σ C_i²σ_i²)/Σ C_i.
     pub fn aggregate_sample_sigma(&self, idx: &[usize]) -> f64 {
@@ -139,6 +302,12 @@ impl CapBank {
     /// `share` plus an extra Gaussian term (deferred sampling noise) and
     /// a deterministic shift (deferred injection) applied to the settled
     /// node — see `sample_deferred`.
+    ///
+    /// The charge/total-capacitance reduction and the dissipation sum
+    /// both run as fixed-stride [`LANES`]-chunked loops with per-lane
+    /// partial accumulators (ADR-007): branch-free bodies the compiler
+    /// can keep in vector registers, collapsed through the deterministic
+    /// [`lane_sum`] tree, meter updated once outside the loop.
     pub fn share_with(
         &mut self,
         idx: &[usize],
@@ -149,8 +318,24 @@ impl CapBank {
         rng: &mut Rng,
         meter: &mut EnergyMeter,
     ) -> f64 {
-        let mut q: f64 = self.charge(idx);
-        let mut ctot: f64 = idx.iter().map(|&i| self.c[i]).sum();
+        let n = idx.len();
+        let chunks = n / LANES;
+        let mut qs = [0.0f64; LANES];
+        let mut cs = [0.0f64; LANES];
+        for ch in 0..chunks {
+            for l in 0..LANES {
+                let i = idx[ch * LANES + l];
+                qs[l] += self.c[i] * self.v[i];
+                cs[l] += self.c[i];
+            }
+        }
+        for k in chunks * LANES..n {
+            let i = idx[k];
+            qs[0] += self.c[i] * self.v[i];
+            cs[0] += self.c[i];
+        }
+        let mut q = lane_sum(&qs);
+        let mut ctot = lane_sum(&cs);
         if let Some((ce, ve)) = extra {
             q += ce * ve;
             ctot += ce;
@@ -158,12 +343,22 @@ impl CapBank {
         let v_settled = q / ctot;
         // Dissipation in the share switches: ΔE = ½·Σ C_i (V_i − V̄)²
         // (energy difference before/after at equal charge).
-        for &i in idx {
-            let dv = self.v[i] - v_settled;
-            meter.cap_energy_j += 0.5 * self.c[i] * dv * dv;
-            meter.cap_events += 1;
+        let mut es = [0.0f64; LANES];
+        for ch in 0..chunks {
+            for l in 0..LANES {
+                let i = idx[ch * LANES + l];
+                let dv = self.v[i] - v_settled;
+                es[l] += 0.5 * self.c[i] * dv * dv;
+            }
         }
-        meter.toggles_cached(idx.len() as u64, self.gate_e);
+        for k in chunks * LANES..n {
+            let i = idx[k];
+            let dv = self.v[i] - v_settled;
+            es[0] += 0.5 * self.c[i] * dv * dv;
+        }
+        meter.cap_energy_j += lane_sum(&es);
+        meter.cap_events += n as u64;
+        meter.toggles_cached(n as u64, self.gate_e);
         // Thermal noise of the share (kT/C_total) combined with any
         // deferred sampling noise — independent Gaussians, one draw.
         let share_sigma = cfg.ktc_sigma(ctot);
@@ -274,6 +469,66 @@ mod tests {
             (sigma_meas / sigma_exp - 1.0).abs() < 0.1,
             "measured {sigma_meas}, expected {sigma_exp}"
         );
+    }
+
+    #[test]
+    fn lane_sampling_matches_scalar_voltages() {
+        // the lane loops write exactly the voltages the scalar helper
+        // writes (the rails), gather and contiguous layouts alike, for
+        // lengths straddling the chunk boundary
+        let cfg = CircuitConfig::default();
+        for n in [1usize, 7, 8, 9, 19] {
+            let mut rng = Rng::new(21);
+            let mut a = CapBank::new(2 * n, cfg.c_unit, &cfg, &mut rng);
+            let mut b = a.clone();
+            let (mut ma, mut mb) = (EnergyMeter::new(), EnergyMeter::new());
+            let idx: Vec<usize> = (0..n).map(|i| 2 * i + (i % 2)).collect();
+            let rails: Vec<f64> = (0..n).map(|i| 0.3 + 0.01 * i as f64).collect();
+            for (k, &i) in idx.iter().enumerate() {
+                a.sample_deferred(i, rails[k], &mut ma);
+            }
+            b.sample_deferred_lane(&idx, &rails, &mut mb);
+            assert_eq!(a.v, b.v, "n={n}");
+            assert_eq!(ma.cap_events, mb.cap_events);
+            assert_eq!(ma.switch_toggles, mb.switch_toggles);
+            // energy agrees up to the hoisted-accumulator reassociation
+            crate::prop_close!(ma.cap_energy_j, mb.cap_energy_j, 1e-25);
+        }
+    }
+
+    #[test]
+    fn masked_lane_all_fired_is_bit_identical_to_unmasked() {
+        let cfg = CircuitConfig::default();
+        for n in [5usize, 8, 13] {
+            let mut rng = Rng::new(33);
+            let mut a = CapBank::new(n, cfg.c_unit, &cfg, &mut rng);
+            let mut b = a.clone();
+            let (mut ma, mut mb) = (EnergyMeter::new(), EnergyMeter::new());
+            let rails: Vec<f64> = (0..n).map(|i| 0.5 - 0.02 * i as f64).collect();
+            let fired = vec![true; n];
+            a.sample_deferred_lane_contig(&rails, &mut ma);
+            b.sample_deferred_lane_contig_masked(&rails, &fired, &mut mb);
+            assert_eq!(a.v, b.v, "n={n}");
+            assert_eq!(ma, mb, "all-fired mask must be the identity, n={n}");
+        }
+    }
+
+    #[test]
+    fn masked_lane_quiescent_elements_write_but_meter_nothing() {
+        let cfg = CircuitConfig::default();
+        let n = 10;
+        let mut rng = Rng::new(44);
+        let mut bank = CapBank::new(n, cfg.c_unit, &cfg, &mut rng);
+        let mut m = EnergyMeter::new();
+        let rails: Vec<f64> = (0..n).map(|i| 0.4 + 0.03 * i as f64).collect();
+        let fired = vec![false; n];
+        bank.sample_deferred_lane_contig_masked(&rails, &fired, &mut m);
+        // voltages are rewritten (held rails) ...
+        for k in 0..n {
+            assert_eq!(bank.v[k], rails[k]);
+        }
+        // ... but nothing toggles and nothing dissipates
+        assert_eq!(m, EnergyMeter::new());
     }
 
     #[test]

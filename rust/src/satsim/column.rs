@@ -141,6 +141,13 @@ pub struct Column {
     idx_free: Vec<usize>,
     idx_h: Vec<usize>,
     idx_z: Vec<usize>,
+    /// Per-row row-driver voltage scratch for the P1 lane loops
+    /// (ADR-007): the drive voltages of a step are computed once into
+    /// these fixed-stride buffers, then applied to the cap banks by the
+    /// branch-free lane samplers. Transient within a phase — never
+    /// parked per slot.
+    drive_h: Vec<f64>,
+    drive_z: Vec<f64>,
     /// Precomputed deferred-noise aggregates (see caps::sample_deferred):
     /// per-cap sampling noise and injection of a freshly sampled bank,
     /// collapsed into one share-time draw. Nominal values — the ±σ_C
@@ -188,6 +195,8 @@ impl Column {
             idx_free: Vec::with_capacity(n),
             idx_h: half,
             idx_z,
+            drive_h: vec![0.0; n],
+            drive_z: vec![0.0; n],
             agg_sigma_pair,
             agg_shift_pair,
             agg_sigma_z,
@@ -348,6 +357,12 @@ impl Column {
     /// when this column is one row tile of a split layer. The step is
     /// completed by [`Column::phase_update`] (after an optional
     /// [`Column::override_share`] with the inter-tile combined values).
+    ///
+    /// P1 runs as three fixed-stride lane loops (ADR-007): drive
+    /// voltages, free-cap indices (select arithmetic, no branch), and
+    /// the branch-free lane samplers of [`CapBank`]. The RNG draw
+    /// order — the externally pinned invariant — is untouched: P1 draws
+    /// nothing (noise is deferred), P2 draws exactly its two normals.
     // lint: rng-draws(2, column-share)
     pub fn phase_share(
         &mut self,
@@ -361,24 +376,23 @@ impl Column {
 
         // ---- P1: sample (noise deferred to the share; exact — see
         // caps::sample_deferred) -------------------------------------------
+        // lane 1: row-driver voltages, pure fixed-stride arithmetic
+        for i in 0..n {
+            self.drive_h[i] = Self::drive(cfg, x[i], self.cfg_col.w_h[i]);
+            self.drive_z[i] = Self::drive(cfg, x[i], self.cfg_col.w_z[i]);
+        }
+        // lane 2: free-cap indices — `idx_h` stays valid across the
+        // step: the holding caps are untouched until the P4 swap
+        // rebuilds the list.
         self.idx_free.clear();
         for i in 0..n {
-            // `idx_h` stays valid across the step: the holding caps are
-            // untouched until the P4 swap rebuilds the list.
-            let free = 2 * i + (!self.h_sel[i]) as usize;
-            self.pair_bank.sample_deferred(
-                free,
-                Self::drive(cfg, x[i], self.cfg_col.w_h[i]),
-                meter,
-            );
-            self.z_bank.sample_deferred(
-                i,
-                Self::drive(cfg, x[i], self.cfg_col.w_z[i]),
-                meter,
-            );
             // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
-            self.idx_free.push(free);
+            self.idx_free.push(2 * i + (!self.h_sel[i]) as usize);
         }
+        // lanes 3+4: gather-sample the free pair caps, unit-stride the z
+        self.pair_bank
+            .sample_deferred_lane(&self.idx_free, &self.drive_h, meter);
+        self.z_bank.sample_deferred_lane_contig(&self.drive_z, meter);
 
         // ---- P2: charge share (Eq. 6) ------------------------------------
         let v_htilde = self.pair_bank.share_with(
@@ -414,6 +428,14 @@ impl Column {
     /// unchanged over the full cap sets — identical summation order and
     /// identical noise draws — so with every component fired this is
     /// bit-identical to [`Column::phase_share`], meter included.
+    ///
+    /// The mask is applied by *select*, not branch (ADR-007): every
+    /// component's cap voltage is written unconditionally (a quiescent
+    /// cap already holds its last-fired rail, so the write is the
+    /// identity) while the metered charge/toggle contributions are
+    /// zeroed lane-wise for quiescent elements. The P1 loops therefore
+    /// share their exact structure with [`Column::phase_share`] —
+    /// mandatory, since the all-fired mask must stay bit-identical.
     // lint: rng-draws(2, column-share)
     pub fn phase_share_masked(
         &mut self,
@@ -427,24 +449,24 @@ impl Column {
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(fired.len(), n);
 
-        // ---- P1: sample fired components only ----------------------------
+        // ---- P1: sample, metering fired components only ------------------
+        for i in 0..n {
+            self.drive_h[i] = Self::drive(cfg, x[i], self.cfg_col.w_h[i]);
+            self.drive_z[i] = Self::drive(cfg, x[i], self.cfg_col.w_z[i]);
+        }
         self.idx_free.clear();
         for i in 0..n {
-            let free = 2 * i + (!self.h_sel[i]) as usize;
-            let vh = Self::drive(cfg, x[i], self.cfg_col.w_h[i]);
-            let vz = Self::drive(cfg, x[i], self.cfg_col.w_z[i]);
-            if fired[i] {
-                self.pair_bank.sample_deferred(free, vh, meter);
-                self.z_bank.sample_deferred(i, vz, meter);
-            } else {
-                // already charged to this rail from the last fire — the
-                // switches never toggle, so nothing is metered
-                self.pair_bank.v[free] = vh;
-                self.z_bank.v[i] = vz;
-            }
             // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
-            self.idx_free.push(free);
+            self.idx_free.push(2 * i + (!self.h_sel[i]) as usize);
         }
+        self.pair_bank.sample_deferred_lane_masked(
+            &self.idx_free,
+            &self.drive_h,
+            fired,
+            meter,
+        );
+        self.z_bank
+            .sample_deferred_lane_contig_masked(&self.drive_z, fired, meter);
 
         // ---- P2: charge share, exactly as in phase_share -----------------
         let v_htilde = self.pair_bank.share_with(
@@ -555,11 +577,13 @@ impl Column {
         let z = Z6::new(z_code);
 
         // ---- P4: capacitor-swap state update (Eq. 1) ---------------------
+        // lane flip of the first k pair selectors (branch-free), the
+        // per-pair bank-select switch toggles hoisted to one meter call
         let k = z.swap_count(n);
-        for i in 0..k {
-            self.h_sel[i] = !self.h_sel[i];
-            meter.toggles(cfg, 2); // the pair's two bank-select switches
+        for s in self.h_sel[..k].iter_mut() {
+            *s = !*s;
         }
+        meter.toggles(cfg, 2 * k as u64); // two bank-select switches/pair
         // rebuild the h index list after the swap
         self.rebuild_idx_h();
         let v_h = self.pair_bank.share(

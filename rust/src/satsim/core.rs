@@ -316,14 +316,16 @@ impl Core {
         self.fired.clear();
         self.x_eff.clear();
         let mut n_fired: u64 = 0;
+        // fire-mask lane (ADR-007): tracker update and effective input
+        // via select, not branch — `if fire {xi} else {held}` lowers to
+        // a cmov/blend, so the loop stays a fixed-stride vector body
         for (i, &xi) in x.iter().enumerate() {
             let fire = delta_fires(xi, x_last[i], cfg.delta);
-            if fire {
-                x_last[i] = xi;
-                n_fired += 1;
-            }
+            let held = if fire { xi } else { x_last[i] };
+            x_last[i] = held;
+            n_fired += fire as u64;
             self.fired.push(fire); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
-            self.x_eff.push(x_last[i]); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
+            self.x_eff.push(held); // lint: allow(alloc, push into a cleared scratch list that already holds capacity for all rows)
         }
         self.delta.components_fired += n_fired;
         self.delta.components_skipped += x.len() as u64 - n_fired;

@@ -7,4 +7,5 @@ pub mod check;
 pub mod cli;
 pub mod http;
 pub mod json;
+pub mod pool;
 pub mod rng;

@@ -1,0 +1,322 @@
+//! A small reusable scoped fork-join thread pool — std-only, in keeping
+//! with the anyhow-only crate policy (design record: ADR-007).
+//!
+//! Built for exactly one call shape: the mixed-signal engine's threaded
+//! plan traversal, where a handful of *independent* tasks (disjoint
+//! cores of one layer) fan out per time step, and the caller must block
+//! until every task has finished before it touches the results. That
+//! blocking join is also what makes the lifetime story sound: the job
+//! closure may borrow caller-local state non-`'static`, because
+//! [`ScopedPool::run`] never returns while a worker can still observe
+//! the borrow.
+//!
+//! Steady-state discipline: the pool allocates only at construction
+//! (worker threads, shared control block). [`ScopedPool::run`] itself
+//! performs no heap allocation — a mutex handshake, an atomic work
+//! cursor, and a raw borrow of the caller's closure — so it is safe to
+//! call from inside the engine's zero-alloc step path
+//! (tests/hot_path_alloc.rs runs it under the counting allocator).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased pointer to the caller's job closure. Only ever
+/// dereferenced between the epoch publication and the `active == 0`
+/// join in [`ScopedPool::run`], while the borrow it was cast from is
+/// pinned by the blocked caller.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls are safe), and the
+// pointer is only dereferenced while `ScopedPool::run` keeps the
+// original borrow alive on the calling thread (it blocks until every
+// worker has finished with the job).
+unsafe impl Send for JobPtr {}
+
+/// Mutex-guarded control state of the pool.
+struct Ctrl {
+    /// Monotone job counter; workers wait for it to advance.
+    epoch: u64,
+    /// Workers still running the current job.
+    active: usize,
+    /// The current job, present while `active > 0`.
+    job: Option<JobPtr>,
+    /// A worker's job closure panicked (re-raised by `run`).
+    panicked: bool,
+    /// Workers exit at the next wakeup.
+    shutdown: bool,
+}
+
+struct Shared {
+    m: Mutex<Ctrl>,
+    /// Wakes workers on a new epoch (or shutdown).
+    work_cv: Condvar,
+    /// Wakes the caller when the last worker finishes.
+    done_cv: Condvar,
+    /// Next task index to claim; tasks are distributed dynamically so an
+    /// imbalanced split (e.g. a wide owner tile) self-levels.
+    cursor: AtomicUsize,
+    /// Task count of the current job.
+    limit: AtomicUsize,
+}
+
+/// A persistent fork-join pool of `threads − 1` workers; the calling
+/// thread participates as the remaining lane, so `threads == 1` is the
+/// serial case with no pool traffic at all.
+pub struct ScopedPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ScopedPool {
+    /// Build a pool that executes jobs on `threads` lanes total
+    /// (clamped to ≥ 1): the caller plus `threads − 1` spawned workers.
+    pub fn new(threads: usize) -> ScopedPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            m: Mutex::new(Ctrl {
+                epoch: 0,
+                active: 0,
+                job: None,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            limit: AtomicUsize::new(0),
+        });
+        let workers = (1..threads)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("satsim-pool-{lane}"))
+                    .spawn(move || Self::worker_loop(&shared))
+                    .expect("spawning a pool worker thread")
+            })
+            .collect();
+        ScopedPool { shared, workers }
+    }
+
+    /// Total lanes (caller included).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `job(i)` for every task index `i in 0..n`, distributing tasks
+    /// across all lanes via an atomic cursor, and return only when every
+    /// task has completed. The closure may borrow caller-local state:
+    /// the blocking join keeps those borrows alive for as long as any
+    /// worker can observe them. Tasks must be independent — `job` runs
+    /// concurrently with itself on distinct indices.
+    ///
+    /// Allocation-free on the non-panic path; a panic inside `job` (on
+    /// any lane) is re-raised here after all lanes have stopped touching
+    /// the borrow.
+    pub fn run(&self, n: usize, job: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n == 1 {
+            // serial fast path: no handshake, no atomics
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                for i in 0..n {
+                    job(i);
+                }
+            }));
+            if let Err(p) = r {
+                resume_unwind(p);
+            }
+            return;
+        }
+        self.shared.cursor.store(0, Ordering::Relaxed);
+        self.shared.limit.store(n, Ordering::Relaxed);
+        {
+            // lint: allow(panic, mutex poisoning is fatal by design — a panicked lane already aborted the step)
+            let mut c = self.shared.m.lock().expect("pool mutex poisoned");
+            c.job = Some(JobPtr(job));
+            c.epoch += 1;
+            c.active = self.workers.len();
+            drop(c);
+            self.shared.work_cv.notify_all();
+        }
+        // the caller is a full lane: drain tasks until the cursor runs dry
+        let main_result =
+            catch_unwind(AssertUnwindSafe(|| Self::drain(&self.shared, job)));
+        // join: block until every worker has finished with the job — the
+        // step that makes the lifetime erasure in JobPtr sound
+        // lint: allow(panic, mutex poisoning is fatal by design — a panicked lane already aborted the step)
+        let mut c = self.shared.m.lock().expect("pool mutex poisoned");
+        while c.active > 0 {
+            // lint: allow(panic, mutex poisoning is fatal by design — a panicked lane already aborted the step)
+            c = self.shared.done_cv.wait(c).expect("pool mutex poisoned");
+        }
+        c.job = None;
+        let worker_panicked = std::mem::take(&mut c.panicked);
+        drop(c);
+        if let Err(p) = main_result {
+            resume_unwind(p);
+        }
+        assert!(!worker_panicked, "scoped pool worker panicked during a job");
+    }
+
+    /// Claim-and-run loop shared by the caller lane and the workers.
+    fn drain(shared: &Shared, job: &(dyn Fn(usize) + Sync)) {
+        let limit = shared.limit.load(Ordering::Relaxed);
+        loop {
+            let i = shared.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= limit {
+                return;
+            }
+            job(i);
+        }
+    }
+
+    fn worker_loop(shared: &Shared) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                // lint: allow(panic, worker dies with the pool if the mutex is poisoned)
+                let mut c = shared.m.lock().expect("pool mutex poisoned");
+                while c.epoch == seen && !c.shutdown {
+                    // lint: allow(panic, worker dies with the pool if the mutex is poisoned)
+                    c = shared.work_cv.wait(c).expect("pool mutex poisoned");
+                }
+                if c.shutdown {
+                    return;
+                }
+                seen = c.epoch;
+                match c.job {
+                    Some(j) => j,
+                    // epoch advanced with no job only at shutdown; treat
+                    // a spurious state as an empty job
+                    None => continue,
+                }
+            };
+            // SAFETY: `run` blocks until `active == 0`, so the borrow
+            // behind this pointer is alive for the whole drain below.
+            let f = unsafe { &*job.0 };
+            let r = catch_unwind(AssertUnwindSafe(|| Self::drain(shared, f)));
+            // lint: allow(panic, worker dies with the pool if the mutex is poisoned)
+            let mut c = shared.m.lock().expect("pool mutex poisoned");
+            if r.is_err() {
+                c.panicked = true;
+            }
+            c.active -= 1;
+            if c.active == 0 {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        {
+            // a poisoned mutex at teardown means a worker already died
+            // panicking; detach instead of double-panicking
+            let Ok(mut c) = self.shared.m.lock() else { return };
+            c.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = ScopedPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            for n in [0usize, 1, 3, 64, 257] {
+                let hits: Vec<AtomicU64> =
+                    (0..n).map(|_| AtomicU64::new(0)).collect();
+                pool.run(n, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        1,
+                        "task {i} at {threads} threads, n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn borrows_caller_state_mutably_through_disjoint_tasks() {
+        // the scoped contract: tasks write disjoint slices of a local
+        // buffer borrowed across the pool boundary
+        let pool = ScopedPool::new(3);
+        let mut out = vec![0u64; 100];
+        {
+            let chunks: Vec<&mut [u64]> = out.chunks_mut(10).collect();
+            let cells: Vec<Mutex<&mut [u64]>> =
+                chunks.into_iter().map(Mutex::new).collect();
+            pool.run(cells.len(), &|k| {
+                let mut chunk = cells[k].lock().unwrap();
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (k * 10 + j) as u64;
+                }
+            });
+        }
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = ScopedPool::new(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(8, &|i| {
+                total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * (1 + 8) * 8 / 2);
+    }
+
+    #[test]
+    fn worker_panic_is_reraised_on_the_caller() {
+        let pool = ScopedPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i % 2 == 1 {
+                    panic!("boom {i}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "a panicking task must fail the run");
+        // the pool survives and serves the next job
+        let total = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ScopedPool::new(1);
+        let mut sum = 0u64;
+        {
+            let cell = Mutex::new(&mut sum);
+            pool.run(10, &|i| {
+                **cell.lock().unwrap() += i as u64;
+            });
+        }
+        assert_eq!(sum, 45);
+    }
+}

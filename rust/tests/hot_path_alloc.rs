@@ -169,4 +169,17 @@ fn engine_step_is_allocation_free_after_warmup() {
     assert!(delta_split.plan.layers[0].is_row_split());
     assert_zero_alloc_steps(&mut delta_split, 100, "delta/row-split");
     assert_zero_alloc_batch_steps(&mut delta_split, 100, 4, "delta/row-split");
+
+    // threaded plan traversal (ADR-007): with the scoped pool active the
+    // steady-state invariant must hold unchanged — the pool allocates at
+    // construction (set_engine_threads, a batch-boundary event) and its
+    // per-step dispatch is a mutex handshake plus an atomic cursor, so
+    // the counted window still sees zero. Covers both traversal shapes:
+    // the per-tile fan-out (unsplit) and the partial/combine split
+    // (row-split), staging buffers included.
+    unsplit.set_engine_threads(2);
+    assert_eq!(unsplit.engine_threads(), 2);
+    assert_zero_alloc_batch_steps(&mut unsplit, 1, 8, "threaded/unsplit");
+    split.set_engine_threads(2);
+    assert_zero_alloc_batch_steps(&mut split, 100, 4, "threaded/row-split");
 }

@@ -1,0 +1,178 @@
+//! Thread-count invariance of the batched engine (PR 9 tentpole).
+//!
+//! The threaded plan traversal (ADR-007) must be a **pure scheduling
+//! change**: for any engine thread count, any plan shape, and any
+//! delta-sparsity threshold, the lockstep batch path produces logits
+//! bit-identical to the 1-thread serial traversal — which
+//! `tests/batch_parity.rs` in turn pins to the sequential scalar
+//! `step` path. The chain anchors here on the sequential engine
+//! directly, so one assertion covers both links: threading × the lane
+//! inner loops vs the scalar path.
+//!
+//! Why this can be exact and not merely close: the worker tasks never
+//! share a float accumulation. Each task steps its own cores (whose
+//! RNG streams depend only on their own call sequence, docs/adr/001),
+//! writes its outputs into per-core staging, and the main thread
+//! replays the serial splice/combine order — row-tile-ascending
+//! weighted partial sums, core-ascending output order. Scheduling
+//! decides *when* a tile computes, never *what* it computes or the
+//! order anything is reduced in.
+//!
+//! Also pinned: the observability counters (delta skip counters,
+//! energy meters, fabric stats) are identical under threading — they
+//! are per-core state merged in core-index order at read time, so two
+//! runs at different thread counts must agree to the bit.
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::nn::{argmax, synthetic_network};
+
+/// Engine thread counts under test; 1 is the serial traversal the
+/// others must match bit for bit.
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Deterministic uniform-length batch: `b` sequences of `t_len` frames
+/// of width `d_in`, every value distinct enough to exercise the delta
+/// tracker's fire/skip boundary.
+fn make_seqs(b: usize, t_len: usize, d_in: usize) -> Vec<Vec<f32>> {
+    (0..b)
+        .map(|s| {
+            (0..t_len * d_in)
+                .map(|i| (((i + 3) * (s * 7 + 5)) % 11) as f32 / 10.0)
+                .collect()
+        })
+        .collect()
+}
+
+/// Core assertion: every thread count reproduces the sequential scalar
+/// path's logits and labels, bit for bit, on the given plan and delta.
+fn assert_thread_invariance(
+    dims: &[usize],
+    geometry: CoreGeometry,
+    delta: f64,
+    want_row_split: bool,
+    ctx: &str,
+) {
+    let template = MixedSignalEngine::new(
+        synthetic_network(dims, 17),
+        CircuitConfig { delta, ..CircuitConfig::default() },
+        geometry,
+    )
+    .expect("parity network must map");
+    assert_eq!(
+        template.plan.layers.iter().any(|l| l.is_row_split()),
+        want_row_split,
+        "{ctx}: plan shape is not what this case intends to cover"
+    );
+    let (b, t_len) = (4usize, 12usize);
+    let data = make_seqs(b, t_len, dims[0]);
+    let views: Vec<&[f32]> = data.iter().map(|s| s.as_slice()).collect();
+
+    // the outside anchor: the sequential scalar step path, one
+    // sequence at a time
+    let mut seq_engine = template.replicate().expect("replicate");
+    let seq_logits: Vec<Vec<f32>> = data
+        .iter()
+        .map(|s| {
+            seq_engine.classify(s);
+            seq_engine.logits()
+        })
+        .collect();
+
+    for &threads in &THREADS {
+        let mut engine = template.replicate().expect("replicate");
+        engine.set_engine_threads(threads);
+        assert_eq!(engine.engine_threads(), threads);
+        let labels = engine.classify_batch(&views);
+        for slot in 0..b {
+            let logits = engine.logits_slot(slot);
+            assert_eq!(
+                logits, seq_logits[slot],
+                "{ctx}: slot {slot} at {threads} engine threads is not \
+                 bit-identical to the sequential scalar path"
+            );
+            assert_eq!(labels[slot], argmax(&seq_logits[slot]));
+        }
+    }
+}
+
+#[test]
+fn unsplit_plan_is_thread_invariant_exact_and_delta() {
+    // single-tile layers: the pool degenerates to per-layer fan-out of
+    // one task — the scheduling edge case, not the scaling case
+    let geometry = CoreGeometry { rows: 16, cols: 16 };
+    for delta in [0.0, 0.05] {
+        assert_thread_invariance(
+            &[1, 16, 10],
+            geometry,
+            delta,
+            false,
+            &format!("unsplit delta={delta}"),
+        );
+    }
+}
+
+#[test]
+fn row_split_plan_is_thread_invariant_exact_and_delta() {
+    // 40 inputs on 32-row cores → 2 row tiles: the partial-sum combine
+    // is where the serial accumulation-order replay actually matters
+    let geometry = CoreGeometry { rows: 32, cols: 32 };
+    for delta in [0.0, 0.05] {
+        assert_thread_invariance(
+            &[40, 8],
+            geometry,
+            delta,
+            true,
+            &format!("row-split delta={delta}"),
+        );
+    }
+}
+
+#[test]
+fn multi_layer_paper_shape_is_thread_invariant() {
+    // a deeper stack on small cores: column splits + a row split in
+    // the same traversal, many independent tiles per layer — the
+    // fan-out the pool exists for
+    let geometry = CoreGeometry { rows: 24, cols: 24 };
+    assert_thread_invariance(
+        &[40, 32, 32, 10],
+        geometry,
+        0.0,
+        true,
+        "multi-layer",
+    );
+}
+
+#[test]
+fn counters_are_deterministic_under_threading() {
+    // delta skip counters, energy meters, and fabric stats are
+    // per-core state merged in core-index order at read time: a
+    // threaded run must report exactly what the serial run reports,
+    // and two threaded runs must report exactly each other
+    let dims = [40usize, 8];
+    let geometry = CoreGeometry { rows: 32, cols: 32 };
+    let template = MixedSignalEngine::new(
+        synthetic_network(&dims, 17),
+        CircuitConfig { delta: 0.05, ..CircuitConfig::default() },
+        geometry,
+    )
+    .expect("parity network must map");
+    let data = make_seqs(4, 12, dims[0]);
+    let views: Vec<&[f32]> = data.iter().map(|s| s.as_slice()).collect();
+
+    let run = |threads: usize| {
+        let mut engine = template.replicate().expect("replicate");
+        engine.set_engine_threads(threads);
+        engine.classify_batch(&views);
+        (engine.delta_stats(), engine.energy(), engine.fabric_stats())
+    };
+    let serial = run(1);
+    assert!(
+        serial.0.components_fired + serial.0.components_skipped > 0,
+        "the delta tracker must actually engage on this workload"
+    );
+    for threads in [2usize, 4] {
+        assert_eq!(run(threads), serial, "{threads} threads");
+        assert_eq!(run(threads), serial, "{threads} threads, second run");
+    }
+}

@@ -191,6 +191,7 @@ fn stream_server_e2e_matches_one_shot_golden_and_satsim() {
         CircuitConfig::default(),
         satsim_template.plan.clone(),
         4,
+        1,
     )
     .unwrap();
     let satsim_server = StreamServer::spawn(satsim_factory, 1, 4);
