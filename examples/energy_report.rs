@@ -44,7 +44,11 @@ fn main() -> Result<()> {
     for s in &samples {
         engine.classify(&s.pixels);
     }
+    // live meter state: the cores' meters are lifetime-cumulative, so
+    // the per-inference figure is the total amortized over the
+    // inferences actually run
     let m = engine.energy();
+    let n_inf = samples.len() as f64;
 
     println!("\nsimulated on real digit sequences ({} cores, {} steps):",
              engine.n_cores(), m.steps);
@@ -56,6 +60,10 @@ fn main() -> Result<()> {
     t.row(&["cap energy".into(), format!("{:.2} pJ", m.cap_energy_j * 1e12)]);
     t.row(&["gate energy".into(), format!("{:.2} pJ", m.gate_energy_j * 1e12)]);
     t.row(&["energy / step".into(), format!("{:.2} pJ", m.per_step_j() * 1e12)]);
+    t.row(&[
+        "energy / inference".into(),
+        format!("{:.2} pJ", m.total_j() / n_inf * 1e12),
+    ]);
     t.row(&[
         "bound utilization".into(),
         format!(

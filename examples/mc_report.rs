@@ -1,0 +1,54 @@
+//! Monte-Carlo device-variation sweep: fabricate a population of
+//! device instances (one per batch slot, docs/adr/008), run a shared
+//! glyph workload through the lockstep batched engine, and reduce to
+//! per-mismatch-level accuracy and energy statistics.
+//!
+//!     cargo run --release --example mc_report
+//!
+//! Each instance `i` is seeded with `instance_seed(master, i)` — the
+//! (i+1)-th splitmix64 output of the master seed — so slot `i` is
+//! bit-identical to a whole fresh engine built with that seed. The
+//! sweep is a pure function of (weights, sweep config): rerunning with
+//! the same master seed, at any `--engine-threads`, reproduces the
+//! report bit-for-bit.
+
+use anyhow::Result;
+use minimalist::config::CoreGeometry;
+use minimalist::montecarlo::DeviceSweep;
+use minimalist::nn::synthetic_network;
+
+fn main() -> Result<()> {
+    // Small synthetic network on small cores so the example completes
+    // in seconds; the CLI (`minimalist mc`) sweeps the paper network.
+    let nw = synthetic_network(&[1, 16, 10], 7);
+
+    let sweep = DeviceSweep {
+        instances: 64,
+        mismatch_levels: vec![0.0, 0.005, 0.01, 0.02, 0.05],
+        samples: 8,
+        img: 8,
+        master_seed: 0x5EED,
+        geometry: CoreGeometry { rows: 16, cols: 16 },
+        ..DeviceSweep::default()
+    };
+
+    println!("== Monte-Carlo device-variation sweep ==\n");
+    println!(
+        "{} device instances per mismatch level, {} samples of {}×{} \
+         pixels,\nmaster seed {:#x} (instance i gets the (i+1)-th \
+         splitmix64 output).\n",
+        sweep.instances, sweep.samples, sweep.img, sweep.img, sweep.master_seed
+    );
+
+    let report = sweep.run(&nw)?;
+    print!("{}", report.summary());
+
+    println!(
+        "\nAccuracy degrades as capacitor mismatch σ grows while the \
+         label-flip rate\nagainst the ideal device rises; energy per \
+         step is activity-dependent and\nnear-constant across levels. \
+         Rerun with any thread count — the report is\nbit-identical \
+         for a fixed master seed."
+    );
+    Ok(())
+}

@@ -39,6 +39,14 @@
 //!   same slot count. The traversal is bit-identical at every thread
 //!   count (`tests/parallel_parity.rs`), so this axis measures pure
 //!   scheduling overhead vs fan-out win.
+//! * **mc_sweep** (schema 7) — the Monte-Carlo device-variation path
+//!   (ADR-008): per mismatch level, the accuracy/flip-rate/energy
+//!   reductions of a [`crate::montecarlo::DeviceSweep`] over a
+//!   per-slot-fabricated device population, plus the lockstep
+//!   throughput of stepping that population (`instances_per_s`). Only
+//!   the throughput cells are gated by [`check_against`] — accuracy on
+//!   a noisy device population is statistics, not performance, and
+//!   must never flap the regression gate.
 //!
 //! The JSON schema is versioned (`schema`); CI regenerates the file per
 //! commit, gates on regressions against the committed baseline
@@ -353,6 +361,81 @@ fn parallel_sweep(opts: &BenchOpts) -> Json {
         ),
         ("cores", n_cores.into()),
         ("row_split_layers", row_split_layers.into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Monte-Carlo device sweep (schema 7): the accuracy × energy
+/// reductions of a [`crate::montecarlo::DeviceSweep`] next to the
+/// lockstep throughput of advancing the fabricated device population
+/// (ADR-008). One row per mismatch level; `instances_per_s` is full
+/// inferences (sequences of `img²` steps) completed per second across
+/// the whole population, the gated cell. The reduction side is
+/// deterministic in the master seed; the throughput side is measured.
+fn mc_sweep(opts: &BenchOpts) -> Json {
+    use crate::montecarlo::DeviceSweep;
+    let dims = [1usize, 16, 10];
+    let geometry = CoreGeometry { rows: 16, cols: 16 };
+    let nw = synthetic_network(&dims, 7);
+    let instances = 16usize; // bench scale; `minimalist mc` sweeps ≥ 64
+    let img = 8usize;
+    let t_len = img * img;
+    let sweep = DeviceSweep {
+        instances,
+        samples: if opts.quick { 2 } else { 8 },
+        img,
+        mismatch_levels: if opts.quick {
+            vec![0.0, 0.05]
+        } else {
+            vec![0.0, 0.01, 0.05]
+        },
+        geometry,
+        ..DeviceSweep::default()
+    };
+    let report = sweep.run(&nw).expect("mc sweep network must map");
+    let mut rows: Vec<Json> = Vec::new();
+    for l in &report.levels {
+        let circuit = CircuitConfig {
+            sigma_c: l.sigma_c,
+            seed: sweep.master_seed,
+            ..CircuitConfig::default()
+        };
+        let mut engine = MixedSignalEngine::new(nw.clone(), circuit, geometry)
+            .expect("mc sweep network must map");
+        engine.provision_devices(sweep.master_seed, instances);
+        let xs: Vec<f32> =
+            (0..instances).map(|i| ((i * 5) % 7) as f32 / 6.0).collect();
+        let mut t = 0u32;
+        let r = bench(&format!("mc-sigma-{}", l.sigma_c), opts.budget(), || {
+            engine.step_batch(t, &xs);
+            t = t.wrapping_add(1);
+        });
+        let inst_steps_per_s = r.throughput(instances as f64);
+        rows.push(Json::obj(vec![
+            ("sigma_c", l.sigma_c.into()),
+            ("instances_per_s", (inst_steps_per_s / t_len as f64).into()),
+            ("inst_steps_per_s", inst_steps_per_s.into()),
+            ("step_us_p50", (r.median_ns / 1e3).into()),
+            ("acc_mean", l.acc_mean.into()),
+            ("acc_min", l.acc_min.into()),
+            ("acc_p5", l.acc_p5.into()),
+            ("flip_rate", l.flip_rate.into()),
+            ("energy_per_step_j", l.energy_per_step_j.into()),
+            ("energy_per_inference_j", l.energy_per_inference_j.into()),
+        ]));
+    }
+    Json::obj(vec![
+        ("backend", "satsim".into()),
+        ("dims", dims.to_vec().into()),
+        (
+            "geometry",
+            format!("{}x{}", geometry.rows, geometry.cols).into(),
+        ),
+        ("instances", instances.into()),
+        ("img", img.into()),
+        ("samples", sweep.samples.into()),
+        ("master_seed", (sweep.master_seed as f64).into()),
+        ("ideal_accuracy", report.ideal_accuracy.into()),
         ("rows", Json::Arr(rows)),
     ])
 }
@@ -708,18 +791,21 @@ pub fn run(opts: &BenchOpts) -> Json {
     ]);
     Json::obj(vec![
         ("bench", "baseline".into()),
-        // schema 6: adds parallel_sweep (slot count × intra-engine
-        // thread count, ADR-007); schema 5 added delta_sweep
+        // schema 7: adds mc_sweep (Monte-Carlo device population:
+        // accuracy/energy reductions × lockstep instance throughput,
+        // ADR-008); schema 6 added parallel_sweep (slot count ×
+        // intra-engine thread count, ADR-007), schema 5 delta_sweep
         // (delta-sparsity threshold × throughput/skip-ratio/label-
         // agreement, ADR-005), schema 4 serving.http_sweep, schema 3
         // serving.streaming_sweep
-        ("schema", 6usize.into()),
+        ("schema", 7usize.into()),
         ("status", "measured".into()),
         ("quick", opts.quick.into()),
         ("engine", engine),
         ("batch_sweep", sweep),
         ("delta_sweep", delta_sweep(opts)),
         ("parallel_sweep", parallel_sweep(opts)),
+        ("mc_sweep", mc_sweep(opts)),
         ("serving", serving),
     ])
 }
@@ -786,7 +872,10 @@ fn check_metric(
 /// the schema bump (nonzero-delta rates measure a different, lossy
 /// computation). The schema-6 `parallel_sweep` rows *are* gated: a
 /// thread-count cell that loses its speedup is a real scheduling
-/// regression, not a different computation. A placeholder baseline
+/// regression, not a different computation. The schema-7 `mc_sweep`
+/// rows gate **throughput cells only** (`instances_per_s` per mismatch
+/// level): the accuracy/flip-rate columns of a noisy device population
+/// are statistics and must never flap the gate. A placeholder baseline
 /// (`status` ≠ `"measured"`, the committed state until the first CI
 /// run lands numbers) produces a note and an empty comparison, so the
 /// gate passes vacuously until a measured baseline is committed.
@@ -934,6 +1023,43 @@ pub fn check_against(
             warn_frac,
         );
     }
+    // mc_sweep: throughput cells only — the accuracy/energy columns are
+    // recorded but deliberately never compared (see the doc above)
+    let mc_rows = |doc: &Json| -> Vec<(f64, f64)> {
+        doc.get("mc_sweep")
+            .and_then(|s| s.get("rows"))
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .filter_map(|r| {
+                        Some((
+                            r.get("sigma_c")?.as_f64()?,
+                            r.get("instances_per_s")?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let cur_mc = mc_rows(current);
+    for (sigma, b) in mc_rows(baseline) {
+        let Some(&(_, c)) =
+            cur_mc.iter().find(|(s, _)| (*s - sigma).abs() < 1e-12)
+        else {
+            out.notes.push(format!(
+                "mc-sweep sigma_c={sigma} missing from the current run"
+            ));
+            continue;
+        };
+        check_metric(
+            &mut out,
+            &format!("mc-sweep sigma_c={sigma} instances/s"),
+            c,
+            b,
+            fail_frac,
+            warn_frac,
+        );
+    }
     out
 }
 
@@ -1002,7 +1128,7 @@ mod tests {
         let opts = BenchOpts { quick: true };
         let doc = run(&opts);
         assert_eq!(doc.req_str("status").unwrap(), "measured");
-        assert_eq!(doc.req_f64("schema").unwrap() as u64, 6);
+        assert_eq!(doc.req_f64("schema").unwrap() as u64, 7);
         let engine = doc.req("engine").unwrap().as_arr().unwrap();
         assert_eq!(engine.len(), 2);
         for e in engine {
@@ -1068,6 +1194,26 @@ mod tests {
                 assert!(r.req_f64("speedup_vs_1thread").unwrap() > 0.0);
             }
             assert_eq!(chunk[0].req_f64("speedup_vs_1thread").unwrap(), 1.0);
+        }
+        // the mc sweep carries a device population with real throughput
+        // and in-range statistics per mismatch level; the sigma=0 row
+        // must flip no labels against the ideal device within mismatch
+        // (it still carries default sampling noise, so agreement on
+        // accuracy is only required to be a valid fraction)
+        let mc = doc.req("mc_sweep").unwrap();
+        assert!(mc.req_f64("instances").unwrap() >= 2.0);
+        let mrows = mc.req("rows").unwrap().as_arr().unwrap();
+        assert_eq!(mrows.len(), 2, "quick mc sweep runs two levels");
+        assert_eq!(mrows[0].req_f64("sigma_c").unwrap(), 0.0);
+        for r in mrows {
+            assert!(r.req_f64("instances_per_s").unwrap() > 0.0);
+            assert!(r.req_f64("inst_steps_per_s").unwrap() > 0.0);
+            let acc = r.req_f64("acc_mean").unwrap();
+            assert!((0.0..=1.0).contains(&acc), "acc_mean {acc}");
+            assert!(r.req_f64("acc_min").unwrap() <= acc + 1e-12);
+            let flips = r.req_f64("flip_rate").unwrap();
+            assert!((0.0..=1.0).contains(&flips), "flip_rate {flips}");
+            assert!(r.req_f64("energy_per_inference_j").unwrap() > 0.0);
         }
         let serving = doc.req("serving").unwrap();
         let ws = serving.req("worker_sweep").unwrap();
@@ -1203,6 +1349,55 @@ mod tests {
         assert!(sparse.passed());
         assert!(
             sparse.notes.iter().any(|n| n.contains("parallel-sweep")),
+            "{:?}",
+            sparse.notes
+        );
+    }
+
+    #[test]
+    fn check_gates_mc_sweep_throughput_cells_only() {
+        // the schema-7 mc rows gate instances/s per sigma level; the
+        // accuracy/energy columns are never compared, so an accuracy
+        // collapse alone must not trip the gate
+        let with_mc = |rate: f64, acc: f64| -> Json {
+            let mut doc = doc_with(1000.0, 4000.0);
+            doc.set(
+                "mc_sweep",
+                Json::obj(vec![(
+                    "rows",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("sigma_c", 0.05.into()),
+                        ("instances_per_s", rate.into()),
+                        ("acc_mean", acc.into()),
+                    ])]),
+                )]),
+            );
+            doc
+        };
+        let baseline = with_mc(200.0, 0.9);
+        // small drift: clean pass
+        assert!(check_against(&with_mc(190.0, 0.9), &baseline, 0.25, 0.10)
+            .passed());
+        // accuracy collapse with steady throughput: still a pass
+        let acc_drop = check_against(&with_mc(200.0, 0.1), &baseline, 0.25, 0.10);
+        assert!(acc_drop.passed() && acc_drop.warnings.is_empty());
+        // a real throughput regression fails on the mc cell
+        let bad = check_against(&with_mc(100.0, 0.9), &baseline, 0.25, 0.10);
+        assert!(!bad.passed());
+        assert!(
+            bad.hard_regressions[0].contains("mc-sweep sigma_c=0.05"),
+            "{:?}",
+            bad.hard_regressions
+        );
+        // an old-schema baseline without the axis skips it cleanly
+        let old = doc_with(1000.0, 4000.0);
+        assert!(check_against(&with_mc(1.0, 0.0), &old, 0.25, 0.10).passed());
+        // a cell missing from the current run notes, not panics
+        let sparse =
+            check_against(&doc_with(1000.0, 4000.0), &baseline, 0.25, 0.10);
+        assert!(sparse.passed());
+        assert!(
+            sparse.notes.iter().any(|n| n.contains("mc-sweep")),
             "{:?}",
             sparse.notes
         );

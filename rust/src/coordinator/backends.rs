@@ -289,6 +289,13 @@ impl Backend for MixedSignalBackend {
     fn delta_stats(&self) -> Option<crate::satsim::DeltaCounters> {
         Some(self.engine.delta_stats())
     }
+
+    /// The engine's live §4.2 energy meter, merged across its cores —
+    /// every cap event, switch toggle, and conversion this backend has
+    /// simulated since construction.
+    fn energy_stats(&self) -> Option<crate::energy::EnergyMeter> {
+        Some(self.engine.energy())
+    }
 }
 
 /// The streaming interface over the engine's slot pool: each live
@@ -429,6 +436,10 @@ mod tests {
         // reports counters (it has an engine), but they stay zero
         let d = b.delta_stats().unwrap();
         assert_eq!(d.components_fired + d.components_skipped, 0);
+        // the live energy meter saw every step of the classification
+        let m = b.energy_stats().unwrap();
+        assert_eq!(m.steps, 16);
+        assert!(m.cap_events > 0 && m.total_j() > 0.0);
     }
 
     #[test]

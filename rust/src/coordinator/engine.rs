@@ -141,6 +141,12 @@ pub struct MixedSignalEngine {
     /// scratch slot-id list `step_batch` lends to the shared traversal
     /// (kept as `0..batch` so the batched step allocates nothing)
     slot_ids: Vec<usize>,
+    /// whether the batch slots currently hold per-slot Monte-Carlo
+    /// device instances (ADR-008) instead of the default clones of the
+    /// construction device — set by
+    /// [`MixedSignalEngine::provision_devices`], cleared by
+    /// [`MixedSignalEngine::dissolve_devices`]
+    per_slot_devices: bool,
     /// free-slot pool of the streaming-session mode (LIFO); empty in
     /// batch mode — see [`MixedSignalEngine::provision_sessions`]
     free_slots: Vec<usize>,
@@ -245,6 +251,7 @@ impl MixedSignalEngine {
             accs: vec![Vec::with_capacity(geometry.cols)],
             batch_x: vec![0.0; weights.dims[0]],
             slot_ids: vec![0],
+            per_slot_devices: false,
             free_slots: Vec::new(),
             leased: vec![false],
             core_out: CoreStep::default(),
@@ -376,6 +383,16 @@ impl MixedSignalEngine {
         );
         let b = batch.max(1);
         if b != self.batch {
+            // `set_slots` silently dissolves per-slot Monte-Carlo
+            // devices (the columns re-clone the construction hardware),
+            // so a width change under an active sweep is always a bug —
+            // the caller must `dissolve_devices` first (ADR-008)
+            assert!(
+                !self.per_slot_devices,
+                "reset_batch({b}) would dissolve {} provisioned per-slot \
+                 device instances — call dissolve_devices first",
+                self.batch
+            );
             for core in self.cores.iter_mut() {
                 core.set_slots(b, &self.circuit);
             }
@@ -405,6 +422,63 @@ impl MixedSignalEngine {
         self.free_slots.clear();
         self.leased.clear();
         self.leased.resize(b, false);
+        self.reset();
+    }
+
+    /// Provision one independent **device instance per batch slot**
+    /// (ADR-008): slot `i` refabricates every column's capacitor banks
+    /// and SAR ADC from the per-instance seed
+    /// [`crate::montecarlo::instance_seed`]`(master_seed, i)`, exactly
+    /// as a whole fresh engine built with `circuit.seed = seeds[i]`
+    /// would draw them, and its noise stream restarts from the
+    /// post-fabrication RNG of that fabrication. This is the explicit
+    /// opt-out of the ADR-001 slot-clone convention that batched
+    /// bit-parity rests on — the engine stays in this mode (surviving
+    /// same-width `reset_batch`/`classify_batch` calls) until
+    /// [`MixedSignalEngine::dissolve_devices`], and `reset_batch`
+    /// refuses width changes while instances are provisioned.
+    ///
+    /// An engine boundary like `set_engine_threads`: fabrication
+    /// allocates freely; the steady-state step afterwards swaps device
+    /// state pointer-wise and stays allocation-free.
+    pub fn provision_devices(&mut self, master_seed: u64, instances: usize) {
+        if self.per_slot_devices {
+            // re-provisioning with a different width must not trip the
+            // reset_batch guard — the old instances are dissolved first
+            self.dissolve_devices();
+        }
+        self.reset_batch(instances.max(1));
+        let b = self.batch;
+        let seeds: Vec<u64> = (0..b)
+            .map(|i| crate::montecarlo::instance_seed(master_seed, i))
+            .collect();
+        for core in self.cores.iter_mut() {
+            core.provision_slot_devices(&self.circuit, &seeds);
+        }
+        self.per_slot_devices = true;
+        // restart every slot from its own instance's post-fabrication
+        // stream root (Core::reset restores slot_rng0s, not rng0)
+        self.reset();
+    }
+
+    /// Whether the batch slots currently hold per-slot Monte-Carlo
+    /// device instances (ADR-008) rather than construction clones.
+    pub fn per_slot_devices(&self) -> bool {
+        self.per_slot_devices
+    }
+
+    /// Return every slot to the ADR-001 convention: construction
+    /// hardware restored to the working fields, instance devices
+    /// dropped, all slot streams re-rooted at the construction stream.
+    /// A no-op if no instances are provisioned.
+    pub fn dissolve_devices(&mut self) {
+        if !self.per_slot_devices {
+            return;
+        }
+        for core in self.cores.iter_mut() {
+            core.dissolve_slot_devices();
+        }
+        self.per_slot_devices = false;
         self.reset();
     }
 
@@ -1443,6 +1517,62 @@ mod tests {
             }),
         );
         assert!(result.is_err(), "ragged batch must be rejected");
+    }
+
+    #[test]
+    fn provisioned_slots_match_fresh_engines_with_instance_seeds() {
+        // the ADR-008 anchor invariant at engine level: MC slot `s`
+        // must be bit-identical to a whole fresh engine built with
+        // `circuit.seed = instance_seed(master, s)`
+        let mut mc = toy_engine(false);
+        let master = 0x5EED_CAFE;
+        mc.provision_devices(master, 3);
+        assert!(mc.per_slot_devices());
+        let seqs: Vec<Vec<f32>> = (0..3)
+            .map(|s| {
+                (0..24).map(|t| ((t * (s + 2)) % 5) as f32 / 4.0).collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let labels = mc.classify_batch(&refs);
+        for s in 0..3 {
+            let seed = crate::montecarlo::instance_seed(master, s);
+            let circuit = CircuitConfig { seed, ..mc.circuit.clone() };
+            let mut fresh = MixedSignalEngine::new(
+                mc.weights.clone(),
+                circuit,
+                CoreGeometry { rows: 16, cols: 16 },
+            )
+            .unwrap();
+            assert_eq!(fresh.classify(&seqs[s]), labels[s]);
+            assert_eq!(
+                fresh.logits(),
+                mc.logits_slot(s),
+                "slot {s} diverged from its fresh-engine anchor"
+            );
+        }
+        // dissolving restores the ADR-001 clone convention bit-exactly
+        mc.dissolve_devices();
+        assert!(!mc.per_slot_devices());
+        let mut plain = toy_engine(false);
+        let want: Vec<usize> = seqs.iter().map(|s| plain.classify(s)).collect();
+        assert_eq!(mc.classify_batch(&refs), want);
+    }
+
+    #[test]
+    fn reset_batch_refuses_width_change_with_devices() {
+        let mut e = toy_engine(false);
+        e.provision_devices(7, 2);
+        let blew = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| e.reset_batch(4)),
+        );
+        assert!(blew.is_err(), "width change must refuse under a sweep");
+        // same-width resets keep the instances installed
+        e.reset_batch(2);
+        assert!(e.per_slot_devices());
+        e.dissolve_devices();
+        e.reset_batch(4);
+        assert_eq!(e.batch_slots(), 4);
     }
 
     #[test]

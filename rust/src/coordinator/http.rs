@@ -178,6 +178,28 @@ impl HttpMetrics {
         ] {
             s.push_str(&format!("{family} {n}\n"));
         }
+        // §4.2 energy accounting — the engine workers' live meters,
+        // folded into the recorder at worker exit and summed across
+        // workers (steps are disjoint per worker, so they add). Zeros
+        // unless a mixed-signal backend ran behind this front end.
+        // Spelled out in full for repolint's `exhaustive-metrics` rule.
+        let e = &self.recorder.energy;
+        for (family, n) in [
+            ("minimalist_energy_cap_events_total", e.cap_events),
+            ("minimalist_energy_switch_toggles_total", e.switch_toggles),
+            ("minimalist_energy_adc_conversions_total", e.adc_conversions),
+            ("minimalist_energy_steps_total", e.steps),
+        ] {
+            s.push_str(&format!("{family} {n}\n"));
+        }
+        s.push_str(&format!(
+            "minimalist_energy_joules_total {:e}\n",
+            e.total_j()
+        ));
+        s.push_str(&format!(
+            "minimalist_energy_joules_per_step {:e}\n",
+            e.per_step_j()
+        ));
         s
     }
 
@@ -732,6 +754,10 @@ mod tests {
         m.recorder.delta.components_fired = 11;
         m.recorder.delta.components_skipped = 9;
         m.recorder.delta.shares_skipped = 2;
+        m.recorder.energy.cap_charge(1e-15, 0.0, 0.5);
+        m.recorder.energy.toggles_cached(7, 1e-16);
+        m.recorder.energy.adc_conversion();
+        m.recorder.energy.steps = 13;
         let text = m.render(5);
         assert!(text.contains("minimalist_http_connections_total 3"), "{text}");
         assert!(text.contains("minimalist_http_requests_total 6"), "{text}");
@@ -764,6 +790,21 @@ mod tests {
             text.contains("minimalist_delta_shares_skipped_total 2"),
             "{text}"
         );
+        assert!(
+            text.contains("minimalist_energy_cap_events_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("minimalist_energy_switch_toggles_total 7"),
+            "{text}"
+        );
+        assert!(
+            text.contains("minimalist_energy_adc_conversions_total 1"),
+            "{text}"
+        );
+        assert!(text.contains("minimalist_energy_steps_total 13"), "{text}");
+        assert!(text.contains("minimalist_energy_joules_total "), "{text}");
+        assert!(text.contains("minimalist_energy_joules_per_step "), "{text}");
         assert!(m.summary().contains("requests=6"));
     }
 }

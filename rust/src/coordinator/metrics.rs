@@ -4,6 +4,7 @@
 use std::time::{Duration, Instant};
 
 use crate::coordinator::server::ServeError;
+use crate::energy::EnergyMeter;
 use crate::satsim::DeltaCounters;
 
 #[derive(Debug, Clone)]
@@ -36,6 +37,16 @@ pub struct LatencyRecorder {
     /// shutdown — the same lifecycle as the latency samples. All zeros
     /// for non-delta backends.
     pub delta: DeltaCounters,
+    /// §4.2 energy meter of the backend(s) this recorder covers.
+    /// Workers fold their engine's live `MixedSignalEngine::energy`
+    /// state in when their loop exits
+    /// ([`crate::coordinator::server::Backend::energy_stats`]), and
+    /// [`LatencyRecorder::merge`] sums the meters across workers at
+    /// shutdown via [`EnergyMeter::merge_disjoint`] — each worker
+    /// stepped through its own requests, so steps sum rather than
+    /// lockstep-max. All zeros for backends without simulated cores
+    /// (golden, PJRT).
+    pub energy: EnergyMeter,
 }
 
 impl Default for LatencyRecorder {
@@ -57,6 +68,7 @@ impl LatencyRecorder {
             errors_busy: 0,
             errors_panicked: 0,
             delta: DeltaCounters::default(),
+            energy: EnergyMeter::new(),
         }
     }
 
@@ -154,6 +166,7 @@ impl LatencyRecorder {
         self.errors_busy += other.errors_busy;
         self.errors_panicked += other.errors_panicked;
         self.delta.merge(&other.delta);
+        self.energy.merge_disjoint(&other.energy);
         self.started = self.started.min(other.started);
         self.last_sample = self.last_sample.max(other.last_sample);
     }
@@ -187,6 +200,14 @@ impl LatencyRecorder {
                 self.delta.components_fired,
                 self.delta.components_skipped,
                 self.delta.skip_ratio()
+            ));
+        }
+        if self.energy.steps > 0 {
+            // §4.2 accounting, only when a mixed-signal backend ran
+            s.push_str(&format!(
+                " energy[steps={} pJ/step={:.2}]",
+                self.energy.steps,
+                self.energy.per_step_j() * 1e12
             ));
         }
         s
@@ -308,5 +329,26 @@ mod tests {
         assert!(s.contains("delta[fired=40 skipped=70"), "{s}");
         // recorders that never saw a delta backend stay silent
         assert!(!LatencyRecorder::new().summary().contains("delta["));
+    }
+
+    #[test]
+    fn energy_meters_merge_disjoint_and_print() {
+        // per-worker meters cover different time steps: steps sum
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        b.energy.cap_charge(1e-15, 0.0, 0.5);
+        b.energy.steps = 40;
+        let mut c = LatencyRecorder::new();
+        c.energy.cap_charge(1e-15, 0.0, 0.5);
+        c.energy.steps = 60;
+        a.merge(&b);
+        a.merge(&c);
+        assert_eq!(a.energy.steps, 100);
+        assert_eq!(a.energy.cap_events, 2);
+        assert!((a.energy.per_step_j() - a.energy.total_j() / 100.0).abs() < 1e-30);
+        let s = a.summary();
+        assert!(s.contains("energy[steps=100"), "{s}");
+        // recorders that never saw a mixed-signal backend stay silent
+        assert!(!LatencyRecorder::new().summary().contains("energy["));
     }
 }

@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request, SessionQueue};
 use crate::coordinator::metrics::LatencyRecorder;
+use crate::energy::EnergyMeter;
 use crate::satsim::DeltaCounters;
 
 /// A sequence classifier backend. Not required to be `Send`: the PJRT
@@ -80,6 +81,19 @@ pub trait Backend {
     /// into their [`LatencyRecorder`] when they exit, so the shutdown
     /// merge reports fleet-wide skip ratios alongside the latencies.
     fn delta_stats(&self) -> Option<DeltaCounters> {
+        None
+    }
+
+    /// Live cumulative energy meter of this backend's simulated cores
+    /// (§4.2 accounting: cap events, switch toggles, conversions,
+    /// joules), if it has one. `None` (the default) means the backend
+    /// has no energy machinery — the golden and PJRT backends burn no
+    /// simulated charge. Follows the same lifecycle as
+    /// [`Backend::delta_stats`]: the worker loops fold a `Some` into
+    /// their [`LatencyRecorder`] at exit, and the shutdown merge sums
+    /// the meters across workers so the end-of-run summary and the
+    /// `/metrics` endpoint report fleet-wide joules per step.
+    fn energy_stats(&self) -> Option<EnergyMeter> {
         None
     }
 }
@@ -502,6 +516,9 @@ fn worker_loop(
     }
     if let Some(d) = backend.delta_stats() {
         metrics.delta.merge(&d);
+    }
+    if let Some(m) = backend.energy_stats() {
+        metrics.energy.merge(&m);
     }
     metrics
 }
@@ -989,6 +1006,9 @@ fn stream_worker_loop(
     }
     if let Some(d) = backend.delta_stats() {
         metrics.delta.merge(&d);
+    }
+    if let Some(m) = backend.energy_stats() {
+        metrics.energy.merge(&m);
     }
     metrics
 }

@@ -108,6 +108,18 @@ impl EnergyMeter {
         // describe the same time steps.
         self.steps = self.steps.max(other.steps);
     }
+
+    /// Fold a meter that covers **different** time steps into this one
+    /// — per-worker meters at serving shutdown, where each worker's
+    /// engine stepped through its own requests. Identical to
+    /// [`EnergyMeter::merge`] except `steps` sums, so
+    /// [`EnergyMeter::per_step_j`] stays an average over every step any
+    /// worker ran rather than over the busiest worker's.
+    pub fn merge_disjoint(&mut self, other: &EnergyMeter) {
+        let steps = self.steps + other.steps;
+        self.merge(other);
+        self.steps = steps;
+    }
 }
 
 /// Analytic worst-case bound for one core time step (the paper's §4.2
@@ -177,6 +189,26 @@ mod tests {
         let bound = paper_network_bound(&cfg);
         let pj = bound * 1e12;
         assert!(pj > 20.0 && pj < 800.0, "bound = {pj} pJ");
+    }
+
+    #[test]
+    fn merge_disjoint_sums_steps() {
+        let mut a = EnergyMeter::new();
+        let mut b = EnergyMeter::new();
+        a.cap_charge(1e-15, 0.0, 0.5);
+        a.step_done();
+        a.step_done();
+        b.cap_charge(1e-15, 0.0, 0.5);
+        b.step_done();
+        // same-step merge keeps the lockstep count …
+        let mut lock = a.clone();
+        lock.merge(&b);
+        assert_eq!(lock.steps, 2);
+        // … disjoint merge sums it (per-worker meters at shutdown)
+        a.merge_disjoint(&b);
+        assert_eq!(a.steps, 3);
+        assert_eq!(a.cap_events, 2);
+        assert!((a.per_step_j() - a.total_j() / 3.0).abs() < 1e-30);
     }
 
     #[test]

@@ -34,6 +34,8 @@
 //! ([`coordinator::HttpServer`]; wire contract in docs/http-api.md,
 //! design in docs/adr/004, load generator in [`coordinator::loadgen`]);
 //! [`runtime`] runs the AOT artifacts through PJRT (feature-gated);
+//! [`montecarlo`] reuses the lockstep batch substrate to sweep
+//! fabricated device populations (one instance per slot, ADR-008);
 //! [`dataset`], [`io`], [`util`], [`bench_suite`], and [`config`]
 //! supply data, containers, and knobs throughout.
 //!
@@ -69,6 +71,7 @@ pub mod energy;
 pub mod io;
 pub mod lint;
 pub mod mapping;
+pub mod montecarlo;
 pub mod nn;
 pub mod quant;
 pub mod router;

@@ -70,6 +70,7 @@ pub const HOT_FNS: &[(&str, &[&str])] = &[
             "charge",
             "share",
             "share_with",
+            "swap_device",
             "weighted_mean",
         ],
     ),

@@ -41,6 +41,17 @@ pub const RNG_GROUPS: &[(&str, &[(&str, &str)])] = &[
             ("satsim/core.rs", "step_partial_slot_delta"),
         ],
     ),
+    // ADR-008: provisioning a per-slot device must replay Column::new's
+    // construction draw order exactly (CapBank(2n) → CapBank(n) →
+    // SarAdc), or the fabricated instance is not the device a fresh
+    // engine with that seed would build.
+    (
+        "column-device",
+        &[
+            ("satsim/column.rs", "new"),
+            ("satsim/column.rs", "install_slot_device"),
+        ],
+    ),
 ];
 
 /// Run the pass over `tree`.

@@ -14,6 +14,9 @@
 //!   adc                       ADC transfer characterization (Fig 3C)
 //!   trace                     software vs mixed-signal traces (Fig 4)
 //!   energy                    energy report (§4.2)
+//!   mc                        Monte-Carlo device-variation sweep over
+//!                             the batched engine (ADR-008; --quick for
+//!                             CI smoke scale, --out for the JSON report)
 //!   eval                      accuracy of a checkpoint on the test split
 //!
 //! Run `minimalist <cmd> --help-args` for per-command options.
@@ -43,10 +46,11 @@ fn main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("bench") => cmd_bench(&args),
         Some("energy") => cmd_energy(&args),
+        Some("mc") => cmd_mc(&args),
         Some("eval") => cmd_eval(&args),
         _ => {
             eprintln!(
-                "usage: minimalist <info|serve|loadgen|plan|bench|energy|eval> \
+                "usage: minimalist <info|serve|loadgen|plan|bench|energy|mc|eval> \
                  [--options]\n\
                  (Fig 3C / Fig 4 generators live in examples/: \
                  adc_characterization, trace_compare)"
@@ -613,15 +617,24 @@ fn cmd_energy(args: &Args) -> Result<()> {
         CoreGeometry::default(),
     )?;
     let t = args.get_usize("steps", 64)?;
+    let n_inf = args.get_usize("inferences", 4)?.max(1);
     let seq: Vec<f32> = (0..t).map(|i| ((i * 7) % 11) as f32 / 10.0).collect();
-    engine.classify(&seq);
+    for _ in 0..n_inf {
+        engine.classify(&seq);
+    }
+    // meters are lifetime-cumulative, so the per-inference figure is
+    // the live total amortized over the inferences actually run
     let m = engine.energy();
     println!(
-        "simulated over {} steps, {} cores: {:.2} pJ/step \
+        "simulated over {} steps, {} cores: {:.2} pJ/step, \
+         {:.2} pJ/inference over {} inference(s) of {} steps \
          ({} cap events, {} switch toggles, {} conversions)",
         m.steps,
         engine.n_cores(),
         m.per_step_j() * 1e12,
+        m.total_j() / n_inf as f64 * 1e12,
+        n_inf,
+        t,
         m.cap_events,
         m.switch_toggles,
         m.adc_conversions
@@ -638,6 +651,80 @@ fn cmd_energy(args: &Args) -> Result<()> {
             d.shares_skipped
         );
     }
+    Ok(())
+}
+
+/// `minimalist mc`: Monte-Carlo device-variation sweep (ADR-008).
+///   minimalist mc [--quick] [--instances N] [--mismatch-levels 0,0.01,..]
+///                 [--delta D] [--engine-threads T] [--samples N]
+///                 [--img-size S] [--seed MASTER] [--rows R] [--cols C]
+///                 [--weights p] [--out report.json]
+/// Every batch slot is fabricated as its own device instance from the
+/// master seed; the report reduces to per-mismatch-level accuracy
+/// (mean/min/p5), label-flip rate vs the ideal device, and simulated
+/// energy. Exits non-zero on an empty sweep or NaN accuracy — the CI
+/// `mc-smoke` assertion.
+fn cmd_mc(args: &Args) -> Result<()> {
+    use minimalist::montecarlo::DeviceSweep;
+    let quick = args.flag("quick");
+    let base = if quick { DeviceSweep::quick() } else { DeviceSweep::default() };
+    let levels: Vec<f64> = match args.opt("mismatch-levels") {
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.trim().parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("--mismatch-levels expects floats, got '{v}'")
+                })
+            })
+            .collect::<Result<_>>()?,
+        None => base.mismatch_levels.clone(),
+    };
+    // the quick sweep runs a small network on small cores so the CI
+    // smoke job still covers ≥ 64 device instances in seconds
+    let default_geo = if quick {
+        CoreGeometry { rows: 16, cols: 16 }
+    } else {
+        base.geometry
+    };
+    let sweep = DeviceSweep {
+        instances: args.get_usize("instances", base.instances)?.max(1),
+        mismatch_levels: levels,
+        delta: args.get_f64("delta", base.delta)?.max(0.0),
+        engine_threads: args
+            .get_usize("engine-threads", base.engine_threads)?
+            .max(1),
+        samples: args.get_usize("samples", base.samples)?.max(1),
+        img: args.get_usize("img-size", base.img)?.max(2),
+        master_seed: args.get_u64("seed", base.master_seed)?,
+        geometry: CoreGeometry {
+            rows: args.get_usize("rows", default_geo.rows)?,
+            cols: args.get_usize("cols", default_geo.cols)?,
+        },
+    };
+    let weights = match args.opt("weights") {
+        Some(p) => NetworkWeights::load(p)?,
+        None if quick => synthetic_network(&[1, 16, 10], 7),
+        None => {
+            eprintln!("note: no --weights given, using a synthetic network");
+            synthetic_network(&NetworkConfig::paper().dims, 7)
+        }
+    };
+    let report = sweep.run(&weights)?;
+    print!("{}", report.summary());
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, format!("{}\n", report.to_json()))?;
+        println!("wrote {out}");
+    }
+    anyhow::ensure!(
+        !report.levels.is_empty(),
+        "empty sweep: no mismatch level produced a report"
+    );
+    anyhow::ensure!(
+        report.levels.iter().all(|l| {
+            l.acc_mean.is_finite() && l.acc_min.is_finite() && l.acc_p5.is_finite()
+        }),
+        "sweep produced NaN accuracy"
+    );
     Ok(())
 }
 

@@ -1,0 +1,437 @@
+//! Monte-Carlo device-variation sweeps over the batched engine
+//! (ADR-008).
+//!
+//! The paper's central hardware claim — that switched-capacitor GRU
+//! cores survive fabrication non-idealities — needs accuracy-vs-mismatch
+//! statistics over *many device instances*, not one seed. The lockstep
+//! batch substrate already advances B independent sequences through one
+//! plan traversal per step; this module reuses it to advance B
+//! independent **devices**: [`MixedSignalEngine::provision_devices`]
+//! gives every batch slot its own fabrication (capacitor mismatch, ADC
+//! DAC weights, comparator offset) drawn from a per-instance seed, so
+//! one `classify_batch` call evaluates the whole device population on a
+//! sample.
+//!
+//! ## The seeding split
+//!
+//! Slot `i`'s device is fabricated from
+//! [`instance_seed`]`(master_seed, i)` — the `(i+1)`-th successive
+//! [`splitmix64`] output of the master seed. The split is documented and
+//! frozen because it is the reproducibility contract of every sweep
+//! artifact: a `SweepReport` is a pure function of
+//! `(weights, DeviceSweep)`, bit-identical across engine thread counts
+//! (tests/mc_determinism.rs) and across machines. Each slot is
+//! bit-identical to a whole fresh engine built with
+//! `circuit.seed = instance_seed(master, i)` — the anchor invariant the
+//! satsim/engine layers pin inline — so any single device of a sweep can
+//! be re-instantiated alone for debugging.
+//!
+//! This deliberately *opts out* of the ADR-001 slot-clone convention
+//! (every slot the same device, batched ≡ sequential bit-exactly); the
+//! two conventions coexist because provisioning is explicit and
+//! reversible (`dissolve_devices`). See docs/adr/008.
+//!
+//! ## Reductions
+//!
+//! Per mismatch level ([`LevelReport`]): mean/min/5th-percentile
+//! accuracy across instances, label-flip rate against the ideal
+//! (noise-free) device, and activity-dependent energy from the cores'
+//! [`crate::energy::EnergyMeter`]s. Surfaced as `minimalist mc`, the
+//! schema-7 `mc_sweep` bench axis, and `examples/mc_report.rs`.
+
+use anyhow::Result;
+
+use crate::config::{CircuitConfig, CoreGeometry};
+use crate::coordinator::MixedSignalEngine;
+use crate::dataset::glyphs;
+use crate::nn::weights::NetworkWeights;
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+
+/// Per-instance fabrication seed: the `(instance + 1)`-th successive
+/// [`splitmix64`] output of `master` in closed form (splitmix64 strides
+/// its state by the golden-ratio increment, so the stream can be jumped
+/// to without iterating). Well-mixed and decorrelated across both
+/// `master` and `instance`; `instance_seed(m, 0) != m`, so slot 0 of a
+/// sweep is *not* the construction device (ADR-008).
+pub fn instance_seed(master: u64, instance: usize) -> u64 {
+    let mut state = master
+        .wrapping_add((instance as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    splitmix64(&mut state)
+}
+
+/// Configuration of one Monte-Carlo device sweep — the reproducibility
+/// key of its [`SweepReport`] (together with the network weights).
+#[derive(Debug, Clone)]
+pub struct DeviceSweep {
+    /// Device instances per mismatch level (= lockstep batch width).
+    pub instances: usize,
+    /// Capacitor-mismatch levels to sweep: each becomes
+    /// `CircuitConfig::sigma_c` of a fresh engine (the remaining noise
+    /// knobs stay at their defaults).
+    pub mismatch_levels: Vec<f64>,
+    /// Delta-sparsity threshold (ADR-005) applied to every engine,
+    /// including the ideal reference — 0 disables.
+    pub delta: f64,
+    /// Intra-engine traversal lanes (ADR-007). Purely a throughput
+    /// knob: the report is bit-identical at every value.
+    pub engine_threads: usize,
+    /// Glyph samples evaluated per level.
+    pub samples: usize,
+    /// Glyph image side (sequence length = `img²`).
+    pub img: usize,
+    /// Master seed: the root of every per-instance fabrication seed and
+    /// of the workload split.
+    pub master_seed: u64,
+    /// Core geometry the network is planned onto.
+    pub geometry: CoreGeometry,
+}
+
+impl Default for DeviceSweep {
+    fn default() -> DeviceSweep {
+        DeviceSweep {
+            instances: 64,
+            mismatch_levels: vec![0.0, 0.005, 0.01, 0.02, 0.05],
+            delta: 0.0,
+            engine_threads: 1,
+            samples: 16,
+            img: 16,
+            master_seed: 0x5EED,
+            geometry: CoreGeometry::default(),
+        }
+    }
+}
+
+impl DeviceSweep {
+    /// CI smoke scale: still ≥ 64 instances (the population is the
+    /// point), but few samples, a small image, and three levels.
+    pub fn quick() -> DeviceSweep {
+        DeviceSweep {
+            samples: 4,
+            img: 8,
+            mismatch_levels: vec![0.0, 0.02, 0.05],
+            ..DeviceSweep::default()
+        }
+    }
+
+    /// Run the sweep: per mismatch level, fabricate `instances` devices
+    /// onto the batch slots and classify every workload sample on all
+    /// of them in lockstep. Deterministic in `(weights, self)` — no
+    /// wall-clock, no global state.
+    pub fn run(&self, weights: &NetworkWeights) -> Result<SweepReport> {
+        anyhow::ensure!(self.instances > 0, "sweep needs ≥ 1 device instance");
+        anyhow::ensure!(
+            !self.mismatch_levels.is_empty(),
+            "sweep needs ≥ 1 mismatch level"
+        );
+        anyhow::ensure!(self.samples > 0, "sweep needs ≥ 1 workload sample");
+        let samples =
+            glyphs::make_split(self.samples, self.img, self.master_seed ^ 0x5A11AD);
+
+        // the ideal (noise-free) device: the flip-rate reference. One
+        // sequential engine — mismatch level and instance count do not
+        // apply to a device with zero variation.
+        let ideal_cfg =
+            CircuitConfig { delta: self.delta, ..CircuitConfig::ideal() };
+        let mut ideal =
+            MixedSignalEngine::new(weights.clone(), ideal_cfg, self.geometry)?;
+        let ideal_labels: Vec<usize> =
+            samples.iter().map(|s| ideal.classify(&s.pixels)).collect();
+        let ideal_correct = ideal_labels
+            .iter()
+            .zip(samples.iter())
+            .filter(|(&l, s)| l == s.label)
+            .count();
+
+        let mut levels = Vec::with_capacity(self.mismatch_levels.len());
+        for &sigma_c in &self.mismatch_levels {
+            let circuit = CircuitConfig {
+                sigma_c,
+                delta: self.delta,
+                seed: self.master_seed,
+                ..CircuitConfig::default()
+            };
+            let mut engine =
+                MixedSignalEngine::new(weights.clone(), circuit, self.geometry)?;
+            engine.set_engine_threads(self.engine_threads);
+            engine.provision_devices(self.master_seed, self.instances);
+            let mut correct = vec![0usize; self.instances];
+            let mut flips = 0u64;
+            for (si, s) in samples.iter().enumerate() {
+                let refs: Vec<&[f32]> = (0..self.instances)
+                    .map(|_| s.pixels.as_slice())
+                    .collect();
+                let labels = engine.classify_batch(&refs);
+                for (i, &l) in labels.iter().enumerate() {
+                    correct[i] += (l == s.label) as usize;
+                    flips += (l != ideal_labels[si]) as u64;
+                }
+            }
+            let meter = engine.energy();
+            let mut acc: Vec<f64> = correct
+                .iter()
+                .map(|&c| c as f64 / self.samples as f64)
+                .collect();
+            acc.sort_by(|a, b| a.partial_cmp(b).expect("accuracies are finite"));
+            let inferences = (self.samples * self.instances) as f64;
+            levels.push(LevelReport {
+                sigma_c,
+                acc_mean: acc.iter().sum::<f64>() / acc.len() as f64,
+                acc_min: acc[0],
+                acc_p5: percentile_low(&acc, 0.05),
+                flip_rate: flips as f64 / inferences,
+                energy_total_j: meter.total_j(),
+                energy_per_step_j: meter.per_step_j(),
+                energy_per_inference_j: meter.total_j() / inferences,
+                cap_events: meter.cap_events,
+                adc_conversions: meter.adc_conversions,
+                per_instance_acc: acc,
+            });
+        }
+        Ok(SweepReport {
+            master_seed: self.master_seed,
+            instances: self.instances,
+            samples: self.samples,
+            img: self.img,
+            delta: self.delta,
+            engine_threads: self.engine_threads,
+            ideal_accuracy: ideal_correct as f64 / self.samples as f64,
+            levels,
+        })
+    }
+}
+
+/// Lower-index percentile of an ascending-sorted slice: the value at
+/// `floor(p·(n−1))`. Deterministic (no interpolation), pessimistic for
+/// small populations — p5 of fewer than 20 instances is the minimum.
+fn percentile_low(sorted: &[f64], p: f64) -> f64 {
+    let idx = (p * (sorted.len() - 1) as f64).floor() as usize;
+    sorted[idx]
+}
+
+/// One mismatch level's reduction over the device population.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelReport {
+    /// Capacitor-mismatch sigma this level fabricated with.
+    pub sigma_c: f64,
+    /// Mean accuracy across instances.
+    pub acc_mean: f64,
+    /// Worst instance's accuracy.
+    pub acc_min: f64,
+    /// 5th-percentile accuracy (lower-index convention).
+    pub acc_p5: f64,
+    /// Fraction of (sample, instance) labels that differ from the ideal
+    /// device's label on the same sample.
+    pub flip_rate: f64,
+    /// Total simulated energy across the level's whole workload (J).
+    pub energy_total_j: f64,
+    /// Mean energy per accounted meter step (J).
+    pub energy_per_step_j: f64,
+    /// Total energy divided by `samples × instances` inferences (J).
+    pub energy_per_inference_j: f64,
+    /// Capacitor (dis)charge events accounted.
+    pub cap_events: u64,
+    /// Full SAR conversions accounted.
+    pub adc_conversions: u64,
+    /// Per-instance accuracies, ascending (the full distribution, for
+    /// tests and plotting).
+    pub per_instance_acc: Vec<f64>,
+}
+
+/// The reduced result of one [`DeviceSweep::run`] — deterministic in
+/// `(weights, sweep config)`, so two runs with the same master seed are
+/// comparable field-for-field (tests/mc_determinism.rs asserts
+/// equality, not closeness).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    /// Master seed the sweep derived everything from.
+    pub master_seed: u64,
+    /// Device instances per level.
+    pub instances: usize,
+    /// Workload samples per level.
+    pub samples: usize,
+    /// Glyph image side.
+    pub img: usize,
+    /// Delta-sparsity threshold applied throughout.
+    pub delta: f64,
+    /// Traversal lanes the sweep ran with (does not affect results).
+    pub engine_threads: usize,
+    /// Accuracy of the ideal (noise-free) device on the same workload.
+    pub ideal_accuracy: f64,
+    /// One reduction per mismatch level, in sweep order.
+    pub levels: Vec<LevelReport>,
+}
+
+impl SweepReport {
+    /// Machine-readable form (the `minimalist mc --out` document and
+    /// the bench-suite axis rows). Deliberately timestamp-free so the
+    /// document is bit-stable for a fixed master seed.
+    pub fn to_json(&self) -> Json {
+        let levels: Vec<Json> = self
+            .levels
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("sigma_c", l.sigma_c.into()),
+                    ("acc_mean", l.acc_mean.into()),
+                    ("acc_min", l.acc_min.into()),
+                    ("acc_p5", l.acc_p5.into()),
+                    ("flip_rate", l.flip_rate.into()),
+                    ("energy_total_j", l.energy_total_j.into()),
+                    ("energy_per_step_j", l.energy_per_step_j.into()),
+                    (
+                        "energy_per_inference_j",
+                        l.energy_per_inference_j.into(),
+                    ),
+                    ("cap_events", (l.cap_events as f64).into()),
+                    ("adc_conversions", (l.adc_conversions as f64).into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("report", "mc_sweep".into()),
+            ("master_seed", (self.master_seed as f64).into()),
+            ("instances", self.instances.into()),
+            ("samples", self.samples.into()),
+            ("img", self.img.into()),
+            ("delta", self.delta.into()),
+            ("engine_threads", self.engine_threads.into()),
+            ("ideal_accuracy", self.ideal_accuracy.into()),
+            ("levels", Json::Arr(levels)),
+        ])
+    }
+
+    /// Human-readable table (the `minimalist mc` stdout report).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "mc sweep: {} instance(s) × {} sample(s), img {}, master seed \
+             {:#x}, delta {}, ideal accuracy {:.3}\n\
+             sigma_c   acc_mean  acc_min   acc_p5  flip_rate  pJ/step  pJ/inference\n",
+            self.instances,
+            self.samples,
+            self.img,
+            self.master_seed,
+            self.delta,
+            self.ideal_accuracy,
+        );
+        for l in &self.levels {
+            s.push_str(&format!(
+                "{:7.4}   {:7.3}  {:7.3}  {:7.3}  {:8.3}  {:8.2}  {:11.2}\n",
+                l.sigma_c,
+                l.acc_mean,
+                l.acc_min,
+                l.acc_p5,
+                l.flip_rate,
+                l.energy_per_step_j * 1e12,
+                l.energy_per_inference_j * 1e12,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::weights::synthetic_network;
+
+    #[test]
+    fn instance_seeds_are_deterministic_and_distinct() {
+        let a: Vec<u64> = (0..256).map(|i| instance_seed(7, i)).collect();
+        let b: Vec<u64> = (0..256).map(|i| instance_seed(7, i)).collect();
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 256, "instance seeds must not collide");
+        // the split really is the successive-splitmix64 stream
+        let mut state = 7u64;
+        for (i, &s) in a.iter().enumerate().take(8) {
+            assert_eq!(s, splitmix64(&mut state), "instance {i}");
+        }
+        // distinct masters give distinct streams
+        assert_ne!(instance_seed(7, 0), instance_seed(8, 0));
+        // and slot 0 is not the construction device
+        assert_ne!(instance_seed(7, 0), 7);
+    }
+
+    #[test]
+    fn percentile_low_conventions() {
+        let xs = [0.1, 0.2, 0.3, 0.4, 0.5];
+        assert_eq!(percentile_low(&xs, 0.0), 0.1);
+        assert_eq!(percentile_low(&xs, 0.05), 0.1);
+        assert_eq!(percentile_low(&xs, 0.5), 0.3);
+        assert_eq!(percentile_low(&xs, 1.0), 0.5);
+        assert_eq!(percentile_low(&[0.7], 0.05), 0.7);
+    }
+
+    #[test]
+    fn tiny_sweep_produces_sane_report() {
+        let nw = synthetic_network(&[1, 12, 10], 11);
+        let sweep = DeviceSweep {
+            instances: 4,
+            samples: 2,
+            img: 8,
+            mismatch_levels: vec![0.0, 0.05],
+            geometry: CoreGeometry { rows: 16, cols: 16 },
+            ..DeviceSweep::default()
+        };
+        let r = sweep.run(&nw).unwrap();
+        assert_eq!(r.levels.len(), 2);
+        assert!((0.0..=1.0).contains(&r.ideal_accuracy));
+        for l in &r.levels {
+            assert!(l.acc_mean.is_finite());
+            assert!((0.0..=1.0).contains(&l.acc_mean));
+            assert!(l.acc_min <= l.acc_p5 && l.acc_p5 <= l.acc_mean + 1e-12);
+            assert!((0.0..=1.0).contains(&l.flip_rate));
+            assert!(l.energy_total_j > 0.0, "meters must have accumulated");
+            assert!(l.energy_per_inference_j > 0.0);
+            assert_eq!(l.per_instance_acc.len(), 4);
+        }
+        // the JSON document round-trips and is timestamp-free stable
+        let text = format!("{}", r.to_json());
+        assert_eq!(format!("{}", r.to_json()), text);
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req_str("report").unwrap(), "mc_sweep");
+        assert_eq!(back.req_f64("instances").unwrap() as usize, 4);
+    }
+
+    #[test]
+    fn sweep_is_thread_invariant() {
+        // the whole point of reusing the lockstep substrate: the report
+        // is a pure function of (weights, config) — engine_threads is
+        // not part of the result
+        let nw = synthetic_network(&[1, 12, 10], 11);
+        let base = DeviceSweep {
+            instances: 4,
+            samples: 2,
+            img: 8,
+            mismatch_levels: vec![0.0, 0.05],
+            geometry: CoreGeometry { rows: 16, cols: 16 },
+            ..DeviceSweep::default()
+        };
+        let r1 = base.run(&nw).unwrap();
+        let r2 = DeviceSweep { engine_threads: 2, ..base.clone() }
+            .run(&nw)
+            .unwrap();
+        assert_eq!(r1.levels, r2.levels, "threads must not change the sweep");
+        assert_eq!(r1.ideal_accuracy, r2.ideal_accuracy);
+    }
+
+    #[test]
+    fn sweep_rejects_degenerate_configs() {
+        let nw = synthetic_network(&[1, 12, 10], 11);
+        let base = DeviceSweep {
+            instances: 4,
+            samples: 2,
+            img: 8,
+            geometry: CoreGeometry { rows: 16, cols: 16 },
+            ..DeviceSweep::default()
+        };
+        assert!(DeviceSweep { instances: 0, ..base.clone() }.run(&nw).is_err());
+        assert!(DeviceSweep { samples: 0, ..base.clone() }.run(&nw).is_err());
+        assert!(
+            DeviceSweep { mismatch_levels: vec![], ..base }.run(&nw).is_err()
+        );
+    }
+}

@@ -65,6 +65,35 @@ impl CapBank {
         }
     }
 
+    /// Swap this bank's *device identity* — capacitances and the derived
+    /// kT/C and injection caches — with externally held vectors, leaving
+    /// the top-plate voltages (analog state) in place. This is the
+    /// per-slot Monte-Carlo device-swap primitive (ADR-008): a batch
+    /// slot carrying its own fabricated device instance swaps its cap
+    /// population in on `bind_slot` and back out on the next swap. The
+    /// gate energy cache is config-derived (identical across devices)
+    /// and stays put. Three `mem::swap`s — allocation-free, O(1).
+    pub fn swap_device(
+        &mut self,
+        c: &mut Vec<f64>,
+        ktc: &mut Vec<f64>,
+        inj: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(c.len(), self.c.len());
+        std::mem::swap(&mut self.c, c);
+        std::mem::swap(&mut self.ktc, ktc);
+        std::mem::swap(&mut self.inj, inj);
+    }
+
+    /// Move the bank's device identity out (capacitances plus the
+    /// derived kT/C and injection caches), consuming the bank. Used
+    /// once per provisioned slot to turn a freshly constructed bank
+    /// into a [`ColumnDevice`](crate::satsim::column::ColumnDevice)
+    /// payload.
+    pub fn into_device_parts(self) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        (self.c, self.ktc, self.inj)
+    }
+
     /// Number of capacitors.
     pub fn len(&self) -> usize {
         self.c.len()

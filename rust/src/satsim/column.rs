@@ -51,15 +51,44 @@ pub struct ColumnStep {
     pub y: bool,
 }
 
+/// One fabricated *device instance* of a column — the construction-time
+/// mismatch draws and their derived caches, detached from any analog
+/// state. By default every lockstep batch slot shares the column's one
+/// construction-time device (ADR-001); a Monte-Carlo sweep opts a slot
+/// into its own instance via [`Column::install_slot_device`] (ADR-008),
+/// after which [`Column::bind_slot`] swaps the device identity along
+/// with the slot's parked state.
+#[derive(Debug, Clone)]
+pub struct ColumnDevice {
+    /// Pair-bank capacitances and derived kT/C / injection caches.
+    pair_c: Vec<f64>,
+    pair_ktc: Vec<f64>,
+    pair_inj: Vec<f64>,
+    /// Z-bank capacitances and derived caches.
+    z_c: Vec<f64>,
+    z_ktc: Vec<f64>,
+    z_inj: Vec<f64>,
+    /// The column's SAR ADC channel (DAC mismatch, comparator offset).
+    adc: SarAdc,
+    /// Deferred-noise aggregates recomputed from this instance's caps.
+    agg_sigma_pair: f64,
+    agg_shift_pair: f64,
+    agg_sigma_z: f64,
+    agg_shift_z: f64,
+}
+
 /// Parked analog state of one lockstep batch slot — everything a
 /// concurrently-held sequence owns on this column, struct-of-arrays
 /// across the column's capacitors. The *bound* slot's state lives in the
 /// column's working fields; [`Column::bind_slot`] exchanges slots by
 /// `mem::swap` of the vectors (pointer swaps — no copying, no allocation
 /// in the steady state). The capacitor array itself (mismatch draws,
-/// noise aggregates, the ADC) is shared hardware: slots only multiply
-/// the held *state*, modelling a core that time-multiplexes B concurrent
-/// sequences across its clock phases.
+/// noise aggregates, the ADC) is shared hardware by default: slots only
+/// multiply the held *state*, modelling a core that time-multiplexes B
+/// concurrent sequences across its clock phases. A Monte-Carlo sweep
+/// may opt a slot into its own fabricated [`ColumnDevice`] instance
+/// (ADR-008), parked here alongside the state and swapped by the same
+/// pointer-exchange discipline.
 #[derive(Debug, Clone)]
 struct ColumnSlot {
     pair_v: Vec<f64>,
@@ -77,6 +106,12 @@ struct ColumnSlot {
     /// see [`Column::skip_share`]).
     last_vh: f64,
     last_vz: f64,
+    /// This slot's own device instance, if opted in (ADR-008). While
+    /// the slot is *parked* this holds its device; while it is *bound*
+    /// its device occupies the working fields and this holds the
+    /// displaced one (the construction hardware) — exactly the
+    /// circulating-placeholder discipline the state vectors follow.
+    device: Option<ColumnDevice>,
 }
 
 impl ColumnSlot {
@@ -92,6 +127,7 @@ impl ColumnSlot {
             v_line_h: v_0,
             last_vh: v_0,
             last_vz: v_0,
+            device: None,
         }
     }
 
@@ -166,6 +202,13 @@ pub struct Column {
 
 impl Column {
     /// Build a column, drawing its mismatch from `rng`.
+    ///
+    /// The device draw order — pair bank, z bank, ADC, in exactly three
+    /// constructor sequences — is a pinned invariant:
+    /// [`Column::install_slot_device`] must replay it verbatim so a
+    /// Monte-Carlo slot device is bit-identical to the device a fresh
+    /// column seeded the same way would fabricate (ADR-008).
+    // lint: rng-draws(3, column-device)
     pub fn new(cfg_col: ColumnConfig, cfg: &CircuitConfig, rng: &mut Rng) -> Column {
         let n = cfg_col.w_h.len();
         assert_eq!(n, cfg_col.w_z.len());
@@ -218,13 +261,110 @@ impl Column {
 
     /// Provision `n` batch slots (clamped to ≥ 1) and reset them all —
     /// a batch boundary. Allocation happens here, never in `bind_slot`.
+    /// Any per-slot Monte-Carlo devices are dissolved first: a batch
+    /// boundary returns the column to the default shared-hardware
+    /// convention (ADR-001), construction device back in the working
+    /// fields.
     pub fn set_slots(&mut self, n: usize, cfg: &CircuitConfig) {
+        self.dissolve_devices();
         let n = n.max(1);
         let rows = self.rows();
         let v_0 = cfg.v_0;
         self.slots.resize_with(n, || ColumnSlot::blank(rows, v_0));
         self.bound = 0;
         self.reset(cfg);
+    }
+
+    /// Whether any slot carries its own device instance (ADR-008).
+    pub fn has_slot_devices(&self) -> bool {
+        self.slots.iter().any(|s| s.device.is_some())
+    }
+
+    /// Fabricate a fresh device instance for batch slot `slot` from
+    /// `rng`, replacing the shared construction hardware for that slot
+    /// only (ADR-008). Replays [`Column::new`]'s exact device draw
+    /// order — pair bank, z bank, ADC — so the installed device is
+    /// bit-identical to what a fresh column seeded with `rng` would
+    /// fabricate. Cold path: runs once per Monte-Carlo provisioning,
+    /// never inside the lockstep step.
+    // lint: rng-draws(3, column-device)
+    pub fn install_slot_device(
+        &mut self,
+        slot: usize,
+        cfg: &CircuitConfig,
+        rng: &mut Rng,
+    ) {
+        assert!(
+            slot < self.slots.len(),
+            "slot {slot} out of range ({} provisioned)",
+            self.slots.len()
+        );
+        let n = self.rows();
+        // the pinned Column::new device sequence: pair bank → z bank → ADC
+        let pair = CapBank::new(2 * n, cfg.c_unit, cfg, rng);
+        let z = CapBank::new(n, cfg.c_unit, cfg, rng);
+        let adc = SarAdc::new(cfg, rng);
+        let half: Vec<usize> = (0..n).map(|i| 2 * i).collect();
+        let idx_z: Vec<usize> = (0..n).collect();
+        let agg_sigma_pair = pair.aggregate_sample_sigma(&half);
+        let agg_shift_pair = pair.aggregate_injection_shift(&half);
+        let agg_sigma_z = z.aggregate_sample_sigma(&idx_z);
+        let agg_shift_z = z.aggregate_injection_shift(&idx_z);
+        let (pair_c, pair_ktc, pair_inj) = pair.into_device_parts();
+        let (z_c, z_ktc, z_inj) = z.into_device_parts();
+        let mut d = ColumnDevice {
+            pair_c,
+            pair_ktc,
+            pair_inj,
+            z_c,
+            z_ktc,
+            z_inj,
+            adc,
+            agg_sigma_pair,
+            agg_shift_pair,
+            agg_sigma_z,
+            agg_shift_z,
+        };
+        if slot == self.bound {
+            // The bound slot's device lives in the working fields. Swap
+            // the new instance in; the displaced device becomes the
+            // circulating placeholder in `slots[bound]` if it is the
+            // construction hardware (first install), and is dropped if
+            // it is a previous install being replaced.
+            self.swap_device_fields(&mut d);
+            if self.slots[slot].device.is_none() {
+                self.slots[slot].device = Some(d);
+            }
+        } else {
+            self.slots[slot].device = Some(d);
+        }
+    }
+
+    /// Drop every per-slot device and restore the construction
+    /// hardware to the working fields — back to the ADR-001 default.
+    pub fn dissolve_devices(&mut self) {
+        // If the bound slot is opted in, its placeholder holds the
+        // construction device: swap it back in (the bound slot's own
+        // instance comes out and is dropped with the rest).
+        if let Some(mut d) = self.slots[self.bound].device.take() {
+            self.swap_device_fields(&mut d);
+        }
+        for st in self.slots.iter_mut() {
+            st.device = None;
+        }
+    }
+
+    /// Exchange the column's working device identity (cap populations,
+    /// derived caches, ADC, aggregates) with `d`. O(1) pointer swaps.
+    fn swap_device_fields(&mut self, d: &mut ColumnDevice) {
+        self.pair_bank
+            .swap_device(&mut d.pair_c, &mut d.pair_ktc, &mut d.pair_inj);
+        self.z_bank.swap_device(&mut d.z_c, &mut d.z_ktc, &mut d.z_inj);
+        std::mem::swap(&mut self.adc, &mut d.adc);
+        std::mem::swap(&mut self.agg_sigma_pair, &mut d.agg_sigma_pair);
+        std::mem::swap(&mut self.agg_shift_pair, &mut d.agg_shift_pair);
+        std::mem::swap(&mut self.agg_sigma_z, &mut d.agg_sigma_z);
+        std::mem::swap(&mut self.agg_shift_z, &mut d.agg_shift_z);
     }
 
     /// Make batch slot `slot` the working state: park the currently
@@ -257,6 +397,21 @@ impl Column {
         std::mem::swap(&mut self.v_line_h, &mut st.v_line_h);
         std::mem::swap(&mut self.last_vh, &mut st.last_vh);
         std::mem::swap(&mut self.last_vz, &mut st.last_vz);
+        // Monte-Carlo opt-in (ADR-008): a slot carrying its own device
+        // instance swaps the device identity along with its state —
+        // same O(1) pointer-exchange discipline, still allocation-free.
+        // Slots without a device run on whatever device the working
+        // fields hold (the shared construction hardware).
+        if let Some(d) = st.device.as_mut() {
+            self.pair_bank
+                .swap_device(&mut d.pair_c, &mut d.pair_ktc, &mut d.pair_inj);
+            self.z_bank.swap_device(&mut d.z_c, &mut d.z_ktc, &mut d.z_inj);
+            std::mem::swap(&mut self.adc, &mut d.adc);
+            std::mem::swap(&mut self.agg_sigma_pair, &mut d.agg_sigma_pair);
+            std::mem::swap(&mut self.agg_shift_pair, &mut d.agg_shift_pair);
+            std::mem::swap(&mut self.agg_sigma_z, &mut d.agg_sigma_z);
+            std::mem::swap(&mut self.agg_shift_z, &mut d.agg_shift_z);
+        }
     }
 
     /// Current hidden-state voltage (capacitance-weighted over the h
@@ -940,6 +1095,79 @@ mod tests {
         col.skip_share(&cfg, &mut rng);
         // the ideal path has no share noise, so nothing may be burned
         assert_eq!(rng.normal_fast().to_bits(), probe.normal_fast().to_bits());
+    }
+
+    #[test]
+    fn installed_slot_device_matches_fresh_column_fabrication() {
+        // the ADR-008 anchor at the column level: a slot device
+        // fabricated from an rng stream is bit-identical to the device
+        // a fresh column constructed from the same stream would carry
+        let n = 8;
+        let (mut col, cfg, _) = mk_col(n, 3, 3, false);
+        let construction_c = col.pair_bank.c.clone();
+        col.set_slots(2, &cfg);
+        let mut dev_rng = Rng::new(0xD0D0);
+        col.install_slot_device(1, &cfg, &mut dev_rng);
+        assert!(col.has_slot_devices());
+        let mut fresh_rng = Rng::new(0xD0D0);
+        let fresh = Column::new(col.cfg_col.clone(), &cfg, &mut fresh_rng);
+        col.bind_slot(1);
+        assert_eq!(col.pair_bank.c, fresh.pair_bank.c);
+        assert_eq!(col.z_bank.c, fresh.z_bank.c);
+        assert_ne!(
+            col.pair_bank.c, construction_c,
+            "slot 1's device must be its own fabrication"
+        );
+        // binding a non-opted slot restores the construction hardware
+        col.bind_slot(0);
+        assert_eq!(col.pair_bank.c, construction_c);
+        // and a batch boundary dissolves the opt-in entirely
+        col.bind_slot(1);
+        col.set_slots(2, &cfg);
+        assert!(!col.has_slot_devices());
+        assert_eq!(col.pair_bank.c, construction_c);
+    }
+
+    #[test]
+    fn distinct_slot_devices_hold_distinct_mismatch_draws() {
+        let n = 10;
+        let (mut col, cfg, _) = mk_col(n, 3, 3, false);
+        col.set_slots(3, &cfg);
+        let mut r1 = Rng::new(101);
+        let mut r2 = Rng::new(202);
+        col.install_slot_device(1, &cfg, &mut r1);
+        col.install_slot_device(2, &cfg, &mut r2);
+        col.bind_slot(1);
+        let c1 = col.pair_bank.c.clone();
+        let a1 = col.agg_sigma_pair;
+        col.bind_slot(2);
+        assert_ne!(col.pair_bank.c, c1, "distinct seeds must give distinct devices");
+        assert_ne!(col.agg_sigma_pair, a1);
+        // rebinding restores slot 1's exact device
+        col.bind_slot(1);
+        assert_eq!(col.pair_bank.c, c1);
+        assert_eq!(col.agg_sigma_pair, a1);
+    }
+
+    #[test]
+    fn bound_slot_install_keeps_construction_as_placeholder() {
+        // installing on the *bound* slot must still restore the
+        // construction hardware when another slot binds afterwards
+        let n = 6;
+        let (mut col, cfg, _) = mk_col(n, 3, 3, false);
+        let construction_c = col.pair_bank.c.clone();
+        col.set_slots(2, &cfg);
+        let mut dev_rng = Rng::new(7);
+        col.install_slot_device(0, &cfg, &mut dev_rng); // slot 0 is bound
+        assert_ne!(col.pair_bank.c, construction_c);
+        let dev0_c = col.pair_bank.c.clone();
+        col.bind_slot(1);
+        assert_eq!(col.pair_bank.c, construction_c, "slot 1 shares hardware");
+        col.bind_slot(0);
+        assert_eq!(col.pair_bank.c, dev0_c, "slot 0 keeps its instance");
+        col.dissolve_devices();
+        assert_eq!(col.pair_bank.c, construction_c);
+        assert!(!col.has_slot_devices());
     }
 
     #[test]

@@ -71,15 +71,28 @@ pub struct Core {
     /// Switching-energy accounting for this core.
     pub meter: EnergyMeter,
     /// Per-slot master noise streams: slot `s` drives sequence `s` of a
-    /// lockstep batch. Every slot starts as a clone of `rng0`, so each
-    /// slot replays exactly the noise realization a fresh sequential run
-    /// sees — the seeding convention that makes batched and sequential
-    /// execution bit-identical (see `MixedSignalEngine::classify_batch`).
+    /// lockstep batch. By default every slot starts as a clone of
+    /// `rng0`, so each slot replays exactly the noise realization a
+    /// fresh sequential run sees — the seeding convention that makes
+    /// batched and sequential execution bit-identical (ADR-001; see
+    /// `MixedSignalEngine::classify_batch`). A Monte-Carlo provisioning
+    /// ([`Core::provision_slot_devices`], ADR-008) replaces a slot's
+    /// stream root so each slot carries an independent device *and*
+    /// noise realization.
     slot_rngs: Vec<Rng>,
     /// RNG state at construction: `reset()` restores it so that a given
     /// seed reproduces a trial exactly (deterministic simulation; fresh
     /// noise across trials is obtained by changing the config seed).
     rng0: Rng,
+    /// Per-slot stream *roots*: what `reset`/`reset_slot` restore each
+    /// slot's stream to. All clones of `rng0` by default (ADR-001);
+    /// rewritten per slot by a Monte-Carlo provisioning (ADR-008).
+    slot_rng0s: Vec<Rng>,
+    /// The seed tag `Core::new` mixed into `cfg.seed` — kept so a
+    /// per-slot provisioning can derive instance streams through the
+    /// same mix, making a provisioned slot bit-identical to a whole
+    /// fresh core built with the instance seed as its config seed.
+    seed_tag: u64,
     /// Scratch output buffer (events) of the most recent `step_finish`,
     /// whichever slot it served; reused across steps.
     out_events: Vec<bool>,
@@ -148,6 +161,8 @@ impl Core {
             columns,
             meter: EnergyMeter::new(),
             rng0: rng.clone(),
+            slot_rng0s: vec![rng.clone()],
+            seed_tag,
             slot_rngs: vec![rng],
             out_events: vec![false; n_cols],
             col_rngs: vec![Vec::with_capacity(n_cols)],
@@ -171,7 +186,10 @@ impl Core {
 
     /// Provision `n` lockstep batch slots (clamped to ≥ 1) across every
     /// column and reset them all — a batch boundary. Allocation happens
-    /// here, never in the per-slot steady-state step.
+    /// here, never in the per-slot steady-state step. Any per-slot
+    /// Monte-Carlo devices are dissolved (the columns' `set_slots`
+    /// restores the construction hardware) and every slot's stream root
+    /// returns to the ADR-001 clone convention.
     pub fn set_slots(&mut self, n: usize, cfg: &CircuitConfig) {
         let n = n.max(1);
         for c in self.columns.iter_mut() {
@@ -181,6 +199,8 @@ impl Core {
         let rng0 = self.rng0.clone();
         self.slot_rngs.clear();
         self.slot_rngs.resize_with(n, || rng0.clone());
+        self.slot_rng0s.clear();
+        self.slot_rng0s.resize_with(n, || rng0.clone());
         self.col_rngs.clear();
         self.col_rngs.resize_with(n, || Vec::with_capacity(n_cols));
         let rows = self.active_rows;
@@ -188,16 +208,70 @@ impl Core {
         self.x_last.resize_with(n, || vec![f64::NAN; rows]);
     }
 
+    /// Whether any slot of this core carries its own Monte-Carlo device
+    /// instance (ADR-008).
+    pub fn has_slot_devices(&self) -> bool {
+        self.columns.iter().any(|c| c.has_slot_devices())
+    }
+
+    /// Opt every provisioned slot into its own fabricated device
+    /// instance and noise stream (ADR-008): slot `s` is rebuilt from
+    /// `seeds[s]` through exactly the construction path [`Core::new`]
+    /// runs — the same seed-tag mix, the same per-column `fork(0xC01)`,
+    /// the same device draw order — so slot `s` afterwards behaves
+    /// bit-identically (device and runtime noise alike) to a whole
+    /// fresh core built with `cfg.seed = seeds[s]`. `seeds` must have
+    /// one entry per provisioned slot. Cold path: call at a batch
+    /// boundary, then [`Core::reset`] before stepping.
+    pub fn provision_slot_devices(&mut self, cfg: &CircuitConfig, seeds: &[u64]) {
+        assert_eq!(
+            seeds.len(),
+            self.n_slots(),
+            "provision_slot_devices needs one seed per provisioned slot"
+        );
+        for (s, &seed) in seeds.iter().enumerate() {
+            // the Core::new seeding mix, with the instance seed in
+            // place of cfg.seed
+            let mut rng = Rng::new(seed ^ self.seed_tag.wrapping_mul(0x9E37));
+            for col in self.columns.iter_mut() {
+                let mut col_rng = rng.fork(0xC01);
+                col.install_slot_device(s, cfg, &mut col_rng);
+            }
+            // what remains of the stream after fabrication is exactly
+            // the runtime noise root a fresh core would carry
+            self.slot_rng0s[s] = rng.clone();
+            self.slot_rngs[s] = rng;
+        }
+    }
+
+    /// Drop every slot's Monte-Carlo device and return to the ADR-001
+    /// shared-hardware, cloned-stream convention. Cold path.
+    pub fn dissolve_slot_devices(&mut self) {
+        for c in self.columns.iter_mut() {
+            c.dissolve_devices();
+        }
+        let rng0 = self.rng0.clone();
+        for r0 in self.slot_rng0s.iter_mut() {
+            *r0 = rng0.clone();
+        }
+        for r in self.slot_rngs.iter_mut() {
+            *r = rng0.clone();
+        }
+    }
+
     /// Reset all column states (every slot) to V_0 (sequence boundary)
-    /// and restore each slot's noise stream to the construction state,
-    /// making per-sequence simulation deterministic — and every slot's
-    /// stream identical to a fresh sequential run's.
+    /// and restore each slot's noise stream to its root — by default
+    /// the construction state, making per-sequence simulation
+    /// deterministic and every slot's stream identical to a fresh
+    /// sequential run's (ADR-001); under a Monte-Carlo provisioning,
+    /// each slot's own instance stream (ADR-008). Device identities
+    /// (mismatch draws) are construction-time and survive resets.
     pub fn reset(&mut self, cfg: &CircuitConfig) {
         for c in self.columns.iter_mut() {
             c.reset(cfg);
         }
-        for r in self.slot_rngs.iter_mut() {
-            *r = self.rng0.clone();
+        for (r, r0) in self.slot_rngs.iter_mut().zip(self.slot_rng0s.iter()) {
+            *r = r0.clone();
         }
         for cr in self.col_rngs.iter_mut() {
             cr.clear();
@@ -219,7 +293,7 @@ impl Core {
         for c in self.columns.iter_mut() {
             c.reset_slot(slot, cfg);
         }
-        self.slot_rngs[slot] = self.rng0.clone();
+        self.slot_rngs[slot] = self.slot_rng0s[slot].clone();
         self.col_rngs[slot].clear();
         self.x_last[slot].fill(f64::NAN);
     }
@@ -714,6 +788,72 @@ mod tests {
         core.reset_slot(0, &cfg);
         core.step(&x, &cfg, &mut out);
         assert_eq!(core.delta_counters().components_fired, 16);
+    }
+
+    #[test]
+    fn provisioned_slot_matches_fresh_core_with_instance_seed() {
+        // The ADR-008 anchor: after provision_slot_devices, slot s of a
+        // batched core is bit-identical — fabricated device AND runtime
+        // noise stream — to a whole fresh core built with
+        // cfg.seed = seeds[s], under full circuit noise.
+        let cfg = CircuitConfig::default();
+        let mk = |cfg: &CircuitConfig| {
+            let col_cfgs: Vec<ColumnConfig> = (0..5)
+                .map(|j| ColumnConfig {
+                    w_h: (0..12).map(|i| W2::new(((i + j) % 4) as u8)).collect(),
+                    w_z: (0..12)
+                        .map(|i| W2::new(((i + 2 * j) % 4) as u8))
+                        .collect(),
+                    slope_m: 6,
+                    offset_code: OFFSET_NEUTRAL,
+                    v_theta: cfg.v_0,
+                })
+                .collect();
+            Core::new(CoreGeometry { rows: 12, cols: 8 }, col_cfgs, cfg, 3)
+        };
+        let seeds = [0xAAAA_0001u64, 0xBBBB_0002, 0xCCCC_0003];
+        let mut bat = mk(&cfg);
+        bat.set_slots(3, &cfg);
+        bat.provision_slot_devices(&cfg, &seeds);
+        bat.reset(&cfg);
+        assert!(bat.has_slot_devices());
+        let (mut bo, mut fo) = (CoreStep::default(), CoreStep::default());
+        for (s, &seed) in seeds.iter().enumerate() {
+            let inst_cfg = CircuitConfig { seed, ..cfg.clone() };
+            let mut fresh = mk(&inst_cfg);
+            for t in 0..12 {
+                let x: Vec<f64> =
+                    (0..12).map(|i| ((t + i + s) % 2) as f64).collect();
+                fresh.step(&x, &inst_cfg, &mut fo);
+                bat.step_slot(s, &x, &cfg, &mut bo);
+                for (p, q) in fo.steps.iter().zip(bo.steps.iter()) {
+                    assert_eq!(p, q, "slot {s} diverged at step {t}");
+                }
+            }
+        }
+        // reset_slot restores the *instance* stream, not rng0
+        bat.reset_slot(1, &cfg);
+        let inst_cfg = CircuitConfig { seed: seeds[1], ..cfg.clone() };
+        let mut fresh = mk(&inst_cfg);
+        for t in 0..6 {
+            let x: Vec<f64> = (0..12).map(|i| ((t + i) % 3) as f64 / 2.0).collect();
+            fresh.step(&x, &inst_cfg, &mut fo);
+            bat.step_slot(1, &x, &cfg, &mut bo);
+            for (p, q) in fo.steps.iter().zip(bo.steps.iter()) {
+                assert_eq!(p, q, "recycled instance slot diverged at {t}");
+            }
+        }
+        // set_slots is a hard batch boundary: devices dissolve and the
+        // ADR-001 clone convention returns
+        bat.set_slots(2, &cfg);
+        assert!(!bat.has_slot_devices());
+        let mut plain = mk(&cfg);
+        let x: Vec<f64> = (0..12).map(|i| (i % 2) as f64).collect();
+        plain.step(&x, &cfg, &mut fo);
+        bat.step_slot(0, &x, &cfg, &mut bo);
+        for (p, q) in fo.steps.iter().zip(bo.steps.iter()) {
+            assert_eq!(p, q, "post-dissolve slot 0 must match construction");
+        }
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //! mixed-signal simulation is reproducible from its config seed.
 
 /// SplitMix64 — used to expand a single `u64` seed into xoshiro state.
-fn splitmix64(state: &mut u64) -> u64 {
+///
+/// Also the public seed-splitting primitive for Monte-Carlo device
+/// sweeps (`crate::montecarlo::instance_seed`): successive calls on a
+/// master-seed state yield well-mixed, decorrelated per-instance seeds
+/// (ADR-008).
+pub fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);

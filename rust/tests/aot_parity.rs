@@ -24,6 +24,8 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (`make artifacts`) and the PJRT feature — \
+            run `cargo test --features pjrt -- --ignored`"]
 fn sequence_artifact_matches_jax_eval() {
     let Some(dir) = artifacts_dir() else {
         eprintln!("skipping: run `make artifacts` first");
@@ -96,6 +98,8 @@ fn sequence_artifact_matches_jax_eval() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (`make artifacts`) and the PJRT feature — \
+            run `cargo test --features pjrt -- --ignored`"]
 fn step_artifact_loads_and_runs() {
     let Some(dir) = artifacts_dir() else {
         eprintln!("skipping: run `make artifacts` first");

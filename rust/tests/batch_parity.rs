@@ -20,6 +20,7 @@ use minimalist::coordinator::{
     Backend, BatchPolicy, GoldenBackend, MixedSignalBackend,
     MixedSignalEngine, Server,
 };
+use minimalist::montecarlo::instance_seed;
 use minimalist::nn::{synthetic_network, GoldenNetwork};
 
 /// Deterministic test load: `b` sequences of `t_len` frames of `d_in`.
@@ -303,6 +304,63 @@ fn delta_path_parity_holds_across_serving_paths() {
         seq_engine.delta_stats().components_skipped > 0,
         "delta = 0.05 never skipped on this workload"
     );
+}
+
+#[test]
+fn mixed_device_batch_slots_are_independent_devices() {
+    // ADR-008 opt-in: with provisioned per-slot devices, every lane of
+    // the lockstep batch is a *different fabricated chip*. Three checks:
+    // (a) slot s is bit-identical to a whole fresh engine built with
+    //     `instance_seed(master, s)` as its circuit seed;
+    // (b) the instances are actually distinct hardware (their logits on
+    //     a shared input do not all coincide);
+    // (c) changing every *other* lane's input leaves slot s's logits
+    //     bit-unchanged — no cross-slot coupling through the shared
+    //     arrays, even though the slots now hold different capacitor
+    //     mismatch and ADC calibration.
+    let nw = synthetic_network(&[1, 16, 10], 37);
+    let geometry = CoreGeometry { rows: 16, cols: 16 };
+    let master = 0xDEC0DE;
+    let mut mc =
+        MixedSignalEngine::new(nw.clone(), CircuitConfig::default(), geometry)
+            .unwrap();
+    mc.provision_devices(master, 4);
+    let shared = make_seqs(1, 12, 1, 3).remove(0);
+    let refs: Vec<&[f32]> = (0..4).map(|_| shared.as_slice()).collect();
+    mc.classify_batch(&refs);
+    let logits: Vec<Vec<f32>> = (0..4).map(|s| mc.logits_slot(s)).collect();
+    // (a)
+    for (s, want) in logits.iter().enumerate() {
+        let cfg = CircuitConfig {
+            seed: instance_seed(master, s),
+            ..CircuitConfig::default()
+        };
+        let mut fresh = MixedSignalEngine::new(nw.clone(), cfg, geometry).unwrap();
+        fresh.classify(&shared);
+        assert_eq!(
+            &fresh.logits(),
+            want,
+            "slot {s} is not bit-identical to the instance-seed device"
+        );
+    }
+    // (b)
+    assert!(
+        logits.windows(2).any(|w| w[0] != w[1]),
+        "4 device instances produced identical logits on a shared input"
+    );
+    // (c)
+    let varied = make_seqs(4, 12, 1, 9);
+    for (s, want) in logits.iter().enumerate() {
+        let mut batch: Vec<&[f32]> =
+            varied.iter().map(|v| v.as_slice()).collect();
+        batch[s] = shared.as_slice();
+        mc.classify_batch(&batch);
+        assert_eq!(
+            &mc.logits_slot(s),
+            want,
+            "slot {s}'s device coupled to its neighbors' inputs"
+        );
+    }
 }
 
 #[test]

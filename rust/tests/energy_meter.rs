@@ -1,0 +1,207 @@
+//! Dedicated unit/integration tests for the §4.2 energy layer — the
+//! first test file to target `energy/` directly (the module previously
+//! rode along inside engine and property tests).
+//!
+//! Covered here:
+//! * ½·C·ΔV² capacitor-event accounting and its direction symmetry;
+//! * transmission-gate toggle pricing (C_gate·V_DD² per toggle);
+//! * the bound invariant: simulated per-step energy never exceeds the
+//!   analytic worst case, on real engines at several activity levels;
+//! * meter merging across lockstep cores (steps max) and across serving
+//!   workers (steps sum);
+//! * golden event-count parity: one engine step must log exactly the
+//!   closed-form event counts of the circuit schedule — per column with
+//!   `n` active rows: `5n+6` cap events, `7` comparator decisions, one
+//!   SAR conversion, and `7n+6 + 2k` switch toggles with `k ∈ [0, n]`
+//!   capacitor-pair swaps;
+//! * lockstep-batch vs sequential event parity: same physics, same
+//!   counters, regardless of the serving path.
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::energy::{
+    paper_network_bound, worst_case_step_bound, EnergyMeter,
+};
+use minimalist::nn::synthetic_network;
+
+// ---------------------------------------------------------------------------
+// meter arithmetic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cap_event_is_half_c_delta_v_squared() {
+    let mut m = EnergyMeter::new();
+    m.cap_charge(2e-15, 0.1, 0.7); // ΔV = 0.6
+    let want = 0.5 * 2e-15 * 0.6 * 0.6;
+    assert!((m.cap_energy_j - want).abs() < 1e-30);
+    assert_eq!(m.cap_events, 1);
+    assert_eq!(m.switch_toggles, 0);
+    // dissipation is direction-symmetric: discharging through the same
+    // switch burns the same ½·C·ΔV²
+    let mut down = EnergyMeter::new();
+    down.cap_charge(2e-15, 0.7, 0.1);
+    assert!((down.cap_energy_j - m.cap_energy_j).abs() < 1e-30);
+    // and a no-op "recharge" to the same voltage costs nothing
+    let mut idle = EnergyMeter::new();
+    idle.cap_charge(2e-15, 0.4, 0.4);
+    assert_eq!(idle.cap_energy_j, 0.0);
+    assert_eq!(idle.cap_events, 1); // the event is still counted
+}
+
+#[test]
+fn toggle_pricing_matches_gate_cap() {
+    let cfg = CircuitConfig::default();
+    let mut m = EnergyMeter::new();
+    m.toggles(&cfg, 10);
+    let want = 10.0 * cfg.c_gate * cfg.v_dd * cfg.v_dd;
+    assert!((m.gate_energy_j - want).abs() < 1e-28);
+    assert_eq!(m.switch_toggles, 10);
+    // the hot-path cached variant prices identically
+    let mut c = EnergyMeter::new();
+    c.toggles_cached(10, cfg.c_gate * cfg.v_dd * cfg.v_dd);
+    assert_eq!(c.gate_energy_j, m.gate_energy_j);
+    // totals split cleanly into the two families
+    m.cap_charge(1e-15, 0.0, 0.5);
+    assert!((m.total_j() - (m.cap_energy_j + m.gate_energy_j)).abs() < 1e-30);
+}
+
+#[test]
+fn merge_semantics_lockstep_vs_disjoint() {
+    // cores stepped in lockstep describe the SAME time steps: merge()
+    // maxes the step count (this is what MixedSignalEngine::energy
+    // does across its cores)...
+    let mut a = EnergyMeter::new();
+    let mut b = EnergyMeter::new();
+    for _ in 0..5 {
+        a.cap_charge(1e-15, 0.0, 0.5);
+        a.step_done();
+        b.cap_charge(1e-15, 0.0, 0.3);
+        b.step_done();
+    }
+    let mut lock = a.clone();
+    lock.merge(&b);
+    assert_eq!(lock.steps, 5);
+    assert_eq!(lock.cap_events, 10);
+    // ...while serving workers each stepped through their OWN requests:
+    // merge_disjoint() sums steps, so the fleet per-step average is over
+    // every step any worker ran
+    let mut fleet = a.clone();
+    fleet.merge_disjoint(&b);
+    assert_eq!(fleet.steps, 10);
+    assert_eq!(fleet.cap_events, 10);
+    assert!((fleet.per_step_j() - fleet.total_j() / 10.0).abs() < 1e-30);
+    // the energy totals agree either way — only the step base differs
+    assert!((fleet.total_j() - lock.total_j()).abs() < 1e-30);
+}
+
+// ---------------------------------------------------------------------------
+// bound invariant on real engines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn simulated_energy_stays_under_bound_across_activity_levels() {
+    // the analytic worst case assumes every cap at full swing and every
+    // switch toggling — real activity (silence, mid-scale, saturating)
+    // must land at or below it, per step, for each engine core count
+    let cfg = CircuitConfig::default();
+    let geometry = CoreGeometry { rows: 16, cols: 16 };
+    for (name, frame) in
+        [("silence", 0.0f32), ("mid-scale", 0.5), ("saturating", 1.0)]
+    {
+        let nw = synthetic_network(&[1, 12, 10], 3);
+        let mut engine =
+            MixedSignalEngine::new(nw, cfg.clone(), geometry).unwrap();
+        engine.classify(&vec![frame; 24]);
+        let m = engine.energy();
+        let bound = engine.n_cores() as f64
+            * worst_case_step_bound(&cfg, geometry.rows, geometry.cols);
+        assert!(
+            m.per_step_j() <= bound,
+            "{name}: simulated {} pJ/step exceeds the worst-case bound \
+             {} pJ/step",
+            m.per_step_j() * 1e12,
+            bound * 1e12
+        );
+        assert!(m.total_j() > 0.0, "{name}: meter stayed silent");
+    }
+    // the paper's reference bound is 4 bound(64,64) by construction
+    let four = paper_network_bound(&cfg);
+    assert!((four - 4.0 * worst_case_step_bound(&cfg, 64, 64)).abs() < 1e-24);
+}
+
+// ---------------------------------------------------------------------------
+// golden event-count parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_step_logs_the_closed_form_event_counts() {
+    // Single-layer, replication-free placement: the engine runs exactly
+    // `c` GRU columns over `n = d` active rows per step, so the meter
+    // must log, per column and step:
+    //   cap events            5n + 6
+    //   comparator decisions  7        (6 SAR bit trials + 1 binary h)
+    //   SAR conversions       1
+    //   switch toggles        7n + 6 + 2k,  k ∈ [0, n] pair swaps
+    for (d, c) in [(4usize, 6usize), (8, 10)] {
+        let nw = synthetic_network(&[d, c], 11);
+        let mut engine = MixedSignalEngine::new(
+            nw,
+            CircuitConfig::default(),
+            CoreGeometry { rows: 16, cols: 16 },
+        )
+        .unwrap();
+        assert_eq!(engine.n_cores(), 1, "replication-free placement expected");
+        let x: Vec<f32> = (0..d).map(|i| (i % 2) as f32).collect();
+        engine.step(0, &x, None);
+        let m = engine.energy();
+        let (n, cols) = (d as u64, c as u64);
+        assert_eq!(m.steps, 1);
+        assert_eq!(
+            m.cap_events,
+            cols * (5 * n + 6),
+            "d={d} c={c}: cap events off the closed form"
+        );
+        assert_eq!(m.comparator_decisions, 7 * cols, "d={d} c={c}");
+        assert_eq!(m.adc_conversions, cols, "d={d} c={c}");
+        assert!(
+            m.switch_toggles >= cols * (7 * n + 6)
+                && m.switch_toggles <= cols * (9 * n + 6),
+            "d={d} c={c}: toggles {} outside [{}, {}]",
+            m.switch_toggles,
+            cols * (7 * n + 6),
+            cols * (9 * n + 6)
+        );
+    }
+}
+
+#[test]
+fn batched_and_sequential_paths_log_identical_event_counts() {
+    // serving-path independence: B sequences through the lockstep batch
+    // equal B sequential classifications — not just in logits
+    // (tests/batch_parity.rs) but in every event the meter saw. Joules
+    // agree to summation order (the batch interleaves slots, so the f64
+    // additions associate differently).
+    let nw = synthetic_network(&[1, 16, 10], 23);
+    let mut seq_engine = MixedSignalEngine::new(
+        nw,
+        CircuitConfig::default(),
+        CoreGeometry { rows: 16, cols: 16 },
+    )
+    .unwrap();
+    let mut bat_engine = seq_engine.replicate().unwrap();
+    let seqs: Vec<Vec<f32>> = (0..3)
+        .map(|s| (0..12).map(|t| ((t + s) % 4) as f32 / 3.0).collect())
+        .collect();
+    for s in &seqs {
+        seq_engine.classify(s);
+    }
+    let refs: Vec<&[f32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    bat_engine.classify_batch(&refs);
+    let (a, b) = (seq_engine.energy(), bat_engine.energy());
+    assert_eq!(a.cap_events, b.cap_events);
+    assert_eq!(a.switch_toggles, b.switch_toggles);
+    assert_eq!(a.comparator_decisions, b.comparator_decisions);
+    assert_eq!(a.adc_conversions, b.adc_conversions);
+    let rel = (a.total_j() - b.total_j()).abs() / a.total_j();
+    assert!(rel < 1e-12, "energy diverged beyond summation order: {rel}");
+}

@@ -1,0 +1,138 @@
+//! Determinism of the Monte-Carlo device-variation sweep (ADR-008).
+//!
+//! The sweep is a pure function of (weights, sweep config): no wall
+//! clock, no ambient randomness — every mismatch draw derives from the
+//! master seed through `instance_seed`, and the threaded plan traversal
+//! is bit-identical at every lane count (ADR-007). These tests pin
+//! that down:
+//! * same master seed ⇒ bit-identical reports across engine thread
+//!   counts, across repeated runs, and with the delta-sparsity fast
+//!   path on;
+//! * batch-shape invariance: instance `i`'s device (and therefore its
+//!   logits on a shared input) does not depend on how many other
+//!   instances were provisioned alongside it;
+//! * distinct instance seeds ⇒ distinct per-slot mismatch draws, and
+//!   distinct master seeds ⇒ distinct populations.
+
+use minimalist::config::{CircuitConfig, CoreGeometry};
+use minimalist::coordinator::MixedSignalEngine;
+use minimalist::montecarlo::{instance_seed, DeviceSweep};
+use minimalist::nn::synthetic_network;
+
+fn base_sweep(master: u64) -> DeviceSweep {
+    DeviceSweep {
+        instances: 6,
+        mismatch_levels: vec![0.0, 0.02, 0.05],
+        samples: 3,
+        img: 8,
+        master_seed: master,
+        geometry: CoreGeometry { rows: 16, cols: 16 },
+        ..DeviceSweep::default()
+    }
+}
+
+#[test]
+fn sweep_is_bit_identical_across_engine_thread_counts() {
+    // delta ∈ {0, 0.05}: the quiescent-skip fast path must not perturb
+    // the sweep either — skip decisions are per-slot deterministic
+    let nw = synthetic_network(&[1, 12, 10], 31);
+    for delta in [0.0f64, 0.05] {
+        let mut reports = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let sweep = DeviceSweep {
+                engine_threads: threads,
+                delta,
+                ..base_sweep(0x5EED)
+            };
+            reports.push(sweep.run(&nw).unwrap());
+        }
+        for (i, r) in reports.iter().enumerate().skip(1) {
+            assert_eq!(
+                r.levels, reports[0].levels,
+                "delta={delta}: thread count #{i} changed the sweep levels"
+            );
+            assert_eq!(
+                r.ideal_accuracy, reports[0].ideal_accuracy,
+                "delta={delta}: thread count #{i} changed the ideal reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_is_reproducible_run_to_run() {
+    let nw = synthetic_network(&[1, 12, 10], 31);
+    let a = base_sweep(0xABCD).run(&nw).unwrap();
+    let b = base_sweep(0xABCD).run(&nw).unwrap();
+    assert_eq!(a, b, "same master seed must reproduce the report exactly");
+}
+
+#[test]
+fn distinct_master_seeds_fabricate_distinct_populations() {
+    let nw = synthetic_network(&[1, 12, 10], 31);
+    let a = base_sweep(0x1111).run(&nw).unwrap();
+    let b = base_sweep(0x2222).run(&nw).unwrap();
+    // the noisy levels dissipate different joules under different
+    // mismatch draws — an f64-exact collision would be astronomical
+    let last = a.levels.len() - 1;
+    assert!(
+        a.levels[last].energy_total_j != b.levels[last].energy_total_j
+            || a.levels[last].per_instance_acc
+                != b.levels[last].per_instance_acc,
+        "two master seeds produced an identical σ={} level",
+        a.levels[last].sigma_c
+    );
+}
+
+#[test]
+fn instance_devices_do_not_depend_on_population_size() {
+    // batch-shape invariance: slot i holds the instance_seed(master, i)
+    // device whether 4 or 8 instances were provisioned around it, and
+    // its logits on a shared input are bit-identical in both shapes
+    let nw = synthetic_network(&[1, 16, 10], 43);
+    let geometry = CoreGeometry { rows: 16, cols: 16 };
+    let master = 0xBA7C4;
+    let shared: Vec<f32> = (0..12).map(|t| (t % 3) as f32 / 2.0).collect();
+    let run = |instances: usize| -> Vec<Vec<f32>> {
+        let mut engine = MixedSignalEngine::new(
+            nw.clone(),
+            CircuitConfig::default(),
+            geometry,
+        )
+        .unwrap();
+        engine.provision_devices(master, instances);
+        let refs: Vec<&[f32]> =
+            (0..instances).map(|_| shared.as_slice()).collect();
+        engine.classify_batch(&refs);
+        (0..instances).map(|s| engine.logits_slot(s)).collect()
+    };
+    let small = run(4);
+    let large = run(8);
+    for s in 0..4 {
+        assert_eq!(
+            small[s], large[s],
+            "slot {s}'s device changed with the population size"
+        );
+    }
+    // distinct instance seeds ⇒ distinct per-slot mismatch draws: the
+    // same input through 8 sibling devices cannot agree everywhere
+    assert!(
+        large.windows(2).any(|w| w[0] != w[1]),
+        "8 sibling instances produced identical logits"
+    );
+}
+
+#[test]
+fn instance_seed_stream_is_distinct_and_master_sensitive() {
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..512 {
+        assert!(
+            seen.insert(instance_seed(0xFACE, i)),
+            "instance seed collision at i={i}"
+        );
+    }
+    // a different master shifts the whole stream
+    assert_ne!(instance_seed(0xFACE, 0), instance_seed(0xFACF, 0));
+    // and the construction device (cfg.seed = master) is NOT instance 0
+    assert_ne!(instance_seed(0xFACE, 0), 0xFACE);
+}

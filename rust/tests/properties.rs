@@ -4,6 +4,7 @@
 use minimalist::config::{CircuitConfig, CoreGeometry};
 use minimalist::coordinator::MixedSignalEngine;
 use minimalist::energy::{worst_case_step_bound, EnergyMeter};
+use minimalist::montecarlo::DeviceSweep;
 use minimalist::nn::weights::synthetic_network;
 use minimalist::nn::GoldenNetwork;
 use minimalist::quant::{gate_transfer, Z6};
@@ -202,6 +203,49 @@ fn delta_skip_decisions_match_golden() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn accuracy_never_improves_with_mismatch_on_average() {
+    // Monte-Carlo monotonicity: over a fabricated device population,
+    // growing the capacitor-mismatch σ from 0 to a brutal 10 % must not
+    // help. Two statistics, aggregated over independent trials so one
+    // lucky instance can't flip the verdict:
+    //   (a) the label-flip rate against the ideal device is
+    //       non-decreasing in σ in (almost) every trial — mismatch only
+    //       adds perturbation;
+    //   (b) the population-mean accuracy at σ=0 beats (or ties, within
+    //       noise) the σ=10 % mean in aggregate.
+    let mut flips_ordered = 0;
+    let mut trials = 0;
+    let mut acc_gap = 0.0;
+    for trial in 0..4u64 {
+        let sweep = DeviceSweep {
+            instances: 8,
+            mismatch_levels: vec![0.0, 0.1],
+            samples: 4,
+            img: 8,
+            master_seed: 0xACC0 + trial,
+            geometry: CoreGeometry { rows: 16, cols: 16 },
+            ..DeviceSweep::default()
+        };
+        let nw = synthetic_network(&[1, 12, 10], 40 + trial);
+        let r = sweep.run(&nw).unwrap();
+        assert_eq!(r.levels.len(), 2);
+        flips_ordered +=
+            (r.levels[0].flip_rate <= r.levels[1].flip_rate + 1e-12) as usize;
+        acc_gap += r.levels[0].acc_mean - r.levels[1].acc_mean;
+        trials += 1;
+    }
+    assert!(
+        flips_ordered * 4 >= trials * 3,
+        "flip rate decreased with mismatch in {}/{trials} trials",
+        trials - flips_ordered
+    );
+    assert!(
+        acc_gap >= -0.05 * trials as f64,
+        "mean accuracy improved with 10 % mismatch: aggregate gap {acc_gap}"
+    );
 }
 
 #[test]
